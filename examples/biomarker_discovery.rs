@@ -1,0 +1,65 @@
+//! Biomarker discovery on (simulated) LUNG metabolomics — the paper's §6.2
+//! motivating scenario: 1005 urine samples × 2944 metabolomic features,
+//! log-transform, SAE + ℓ₁,∞ projection, and a comparison of the selected
+//! biomarker panels across the ℓ₁ / ℓ₂,₁ / ℓ₁,∞ constraints.
+//!
+//! Run: `make artifacts && cargo run --release --example biomarker_discovery`
+
+use l1inf::coordinator::{dataset_for, sweep::split_for};
+use l1inf::projection::l1inf::Algorithm;
+use l1inf::runtime::Engine;
+use l1inf::sae::metrics::selection_quality;
+use l1inf::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    println!("== biomarker discovery on simulated LUNG metabolomics ==\n");
+    let mut engine = Engine::from_default_artifacts()?;
+    let ds = dataset_for("lung", 0)?;
+    println!(
+        "dataset: {} samples ({} cases / {} controls) x {} metabolites; {} planted markers\n",
+        ds.n,
+        ds.class_counts()[1],
+        ds.class_counts()[0],
+        ds.d,
+        ds.informative.len()
+    );
+    let split = split_for("lung", 0)?;
+
+    let base = TrainConfig {
+        model: "lung".into(),
+        epochs: 20,
+        lr: 1e-3,
+        lambda: 1.0,
+        projection: ProjectionMode::None,
+        algo: Algorithm::InverseOrder,
+        exec: ExecMode::Epoch,
+        seed: 0,
+        double_descent: false,
+    };
+
+    println!("{:<14} {:>9} {:>8} {:>10} {:>10} {:>8}", "constraint", "acc%", "panel", "precision", "recall", "sum|W|");
+    println!("{}", "-".repeat(64));
+    for (name, projection) in [
+        ("none", ProjectionMode::None),
+        ("l1 (eta=50)", ProjectionMode::L1 { eta: 50.0 }),
+        ("l21 (eta=50)", ProjectionMode::L12 { eta: 50.0 }),
+        ("l1inf C=0.5", ProjectionMode::L1Inf { c: 0.5 }),
+        ("masked C=0.5", ProjectionMode::L1InfMasked { c: 0.5 }),
+    ] {
+        let tc = TrainConfig { projection, ..base.clone() };
+        let report = Trainer::new(&mut engine, tc)?.train(&split)?;
+        let (prec, rec) = selection_quality(&report.w1.selected, &ds.informative);
+        println!(
+            "{:<14} {:>8.2}% {:>8} {:>10.2} {:>10.2} {:>8.1}",
+            name,
+            report.test_accuracy_pct,
+            report.w1.selected.len(),
+            prec,
+            rec,
+            report.w1.sum_abs
+        );
+    }
+    println!("\nThe l1,inf panel should be small (tens of metabolites) with high precision —");
+    println!("that structured sparsity is exactly the point of the paper's projection.");
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** -> ``artifacts/``.
+
+This is the only python entry point in the whole system and it runs once,
+at build time (``make artifacts``). The rust coordinator loads the emitted
+text with ``HloModuleProto::from_text_file`` and executes through PJRT.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Artifacts per config NAME (see ``configs.py``):
+
+    NAME_step.hlo.txt         one Adam train step
+    NAME_step_masked.hlo.txt  train step with frozen w1 support
+    NAME_epoch.hlo.txt        one full epoch (lax.scan, device-resident data)
+    NAME_eval.hlo.txt         forward pass (logits + reconstruction)
+
+plus ``manifest.json`` describing every artifact's input/output signature
+so the rust side can validate shapes before executing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg):
+    dims = model.ModelDims(cfg.d, cfg.hidden, cfg.k, cfg.batch)
+    return [spec(s) for s in model.param_shapes(dims)]
+
+
+def lower_step(cfg):
+    p = param_specs(cfg)
+    args = (
+        p, p, p,  # params, m, v
+        spec(()),  # t
+        spec((cfg.batch, cfg.d)),  # x
+        spec((cfg.batch,), jnp.int32),  # y
+        spec(()),  # lr
+        spec(()),  # lam
+    )
+    return jax.jit(model.train_step).lower(*args)
+
+
+def lower_step_masked(cfg):
+    p = param_specs(cfg)
+    args = (
+        p, p, p,
+        spec(()),
+        spec((cfg.batch, cfg.d)),
+        spec((cfg.batch,), jnp.int32),
+        spec(()),
+        spec(()),
+        spec((cfg.d, cfg.hidden)),  # mask over w1
+    )
+    return jax.jit(model.train_step_masked).lower(*args)
+
+
+def lower_epoch(cfg):
+    p = param_specs(cfg)
+    steps = cfg.n_train // cfg.batch
+    fn = lambda params, m, v, t, xa, ya, perm, lr, lam: model.train_epoch(  # noqa: E731
+        params, m, v, t, xa, ya, perm, lr, lam, batch=cfg.batch
+    )
+    args = (
+        p, p, p,
+        spec(()),
+        spec((cfg.n_train, cfg.d)),
+        spec((cfg.n_train,), jnp.int32),
+        spec((steps * cfg.batch,), jnp.int32),
+        spec(()),
+        spec(()),
+    )
+    return jax.jit(fn).lower(*args)
+
+
+def lower_eval(cfg):
+    p = param_specs(cfg)
+    return jax.jit(model.eval_step).lower(p, spec((cfg.eval_batch, cfg.d)))
+
+
+def flat_param_sig(cfg):
+    dims = model.ModelDims(cfg.d, cfg.hidden, cfg.k, cfg.batch)
+    return [list(s) for s in model.param_shapes(dims)]
+
+
+def build_config(cfg, outdir: str, entries: list, only: set) -> None:
+    lowerings = {
+        "step": lower_step,
+        "step_masked": lower_step_masked,
+        "epoch": lower_epoch,
+        "eval": lower_eval,
+    }
+    arts = {}
+    for kind, fn in lowerings.items():
+        if only and kind not in only:
+            continue
+        path = f"{cfg.name}_{kind}.hlo.txt"
+        text = to_hlo_text(fn(cfg))
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        arts[kind] = path
+        print(f"  {path}: {len(text)} chars")
+    entries.append(
+        {
+            "name": cfg.name,
+            "d": cfg.d,
+            "hidden": cfg.hidden,
+            "k": cfg.k,
+            "batch": cfg.batch,
+            "eval_batch": cfg.eval_batch,
+            "n_train": cfg.n_train,
+            "steps_per_epoch": cfg.n_train // cfg.batch,
+            "param_shapes": flat_param_sig(cfg),
+            "param_names": list(model.PARAM_NAMES),
+            "artifacts": arts,
+        }
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--configs", default="", help="comma list (default: all)")
+    ap.add_argument("--kinds", default="", help="comma list of artifact kinds")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted = set(filter(None, args.configs.split(",")))
+    kinds = set(filter(None, args.kinds.split(",")))
+    entries: list = []
+    for cfg in CONFIGS:
+        if wanted and cfg.name not in wanted:
+            continue
+        print(f"lowering config '{cfg.name}' (d={cfg.d}, hidden={cfg.hidden})")
+        build_config(cfg, args.out, entries, kinds)
+    manifest = {"version": 1, "configs": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json ({len(entries)} configs)")
+
+
+if __name__ == "__main__":
+    main()

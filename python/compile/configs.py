@@ -1,0 +1,41 @@
+"""Model configurations lowered by ``aot.py``.
+
+Each config produces four HLO-text artifacts (step / step_masked / epoch /
+eval) plus manifest entries. Dimensions follow the paper's experiments:
+
+- ``synth``      — paper §6.1: d=10000 synthetic make_classification data,
+                   n=1000 samples, hidden 96, k=2.
+- ``lung``       — paper §6.2: d=2944 metabolomic features, 1005 samples.
+- ``synth_small``— reduced synthetic config for CI-speed integration tests
+                   and the quickstart example.
+- ``tiny``       — minimal config exercised by the rust runtime unit tests.
+"""
+
+from typing import NamedTuple
+
+
+class AotConfig(NamedTuple):
+    name: str
+    d: int  # input features
+    hidden: int  # hidden width
+    k: int  # classes
+    batch: int  # train batch size (must divide the epoch slice)
+    eval_batch: int  # eval batch size (rust pads the tail)
+    n_train: int  # training-set size the epoch artifact is specialized to
+
+
+# NOTE: batch sizes are chosen to divide cleanly into Pallas tiles
+# (pick_tile) and into the train split sizes used by the experiments.
+CONFIGS = [
+    AotConfig(name="tiny", d=24, hidden=8, k=2, batch=8, eval_batch=8, n_train=64),
+    AotConfig(name="synth_small", d=2000, hidden=64, k=2, batch=50, eval_batch=100, n_train=800),
+    AotConfig(name="synth", d=10000, hidden=96, k=2, batch=50, eval_batch=100, n_train=800),
+    AotConfig(name="lung", d=2944, hidden=96, k=2, batch=50, eval_batch=100, n_train=800),
+]
+
+
+def by_name(name: str) -> AotConfig:
+    for c in CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown config '{name}'")

@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernels for the projection *apply* step and mask freezing.
+
+The rust coordinator solves for the dual variable θ* / water levels μ_g on
+the CPU (that is the paper's algorithmic contribution and is inherently
+sequential), but the dense *application* of the result to the weight matrix
+is embarrassingly parallel — these kernels express it as tiled VMEM work so
+the masked/clip step can run inside the AOT graph:
+
+- :func:`clip_rows`  — ``X[g, i] = sign(Y[g, i]) * min(|Y[g, i]|, mu[g])``
+  (Eq. 8 + Prop. 1 application step; rows are the paper's "columns").
+- :func:`apply_mask` — ``X = Y * M`` (Eq. 20 masked projection / the
+  double-descent frozen-support retrain step).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dense import pick_tile
+
+
+def _clip_kernel(y_ref, mu_ref, o_ref):
+    y = y_ref[...]
+    mu = mu_ref[...][:, None]
+    o_ref[...] = jnp.sign(y) * jnp.minimum(jnp.abs(y), mu)
+
+
+@jax.jit
+def clip_rows(y, mu):
+    """Clip each row of ``y`` at its water level ``mu`` (may be 0)."""
+    g, l = y.shape
+    assert mu.shape == (g,)
+    tg, tl = pick_tile(g), pick_tile(l)
+    return pl.pallas_call(
+        _clip_kernel,
+        grid=(g // tg, l // tl),
+        in_specs=[
+            pl.BlockSpec((tg, tl), lambda i, j: (i, j)),
+            pl.BlockSpec((tg,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tg, tl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, l), jnp.float32),
+        interpret=True,
+    )(y, mu)
+
+
+def _mask_kernel(y_ref, m_ref, o_ref):
+    o_ref[...] = y_ref[...] * m_ref[...]
+
+
+@jax.jit
+def apply_mask(y, mask):
+    """Elementwise freeze: ``y * mask`` (mask is f32 0/1)."""
+    g, l = y.shape
+    assert mask.shape == (g, l)
+    tg, tl = pick_tile(g), pick_tile(l)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(g // tg, l // tl),
+        in_specs=[
+            pl.BlockSpec((tg, tl), lambda i, j: (i, j)),
+            pl.BlockSpec((tg, tl), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tg, tl), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, l), jnp.float32),
+        interpret=True,
+    )(y, mask)

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernels: tiled dense (matmul + bias + activation) layers.
+
+Every dense layer of the SAE (forward *and* backward) funnels through
+``matmul_pallas`` below, a classic MXU-oriented tiling:
+
+- grid ``(M/tm, N/tn, K/tk)`` with the K axis innermost so each (i, j)
+  output tile accumulates over K panels held in VMEM;
+- block shapes picked by :func:`pick_tile` — the largest divisor of the
+  dimension not exceeding 128, i.e. MXU-shaped (128x128) whenever the model
+  dimensions allow, with exact tiling (no out-of-bounds masking needed:
+  d=10000 -> 125, d=2944 -> 128, h=96 -> 96);
+- bias add + ReLU fused into the epilogue of the last K step.
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+lowers the same schedule to plain HLO, which `make artifacts` freezes to
+text for the rust runtime. The HBM<->VMEM choreography expressed by the
+BlockSpecs is what a real TPU build would run; DESIGN.md §8 estimates its
+VMEM footprint and MXU utilization.
+
+The autodiff rule is a ``jax.custom_vjp``: the backward pass re-enters the
+same Pallas matmul with transposed operands, so L2's gradient graph is
+Pallas end to end.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_tile(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= ``target``.
+
+    Guarantees exact tiling (every grid block is full), which keeps the
+    interpret-mode lowering free of masking and matches the MXU-friendly
+    128 whenever the dimension allows it.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    best = 1
+    for t in range(1, min(dim, target) + 1):
+        if dim % t == 0:
+            best = t
+    return best
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int, act: str, use_bias: bool):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = o_ref[...]
+        if use_bias:
+            out = out + b_ref[...][None, :]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+@partial(jax.jit, static_argnames=("act",))
+def matmul_pallas(x, w, b=None, act: str = "none"):
+    """``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    x: (M, K) f32; w: (K, N) f32; b: (N,) f32 or None; act in {none, relu}.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    assert act in ("none", "relu")
+    tm, tk, tn = pick_tile(m), pick_tile(k), pick_tile(n)
+    n_k = k // tk
+    use_bias = b is not None
+    bias = b if use_bias else jnp.zeros((n,), jnp.float32)
+
+    return pl.pallas_call(
+        partial(_matmul_kernel, n_k=n_k, act=act, use_bias=use_bias),
+        grid=(m // tm, n // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, bias)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, act: str = "none"):
+    """Dense layer ``act(x @ w + b)`` with a Pallas forward and backward."""
+    return matmul_pallas(x, w, b, act=act)
+
+
+def _dense_fwd(x, w, b, act):
+    out = matmul_pallas(x, w, b, act=act)
+    # For ReLU, out > 0 identifies the pass-through set (ties at exactly 0
+    # get zero gradient, the standard convention).
+    return out, (x, w, out)
+
+
+def _dense_bwd(act, res, g):
+    x, w, out = res
+    if act == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    # dX = g @ W^T ; dW = X^T @ g ; db = sum(g) — all through the Pallas MXU
+    # kernel (transposes are free layout changes for XLA).
+    dx = matmul_pallas(g, jnp.transpose(w))
+    dw = matmul_pallas(jnp.transpose(x), g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+pytest compares each kernel against these references over a hypothesis
+sweep of shapes and value distributions; the kernels must match to float32
+accumulation accuracy.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, act: str = "none"):
+    """act(x @ w + b) in plain jnp (f32 accumulation)."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def dense_grads_ref(x, w, g, out, act: str = "none"):
+    """Reference VJP of the dense layer given upstream cotangent ``g``."""
+    if act == "relu":
+        g = g * (out > 0.0).astype(g.dtype)
+    dx = jnp.dot(g, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+def clip_rows_ref(y, mu):
+    """sign(y) * min(|y|, mu_g) rowwise."""
+    return jnp.sign(y) * jnp.minimum(jnp.abs(y), mu[:, None])
+
+
+def apply_mask_ref(y, mask):
+    return y * mask

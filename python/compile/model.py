@@ -1,0 +1,171 @@
+"""Layer-2: the supervised autoencoder (SAE) of paper §5 as JAX functions.
+
+Architecture (symmetric fully-connected, Barlaud & Guyard style):
+
+    encoder:  x (B,d) --dense+ReLU--> h (B,hidden) --dense--> z (B,k)
+    decoder:  z (B,k) --dense+ReLU--> h (B,hidden) --dense--> xhat (B,d)
+
+The latent dimension equals the number of classes k; the latent vector *is*
+the classification logit vector. Total loss (paper §5):
+
+    phi(X, Y) = H(Y, Z) + lambda * psi(X, Xhat)
+
+with H the cross-entropy and psi the Smooth-L1 (Huber) reconstruction loss.
+Optimization is Adam, implemented inline (manual moments; the offline image
+has no optax) so the whole update lowers into one HLO program.
+
+Every dense layer runs through the Layer-1 Pallas kernel
+(:func:`compile.kernels.dense.dense`), forward and backward.
+
+Parameter flattening convention shared with the rust runtime (see
+``aot.py`` manifest): ``[w1, b1, w2, b2, w3, b3, w4, b4]``. The rust
+trainer owns initialization and feeds/receives these leaves positionally.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.clip import apply_mask
+from .kernels.dense import dense
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+# Adam hyper-parameters (PyTorch defaults, as the paper uses).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+class ModelDims(NamedTuple):
+    """Static SAE dimensions."""
+
+    d: int  # input features
+    hidden: int  # hidden width (paper's n = 96)
+    k: int  # classes == latent dim
+    batch: int  # training batch size
+
+
+def param_shapes(dims: ModelDims):
+    """Shapes of the flattened parameter list."""
+    d, h, k = dims.d, dims.hidden, dims.k
+    return [
+        (d, h), (h,),  # encoder layer 1
+        (h, k), (k,),  # encoder layer 2 (latent/logits)
+        (k, h), (h,),  # decoder layer 1
+        (h, d), (d,),  # decoder layer 2
+    ]
+
+
+def init_params(key, dims: ModelDims):
+    """He-uniform init (matches the rust trainer's initializer)."""
+    shapes = param_shapes(dims)
+    params = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            lim = (6.0 / fan_in) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -lim, lim))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def forward(params, x):
+    """Full SAE forward pass. Returns (logits, xhat)."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    h1 = dense(x, w1, b1, "relu")
+    z = dense(h1, w2, b2, "none")  # latent == logits
+    h2 = dense(z, w3, b3, "relu")
+    xhat = dense(h2, w4, b4, "none")
+    return z, xhat
+
+
+def cross_entropy(logits, y):
+    """Mean cross-entropy with integer labels."""
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def huber(xhat, x, delta: float = 1.0):
+    """Smooth-L1 (Huber) reconstruction loss, mean over batch and features."""
+    r = xhat - x
+    a = jnp.abs(r)
+    quad = 0.5 * r * r
+    lin = delta * (a - 0.5 * delta)
+    return jnp.mean(jnp.where(a <= delta, quad, lin))
+
+
+def total_loss(params, x, y, lam):
+    """phi = H(Y, Z) + lambda * psi(X, Xhat); returns (loss, (logits, xhat))."""
+    logits, xhat = forward(params, x)
+    loss = cross_entropy(logits, y) + lam * huber(xhat, x)
+    return loss, (logits, xhat)
+
+
+def adam_update(params, grads, m, v, t, lr):
+    """One Adam step; returns (params', m', v'). ``t`` is the 1-based step."""
+    b1t = ADAM_B1**t
+    b2t = ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / (1.0 - b1t)
+        vhat = vi / (1.0 - b2t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def train_step(params, m, v, t, x, y, lr, lam):
+    """One SGD step. Returns (params', m', v', t+1, loss, correct)."""
+    (loss, (logits, _)), grads = jax.value_and_grad(total_loss, has_aux=True)(
+        params, x, y, lam
+    )
+    t = t + 1.0
+    params, m, v = adam_update(params, grads, m, v, t, lr)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.int32))
+    return params, m, v, t, loss, correct
+
+
+def train_step_masked(params, m, v, t, x, y, lr, lam, mask):
+    """Train step with a frozen support on w1 (double-descent retrain):
+    the gradient update is masked so zeroed features never revive
+    (Algorithm 3's nabla-phi(W, M0) with the mask applied post-update —
+    equivalent for Adam since masked weights stay exactly 0)."""
+    params, m, v, t, loss, correct = train_step(params, m, v, t, x, y, lr, lam)
+    params = list(params)
+    params[0] = apply_mask(params[0], mask)
+    return params, m, v, t, loss, correct
+
+
+def train_epoch(params, m, v, t, x_all, y_all, perm, lr, lam, *, batch: int):
+    """Scan a full epoch on-device.
+
+    ``x_all (N,d)`` / ``y_all (N,)`` stay device-resident; ``perm`` is the
+    epoch's shuffled index vector of length ``steps*batch`` (rust supplies
+    it). Transfers per epoch: parameters once each way + the tiny perm.
+    Returns (params', m', v', t', mean_loss, correct_total).
+    """
+    steps = perm.shape[0] // batch
+    idx = perm[: steps * batch].reshape(steps, batch)
+
+    def body(carry, batch_idx):
+        params, m, v, t = carry
+        xb = jnp.take(x_all, batch_idx, axis=0)
+        yb = jnp.take(y_all, batch_idx, axis=0)
+        params, m, v, t, loss, correct = train_step(params, m, v, t, xb, yb, lr, lam)
+        return (params, m, v, t), (loss, correct)
+
+    (params, m, v, t), (losses, corrects) = jax.lax.scan(body, (params, m, v, t), idx)
+    return params, m, v, t, jnp.mean(losses), jnp.sum(corrects)
+
+
+def eval_step(params, x):
+    """Inference: returns (logits, xhat) for a padded evaluation batch."""
+    return forward(params, x)

@@ -1,0 +1,121 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.clip import apply_mask, clip_rows
+from compile.kernels.dense import dense, matmul_pallas, pick_tile
+
+DIMS = st.integers(min_value=1, max_value=40)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestPickTile:
+    def test_divides(self):
+        for dim in [1, 2, 7, 50, 96, 125, 2000, 2944, 10000]:
+            t = pick_tile(dim)
+            assert dim % t == 0
+            assert 1 <= t <= 128
+
+    def test_mxu_shaped_when_possible(self):
+        assert pick_tile(2944) == 128
+        assert pick_tile(128) == 128
+        assert pick_tile(10000) == 125
+        assert pick_tile(96) == 96
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            pick_tile(0)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=st.sampled_from(["none", "relu"]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+        out = matmul_pallas(x, w, b, act=act)
+        expect = ref.matmul_ref(x, w, b, act)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    def test_no_bias(self):
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, 5, 7), rand(rng, 7, 3)
+        np.testing.assert_allclose(
+            matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_mxu_shaped_case(self):
+        # 128-tiled path (the TPU-shaped configuration).
+        rng = np.random.default_rng(1)
+        x, w, b = rand(rng, 128, 256), rand(rng, 256, 128), rand(rng, 128)
+        out = matmul_pallas(x, w, b, act="relu")
+        np.testing.assert_allclose(out, ref.matmul_ref(x, w, b, "relu"), rtol=1e-3, atol=1e-3)
+
+    def test_big_skinny_case(self):
+        # SAE encoder shape: (B, d) @ (d, h) with d=2000.
+        rng = np.random.default_rng(2)
+        x, w, b = rand(rng, 50, 2000), rand(rng, 2000, 64), rand(rng, 64)
+        out = matmul_pallas(x, w, b, act="relu")
+        np.testing.assert_allclose(out, ref.matmul_ref(x, w, b, "relu"), rtol=1e-3, atol=1e-3)
+
+
+class TestDenseVjp:
+    @settings(max_examples=15, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=st.sampled_from(["none", "relu"]), seed=st.integers(0, 2**31 - 1))
+    def test_grads_match_ref(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+
+        def loss(x, w, b):
+            return jnp.sum(dense(x, w, b, act) ** 2)
+
+        def loss_ref(x, w, b):
+            return jnp.sum(ref.matmul_ref(x, w, b, act) ** 2)
+
+        got = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+        expect = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+        for g, e in zip(got, expect):
+            np.testing.assert_allclose(g, e, rtol=1e-3, atol=1e-3)
+
+    def test_relu_kills_gradient(self):
+        # All-negative pre-activations => zero gradients everywhere upstream.
+        x = jnp.ones((3, 4), jnp.float32)
+        w = -jnp.ones((4, 2), jnp.float32)
+        b = jnp.zeros((2,), jnp.float32)
+        g = jax.grad(lambda w: jnp.sum(dense(x, w, b, "relu")))(w)
+        np.testing.assert_allclose(g, jnp.zeros_like(g))
+
+
+class TestClip:
+    @settings(max_examples=25, deadline=None)
+    @given(g=DIMS, l=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_clip_rows_matches_ref(self, g, l, seed):
+        rng = np.random.default_rng(seed)
+        y = rand(rng, g, l)
+        mu = jnp.abs(rand(rng, g))
+        np.testing.assert_allclose(
+            clip_rows(y, mu), ref.clip_rows_ref(y, mu), rtol=1e-6, atol=1e-6
+        )
+
+    def test_zero_level_kills_row(self):
+        y = jnp.ones((2, 3), jnp.float32)
+        mu = jnp.asarray([0.0, 0.5], jnp.float32)
+        out = np.asarray(clip_rows(y, mu))
+        assert (out[0] == 0.0).all()
+        assert (out[1] == 0.5).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(g=DIMS, l=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_apply_mask_matches_ref(self, g, l, seed):
+        rng = np.random.default_rng(seed)
+        y = rand(rng, g, l)
+        mask = jnp.asarray((rng.random((g, l)) > 0.5).astype(np.float32))
+        np.testing.assert_allclose(apply_mask(y, mask), ref.apply_mask_ref(y, mask))

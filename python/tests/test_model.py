@@ -1,0 +1,142 @@
+"""L2 model correctness: losses, Adam, the full train step and epoch scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.configs import by_name
+
+DIMS = model.ModelDims(d=24, hidden=8, k=2, batch=8)
+
+
+def make_toy(n=64, d=24, k=2, seed=0):
+    """Linearly separable toy data: class decided by the first feature."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.int32)
+    x[:, 0] += np.where(y == 1, 2.0, -2.0)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def init_state(dims=DIMS, seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), dims)
+    zeros = [jnp.zeros_like(p) for p in params]
+    return params, zeros, [jnp.zeros_like(p) for p in params]
+
+
+class TestLosses:
+    def test_cross_entropy_matches_manual(self):
+        logits = jnp.asarray([[2.0, 0.0], [0.0, 1.0]], jnp.float32)
+        y = jnp.asarray([0, 1], jnp.int32)
+        got = model.cross_entropy(logits, y)
+        manual = -np.mean(
+            [
+                np.log(np.exp(2.0) / (np.exp(2.0) + 1.0)),
+                np.log(np.exp(1.0) / (np.exp(1.0) + 1.0)),
+            ]
+        )
+        np.testing.assert_allclose(got, manual, rtol=1e-6)
+
+    def test_huber_quadratic_and_linear_zones(self):
+        x = jnp.zeros((1, 2), jnp.float32)
+        xhat = jnp.asarray([[0.5, 3.0]], jnp.float32)
+        # 0.5*0.25 and 1*(3-0.5), meaned over 2 entries
+        expect = (0.125 + 2.5) / 2.0
+        np.testing.assert_allclose(model.huber(xhat, x), expect, rtol=1e-6)
+
+    def test_huber_nonnegative_and_zero_at_perfect(self):
+        x = jnp.ones((3, 4), jnp.float32)
+        assert float(model.huber(x, x)) == 0.0
+
+
+class TestAdam:
+    def test_single_step_matches_manual(self):
+        p = [jnp.asarray([1.0], jnp.float32)]
+        g = [jnp.asarray([0.5], jnp.float32)]
+        m = [jnp.zeros(1, jnp.float32)]
+        v = [jnp.zeros(1, jnp.float32)]
+        new_p, new_m, new_v = model.adam_update(p, g, m, v, t=1.0, lr=0.1)
+        # bias-corrected first step: mhat = g, vhat = g^2 -> step = lr * sign(g)
+        np.testing.assert_allclose(new_p[0], 1.0 - 0.1 * 0.5 / (0.5 + 1e-8), rtol=1e-6)
+        np.testing.assert_allclose(new_m[0], 0.1 * 0.5, rtol=1e-6)
+        np.testing.assert_allclose(new_v[0], 0.001 * 0.25, rtol=1e-4)
+
+    def test_moments_decay(self):
+        p = [jnp.zeros(1, jnp.float32)]
+        m = [jnp.asarray([1.0], jnp.float32)]
+        v = [jnp.asarray([1.0], jnp.float32)]
+        _, new_m, new_v = model.adam_update(p, [jnp.zeros(1, jnp.float32)], m, v, 10.0, 0.1)
+        np.testing.assert_allclose(new_m[0], 0.9, rtol=1e-6)
+        np.testing.assert_allclose(new_v[0], 0.999, rtol=1e-6)
+
+
+class TestTrainStep:
+    def test_shapes_roundtrip(self):
+        params, m, v = init_state()
+        x, y = make_toy(n=DIMS.batch)
+        out = model.train_step(params, m, v, 0.0, x, y, 1e-3, 0.1)
+        new_p, new_m, new_v, t, loss, correct = out
+        for a, b in zip(new_p, params):
+            assert a.shape == b.shape
+        assert float(t) == 1.0
+        assert loss.shape == ()
+        assert 0 <= int(correct) <= DIMS.batch
+
+    def test_loss_decreases_on_toy(self):
+        params, m, v = init_state()
+        x, y = make_toy(n=DIMS.batch)
+        t = 0.0
+        losses = []
+        step = jax.jit(model.train_step)
+        for _ in range(60):
+            params, m, v, t, loss, _ = step(params, m, v, t, x, y, 1e-2, 0.1)
+            losses.append(float(loss))
+        assert losses[-1] < 0.5 * losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+
+    def test_masked_step_freezes_support(self):
+        params, m, v = init_state()
+        x, y = make_toy(n=DIMS.batch)
+        mask = np.ones((DIMS.d, DIMS.hidden), np.float32)
+        mask[: DIMS.d // 2] = 0.0
+        mask = jnp.asarray(mask)
+        out = model.train_step_masked(params, m, v, 0.0, x, y, 1e-2, 0.1, mask)
+        w1 = np.asarray(out[0][0])
+        assert (w1[: DIMS.d // 2] == 0.0).all()
+        assert (w1[DIMS.d // 2 :] != 0.0).any()
+
+
+class TestEpoch:
+    def test_epoch_equals_sequential_steps(self):
+        cfg = by_name("tiny")
+        dims = model.ModelDims(cfg.d, cfg.hidden, cfg.k, cfg.batch)
+        params, m, v = init_state(dims)
+        x, y = make_toy(n=cfg.n_train, d=cfg.d)
+        perm = jnp.arange(cfg.n_train, dtype=jnp.int32)
+
+        ep = model.train_epoch(params, m, v, 0.0, x, y, perm, 1e-3, 0.1, batch=cfg.batch)
+        p_epoch, _, _, t_epoch, mean_loss, correct = ep
+
+        p_seq, m_seq, v_seq, t = params, m, v, 0.0
+        losses, corrects = [], 0
+        for s in range(cfg.n_train // cfg.batch):
+            xb = x[s * cfg.batch : (s + 1) * cfg.batch]
+            yb = y[s * cfg.batch : (s + 1) * cfg.batch]
+            p_seq, m_seq, v_seq, t, loss, c = model.train_step(
+                p_seq, m_seq, v_seq, t, xb, yb, 1e-3, 0.1
+            )
+            losses.append(float(loss))
+            corrects += int(c)
+
+        assert float(t_epoch) == t
+        np.testing.assert_allclose(float(mean_loss), np.mean(losses), rtol=1e-5)
+        assert int(correct) == corrects
+        for a, b in zip(p_epoch, p_seq):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_eval_step_shapes(self):
+        params, _, _ = init_state()
+        x, _ = make_toy(n=16)
+        logits, xhat = model.eval_step(params, x)
+        assert logits.shape == (16, DIMS.k)
+        assert xhat.shape == (16, DIMS.d)

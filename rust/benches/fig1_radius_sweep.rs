@@ -1,0 +1,39 @@
+//! Bench — paper Figure 1: projection time on a 1000×1000 U[0,1) matrix as
+//! the radius C sweeps [1e-3, 8] (sparsity sweeps ~100% → ~0%).
+//!
+//! Run: `cargo bench --bench fig1_radius_sweep` (`L1INF_BENCH_FAST=1` for a
+//! smoke pass). Emits a results table + `results/bench_fig1.csv`.
+
+use l1inf::experiments::projbench::{self, FIGURE_ALGOS};
+use l1inf::util::bench::{self, BenchOpts, Sample};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
+    let (n, m) = if fast { (300, 300) } else { (1000, 1000) };
+    let points = if fast { 5 } else { 12 };
+    let data = projbench::uniform_matrix(n, m, 42);
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for radius in projbench::radius_grid(points) {
+        // Record achieved sparsity once per radius (same for all solvers).
+        let probe = projbench::measure(&data, n, m, radius, FIGURE_ALGOS[0], 1);
+        for algo in FIGURE_ALGOS {
+            let s = bench::run_case(
+                &format!("C={radius:<9.4} sp={:>5.1}% {}", probe.sparsity_pct, algo.name()),
+                &opts,
+                || data.clone(),
+                |mut input| {
+                    let info = l1inf::projection::l1inf::project_l1inf(
+                        &mut input, m, n, radius, algo,
+                    );
+                    std::hint::black_box(info.theta);
+                },
+            );
+            samples.push(s);
+        }
+    }
+    bench::print_table(&format!("Fig 1: {n}x{m} radius sweep"), &samples);
+    std::fs::create_dir_all("results").ok();
+    bench::write_csv("results/bench_fig1.csv", &samples).expect("csv");
+}

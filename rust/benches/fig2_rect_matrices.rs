@@ -1,0 +1,39 @@
+//! Bench — paper Figure 2: projection time on rectangular matrices
+//! 1000×10000 (wide: many columns) and 10000×1000 (tall: long columns).
+//!
+//! Run: `cargo bench --bench fig2_rect_matrices`.
+
+use l1inf::experiments::projbench::{self, FIGURE_ALGOS};
+use l1inf::util::bench::{self, BenchOpts, Sample};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
+    let shapes: &[(usize, usize)] =
+        if fast { &[(300, 1000), (1000, 300)] } else { &[(1000, 10_000), (10_000, 1000)] };
+    let radii: &[f64] = if fast { &[0.1, 1.0] } else { &[0.01, 0.1, 1.0, 4.0] };
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for &(n, m) in shapes {
+        let data = projbench::uniform_matrix(n, m, 43);
+        for &radius in radii {
+            for algo in FIGURE_ALGOS {
+                let s = bench::run_case(
+                    &format!("{n}x{m} C={radius:<6} {}", algo.name()),
+                    &opts,
+                    || data.clone(),
+                    |mut input| {
+                        let info = l1inf::projection::l1inf::project_l1inf(
+                            &mut input, m, n, radius, algo,
+                        );
+                        std::hint::black_box(info.theta);
+                    },
+                );
+                samples.push(s);
+            }
+        }
+    }
+    bench::print_table("Fig 2: rectangular matrices", &samples);
+    std::fs::create_dir_all("results").ok();
+    bench::write_csv("results/bench_fig2.csv", &samples).expect("csv");
+}

@@ -1,0 +1,37 @@
+//! Bench — paper Figure 3: projection time vs matrix size at C = 1
+//! (left: fixed n, growing m; right: fixed m, growing n).
+//!
+//! Run: `cargo bench --bench fig3_size_sweep`.
+
+use l1inf::experiments::projbench::{self, FIGURE_ALGOS};
+use l1inf::util::bench::{self, BenchOpts, Sample};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
+    let sizes: &[usize] = if fast { &[100, 300] } else { &[100, 300, 1000, 3000, 10_000] };
+    let fixed = if fast { 300 } else { 1000 };
+
+    let mut samples: Vec<Sample> = Vec::new();
+    for &s in sizes {
+        for (n, m, tag) in [(fixed, s, "fixed-n"), (s, fixed, "fixed-m")] {
+            let data = projbench::uniform_matrix(n, m, 44);
+            for algo in FIGURE_ALGOS {
+                let sample = bench::run_case(
+                    &format!("{tag} {n}x{m} {}", algo.name()),
+                    &opts,
+                    || data.clone(),
+                    |mut input| {
+                        let info =
+                            l1inf::projection::l1inf::project_l1inf(&mut input, m, n, 1.0, algo);
+                        std::hint::black_box(info.theta);
+                    },
+                );
+                samples.push(sample);
+            }
+        }
+    }
+    bench::print_table("Fig 3: size sweep at C=1", &samples);
+    std::fs::create_dir_all("results").ok();
+    bench::write_csv("results/bench_fig3.csv", &samples).expect("csv");
+}

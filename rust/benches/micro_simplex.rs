@@ -1,0 +1,83 @@
+//! Micro-bench + ablations: ℓ₁-simplex thresholds (Condat vs Michelot vs
+//! sort), solve-vs-apply split of the ℓ₁,∞ projection, and the SAE-shaped
+//! training projection (d=10000 × h=96) behind the paper's "2.18× faster
+//! than Chu" claim.
+//!
+//! Run: `cargo bench --bench micro_simplex`.
+
+use l1inf::experiments::projbench;
+use l1inf::projection::l1inf::Algorithm;
+use l1inf::projection::simplex;
+use l1inf::util::bench::{self, BenchOpts, Sample};
+use l1inf::util::rng::Rng;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut samples: Vec<Sample> = Vec::new();
+
+    // 1. simplex-threshold micro-bench (the inner kernel of naive/bejar).
+    let sizes: &[usize] = if fast { &[1000] } else { &[1000, 10_000, 100_000] };
+    for &n in sizes {
+        let mut rng = Rng::new(1);
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform_f32(&mut v);
+        for (name, f) in [
+            ("condat", simplex::threshold_condat as fn(&[f32], f64) -> simplex::Threshold),
+            ("michelot", simplex::threshold_michelot),
+            ("sort", simplex::threshold_sort),
+        ] {
+            let s = bench::run_case(
+                &format!("simplex n={n} {name}"),
+                &opts,
+                || v.clone(),
+                |input| {
+                    std::hint::black_box(f(&input, 1.0).tau);
+                },
+            );
+            samples.push(s);
+        }
+    }
+
+    // 2. solve-only vs full projection (apply cost ablation).
+    let (n, m) = if fast { (200, 200) } else { (1000, 1000) };
+    let data = projbench::uniform_matrix(n, m, 2);
+    for algo in [Algorithm::InverseOrder, Algorithm::Newton] {
+        let solve_ms = projbench::measure_solve_only(&data, n, m, 1.0, algo, 5);
+        let full = projbench::measure(&data, n, m, 1.0, algo, 5);
+        println!(
+            "ablation {}: solve {:.3} ms vs full {:.3} ms (apply overhead {:.3} ms)",
+            algo.name(),
+            solve_ms,
+            full.min_ms,
+            full.min_ms - solve_ms
+        );
+    }
+
+    // 3. SAE-shaped projection (paper §4: 2.18× vs Chu on the CAE network).
+    let (d, h) = if fast { (2000, 64) } else { (10_000, 96) };
+    let mut rng = Rng::new(3);
+    let mut w1 = vec![0.0f32; d * h];
+    for r in 0..d {
+        let live = r < d / 50; // ~2% survivors, like the trained encoder
+        for c in 0..h {
+            w1[r * h + c] = if live { (rng.f32() - 0.5) * 0.4 } else { (rng.f32() - 0.5) * 0.02 };
+        }
+    }
+    for algo in [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar] {
+        let s = bench::run_case(
+            &format!("sae w1 {d}x{h} C=0.1 {}", algo.name()),
+            &opts,
+            || w1.clone(),
+            |mut input| {
+                let info = l1inf::projection::l1inf::project_l1inf(&mut input, d, h, 0.1, algo);
+                std::hint::black_box(info.theta);
+            },
+        );
+        samples.push(s);
+    }
+
+    bench::print_table("micro: simplex kernels + SAE-shaped projection", &samples);
+    std::fs::create_dir_all("results").ok();
+    bench::write_csv("results/bench_micro.csv", &samples).expect("csv");
+}

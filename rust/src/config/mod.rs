@@ -1,0 +1,219 @@
+//! Configuration system: a TOML-subset parser plus typed experiment /
+//! training configs loadable from `configs/*.toml` and overridable from the
+//! CLI (`--set section.key=value`).
+//!
+//! Supported syntax (the subset the launcher needs; no external crates):
+//! `[section]` headers, `key = value` with string / number / bool /
+//! flat arrays, `#` comments.
+
+pub mod train;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::Arr(a) => a.iter().map(Value::as_f64).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, val.trim()))?;
+            entries.insert(full_key, value);
+        }
+        Ok(Config { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Config::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override '{spec}' must be key=value"))?;
+        let value = parse_value(val.trim())?;
+        self.entries.insert(key.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn f64_vec_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.get(key).and_then(Value::as_f64_vec).unwrap_or_else(|| default.to_vec())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' outside quotes terminates the line
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let items = body
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(parse_value)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse '{s}' (bare strings must be quoted)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[train]
+model = "synth"        # model name
+epochs = 30
+lr = 0.001
+projection = "l1inf"
+radius = 0.1
+double_descent = false
+
+[sweep]
+radii = [0.05, 0.1, 0.5, 1]
+seeds = [0, 1, 2]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("train.model", "?"), "synth");
+        assert_eq!(c.usize_or("train.epochs", 0), 30);
+        assert_eq!(c.f64_or("train.lr", 0.0), 0.001);
+        assert!(!c.bool_or("train.double_descent", true));
+        assert_eq!(c.f64_vec_or("sweep.radii", &[]), vec![0.05, 0.1, 0.5, 1.0]);
+        // defaults
+        assert_eq!(c.usize_or("train.missing", 7), 7);
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("train.epochs=5").unwrap();
+        c.set_override("train.model=\"lung\"").unwrap();
+        assert_eq!(c.usize_or("train.epochs", 0), 5);
+        assert_eq!(c.str_or("train.model", "?"), "lung");
+        assert!(c.set_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("key value-without-equals").is_err());
+        assert!(Config::parse("k = \"unterminated").is_err());
+        assert!(Config::parse("k = bare_string").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(c.f64_or("x", 0.0), 1.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Typed view of the `[train]` / `[sweep]` config sections used by the
+//! launcher and the experiment drivers.
+
+use super::Config;
+
+use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig};
+use anyhow::{bail, Result};
+
+/// Build a [`TrainConfig`] from the `[train]` section (all keys optional,
+/// falling back to sensible defaults).
+pub fn train_config(cfg: &Config) -> Result<TrainConfig> {
+    let mut tc = TrainConfig {
+        model: cfg.str_or("train.model", "synth_small"),
+        epochs: cfg.usize_or("train.epochs", 20),
+        lr: cfg.f64_or("train.lr", 1e-3) as f32,
+        lambda: cfg.f64_or("train.lambda", 1.0) as f32,
+        seed: cfg.usize_or("train.seed", 0) as u64,
+        double_descent: cfg.bool_or("train.double_descent", false),
+        ..TrainConfig::default()
+    };
+    tc.exec = match cfg.str_or("train.exec", "epoch").as_str() {
+        "epoch" => ExecMode::Epoch,
+        "step" => ExecMode::Step,
+        other => bail!("train.exec must be 'epoch' or 'step', got '{other}'"),
+    };
+    tc.algo = cfg.str_or("train.algo", "inv_order").parse().map_err(anyhow::Error::msg)?;
+    let radius = cfg.f64_or("train.radius", 1.0);
+    tc.projection = projection_mode(&cfg.str_or("train.projection", "l1inf"), radius)?;
+    Ok(tc)
+}
+
+/// Parse a projection-mode name + radius into a [`ProjectionMode`].
+pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
+    Ok(match name {
+        "none" | "baseline" => ProjectionMode::None,
+        "l1" => ProjectionMode::L1 { eta: radius },
+        "l21" | "l12" => ProjectionMode::L12 { eta: radius },
+        "l1inf" => ProjectionMode::L1Inf { c: radius },
+        "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
+        other => bail!("unknown projection '{other}'"),
+    })
+}
+
+/// The `[sweep]` section: radii and seeds for the figure/table drivers.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub radii: Vec<f64>,
+    pub seeds: Vec<u64>,
+}
+
+pub fn sweep_config(cfg: &Config, default_radii: &[f64], default_seeds: &[u64]) -> SweepConfig {
+    SweepConfig {
+        radii: cfg.f64_vec_or("sweep.radii", default_radii),
+        seeds: cfg
+            .f64_vec_or("sweep.seeds", &default_seeds.iter().map(|&s| s as f64).collect::<Vec<_>>())
+            .into_iter()
+            .map(|s| s as u64)
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::Algorithm;
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = Config::parse("").unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert_eq!(tc.model, "synth_small");
+        assert_eq!(tc.exec, ExecMode::Epoch);
+        assert!(matches!(tc.projection, ProjectionMode::L1Inf { .. }));
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = Config::parse(
+            "[train]\nmodel = \"lung\"\nprojection = \"l21\"\nradius = 50\nexec = \"step\"\nalgo = \"newton\"\n",
+        )
+        .unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert_eq!(tc.model, "lung");
+        assert!(matches!(tc.projection, ProjectionMode::L12 { eta } if eta == 50.0));
+        assert_eq!(tc.exec, ExecMode::Step);
+        assert_eq!(tc.algo, Algorithm::Newton);
+    }
+
+    #[test]
+    fn rejects_unknown_projection() {
+        assert!(projection_mode("l3", 1.0).is_err());
+        let cfg = Config::parse("[train]\nexec = \"sideways\"\n").unwrap();
+        assert!(train_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn sweep_defaults_and_parse() {
+        let cfg = Config::parse("[sweep]\nradii = [0.1, 1]\nseeds = [4, 5]\n").unwrap();
+        let s = sweep_config(&cfg, &[9.0], &[0]);
+        assert_eq!(s.radii, vec![0.1, 1.0]);
+        assert_eq!(s.seeds, vec![4, 5]);
+        let empty = Config::parse("").unwrap();
+        let s2 = sweep_config(&empty, &[9.0], &[0, 1]);
+        assert_eq!(s2.radii, vec![9.0]);
+        assert_eq!(s2.seeds, vec![0, 1]);
+    }
+}

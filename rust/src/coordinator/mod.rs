@@ -1,0 +1,57 @@
+//! Experiment coordinator: dataset factories, radius/seed sweeps over the
+//! SAE trainer, and report emission (ASCII tables + CSV series).
+
+pub mod report;
+pub mod sweep;
+
+use crate::data::{loader, lung, synthetic, Dataset};
+use anyhow::{bail, Result};
+
+/// Build the dataset matching a manifest model config name.
+/// Seeds are data-generation seeds (the paper averages over several).
+pub fn dataset_for(model: &str, seed: u64) -> Result<Dataset> {
+    Ok(match model {
+        "tiny" => synthetic::make_classification(
+            &synthetic::SyntheticSpec { n: 90, d: 24, informative: 4, ..Default::default() },
+            seed,
+        ),
+        "synth_small" => synthetic::make_classification(
+            &synthetic::SyntheticSpec { d: 2000, ..Default::default() },
+            seed,
+        ),
+        "synth" => synthetic::make_classification(&synthetic::SyntheticSpec::default(), seed),
+        "lung" => {
+            let mut ds = lung::make_lung(&lung::LungSpec::default(), seed);
+            // The paper log-transforms the metabolomic intensities.
+            loader::log_transform(&mut ds);
+            ds
+        }
+        other => bail!("no dataset factory for model '{other}'"),
+    })
+}
+
+/// Standard train/test split fraction used by all experiments.
+pub const TRAIN_FRAC: f64 = 0.8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factories_produce_valid_data() {
+        for name in ["tiny", "synth_small"] {
+            let ds = dataset_for(name, 0).unwrap();
+            ds.validate().unwrap();
+        }
+        assert!(dataset_for("nope", 0).is_err());
+    }
+
+    #[test]
+    fn lung_factory_is_log_transformed() {
+        // After log1p, standardized intensities are small; raw intensities
+        // would reach e^6 ≈ 400.
+        let ds = dataset_for("lung", 0).unwrap();
+        let max = ds.x.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max < 20.0, "log-transform missing? max={max}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Report emission: paper-style ASCII tables + CSV series under a results
+//! directory, so every figure can be re-plotted from repo outputs.
+
+use super::sweep::{aggregate, RunResult};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::Path;
+
+/// Write the per-(projection, radius) aggregate curve of a radius sweep
+/// (accuracy / column sparsity / theta vs C) — the data behind Figs 5–8.
+pub fn write_radius_curve(path: &Path, runs: &[RunResult]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "projection", "radius", "acc_mean", "acc_std", "colsp_mean", "theta_mean",
+            "sum_w_mean", "seeds",
+        ],
+    )?;
+    let mut keys: Vec<(&'static str, u64)> =
+        runs.iter().map(|r| (r.projection, r.radius.to_bits())).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    for (proj, rbits) in keys {
+        let radius = f64::from_bits(rbits);
+        let pred = |r: &RunResult| r.projection == proj && r.radius.to_bits() == rbits;
+        let (acc, acc_sd) = aggregate(runs, pred, |r| r.report.test_accuracy_pct);
+        let (colsp, _) = aggregate(runs, pred, |r| r.report.w1.col_sparsity_pct);
+        let (theta, _) = aggregate(runs, pred, |r| r.report.final_theta);
+        let (sum_w, _) = aggregate(runs, pred, |r| r.report.w1.sum_abs);
+        let n = runs.iter().filter(|r| pred(r)).count();
+        w.row(&[
+            proj.to_string(),
+            format!("{radius}"),
+            format!("{acc:.4}"),
+            format!("{acc_sd:.4}"),
+            format!("{colsp:.4}"),
+            format!("{theta:.6}"),
+            format!("{sum_w:.4}"),
+            format!("{n}"),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Render a Table-1/Table-2 style comparison (one row per projection mode).
+pub fn render_method_table(title: &str, runs: &[RunResult], with_sum_w: bool) -> String {
+    let mut header = vec!["method", "radius", "accuracy_%", "colsp_%"];
+    if with_sum_w {
+        header.push("sum_of_W");
+    }
+    let mut t = Table::new(&header);
+    let mut keys: Vec<(&'static str, u64)> =
+        runs.iter().map(|r| (r.projection, r.radius.to_bits())).collect();
+    // preserve first-appearance order (baseline first, like the paper)
+    let mut seen = std::collections::HashSet::new();
+    keys.retain(|k| seen.insert(*k));
+    for (proj, rbits) in keys {
+        let radius = f64::from_bits(rbits);
+        let pred = |r: &RunResult| r.projection == proj && r.radius.to_bits() == rbits;
+        let (acc, acc_sd) = aggregate(runs, pred, |r| r.report.test_accuracy_pct);
+        let (colsp, _) = aggregate(runs, pred, |r| r.report.w1.col_sparsity_pct);
+        let mut row = vec![
+            proj.to_string(),
+            if proj == "baseline" { "-".into() } else { format!("{radius}") },
+            format!("{acc:.2} ± {acc_sd:.2}"),
+            format!("{colsp:.2}"),
+        ];
+        if with_sum_w {
+            let (sw, _) = aggregate(runs, pred, |r| r.report.w1.sum_abs);
+            row.push(if proj == "baseline" { "-".into() } else { format!("{sw:.2}") });
+        }
+        t.row(row);
+    }
+    format!("== {title} ==\n{}", t.render())
+}
+
+/// Write the raw per-run rows (for reproducibility audits).
+pub fn write_runs(path: &Path, runs: &[RunResult]) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["projection", "radius", "seed", "acc", "colsp", "theta", "sum_w", "train_secs", "proj_secs"],
+    )?;
+    for r in runs {
+        w.row(&[
+            r.projection.to_string(),
+            format!("{}", r.radius),
+            format!("{}", r.seed),
+            format!("{:.4}", r.report.test_accuracy_pct),
+            format!("{:.4}", r.report.w1.col_sparsity_pct),
+            format!("{:.6}", r.report.final_theta),
+            format!("{:.4}", r.report.w1.sum_abs),
+            format!("{:.3}", r.report.train_secs),
+            format!("{:.3}", r.report.proj_secs),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Radius × seed sweeps over the SAE trainer (the workhorse behind
+//! Figures 5–8 and Tables 1–2).
+
+use super::{dataset_for, TRAIN_FRAC};
+use crate::data::loader::{stratified_split, Split};
+use crate::runtime::Engine;
+use crate::sae::trainer::{ProjectionMode, TrainConfig, TrainReport, Trainer};
+use anyhow::Result;
+
+/// One completed training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub projection: &'static str,
+    pub radius: f64,
+    pub seed: u64,
+    pub report: TrainReport,
+}
+
+/// Run `base` once per (radius, seed) with the given projection-mode
+/// constructor. Splits are regenerated per seed (data seed == train seed,
+/// like the paper's "metrics over multiple seeds").
+pub fn radius_seed_sweep(
+    engine: &mut Engine,
+    base: &TrainConfig,
+    make_mode: impl Fn(f64) -> ProjectionMode,
+    radii: &[f64],
+    seeds: &[u64],
+) -> Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(radii.len() * seeds.len());
+    for &seed in seeds {
+        let split = split_for(&base.model, seed)?;
+        for &radius in radii {
+            let mut tc = base.clone();
+            tc.seed = seed;
+            tc.projection = make_mode(radius);
+            let name = tc.projection.name();
+            log::info!("run model={} proj={name} C={radius} seed={seed}", tc.model);
+            let report = Trainer::new(engine, tc)?.train(&split)?;
+            log::info!(
+                "  -> acc={:.2}% colsp={:.2}% theta={:.4}",
+                report.test_accuracy_pct,
+                report.w1.col_sparsity_pct,
+                report.final_theta
+            );
+            out.push(RunResult { projection: name, radius, seed, report });
+        }
+    }
+    Ok(out)
+}
+
+/// Run a set of named (projection, radius) table rows over seeds.
+pub fn table_sweep(
+    engine: &mut Engine,
+    base: &TrainConfig,
+    rows: &[(ProjectionMode, f64)],
+    seeds: &[u64],
+) -> Result<Vec<RunResult>> {
+    let mut out = Vec::new();
+    for &seed in seeds {
+        let split = split_for(&base.model, seed)?;
+        for &(mode, radius) in rows {
+            let mut tc = base.clone();
+            tc.seed = seed;
+            tc.projection = mode;
+            let report = Trainer::new(engine, tc)?.train(&split)?;
+            log::info!(
+                "table row {} C={radius} seed={seed}: acc={:.2}% colsp={:.2}%",
+                mode.name(),
+                report.test_accuracy_pct,
+                report.w1.col_sparsity_pct
+            );
+            out.push(RunResult { projection: mode.name(), radius, seed, report });
+        }
+    }
+    Ok(out)
+}
+
+/// Dataset + split for a model config name.
+pub fn split_for(model: &str, seed: u64) -> Result<Split> {
+    let ds = dataset_for(model, seed)?;
+    Ok(stratified_split(&ds, TRAIN_FRAC, seed))
+}
+
+/// Aggregate (mean, std) of a metric over the runs matching a predicate.
+pub fn aggregate<F: Fn(&RunResult) -> f64>(
+    runs: &[RunResult],
+    pred: impl Fn(&RunResult) -> bool,
+    metric: F,
+) -> (f64, f64) {
+    let vals: Vec<f64> = runs.iter().filter(|r| pred(r)).map(|r| metric(r)).collect();
+    (crate::util::stats::mean(&vals), crate::util::stats::std(&vals))
+}

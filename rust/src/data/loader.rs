@@ -1,0 +1,258 @@
+//! Preprocessing + batching: stratified splits, the paper's log-transform,
+//! z-score standardization, padded eval batches and epoch permutations.
+
+use super::Dataset;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// In-place log-transform `x ← ln(1 + x)` — the paper applies a
+/// log-transform to the metabolomic data "for reducing heteroscedasticity
+/// and transforming multiplicative noise into additive noise".
+pub fn log_transform(ds: &mut Dataset) {
+    for v in ds.x.iter_mut() {
+        debug_assert!(*v >= 0.0, "log-transform expects nonnegative intensities");
+        *v = (1.0 + *v).ln();
+    }
+}
+
+/// Per-feature standardization statistics (computed on the train split).
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl Standardizer {
+    /// Fit on the rows of `ds` listed in `idx`.
+    pub fn fit(ds: &Dataset, idx: &[usize]) -> Standardizer {
+        let d = ds.d;
+        let mut mean = vec![0.0f64; d];
+        let mut sq = vec![0.0f64; d];
+        for &i in idx {
+            let row = ds.row(i);
+            for j in 0..d {
+                mean[j] += row[j] as f64;
+                sq[j] += (row[j] as f64) * (row[j] as f64);
+            }
+        }
+        let n = idx.len().max(1) as f64;
+        let mut m32 = vec![0.0f32; d];
+        let mut s32 = vec![0.0f32; d];
+        for j in 0..d {
+            let mu = mean[j] / n;
+            let var = (sq[j] / n - mu * mu).max(1e-12);
+            m32[j] = mu as f32;
+            s32[j] = var.sqrt() as f32;
+        }
+        Standardizer { mean: m32, std: s32 }
+    }
+
+    /// Apply to a raw row, writing into `out`.
+    pub fn apply(&self, row: &[f32], out: &mut [f32]) {
+        for j in 0..row.len() {
+            out[j] = (row[j] - self.mean[j]) / self.std[j];
+        }
+    }
+}
+
+/// A ready-to-train split: standardized train/test tensors.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub x_train: Vec<f32>,
+    pub y_train: Vec<i32>,
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<i32>,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub k: usize,
+}
+
+/// Stratified split + standardization fitted on train only.
+/// `n_train_target` rows go to train (truncated to a multiple of nothing —
+/// the trainer later slices `cfg.n_train` rows as the epoch window).
+pub fn stratified_split(ds: &Dataset, train_frac: f64, seed: u64) -> Split {
+    let mut rng = Rng::new(seed ^ 0x5711F7);
+    // bucket indices per class, shuffle, take train_frac of each
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for c in 0..ds.k {
+        let mut idx: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] as usize == c).collect();
+        rng.shuffle(&mut idx);
+        let n_tr = ((idx.len() as f64) * train_frac).round() as usize;
+        train_idx.extend_from_slice(&idx[..n_tr]);
+        test_idx.extend_from_slice(&idx[n_tr..]);
+    }
+    rng.shuffle(&mut train_idx);
+    rng.shuffle(&mut test_idx);
+
+    let st = Standardizer::fit(ds, &train_idx);
+    let pack = |idx: &[usize]| {
+        let mut x = vec![0.0f32; idx.len() * ds.d];
+        let mut y = vec![0i32; idx.len()];
+        for (r, &i) in idx.iter().enumerate() {
+            st.apply(ds.row(i), &mut x[r * ds.d..(r + 1) * ds.d]);
+            y[r] = ds.y[i];
+        }
+        (x, y)
+    };
+    let (x_train, y_train) = pack(&train_idx);
+    let (x_test, y_test) = pack(&test_idx);
+    Split {
+        n_train: train_idx.len(),
+        n_test: test_idx.len(),
+        d: ds.d,
+        k: ds.k,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    }
+}
+
+impl Split {
+    /// Slice a train batch (by precomputed order indices) into tensors.
+    pub fn train_batch(&self, order: &[usize], step: usize, batch: usize) -> (Tensor, Tensor) {
+        let mut x = vec![0.0f32; batch * self.d];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let i = order[step * batch + b];
+            x[b * self.d..(b + 1) * self.d]
+                .copy_from_slice(&self.x_train[i * self.d..(i + 1) * self.d]);
+            y[b] = self.y_train[i];
+        }
+        (Tensor::f32(&[batch, self.d], x), Tensor::i32(&[batch], y))
+    }
+
+    /// The first `n` training rows as one tensor pair (epoch-mode upload).
+    pub fn train_window(&self, n: usize) -> (Tensor, Tensor) {
+        assert!(n <= self.n_train, "window {n} > train size {}", self.n_train);
+        (
+            Tensor::f32(&[n, self.d], self.x_train[..n * self.d].to_vec()),
+            Tensor::i32(&[n], self.y_train[..n].to_vec()),
+        )
+    }
+
+    /// Padded eval batches: returns (tensor, valid_rows) pairs covering the
+    /// test split; the tail batch repeats row 0 as padding (ignored via
+    /// `valid_rows`).
+    pub fn eval_batches(&self, batch: usize) -> Vec<(Tensor, Vec<i32>, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.n_test {
+            let valid = batch.min(self.n_test - i);
+            let mut x = vec![0.0f32; batch * self.d];
+            let mut y = vec![0i32; valid];
+            for b in 0..batch {
+                let src = if b < valid { i + b } else { 0 };
+                x[b * self.d..(b + 1) * self.d]
+                    .copy_from_slice(&self.x_test[src * self.d..(src + 1) * self.d]);
+                if b < valid {
+                    y[b] = self.y_test[i + b];
+                }
+            }
+            out.push((Tensor::f32(&[batch, self.d], x), y, valid));
+            i += valid;
+        }
+        out
+    }
+
+    /// Shuffled epoch order over the first `window` training rows, sized to
+    /// `steps * batch` entries (cycles if needed).
+    pub fn epoch_order(&self, window: usize, steps: usize, batch: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..window).collect();
+        rng.shuffle(&mut order);
+        while order.len() < steps * batch {
+            let mut extra: Vec<usize> = (0..window).collect();
+            rng.shuffle(&mut extra);
+            order.extend(extra);
+        }
+        order.truncate(steps * batch);
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{make_classification, SyntheticSpec};
+
+    fn dataset() -> Dataset {
+        make_classification(
+            &SyntheticSpec { n: 120, d: 30, informative: 5, ..Default::default() },
+            0,
+        )
+    }
+
+    #[test]
+    fn split_is_stratified_and_disjoint() {
+        let ds = dataset();
+        let sp = stratified_split(&ds, 0.8, 0);
+        assert_eq!(sp.n_train + sp.n_test, ds.n);
+        // class balance preserved within 10%
+        let frac = |ys: &[i32]| ys.iter().filter(|&&y| y == 1).count() as f64 / ys.len() as f64;
+        assert!((frac(&sp.y_train) - frac(&ds.y)).abs() < 0.1);
+        assert!((frac(&sp.y_test) - frac(&ds.y)).abs() < 0.1);
+    }
+
+    #[test]
+    fn standardization_zero_mean_unit_var() {
+        let ds = dataset();
+        let sp = stratified_split(&ds, 0.8, 1);
+        let d = sp.d;
+        for j in [0, d / 2, d - 1] {
+            let vals: Vec<f64> =
+                (0..sp.n_train).map(|i| sp.x_train[i * d + j] as f64).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            assert!(mean.abs() < 1e-3, "col {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "col {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn log_transform_monotone_positive() {
+        let mut ds = crate::data::lung::make_lung(
+            &crate::data::lung::LungSpec {
+                n_cases: 10,
+                n_controls: 10,
+                d: 20,
+                informative: 3,
+                ..Default::default()
+            },
+            0,
+        );
+        let before = ds.x.clone();
+        log_transform(&mut ds);
+        for (a, b) in ds.x.iter().zip(before.iter()) {
+            assert!(*a <= *b, "log should compress large intensities");
+            assert!(a.is_finite());
+        }
+    }
+
+    #[test]
+    fn eval_batches_cover_test_exactly_once() {
+        let ds = dataset();
+        let sp = stratified_split(&ds, 0.8, 2);
+        let batches = sp.eval_batches(7);
+        let total: usize = batches.iter().map(|(_, _, v)| v).sum();
+        assert_eq!(total, sp.n_test);
+        for (x, y, valid) in &batches {
+            assert_eq!(x.shape(), &[7, sp.d]);
+            assert_eq!(y.len(), *valid);
+        }
+    }
+
+    #[test]
+    fn epoch_order_covers_window() {
+        let ds = dataset();
+        let sp = stratified_split(&ds, 0.8, 3);
+        let mut rng = Rng::new(0);
+        let order = sp.epoch_order(96, 12, 8, &mut rng);
+        assert_eq!(order.len(), 96);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 96, "each row exactly once when sizes match");
+    }
+}

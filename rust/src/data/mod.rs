@@ -1,0 +1,59 @@
+//! Data substrates for the paper's experiments.
+//!
+//! - [`synthetic`] — a faithful port of scikit-learn's `make_classification`
+//!   generator (paper §6.1: n=1000 samples, d=10000 features, 64
+//!   informative, class_sep 0.8).
+//! - [`lung`]      — a *simulated* stand-in for the private LUNG
+//!   metabolomics dataset of Mathe et al. (paper §6.2): 1005 urine samples
+//!   (469 NSCLC / 536 control) × 2944 features with log-normal intensities,
+//!   multiplicative noise and a small planted informative set. See
+//!   DESIGN.md §3 for why the substitution preserves the experiment.
+//! - [`loader`]    — stratified splits, standardization, log-transform,
+//!   batching and shuffled epoch permutations.
+
+pub mod loader;
+pub mod lung;
+pub mod synthetic;
+
+/// A labelled dense dataset (row-major samples × features).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n × d feature matrix, row-major.
+    pub x: Vec<f32>,
+    /// n labels in [0, k).
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Ground-truth informative feature indices (for selection metrics);
+    /// empty when unknown.
+    pub informative: Vec<usize>,
+}
+
+impl Dataset {
+    /// Row slice accessor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Per-class counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.k];
+        for &y in &self.y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+
+    /// Basic invariant check (used by tests and the loaders).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.x.len() == self.n * self.d, "x size mismatch");
+        anyhow::ensure!(self.y.len() == self.n, "y size mismatch");
+        anyhow::ensure!(
+            self.y.iter().all(|&y| (y as usize) < self.k),
+            "label out of range"
+        );
+        anyhow::ensure!(self.x.iter().all(|v| v.is_finite()), "non-finite feature");
+        Ok(())
+    }
+}

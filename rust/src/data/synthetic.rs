@@ -1,0 +1,219 @@
+//! Port of scikit-learn's `make_classification` (paper §6.1 uses it with
+//! n=1000, d=10000, 64 informative features, class separability 0.8).
+//!
+//! Generative process (n_clusters_per_class=1, the paper's setting):
+//! 1. one centroid per class at a hypercube vertex scaled by `class_sep`
+//!    in the informative subspace;
+//! 2. standard-normal points around the centroid, then a random linear
+//!    mixing `A (inf × inf)` to induce intra-class covariance;
+//! 3. optional redundant features = random combinations of informative;
+//! 4. remaining features = pure N(0,1) noise;
+//! 5. label noise `flip_y`, and a random column shuffle so the informative
+//!    set is hidden at random positions (returned as ground truth).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Generation parameters (defaults follow the paper's synthetic setup).
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub informative: usize,
+    pub redundant: usize,
+    pub class_sep: f64,
+    pub flip_y: f64,
+    pub shuffle: bool,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            n: 1000,
+            d: 10_000,
+            k: 2,
+            informative: 64,
+            redundant: 0,
+            class_sep: 0.8,
+            flip_y: 0.01,
+            shuffle: true,
+        }
+    }
+}
+
+impl SyntheticSpec {
+    /// Reduced variant matching the `synth_small` AOT config.
+    pub fn small() -> Self {
+        SyntheticSpec { d: 2000, ..Default::default() }
+    }
+}
+
+/// Generate a dataset (deterministic per seed).
+pub fn make_classification(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5EED_DA7A);
+    let SyntheticSpec { n, d, k, informative, redundant, class_sep, flip_y, shuffle } = *spec;
+    assert!(informative + redundant <= d, "too many structured features");
+    assert!(k >= 2);
+
+    // 1. centroids on hypercube vertices (Gray-code style ±class_sep).
+    let mut centroids = vec![0.0f64; k * informative];
+    for c in 0..k {
+        for j in 0..informative {
+            // vertex pattern: bit j of (c * 2654435761) — deterministic,
+            // distinct per class, balanced coordinates.
+            let h = (c as u64).wrapping_mul(2654435761).wrapping_add(j as u64);
+            let bit = (h ^ (h >> 7) ^ (h >> 13)) & 1;
+            centroids[c * informative + j] = if bit == 1 { class_sep } else { -class_sep };
+        }
+    }
+
+    // 2. random mixing matrix A (informative × informative).
+    let mut a = vec![0.0f64; informative * informative];
+    for v in a.iter_mut() {
+        *v = rng.normal();
+    }
+    // Scale A toward orthonormal-ish so covariance stays O(1).
+    let scale = 1.0 / (informative as f64).sqrt();
+
+    // 3. redundant projection B (informative × redundant).
+    let mut b = vec![0.0f64; informative * redundant];
+    for v in b.iter_mut() {
+        *v = rng.normal();
+    }
+
+    let mut x = vec![0.0f32; n * d];
+    let mut y = vec![0i32; n];
+    let mut latent = vec![0.0f64; informative];
+    let mut mixed = vec![0.0f64; informative];
+    for i in 0..n {
+        let c = i % k; // balanced classes
+        y[i] = c as i32;
+        for j in 0..informative {
+            latent[j] = rng.normal();
+        }
+        // mixed = A·latent (scaled) + centroid
+        for r in 0..informative {
+            let mut acc = 0.0;
+            for j in 0..informative {
+                acc += a[r * informative + j] * latent[j];
+            }
+            mixed[r] = acc * scale + centroids[c * informative + r];
+        }
+        let row = &mut x[i * d..(i + 1) * d];
+        for j in 0..informative {
+            row[j] = mixed[j] as f32;
+        }
+        for j in 0..redundant {
+            let mut acc = 0.0;
+            for r in 0..informative {
+                acc += b[r * redundant + j] * mixed[r];
+            }
+            row[informative + j] = (acc * scale) as f32;
+        }
+        for j in (informative + redundant)..d {
+            row[j] = rng.normal() as f32;
+        }
+    }
+
+    // 4. label noise.
+    for yi in y.iter_mut() {
+        if rng.chance(flip_y) {
+            *yi = rng.below(k) as i32;
+        }
+    }
+
+    // 5. column shuffle, tracking where the informative features land.
+    let mut informative_idx: Vec<usize> = (0..informative + redundant).collect();
+    if shuffle {
+        let perm = rng.permutation(d); // perm[new_col] = old_col
+        let mut shuffled = vec![0.0f32; n * d];
+        for i in 0..n {
+            let src = &x[i * d..(i + 1) * d];
+            let dst = &mut shuffled[i * d..(i + 1) * d];
+            for (new_c, &old_c) in perm.iter().enumerate() {
+                dst[new_c] = src[old_c];
+            }
+        }
+        x = shuffled;
+        let mut where_is = vec![0usize; d]; // old_col -> new_col
+        for (new_c, &old_c) in perm.iter().enumerate() {
+            where_is[old_c] = new_c;
+        }
+        informative_idx = informative_idx.iter().map(|&c| where_is[c]).collect();
+    }
+    informative_idx.sort_unstable();
+
+    Dataset { x, y, n, d, k, informative: informative_idx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SyntheticSpec {
+        SyntheticSpec { n: 200, d: 100, informative: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn shapes_and_validity() {
+        let ds = make_classification(&small_spec(), 0);
+        ds.validate().unwrap();
+        assert_eq!(ds.n, 200);
+        assert_eq!(ds.d, 100);
+        assert_eq!(ds.informative.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = make_classification(&small_spec(), 3);
+        let b = make_classification(&small_spec(), 3);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = make_classification(&small_spec(), 4);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let ds = make_classification(&small_spec(), 1);
+        let counts = ds.class_counts();
+        assert!(counts.iter().all(|&c| c > 80), "{counts:?}");
+    }
+
+    #[test]
+    fn informative_features_carry_signal() {
+        // Mean |class-0 mean − class-1 mean| must be far larger on the
+        // informative columns than on noise columns.
+        let ds = make_classification(&small_spec(), 2);
+        let mut gap = vec![0.0f64; ds.d];
+        let mut counts = [0usize; 2];
+        let mut sums = vec![[0.0f64; 2]; ds.d];
+        for i in 0..ds.n {
+            let c = ds.y[i] as usize;
+            counts[c] += 1;
+            for j in 0..ds.d {
+                sums[j][c] += ds.row(i)[j] as f64;
+            }
+        }
+        for j in 0..ds.d {
+            gap[j] = (sums[j][0] / counts[0] as f64 - sums[j][1] / counts[1] as f64).abs();
+        }
+        let inf_set: std::collections::HashSet<_> = ds.informative.iter().copied().collect();
+        let inf_gap: f64 = ds.informative.iter().map(|&j| gap[j]).sum::<f64>() / inf_set.len() as f64;
+        let noise_gap: f64 = (0..ds.d).filter(|j| !inf_set.contains(j)).map(|j| gap[j]).sum::<f64>()
+            / (ds.d - inf_set.len()) as f64;
+        assert!(
+            inf_gap > 3.0 * noise_gap,
+            "informative gap {inf_gap} vs noise gap {noise_gap}"
+        );
+    }
+
+    #[test]
+    fn label_noise_applied() {
+        let clean = make_classification(&SyntheticSpec { flip_y: 0.0, ..small_spec() }, 5);
+        let noisy = make_classification(&SyntheticSpec { flip_y: 0.3, ..small_spec() }, 5);
+        let flips = clean.y.iter().zip(noisy.y.iter()).filter(|(a, b)| a != b).count();
+        assert!(flips > 10, "expected label flips, got {flips}");
+    }
+}

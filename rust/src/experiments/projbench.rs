@@ -1,0 +1,152 @@
+//! Shared harness for the projection-timing experiments (paper Figures
+//! 1–3 and the "2.18× faster than Chu" training-projection claim).
+//!
+//! Used both by the `l1inf exp figN` drivers and by the `cargo bench`
+//! targets, so the figures and the benches are guaranteed to measure the
+//! same code.
+
+use crate::projection::l1inf::{project_l1inf, solve_theta, Algorithm};
+use crate::projection::{group_sparsity_pct, norm_l1inf, sparsity_pct};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+/// Algorithms the paper's timing figures compare. (`Bisection` is a test
+/// oracle, `Naive` is dominated by `Bejar` which wraps it — the paper's
+/// figures show the same four.)
+pub const FIGURE_ALGOS: [Algorithm; 4] =
+    [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar, Algorithm::Quattoni];
+
+/// One measurement row.
+#[derive(Debug, Clone)]
+pub struct ProjSample {
+    pub algo: &'static str,
+    pub n: usize,
+    pub m: usize,
+    pub radius: f64,
+    /// Entrywise sparsity (%) of the projected matrix.
+    pub sparsity_pct: f64,
+    /// Zeroed-column (group) percentage.
+    pub col_sparsity_pct: f64,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    /// Solver work counter (breakpoints / iterations).
+    pub work: usize,
+    pub touched_groups: usize,
+}
+
+/// Generate the paper's benchmark input: an `n × m` matrix with entries
+/// U[0, 1) (groups = the m columns, each of length n).
+pub fn uniform_matrix(n: usize, m: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xF16);
+    let mut data = vec![0.0f32; n * m];
+    rng.fill_uniform_f32(&mut data);
+    data
+}
+
+/// Time one (algo, radius) cell over `reps` repetitions on fresh copies.
+/// The timed region is the full projection (solve θ + apply), matching how
+/// the published baselines are benchmarked.
+pub fn measure(
+    data: &[f32],
+    n: usize,
+    m: usize,
+    radius: f64,
+    algo: Algorithm,
+    reps: usize,
+) -> ProjSample {
+    let mut times = Vec::with_capacity(reps);
+    let mut projected = Vec::new();
+    let mut work = 0;
+    let mut touched = 0;
+    for _ in 0..reps {
+        let mut copy = data.to_vec();
+        let t = Timer::start();
+        let info = project_l1inf(&mut copy, m, n, radius, algo);
+        times.push(t.millis());
+        work = info.stats.work;
+        touched = info.stats.touched_groups;
+        projected = copy;
+    }
+    let mean_ms = times.iter().sum::<f64>() / times.len() as f64;
+    let min_ms = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    ProjSample {
+        algo: algo.name(),
+        n,
+        m,
+        radius,
+        sparsity_pct: sparsity_pct(&projected),
+        col_sparsity_pct: group_sparsity_pct(&projected, m, n),
+        mean_ms,
+        min_ms,
+        work,
+        touched_groups: touched,
+    }
+}
+
+/// Solve-only timing (no apply) — used by the ablation bench to separate
+/// θ-search cost from the unavoidable O(nm) apply.
+pub fn measure_solve_only(
+    data: &[f32],
+    n: usize,
+    m: usize,
+    radius: f64,
+    algo: Algorithm,
+    reps: usize,
+) -> f64 {
+    let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        let st = solve_theta(&abs, m, n, radius, algo);
+        let ms = t.millis();
+        std::hint::black_box(st.theta);
+        best = best.min(ms);
+    }
+    best
+}
+
+/// The paper's Figure-1 radius grid: log-spaced in [1e-3, 8].
+pub fn radius_grid(points: usize) -> Vec<f64> {
+    let (lo, hi) = (1e-3f64.ln(), 8.0f64.ln());
+    (0..points)
+        .map(|i| (lo + (hi - lo) * i as f64 / (points - 1).max(1) as f64).exp())
+        .collect()
+}
+
+/// Verify the norm constraint held (used as a sanity check in drivers).
+pub fn assert_on_ball(data: &[f32], n: usize, m: usize, radius: f64) {
+    let norm = norm_l1inf(data, m, n);
+    assert!(norm <= radius * (1.0 + 1e-4) + 1e-6, "‖X‖ = {norm} > C = {radius}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radius_grid_spans_paper_range() {
+        let g = radius_grid(10);
+        assert_eq!(g.len(), 10);
+        assert!((g[0] - 1e-3).abs() < 1e-9);
+        assert!((g[9] - 8.0).abs() < 1e-9);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn measure_reports_consistent_sparsity() {
+        let data = uniform_matrix(50, 40, 0);
+        let a = measure(&data, 50, 40, 0.5, Algorithm::InverseOrder, 2);
+        let b = measure(&data, 50, 40, 0.5, Algorithm::Newton, 2);
+        // same projection => same sparsity, whatever the solver
+        assert!((a.sparsity_pct - b.sparsity_pct).abs() < 0.2, "{a:?} vs {b:?}");
+        assert!(a.col_sparsity_pct > 50.0, "C=0.5 on 40 columns is sparse");
+    }
+
+    #[test]
+    fn sparsity_decreases_with_radius() {
+        let data = uniform_matrix(60, 60, 1);
+        let tight = measure(&data, 60, 60, 0.1, Algorithm::InverseOrder, 1);
+        let loose = measure(&data, 60, 60, 5.0, Algorithm::InverseOrder, 1);
+        assert!(tight.sparsity_pct > loose.sparsity_pct);
+    }
+}

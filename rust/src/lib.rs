@@ -1,0 +1,52 @@
+//! # l1inf — Near-Linear Time Projection onto the ℓ₁,∞ Ball
+//!
+//! Production reproduction of Perez, Condat & Barlaud (2023),
+//! *"Near-Linear Time Projection onto the ℓ₁,∞ Ball; Application to Sparse
+//! Autoencoders"*, as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's algorithmic contribution
+//!   ([`projection::l1inf::inverse_order`]) plus every baseline it compares
+//!   against, the supervised-autoencoder training coordinator ([`sae`]), the
+//!   data substrates ([`data`]), and the PJRT runtime ([`runtime`]) that
+//!   executes AOT-compiled JAX/Pallas artifacts.
+//! - **Layer 2** — `python/compile/model.py`: the SAE forward/backward +
+//!   Adam as a JAX function, lowered once to HLO text (`make artifacts`).
+//! - **Layer 1** — `python/compile/kernels/`: Pallas kernels (tiled dense
+//!   layers with a custom VJP, column-clip) called from the L2 graph.
+//!
+//! Python never runs at training/serving time: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and drives
+//! everything else natively.
+//!
+//! ## Quick start
+//!
+//! (`no_run`: rustdoc test binaries don't inherit the cargo rpath to
+//! `libxla_extension`; the same API is exercised by the unit tests.)
+//!
+//! ```no_run
+//! use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+//!
+//! // 3 groups ("columns" in the paper) of length 4, ‖Y‖₁,∞ = 3.0
+//! let mut y = vec![
+//!     1.0f32, -0.5, 0.25, 0.0, // group 0, max |.| = 1.0
+//!     0.9, 0.8, -0.7, 0.1,     // group 1, max |.| = 0.9
+//!     1.1, 0.2, 0.3, -0.4,     // group 2, max |.| = 1.1
+//! ];
+//! let info = project_l1inf(&mut y, 3, 4, 1.5, Algorithm::InverseOrder);
+//! assert!(info.radius_after <= 1.5 + 1e-5);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/src/experiments/` for
+//! the code that regenerates every table and figure of the paper.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod projection;
+pub mod runtime;
+pub mod sae;
+pub mod util;
+
+/// Crate-level result alias.
+pub type Result<T> = anyhow::Result<T>;

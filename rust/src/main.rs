@@ -1,0 +1,193 @@
+//! `l1inf` — launcher for the ℓ₁,∞-projection SAE framework.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! l1inf project   --groups M --len N --radius C [--algo inv_order] [--seed S]
+//! l1inf train     [--config configs/synth.toml] [--set train.key=value;...]
+//! l1inf exp NAME  [--quick] [--out results] [--config F] [--set ...]
+//! l1inf artifacts [--dir artifacts]
+//! l1inf help
+//! ```
+//!
+//! Experiment names: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2
+//! trainproj (see DESIGN.md §5).
+
+use anyhow::{bail, Context, Result};
+use l1inf::config::{train::train_config, Config};
+use l1inf::coordinator::sweep::split_for;
+use l1inf::experiments::{self, ExpOpts};
+use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::runtime::{Engine, Manifest};
+use l1inf::sae::trainer::Trainer;
+use l1inf::util::cli::Args;
+use l1inf::util::rng::Rng;
+use l1inf::util::Timer;
+
+const USAGE: &str = "usage: l1inf <project|train|exp|artifacts|help> [options]
+  project   --groups M --len N --radius C [--algo A] [--seed S]
+  train     [--config FILE] [--set section.key=value;...]
+  exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
+  artifacts [--dir DIR]
+experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj";
+
+fn main() {
+    init_logging();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn init_logging() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_ascii_lowercase(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: Stderr = Stderr;
+    let _ = log::set_logger(&LOGGER);
+    let level = match std::env::var("L1INF_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Info,
+    };
+    log::set_max_level(level);
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        for spec in sets.split(';').filter(|s| !s.trim().is_empty()) {
+            cfg.set_override(spec.trim())?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["quick", "verbose"]).map_err(anyhow::Error::msg)?;
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "project" => cmd_project(&args),
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+/// Demo/diagnostic: project a random matrix and print the certificate.
+fn cmd_project(args: &Args) -> Result<()> {
+    let m = args.get_usize("groups", 1000).map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("len", 1000).map_err(anyhow::Error::msg)?;
+    let c = args.get_f64("radius", 1.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let algo: Algorithm =
+        args.get_or("algo", "inv_order").parse().map_err(anyhow::Error::msg)?;
+
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; n * m];
+    rng.fill_uniform_f32(&mut data);
+    let t = Timer::start();
+    let info = project_l1inf(&mut data, m, n, c, algo);
+    let ms = t.millis();
+    println!("matrix {n}x{m}  C={c}  algo={}", algo.name());
+    println!("  time            {ms:.3} ms");
+    println!("  radius          {:.4} -> {:.4}", info.radius_before, info.radius_after);
+    println!("  theta           {:.6}", info.theta);
+    println!("  zero groups     {} / {m}", info.zero_groups);
+    println!("  sparsity        {:.2}%", l1inf::projection::sparsity_pct(&data));
+    println!("  work / touched  {} / {}", info.stats.work, info.stats.touched_groups);
+    Ok(())
+}
+
+/// Train one SAE from a config file and print the report.
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let tc = train_config(&cfg)?;
+    println!(
+        "training model={} proj={} epochs={} exec={:?} seed={}",
+        tc.model,
+        tc.projection.name(),
+        tc.epochs,
+        tc.exec,
+        tc.seed
+    );
+    let mut engine = Engine::from_default_artifacts()?;
+    let split = split_for(&tc.model, tc.seed)?;
+    let report = Trainer::new(&mut engine, tc)?.train(&split)?;
+    for l in &report.epochs {
+        println!(
+            "epoch {:>3}  loss {:>8.4}  train_acc {:>6.2}%  colsp {:>6.2}%  theta {:>8.4}  exec {:>7.1}ms  proj {:>6.2}ms",
+            l.epoch, l.mean_loss, l.train_acc_pct, l.col_sparsity_pct, l.theta, l.exec_ms, l.proj_ms
+        );
+    }
+    println!("test accuracy    {:.2}%", report.test_accuracy_pct);
+    println!("column sparsity  {:.2}%", report.w1.col_sparsity_pct);
+    println!("selected features {}", report.w1.selected.len());
+    println!("sum |w1|         {:.3}", report.w1.sum_abs);
+    println!("train time       {:.2}s (projection {:.3}s)", report.train_secs, report.proj_secs);
+    if let Some(acc) = report.retrain_accuracy_pct {
+        println!("double-descent retrain accuracy {acc:.2}%");
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .context("exp requires a name, e.g. `l1inf exp fig1`")?
+        .clone();
+    let opts = ExpOpts {
+        quick: args.has_flag("quick"),
+        outdir: args.get_or("out", "results").into(),
+        cfg: load_config(args)?,
+    };
+    if name == "all" {
+        for id in experiments::ALL {
+            println!("\n### experiment {id} ###");
+            experiments::run(id, &opts)?;
+        }
+        return Ok(());
+    }
+    experiments::run(&name, &opts)
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_or("dir", "artifacts");
+    let manifest = Manifest::load(dir)?;
+    println!("artifacts in {dir}:");
+    for c in &manifest.configs {
+        println!(
+            "  {:<12} d={:<6} hidden={:<4} k={} batch={} n_train={} kinds={:?}",
+            c.name,
+            c.d,
+            c.hidden,
+            c.k,
+            c.batch,
+            c.n_train,
+            c.artifacts.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

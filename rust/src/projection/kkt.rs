@@ -1,0 +1,169 @@
+//! Optimality-condition verifier for ℓ₁,∞ projections (Lemma 1).
+//!
+//! Used throughout the test suite as an algorithm-independent certificate:
+//! a candidate `X = P_{B₁,∞^C}(Y)` is optimal iff
+//!
+//! 1. feasibility: `‖X‖₁,∞ ≤ C` (with equality when `‖Y‖₁,∞ > C`);
+//! 2. clipping structure: `X[g,i] = sign(Y[g,i]) · min(|Y[g,i]|, μ_g)` for
+//!    some per-group level `μ_g ≥ 0` with `Σ_g μ_g = C`;
+//! 3. equal mass removal: groups with `μ_g > 0` all lose exactly the same
+//!    ℓ₁ mass θ; groups with `μ_g = 0` satisfy `‖y_g‖₁ ≤ θ`.
+//!
+//! These are the Kuhn–Tucker conditions of problem (9)–(12) in the paper.
+
+/// Tolerances for the verifier (relative to the data's scale).
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    pub abs: f64,
+    pub rel: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { abs: 1e-4, rel: 1e-4 }
+    }
+}
+
+/// Verify the KKT conditions; returns the certified θ on success.
+pub fn verify_l1inf(
+    y: &[f32],
+    x: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    tol: Tolerance,
+) -> Result<f64, String> {
+    if y.len() != n_groups * group_len || x.len() != y.len() {
+        return Err("shape mismatch".into());
+    }
+    let scale = y.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64)).max(1.0);
+    let eps = tol.abs + tol.rel * scale;
+
+    let norm_before = crate::projection::norm_l1inf(y, n_groups, group_len);
+    let norm_after = crate::projection::norm_l1inf(x, n_groups, group_len);
+
+    // Feasible input must be untouched.
+    if norm_before <= c {
+        for i in 0..y.len() {
+            if (y[i] - x[i]).abs() as f64 > eps {
+                return Err(format!("feasible input modified at {i}"));
+            }
+        }
+        return Ok(0.0);
+    }
+    // 1. Feasibility with equality (projection lands on the boundary).
+    if norm_after > c + eps * n_groups as f64 {
+        return Err(format!("‖X‖₁,∞ = {norm_after} > C = {c}"));
+    }
+    if c > 0.0 && norm_after < c - eps * n_groups as f64 {
+        return Err(format!("projection strictly inside the ball: {norm_after} < {c}"));
+    }
+
+    // 2. + 3. structure per group.
+    let mut theta: Option<f64> = None;
+    let mut mus = vec![0.0f64; n_groups];
+    for g in 0..n_groups {
+        let yg = &y[g * group_len..(g + 1) * group_len];
+        let xg = &x[g * group_len..(g + 1) * group_len];
+        let mu = xg.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64));
+        mus[g] = mu;
+        let mut removed = 0.0f64;
+        for i in 0..group_len {
+            let (yi, xi) = (yg[i] as f64, xg[i] as f64);
+            // signs must agree (or x = 0)
+            if xi != 0.0 && xi.signum() != yi.signum() {
+                return Err(format!("sign flip at group {g} idx {i}"));
+            }
+            let (ya, xa) = (yi.abs(), xi.abs());
+            if xa > ya + eps {
+                return Err(format!("|X| grew at group {g} idx {i}: {xa} > {ya}"));
+            }
+            // clip structure: x == min(y, mu) in absolute value
+            let expect = ya.min(mu);
+            if (xa - expect).abs() > eps {
+                return Err(format!(
+                    "not a clip at group {g} idx {i}: |x|={xa}, min(|y|,mu)={expect}"
+                ));
+            }
+            removed += ya - xa;
+        }
+        if mu > eps {
+            match theta {
+                None => theta = Some(removed),
+                Some(t) => {
+                    if (removed - t).abs() > eps * group_len as f64 {
+                        return Err(format!(
+                            "unequal mass removal: group {g} removed {removed}, expected θ={t}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let theta = theta.ok_or("no active group in an infeasible projection")?;
+    // dead groups: mass must be <= theta
+    for g in 0..n_groups {
+        if mus[g] <= eps {
+            let mass: f64 = y[g * group_len..(g + 1) * group_len]
+                .iter()
+                .map(|&v| v.abs() as f64)
+                .sum();
+            if mass > theta + eps * group_len as f64 {
+                return Err(format!(
+                    "group {g} was killed but its mass {mass} exceeds θ={theta}"
+                ));
+            }
+        }
+    }
+    // Σ μ = C
+    let mu_sum: f64 = mus.iter().sum();
+    if (mu_sum - c).abs() > eps * n_groups as f64 {
+        return Err(format!("Σμ = {mu_sum} != C = {c}"));
+    }
+    Ok(theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{project_l1inf, Algorithm};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn accepts_true_projection() {
+        let mut rng = Rng::new(13);
+        let mut y = vec![0.0f32; 10 * 5];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 2.0;
+        }
+        let mut x = y.clone();
+        project_l1inf(&mut x, 10, 5, 0.8, Algorithm::Bisection);
+        let theta = verify_l1inf(&y, &x, 10, 5, 0.8, Tolerance::default()).unwrap();
+        assert!(theta > 0.0);
+    }
+
+    #[test]
+    fn rejects_scaled_matrix() {
+        // Uniform scaling to the right norm is NOT the projection.
+        let y = vec![1.0f32, 0.2, 0.8, 0.6];
+        let norm = crate::projection::norm_l1inf(&y, 2, 2);
+        let c = 0.5 * norm;
+        let x: Vec<f32> = y.iter().map(|&v| v * 0.5).collect();
+        assert!(verify_l1inf(&y, &x, 2, 2, c, Tolerance::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_support() {
+        let y = vec![1.0f32, 0.9, 0.001, 0.0];
+        // Kill the heavy group, keep the light one: wildly suboptimal.
+        let x = vec![0.0f32, 0.0, 0.001, 0.0];
+        assert!(verify_l1inf(&y, &x, 2, 2, 0.3, Tolerance::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_interior_point() {
+        let y = vec![2.0f32, 2.0];
+        let x = vec![0.1f32, 0.1]; // deep inside the ball of radius 1 (one group)
+        assert!(verify_l1inf(&y, &x, 1, 2, 1.0, Tolerance::default()).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! ℓ₁-ball projection: `B₁^η = {x : Σ|xᵢ| ≤ η}`.
+//!
+//! `P_{B₁^η}(y) = sign(y) ⊙ P_{Δ₁^η}(|y|)` — sign-split plus the simplex
+//! projection of [`super::simplex`]. Used by the SAE framework as the `ℓ₁`
+//! comparison row of Tables 1–2 (applied to the whole weight matrix
+//! flattened, which is how the paper's ℓ₁ baseline treats `W`).
+
+use super::simplex;
+
+/// Info returned by an ℓ₁ projection.
+#[derive(Debug, Clone, Copy)]
+pub struct L1Info {
+    /// ‖y‖₁ before projection.
+    pub norm_before: f64,
+    /// Soft-threshold τ applied (0 when already feasible).
+    pub tau: f64,
+    /// True when the input was inside the ball.
+    pub feasible: bool,
+}
+
+/// Project a signed vector (or flattened matrix) onto `B₁^η` in place.
+pub fn project_l1(data: &mut [f32], eta: f64) -> L1Info {
+    assert!(eta >= 0.0);
+    let norm_before: f64 = data.iter().map(|&v| v.abs() as f64).sum();
+    if norm_before <= eta {
+        return L1Info { norm_before, tau: 0.0, feasible: true };
+    }
+    if eta == 0.0 {
+        data.fill(0.0);
+        return L1Info { norm_before, tau: norm_before, feasible: false };
+    }
+    let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+    let t = simplex::threshold_condat(&abs, eta);
+    // Soft-threshold: x = sign(y) * max(|y| - tau, 0).
+    for v in data.iter_mut() {
+        let a = (v.abs() as f64 - t.tau).max(0.0) as f32;
+        *v = if *v >= 0.0 { a } else { -a };
+    }
+    L1Info { norm_before, tau: t.tau, feasible: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feasible_identity() {
+        let mut y = vec![0.1f32, -0.2, 0.3];
+        let orig = y.clone();
+        let info = project_l1(&mut y, 1.0);
+        assert!(info.feasible);
+        assert_eq!(y, orig);
+    }
+
+    #[test]
+    fn known_case() {
+        let mut y = vec![3.0f32, -1.0];
+        project_l1(&mut y, 1.0);
+        // |y| projected onto simplex radius 1: tau=2 -> [1, 0]
+        assert!((y[0] - 1.0).abs() < 1e-6);
+        assert_eq!(y[1], 0.0);
+    }
+
+    #[test]
+    fn norm_after_equals_radius_property() {
+        prop::check(
+            "l1 projection lands on the sphere when outside",
+            200,
+            0xAA,
+            |rng: &mut Rng| {
+                let n = rng.range(1, 50);
+                let mut y = vec![0.0f32; n];
+                for v in y.iter_mut() {
+                    *v = (rng.f32() - 0.5) * 4.0;
+                }
+                let eta = rng.f64();
+                (y, eta)
+            },
+            |(y, eta)| {
+                let mut x = y.clone();
+                let info = project_l1(&mut x, *eta);
+                let norm: f64 = x.iter().map(|&v| v.abs() as f64).sum();
+                if info.feasible {
+                    if x != *y {
+                        return Err("feasible input modified".into());
+                    }
+                } else if (norm - eta).abs() > 1e-5 {
+                    return Err(format!("norm {norm} != eta {eta}"));
+                }
+                // sign preservation and shrinkage
+                for (a, b) in x.iter().zip(y.iter()) {
+                    if a.abs() > b.abs() + 1e-6 || (a * b < 0.0 && a.abs() > 1e-7) {
+                        return Err(format!("sign/magnitude violated: {a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(3);
+        let mut y = vec![0.0f32; 64];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 3.0;
+        }
+        let mut once = y.clone();
+        project_l1(&mut once, 2.0);
+        let mut twice = once.clone();
+        let info = project_l1(&mut twice, 2.0);
+        assert!(info.feasible || info.tau < 1e-9);
+        for (a, b) in once.iter().zip(twice.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! ℓ₁,₂ (group-lasso / ℓ₂,₁ in the paper's table headers) ball projection:
+//! `B₁,₂^η = {X : Σ_g ‖x_g‖₂ ≤ η}`.
+//!
+//! Classic reduction: project the vector of group norms `ν_g = ‖y_g‖₂` onto
+//! the ℓ₁ ball of radius η (simplex since norms are nonnegative), then
+//! rescale every group by `t_g/ν_g` where `t_g = max(ν_g − τ, 0)` is the
+//! projected norm. This is the `ℓ₂,₁` comparison row of Tables 1–2.
+
+use super::simplex;
+
+/// Info returned by an ℓ₁,₂ projection.
+#[derive(Debug, Clone, Copy)]
+pub struct L12Info {
+    /// Σ_g ‖y_g‖₂ before projection.
+    pub norm_before: f64,
+    /// Threshold τ applied to the group-norm vector.
+    pub tau: f64,
+    /// Groups zeroed by the projection.
+    pub zero_groups: usize,
+    /// True when the input was inside the ball.
+    pub feasible: bool,
+}
+
+/// Project a signed grouped matrix onto `B₁,₂^η` in place.
+pub fn project_l12(data: &mut [f32], n_groups: usize, group_len: usize, eta: f64) -> L12Info {
+    assert_eq!(data.len(), n_groups * group_len);
+    assert!(eta >= 0.0);
+    let norms: Vec<f32> = (0..n_groups)
+        .map(|g| {
+            let grp = &data[g * group_len..(g + 1) * group_len];
+            (grp.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()).sqrt() as f32
+        })
+        .collect();
+    let norm_before: f64 = norms.iter().map(|&v| v as f64).sum();
+    if norm_before <= eta {
+        return L12Info { norm_before, tau: 0.0, zero_groups: 0, feasible: true };
+    }
+    if eta == 0.0 {
+        data.fill(0.0);
+        return L12Info { norm_before, tau: norm_before, zero_groups: n_groups, feasible: false };
+    }
+    let t = simplex::threshold_condat(&norms, eta);
+    let mut zero_groups = 0usize;
+    for g in 0..n_groups {
+        let nu = norms[g] as f64;
+        let target = (nu - t.tau).max(0.0);
+        let grp = &mut data[g * group_len..(g + 1) * group_len];
+        if target <= 0.0 || nu == 0.0 {
+            grp.fill(0.0);
+            zero_groups += 1;
+        } else {
+            let scale = (target / nu) as f32;
+            for v in grp.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    L12Info { norm_before, tau: t.tau, zero_groups, feasible: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::norm_l12;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feasible_identity() {
+        let mut y = vec![0.1f32, 0.0, 0.0, 0.1];
+        let orig = y.clone();
+        assert!(project_l12(&mut y, 2, 2, 5.0).feasible);
+        assert_eq!(y, orig);
+    }
+
+    #[test]
+    fn lands_on_sphere_property() {
+        prop::check(
+            "l12 projection lands on the sphere when outside",
+            200,
+            0xBB,
+            |rng: &mut Rng| {
+                let g = rng.range(1, 8);
+                let l = rng.range(1, 10);
+                let mut y = vec![0.0f32; g * l];
+                for v in y.iter_mut() {
+                    *v = (rng.f32() - 0.5) * 4.0;
+                }
+                let eta = rng.f64() * 3.0;
+                (y, g, l, eta)
+            },
+            |(y, g, l, eta)| {
+                let mut x = y.clone();
+                let info = project_l12(&mut x, *g, *l, *eta);
+                if info.feasible {
+                    return Ok(());
+                }
+                let norm = norm_l12(&x, *g, *l);
+                if (norm - eta).abs() > 1e-4 {
+                    return Err(format!("norm {norm} != eta {eta}"));
+                }
+                // Direction preserved within each group (x = s * y, s in [0,1]).
+                for grp in 0..*g {
+                    let a = &x[grp * l..(grp + 1) * l];
+                    let b = &y[grp * l..(grp + 1) * l];
+                    let dot: f64 = a.iter().zip(b).map(|(p, q)| (*p as f64) * (*q as f64)).sum();
+                    let na: f64 = a.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+                    let nb: f64 = b.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+                    if na > 1e-9 && nb > 1e-9 {
+                        let cos = dot / (na * nb);
+                        if (cos - 1.0).abs() > 1e-4 {
+                            return Err(format!("group {grp} direction changed: cos={cos}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zeroes_weak_groups() {
+        // group 1 weak -> must vanish for small radius
+        let mut y = vec![10.0f32, 0.0, 0.01, 0.01];
+        let info = project_l12(&mut y, 2, 2, 1.0);
+        assert_eq!(info.zero_groups, 1);
+        assert_eq!(&y[2..], &[0.0, 0.0]);
+        assert!((y[0] - 1.0).abs() < 1e-5);
+    }
+}

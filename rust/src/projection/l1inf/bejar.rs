@@ -1,0 +1,122 @@
+//! Bejar, Dokmanić & Vidal (2021), *"The fastest ℓ₁,∞ prox in the West"*:
+//! an `O(nm + m log m)`-style elimination preprocess that removes groups
+//! which provably end up zero, followed by the Algorithm-1 fixed point on
+//! the survivors.
+//!
+//! Elimination bound: removing mass θ from a group lowers its max by at
+//! most θ, so `μ_g(θ) ≥ max(0, M_g − θ)` with `M_g = max_i Y[g,i]`. Hence
+//! `Φ(θ) ≥ Σ_g max(0, M_g − θ)` and the τ solving
+//! `Σ_g max(0, M_g − τ) = C` (a plain simplex threshold on the max-vector)
+//! satisfies `Φ(τ) ≥ C`, i.e. `τ ≤ θ*` — a valid lower bound. Any group
+//! with total mass `‖y_g‖₁ ≤ τ` is dead at θ* as well and can be dropped
+//! before the expensive loop. (This reproduces the *effect* of the
+//! published preprocess; see DESIGN.md §3 on baseline re-implementations.)
+
+use super::{naive, SolveStats};
+use crate::projection::simplex;
+
+/// Lower bound τ ≤ θ* from the group-max vector (and the max vector itself).
+pub(crate) fn theta_lower_bound(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> f64 {
+    let maxes: Vec<f32> = (0..n_groups)
+        .map(|g| abs[g * group_len..(g + 1) * group_len].iter().fold(0.0f32, |a, &b| a.max(b)))
+        .collect();
+    // Σ max(0, M_g − τ) = C  ⇒  τ = simplex threshold at radius C.
+    simplex::threshold_condat(&maxes, c).tau
+}
+
+/// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
+pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
+    let tau = theta_lower_bound(abs, n_groups, group_len, c);
+    // Keep only groups that can survive at θ ≥ τ.
+    let mut alive: Vec<u32> = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        if simplex::positive_mass(grp) > tau {
+            alive.push(g as u32);
+        }
+    }
+    debug_assert!(!alive.is_empty(), "phi(tau) >= C > 0 implies survivors exist");
+    let survivors = alive.len();
+    let mut st = naive::solve_on_subset(abs, group_len, &mut alive, tau, c);
+    st.touched_groups = survivors;
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{bisect, phi};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lower_bound_is_valid() {
+        prop::check(
+            "bejar elimination bound tau <= theta*",
+            200,
+            0xEF,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 8, 10);
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let c = (0.05 + 0.9 * rng.f64()) * norm;
+                (data, g, l, c)
+            },
+            |(data, g, l, c)| {
+                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                if norm <= *c || *c <= 0.0 {
+                    return Ok(());
+                }
+                let tau = theta_lower_bound(data, *g, *l, *c);
+                let gold = bisect::solve(data, *g, *l, *c);
+                if tau > gold.theta + 1e-6 * gold.theta.max(1.0) {
+                    return Err(format!("tau={tau} > theta*={}", gold.theta));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn agrees_with_bisection_property() {
+        prop::check(
+            "bejar == bisect",
+            250,
+            0xFE,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let c = (0.05 + 0.9 * rng.f64()) * norm;
+                (data, g, l, c)
+            },
+            |(data, g, l, c)| {
+                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                if norm <= *c || *c <= 0.0 {
+                    return Ok(());
+                }
+                let gold = bisect::solve(data, *g, *l, *c);
+                let got = solve(data, *g, *l, *c);
+                let scale = gold.theta.abs().max(1.0);
+                if (gold.theta - got.theta).abs() > 1e-6 * scale {
+                    return Err(format!("gold={} got={}", gold.theta, got.theta));
+                }
+                let p = phi(data, *g, *l, got.theta);
+                if (p - c).abs() > 1e-5 * c.max(1.0) {
+                    return Err(format!("phi(theta)={p} != C={c}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn eliminates_most_groups_when_sparse() {
+        // 100 groups; only 2 heavy. Small C ⇒ elimination should keep few.
+        let mut abs = vec![0.001f32; 100 * 8];
+        for i in 0..8 {
+            abs[i] = 1.0; // group 0 heavy
+            abs[8 + i] = 0.9; // group 1 heavy
+        }
+        let st = solve(&abs, 100, 8, 0.5);
+        assert!(st.touched_groups <= 5, "survivors={}", st.touched_groups);
+    }
+}

@@ -1,0 +1,314 @@
+//! **The paper's contribution** (Algorithm 2, "Projection Inverse Total
+//! Order"): walk the total order of Φ's breakpoints *backwards* — from the
+//! largest θ down — materializing breakpoints lazily with one min-heap per
+//! group plus a global max-heap, and stop at the first interval containing
+//! its own root.
+//!
+//! Why backwards wins under sparsity: when the projection zeroes most
+//! groups, θ* is *large* — close to the top of the breakpoint order. The
+//! ascending sweep (Quattoni) must consume `K ≈ nm` breakpoints to get
+//! there; the descending sweep consumes only the `J = nm − K` breakpoints
+//! above θ*. Groups whose ℓ₁ mass is below θ* are **never heapified at
+//! all** — their death breakpoint (the group's ℓ₁ mass, the largest
+//! breakpoint of the group) is simply never reached. This kills the need
+//! for Bejar-style elimination preprocessing "by design" (paper §3.2).
+//!
+//! Sweep state for an active group `g` with `k` selected values and
+//! selected sum `Ssel = S_k`:
+//!
+//! - activation (death breakpoint, consumed going down): `k = p` (all
+//!   positive entries), `Ssel = ‖y_g‖₁`;
+//! - next lower breakpoint: `r_{k−1} = S_{k−1} − (k−1)·Z_k = Ssel − k·Z_k`
+//!   with `Z_k` = smallest selected value = top of the group's min-heap;
+//! - crossing it pops `Z_k`: `Ssel ← Ssel − Z_k`, `k ← k − 1`.
+//!
+//! Stop condition: with running sums `T1 = Σ_A S_{k_g}/k_g`,
+//! `T2 = Σ_A 1/k_g`, the candidate root is `θ̂ = (T1 − C)/T2` (Eq. 19);
+//! the first time `θ̂ ≥` (next remaining breakpoint), `θ̂` is exact — see
+//! the induction in the module tests and DESIGN.md §6.
+//!
+//! Worst-case complexity `O(nm + J log(nm))`: `O(m)` global heapify +
+//! `O(p_g)` lazy heapify per *touched* group + `O(log n + log m)` per
+//! consumed breakpoint.
+
+use super::SolveStats;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Total-order f64 wrapper (breakpoints are finite; NaN never enters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ord64(f64);
+impl Eq for Ord64 {}
+impl PartialOrd for Ord64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ord64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Total-order f32 wrapper for the per-group value heaps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ord32(f32);
+impl Eq for Ord32 {}
+impl PartialOrd for Ord32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ord32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Lazily-created state of a touched (activated) group.
+struct GroupState {
+    /// Min-heap over the *selected* values (smallest on top).
+    heap: BinaryHeap<Reverse<Ord32>>,
+    /// Number of currently selected values (k).
+    k: usize,
+    /// Sum of the selected values (S_k).
+    ssel: f64,
+}
+
+/// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
+pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
+    solve_with_levels(abs, n_groups, group_len, c).0
+}
+
+/// Like [`solve`] but also returns the per-group water levels μ_g read off
+/// the solver's own final state: untouched groups are *provably dead*
+/// (their death breakpoint lies below θ*) so μ = 0 without ever scanning
+/// them, and touched groups yield `μ = (S_k − θ*)/k` in O(1).
+///
+/// This is the perf-critical difference with the generic
+/// [`super::water_levels`] recomputation, which costs a full `O(nm)`
+/// Condat pass regardless of sparsity — see EXPERIMENTS.md §Perf.
+pub fn solve_with_levels(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+) -> (SolveStats, Vec<f64>) {
+    solve_signed_with_levels(abs, n_groups, group_len, c)
+}
+
+/// Variant accepting **signed** data: absolute values are taken on the fly
+/// (column sums and heap entries), so callers never materialize an |Y|
+/// copy — one fewer O(nm) allocation + pass (perf iteration 2,
+/// EXPERIMENTS.md §Perf).
+pub fn solve_signed_with_levels(
+    data: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+) -> (SolveStats, Vec<f64>) {
+    debug_assert!(c > 0.0);
+    // Global max-heap of upcoming breakpoints, seeded with every nonzero
+    // group's death threshold (its ℓ₁ mass — the group's largest breakpoint).
+    let mut global: BinaryHeap<(Ord64, u32)> = BinaryHeap::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let sum: f64 =
+            data[g * group_len..(g + 1) * group_len].iter().map(|&v| v.abs() as f64).sum();
+        if sum > 0.0 {
+            global.push((Ord64(sum), g as u32));
+        }
+    }
+    debug_assert!(!global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
+
+    let mut states: Vec<Option<GroupState>> = Vec::new();
+    states.resize_with(n_groups, || None);
+    let mut t1 = 0.0f64; // Σ_A S_{k_g}/k_g   (incremental)
+    let mut t2 = 0.0f64; // Σ_A 1/k_g         (incremental)
+    let mut consumed = 0usize;
+    let mut touched = 0usize;
+
+    let finalize = |states: &[Option<GroupState>], consumed: usize, touched: usize| {
+        // Exact O(touched) recompute of Eq. 19 — removes the drift the
+        // incremental T1/T2 updates accumulate over long sweeps.
+        let mut e1 = 0.0f64;
+        let mut e2 = 0.0f64;
+        for st in states.iter().flatten() {
+            e1 += st.ssel / st.k as f64;
+            e2 += 1.0 / st.k as f64;
+        }
+        let theta = (e1 - c) / e2;
+        // Water levels straight from the sweep state: untouched ⇒ dead.
+        let mut mus = vec![0.0f64; states.len()];
+        for (g, st) in states.iter().enumerate() {
+            if let Some(st) = st {
+                mus[g] = ((st.ssel - theta) / st.k as f64).max(0.0);
+            }
+        }
+        (SolveStats { theta, work: consumed, touched_groups: touched }, mus)
+    };
+
+    while let Some(&(Ord64(b), g)) = global.peek() {
+        // Stop check BEFORE applying the transition: the current state is
+        // valid on [b, previous breakpoint); by induction θ̂ < previous
+        // breakpoint, so θ̂ ≥ b pins the root to this interval exactly.
+        if t2 > 0.0 {
+            let theta = (t1 - c) / t2;
+            if theta >= b {
+                return finalize(&states, consumed, touched);
+            }
+        }
+        global.pop();
+        consumed += 1;
+        let gi = g as usize;
+        match &mut states[gi] {
+            slot @ None => {
+                // Activation: the group is alive for θ just below its death
+                // threshold with every positive entry selected.
+                let grp = &data[gi * group_len..(gi + 1) * group_len];
+                let mut vals: Vec<Reverse<Ord32>> = Vec::with_capacity(grp.len());
+                let mut ssel = 0.0f64;
+                for &v in grp {
+                    let v = v.abs();
+                    if v > 0.0 {
+                        vals.push(Reverse(Ord32(v)));
+                        ssel += v as f64;
+                    }
+                }
+                let heap = BinaryHeap::from(vals); // O(p) heapify, lazy by design
+                let k = heap.len();
+                t1 += ssel / k as f64;
+                t2 += 1.0 / k as f64;
+                touched += 1;
+                if k >= 2 {
+                    let z = heap.peek().unwrap().0 .0 as f64;
+                    global.push((Ord64(ssel - k as f64 * z), g));
+                }
+                *slot = Some(GroupState { heap, k, ssel });
+            }
+            Some(st) => {
+                // Crossing r_{k−1}: the smallest selected value leaves the
+                // selected set as θ decreases (water level μ_g rises).
+                let Reverse(Ord32(z)) = st.heap.pop().expect("breakpoint implies k >= 2");
+                let (old_k, old_ssel) = (st.k, st.ssel);
+                st.k -= 1;
+                st.ssel -= z as f64;
+                t1 += st.ssel / st.k as f64 - old_ssel / old_k as f64;
+                t2 += 1.0 / st.k as f64 - 1.0 / old_k as f64;
+                if st.k >= 2 {
+                    let z2 = st.heap.peek().unwrap().0 .0 as f64;
+                    global.push((Ord64(st.ssel - st.k as f64 * z2), g));
+                }
+            }
+        }
+    }
+    // Breakpoints exhausted: every touched group sits at its k = 1 piece
+    // (θ below all growth breakpoints) — the dense regime.
+    finalize(&states, consumed, touched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{bisect, phi};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_hand_case() {
+        let abs = [1.0f32, 0.5, 0.8, 0.1];
+        let st = solve(&abs, 2, 2, 1.0);
+        assert!((st.theta - 0.4).abs() < 1e-7, "{st:?}");
+    }
+
+    #[test]
+    fn agrees_with_bisection_property() {
+        prop::check(
+            "inverse_order == bisect",
+            400,
+            0x1234,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 10, 14);
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let c = (0.02 + 0.96 * rng.f64()) * norm;
+                (data, g, l, c)
+            },
+            |(data, g, l, c)| {
+                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                if norm <= *c || *c <= 0.0 {
+                    return Ok(());
+                }
+                let gold = bisect::solve(data, *g, *l, *c);
+                let got = solve(data, *g, *l, *c);
+                let scale = gold.theta.abs().max(1.0);
+                if (gold.theta - got.theta).abs() > 1e-6 * scale {
+                    return Err(format!("gold={} got={}", gold.theta, got.theta));
+                }
+                let p = phi(data, *g, *l, got.theta);
+                if (p - c).abs() > 1e-5 * c.max(1.0) {
+                    return Err(format!("phi(theta)={p} != C={c}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sparse_case_touches_few_groups() {
+        // 200 light groups + 2 heavy ones; tight radius ⇒ only the heavies
+        // (and possibly the first light group popped) are ever heapified.
+        let n_groups = 202;
+        let len = 16;
+        let mut abs = vec![0.0005f32; n_groups * len];
+        for i in 0..len {
+            abs[i] = 1.0;
+            abs[len + i] = 0.8;
+        }
+        let st = solve(&abs, n_groups, len, 0.5);
+        assert!(st.touched_groups <= 3, "touched={}", st.touched_groups);
+        assert!(st.work < 3 * len, "consumed={}", st.work);
+        let p = phi(&abs, n_groups, len, st.theta);
+        assert!((p - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dense_case_exhausts_heap_correctly() {
+        // Huge radius (just inside forcing a projection): θ* lands on the
+        // k=1 pieces after consuming everything.
+        let abs = [5.0f32, 1.0, 4.0, 1.0];
+        let st = solve(&abs, 2, 2, 8.0);
+        assert!((st.theta - 0.5).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn all_mass_in_one_group() {
+        let abs = [0.0f32, 0.0, 0.0, 3.0, 2.0, 1.0];
+        let st = solve(&abs, 2, 3, 1.5);
+        // Single active group: μ = water level removing θ with Σμ = C ⇒ μ = 1.5.
+        // Removed mass at μ=1.5: (3-1.5)+(2-1.5) = 2.0 = θ.
+        assert!((st.theta - 2.0).abs() < 1e-9, "{st:?}");
+    }
+
+    #[test]
+    fn ties_across_groups() {
+        let abs = [0.5f32, 0.5, 0.5, 0.5, 0.5, 0.5];
+        for c in [0.2, 0.5, 0.9, 1.2] {
+            let st = solve(&abs, 3, 2, c);
+            let p = phi(&abs, 3, 2, st.theta);
+            assert!((p - c).abs() < 1e-7, "c={c} phi={p}");
+        }
+    }
+
+    #[test]
+    fn random_sparse_matches_gold_and_is_lazy() {
+        let mut rng = Rng::new(99);
+        let (n_groups, len) = (300, 24);
+        let mut abs = vec![0.0f32; n_groups * len];
+        rng.fill_uniform_f32(&mut abs);
+        let c = 1.0; // aggressive radius: most groups die
+        let gold = bisect::solve(&abs, n_groups, len, c);
+        let got = solve(&abs, n_groups, len, c);
+        assert!((gold.theta - got.theta).abs() < 1e-6 * gold.theta.max(1.0));
+        // Laziness: far fewer touched groups than total.
+        assert!(got.touched_groups < n_groups / 4, "touched={}", got.touched_groups);
+    }
+}

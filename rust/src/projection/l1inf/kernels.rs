@@ -1,0 +1,206 @@
+//! Shared per-group sorted representation used by the sort-based solvers
+//! (Quattoni total order, semismooth Newton) and by the KKT verifier.
+//!
+//! For each group `g` this precomputes the descending sort `Z₁ ≥ Z₂ ≥ …`,
+//! the prefix sums `S_k = Σ_{i≤k} Z_i`, and exposes the exact piecewise
+//! representation of the water-level function
+//!
+//! ```text
+//!   μ_g(θ) = (S_k − θ)/k      for θ ∈ [r_{k−1}, r_k),  r_k = S_k − k·Z_{k+1}
+//!   μ_g(θ) = 0                for θ ≥ S_p  (p = # positive entries)
+//! ```
+//!
+//! `r_k` is nondecreasing in `k` (`r_k − r_{k−1} = k(Z_k − Z_{k+1}) ≥ 0`),
+//! which is what makes both the ascending (Quattoni) and descending
+//! (Algorithm 2) sweeps well-defined total orders.
+
+/// Sorted-column representation of a nonnegative grouped matrix.
+#[derive(Debug, Clone)]
+pub struct SortedGroups {
+    pub n_groups: usize,
+    pub group_len: usize,
+    /// Descending-sorted values, groups contiguous.
+    pub z: Vec<f32>,
+    /// Prefix sums of `z` (f64), groups contiguous: s[g*L + k] = S_{k+1}.
+    pub s: Vec<f64>,
+    /// Number of strictly positive entries per group.
+    pub pos_count: Vec<usize>,
+    /// Total group mass `S_p` (== ℓ₁ norm of the group).
+    pub full_sum: Vec<f64>,
+}
+
+impl SortedGroups {
+    /// Sort every group descending and precompute prefix sums. `O(nm log n)`.
+    pub fn new(abs: &[f32], n_groups: usize, group_len: usize) -> Self {
+        debug_assert_eq!(abs.len(), n_groups * group_len);
+        let mut z = abs.to_vec();
+        let mut s = vec![0.0f64; abs.len()];
+        let mut pos_count = vec![0usize; n_groups];
+        let mut full_sum = vec![0.0f64; n_groups];
+        for g in 0..n_groups {
+            let grp = &mut z[g * group_len..(g + 1) * group_len];
+            grp.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut cum = 0.0f64;
+            let mut p = 0usize;
+            for (i, &v) in grp.iter().enumerate() {
+                debug_assert!(v >= 0.0, "SortedGroups expects nonnegative data");
+                cum += v as f64;
+                s[g * group_len + i] = cum;
+                if v > 0.0 {
+                    p = i + 1;
+                }
+            }
+            pos_count[g] = p;
+            full_sum[g] = cum;
+        }
+        SortedGroups { n_groups, group_len, z, s, pos_count, full_sum }
+    }
+
+    /// k-th largest value of group `g` (1-based); 0.0 beyond the group.
+    #[inline]
+    pub fn zval(&self, g: usize, k: usize) -> f64 {
+        if k >= 1 && k <= self.group_len {
+            self.z[g * self.group_len + (k - 1)] as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Sum of the k largest values of group `g` (1-based; 0 for k = 0).
+    #[inline]
+    pub fn prefix(&self, g: usize, k: usize) -> f64 {
+        if k == 0 {
+            0.0
+        } else {
+            self.s[g * self.group_len + (k - 1)]
+        }
+    }
+
+    /// Breakpoint `r_k = S_k − k·Z_{k+1}` of group `g` (the θ at which the
+    /// active count grows from k to k+1). For `k = pos_count` this equals
+    /// the death threshold `S_p`.
+    #[inline]
+    pub fn breakpoint(&self, g: usize, k: usize) -> f64 {
+        let zk1 = if k + 1 <= self.pos_count[g] { self.zval(g, k + 1) } else { 0.0 };
+        self.prefix(g, k) - k as f64 * zk1
+    }
+
+    /// Exact water level of group `g` after removing mass `theta`:
+    /// returns `(μ, k)`; `(0, 0)` when the group dies (`θ ≥ S_p`).
+    /// `O(log n)` by binary search over the breakpoints.
+    pub fn water_level(&self, g: usize, theta: f64) -> (f64, usize) {
+        let p = self.pos_count[g];
+        if p == 0 || theta >= self.full_sum[g] {
+            return (0.0, 0);
+        }
+        // Find smallest k in [1, p] with theta < r_k; r_k nondecreasing.
+        let (mut lo, mut hi) = (1usize, p);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if theta < self.breakpoint(g, mid) {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let k = lo;
+        let mu = (self.prefix(g, k) - theta) / k as f64;
+        (mu.max(0.0), k)
+    }
+
+    /// `Φ(θ)` and `Σ_{active} 1/k` (−Φ′(θ)) in one pass. `O(m log n)`.
+    pub fn phi_and_slope(&self, theta: f64) -> (f64, f64) {
+        let mut phi = 0.0;
+        let mut inv_k = 0.0;
+        for g in 0..self.n_groups {
+            let (mu, k) = self.water_level(g, theta);
+            if k > 0 {
+                phi += mu;
+                inv_k += 1.0 / k as f64;
+            }
+        }
+        (phi, inv_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::simplex;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sorted_and_prefixed() {
+        let abs = [0.5f32, 2.0, 1.0, 0.0, 3.0, 3.0];
+        let sg = SortedGroups::new(&abs, 2, 3);
+        assert_eq!(&sg.z[0..3], &[2.0, 1.0, 0.5]);
+        assert_eq!(&sg.z[3..6], &[3.0, 3.0, 0.0]);
+        assert_eq!(sg.pos_count, vec![3, 2]);
+        assert!((sg.prefix(0, 2) - 3.0).abs() < 1e-9);
+        assert!((sg.full_sum[1] - 6.0).abs() < 1e-9);
+        assert_eq!(sg.prefix(0, 0), 0.0);
+    }
+
+    #[test]
+    fn breakpoints_nondecreasing() {
+        let abs = [0.9f32, 0.1, 0.5, 0.5, 0.2, 0.0];
+        let sg = SortedGroups::new(&abs, 2, 3);
+        for g in 0..2 {
+            let mut prev = 0.0;
+            for k in 1..=sg.pos_count[g] {
+                let r = sg.breakpoint(g, k);
+                assert!(r >= prev - 1e-12, "g={g} k={k} r={r} prev={prev}");
+                prev = r;
+            }
+            // r_p equals death threshold
+            let p = sg.pos_count[g];
+            assert!((sg.breakpoint(g, p) - sg.full_sum[g]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn water_level_matches_condat() {
+        prop::check(
+            "SortedGroups::water_level == simplex condat water level",
+            200,
+            0x51,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 6, 10);
+                let theta = rng.f64() * 3.0;
+                (data, g, l, theta)
+            },
+            |(data, g, l, theta)| {
+                let sg = SortedGroups::new(data, *g, *l);
+                for grp in 0..*g {
+                    let slice = &data[grp * l..(grp + 1) * l];
+                    let (mu, _k) = sg.water_level(grp, *theta);
+                    let expected = if simplex::positive_mass(slice) <= *theta {
+                        0.0
+                    } else {
+                        simplex::water_level_for_removed_mass(slice, *theta).tau
+                    };
+                    if (mu - expected).abs() > 1e-6 {
+                        return Err(format!("group {grp}: mu={mu} expected={expected}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn phi_slope_consistency() {
+        let abs = [1.0f32, 0.6, 0.3, 0.8, 0.8, 0.8];
+        let sg = SortedGroups::new(&abs, 2, 3);
+        let (phi0, slope0) = sg.phi_and_slope(0.0);
+        assert!((phi0 - 1.8).abs() < 1e-6);
+        assert!(slope0 > 0.0);
+        // finite-difference check of the slope on a smooth piece
+        let th = 0.05;
+        let (p1, s1) = sg.phi_and_slope(th);
+        let (p2, _) = sg.phi_and_slope(th + 1e-7);
+        let fd = (p1 - p2) / 1e-7;
+        assert!((fd - s1).abs() < 1e-3, "fd={fd} slope={s1}");
+    }
+}

@@ -1,0 +1,292 @@
+//! Projection onto the ℓ₁,∞ ball `B₁,∞^C = {X : Σ_g max_i |X[g,i]| ≤ C}`.
+//!
+//! Every solver in this module reduces the projection to finding the scalar
+//! dual variable `θ*` of Lemma 1: the optimal projection removes mass
+//! exactly `θ*` from every surviving group and kills every group whose ℓ₁
+//! mass is ≤ `θ*`:
+//!
+//! ```text
+//!   X[g,i] = sign(Y[g,i]) · min(|Y[g,i]|, μ_g),       μ_g = water level
+//!   Σ_i max(|Y[g,i]| − μ_g, 0) = θ*   for groups with μ_g > 0
+//!   Σ_g μ_g = C
+//! ```
+//!
+//! `Φ(θ) = Σ_g μ_g(θ)` is convex, continuous, piecewise linear and strictly
+//! decreasing until it hits 0, so `θ*` is the unique root of `Φ(θ) = C`.
+//! The six solvers differ only in how they locate that root:
+//!
+//! | [`Algorithm`] variant | module | paper reference | complexity |
+//! |---|---|---|---|
+//! | `Bisection`    | [`bisect`]        | (test oracle)            | `O(nm · iters)` |
+//! | `Quattoni`     | [`quattoni`]      | Quattoni et al. 2009     | `O(nm log nm)` |
+//! | `Naive`        | [`naive`]         | Alg. 1 / Bejar et al.    | `O(n²m·P)` worst |
+//! | `Bejar`        | [`bejar`]         | Bejar et al. 2021        | elimination + Alg. 1 |
+//! | `Newton`       | [`newton`]        | Chu et al. 2020          | `O(nm log n + m·iters)` |
+//! | `InverseOrder` | [`inverse_order`] | **this paper's Alg. 2**  | `O(nm + J log nm)` |
+
+pub mod bejar;
+pub mod bisect;
+pub mod inverse_order;
+pub mod kernels;
+pub mod naive;
+pub mod newton;
+pub mod quattoni;
+
+use super::simplex;
+
+/// Which root-finding algorithm to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Safeguarded bisection on `Φ(θ) = C` — gold reference for tests.
+    Bisection,
+    /// Full-sort total order (Quattoni et al. 2009).
+    Quattoni,
+    /// Active-set fixed point with per-group Condat projections (Alg. 1).
+    Naive,
+    /// Column-elimination preprocess + Alg. 1 (Bejar et al. 2021).
+    Bejar,
+    /// Safeguarded semismooth Newton (Chu et al. 2020).
+    Newton,
+    /// Inverse total order with lazy heaps — the paper's contribution.
+    InverseOrder,
+}
+
+impl Algorithm {
+    /// All solver variants (used by equivalence tests and benches).
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::Bisection,
+        Algorithm::Quattoni,
+        Algorithm::Naive,
+        Algorithm::Bejar,
+        Algorithm::Newton,
+        Algorithm::InverseOrder,
+    ];
+
+    /// Short display name (used in bench/report tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Bisection => "bisect",
+            Algorithm::Quattoni => "quattoni09",
+            Algorithm::Naive => "naive",
+            Algorithm::Bejar => "bejar21",
+            Algorithm::Newton => "newton20",
+            Algorithm::InverseOrder => "inv_order",
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "bisect" | "bisection" => Ok(Algorithm::Bisection),
+            "quattoni" | "quattoni09" | "sort" => Ok(Algorithm::Quattoni),
+            "naive" | "alg1" => Ok(Algorithm::Naive),
+            "bejar" | "bejar21" => Ok(Algorithm::Bejar),
+            "newton" | "newton20" | "chu" => Ok(Algorithm::Newton),
+            "inv_order" | "inverse" | "inverseorder" | "ours" => Ok(Algorithm::InverseOrder),
+            other => Err(format!("unknown l1inf algorithm '{other}'")),
+        }
+    }
+}
+
+/// Statistics a solver reports back (besides θ itself).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SolveStats {
+    /// The dual variable θ* (total mass removed per surviving group).
+    pub theta: f64,
+    /// Algorithm-specific work counter: breakpoints consumed (total-order
+    /// methods), Newton/fixed-point iterations, or Φ evaluations (bisection).
+    pub work: usize,
+    /// Groups touched (heapified / actively processed) by the solver.
+    pub touched_groups: usize,
+}
+
+/// Result of a full projection call.
+#[derive(Debug, Clone, Copy)]
+pub struct ProjInfo {
+    /// ‖Y‖₁,∞ before projection.
+    pub radius_before: f64,
+    /// ‖X‖₁,∞ after projection (≈ C when the input was outside the ball).
+    pub radius_after: f64,
+    /// θ* (0 when the input was already feasible).
+    pub theta: f64,
+    /// Number of groups left entirely zero.
+    pub zero_groups: usize,
+    /// True when the input was already inside the ball (projection = id).
+    pub feasible: bool,
+    /// Solver statistics.
+    pub stats: SolveStats,
+}
+
+/// Solve for θ* on **nonnegative** grouped data with `‖Y‖₁,∞ > C > 0`.
+pub fn solve_theta(abs: &[f32], n_groups: usize, group_len: usize, c: f64, algo: Algorithm) -> SolveStats {
+    match algo {
+        Algorithm::Bisection => bisect::solve(abs, n_groups, group_len, c),
+        Algorithm::Quattoni => quattoni::solve(abs, n_groups, group_len, c),
+        Algorithm::Naive => naive::solve(abs, n_groups, group_len, c),
+        Algorithm::Bejar => bejar::solve(abs, n_groups, group_len, c),
+        Algorithm::Newton => newton::solve(abs, n_groups, group_len, c),
+        Algorithm::InverseOrder => inverse_order::solve(abs, n_groups, group_len, c),
+    }
+}
+
+/// Per-group water levels μ_g(θ) for nonnegative data (Proposition 1).
+pub fn water_levels(abs: &[f32], n_groups: usize, group_len: usize, theta: f64) -> Vec<f64> {
+    (0..n_groups)
+        .map(|g| {
+            let grp = &abs[g * group_len..(g + 1) * group_len];
+            if simplex::positive_mass(grp) <= theta {
+                0.0
+            } else {
+                simplex::water_level_for_removed_mass(grp, theta).tau
+            }
+        })
+        .collect()
+}
+
+/// `Φ(θ) = Σ_g μ_g(θ)` — the root function all solvers target.
+pub fn phi(abs: &[f32], n_groups: usize, group_len: usize, theta: f64) -> f64 {
+    water_levels(abs, n_groups, group_len, theta).iter().sum()
+}
+
+/// Project a signed grouped matrix onto `B₁,∞^C` **in place**.
+///
+/// `data` holds `n_groups` contiguous groups of `group_len` entries.
+/// Returns projection metadata including the dual θ* and sparsity info.
+pub fn project_l1inf(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    algo: Algorithm,
+) -> ProjInfo {
+    assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+    assert!(c >= 0.0, "radius must be nonnegative");
+    let radius_before = super::norm_l1inf(data, n_groups, group_len);
+
+    // Already inside the ball: the projection is the identity (Eq. 8 note).
+    if radius_before <= c {
+        let zero_groups = (0..n_groups)
+            .filter(|&g| data[g * group_len..(g + 1) * group_len].iter().all(|&x| x == 0.0))
+            .count();
+        return ProjInfo {
+            radius_before,
+            radius_after: radius_before,
+            theta: 0.0,
+            zero_groups,
+            feasible: true,
+            stats: SolveStats::default(),
+        };
+    }
+    // Degenerate radius: the ball is {0}.
+    if c == 0.0 {
+        data.fill(0.0);
+        return ProjInfo {
+            radius_before,
+            radius_after: 0.0,
+            theta: radius_before, // limit interpretation
+            zero_groups: n_groups,
+            feasible: false,
+            stats: SolveStats::default(),
+        };
+    }
+
+    // Perf (EXPERIMENTS.md §Perf): the inverse-order solver (a) hands back
+    // the water levels from its own sweep state — O(touched) instead of an
+    // O(nm) Condat re-pass over every group — and (b) takes signed data
+    // directly, so no |Y| copy is materialized at all.
+    let (stats, mus) = match algo {
+        Algorithm::InverseOrder => {
+            inverse_order::solve_signed_with_levels(data, n_groups, group_len, c)
+        }
+        _ => {
+            let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+            let stats = solve_theta(&abs, n_groups, group_len, c, algo);
+            (stats, water_levels(&abs, n_groups, group_len, stats.theta))
+        }
+    };
+    apply_water_levels(data, n_groups, group_len, &mus);
+
+    let radius_after = super::norm_l1inf(data, n_groups, group_len);
+    let zero_groups = mus.iter().filter(|&&m| m <= 0.0).count();
+    ProjInfo {
+        radius_before,
+        radius_after,
+        theta: stats.theta,
+        zero_groups,
+        feasible: false,
+        stats,
+    }
+}
+
+/// Clip each signed group at its water level: `X = sign(Y)·min(|Y|, μ_g)`.
+pub fn apply_water_levels(data: &mut [f32], n_groups: usize, group_len: usize, mus: &[f64]) {
+    debug_assert_eq!(mus.len(), n_groups);
+    for g in 0..n_groups {
+        let mu = mus[g] as f32;
+        let grp = &mut data[g * group_len..(g + 1) * group_len];
+        if mu <= 0.0 {
+            grp.fill(0.0);
+        } else {
+            for v in grp.iter_mut() {
+                let a = v.abs();
+                if a > mu {
+                    *v = if *v >= 0.0 { mu } else { -mu };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_is_identity() {
+        let mut y = vec![0.1f32, -0.2, 0.05, 0.0, 0.1, 0.0];
+        let orig = y.clone();
+        let info = project_l1inf(&mut y, 2, 3, 10.0, Algorithm::InverseOrder);
+        assert!(info.feasible);
+        assert_eq!(y, orig);
+        assert_eq!(info.theta, 0.0);
+    }
+
+    #[test]
+    fn zero_radius_zeroes() {
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        let info = project_l1inf(&mut y, 2, 2, 0.0, Algorithm::Bisection);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert_eq!(info.zero_groups, 2);
+    }
+
+    #[test]
+    fn phi_is_decreasing() {
+        let abs = vec![1.0f32, 0.5, 0.25, 0.9, 0.8, 0.1];
+        let mut prev = f64::INFINITY;
+        for i in 0..20 {
+            let th = i as f64 * 0.2;
+            let p = phi(&abs, 2, 3, th);
+            assert!(p <= prev + 1e-12, "phi not decreasing at {th}");
+            prev = p;
+        }
+        assert!((phi(&abs, 2, 3, 0.0) - (1.0 + 0.9)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::ALL {
+            let parsed: Algorithm = a.name().parse().unwrap();
+            assert_eq!(parsed, a);
+        }
+        assert!("nope".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn signs_preserved() {
+        let mut y = vec![2.0f32, -3.0, 1.5, -0.5];
+        project_l1inf(&mut y, 2, 2, 1.0, Algorithm::Bisection);
+        assert!(y[0] >= 0.0 && y[1] <= 0.0 && y[2] >= 0.0 && y[3] <= 0.0);
+    }
+}

@@ -1,0 +1,138 @@
+//! "Projection naive" — Algorithm 1 of the paper (the core loop of Bejar,
+//! Dokmanić & Vidal 2021): a fixed-point iteration on θ.
+//!
+//! Each round projects every surviving group onto the simplex of radius θ
+//! (Condat), reads off the active counts `k_g` and selected sums `S_{k_g}`,
+//! drops groups whose total mass fell below θ (Proposition 3), and
+//! recomputes θ from Eq. 19. θ increases monotonically (Propositions 2–3)
+//! and converges to θ* in finitely many rounds; worst case `O(n²mP)`.
+
+use super::SolveStats;
+use crate::projection::simplex;
+
+/// Fixed-point solve restricted to the groups listed in `alive`
+/// (used directly by [`super::bejar`] after its elimination preprocess).
+pub(crate) fn solve_on_subset(
+    abs: &[f32],
+    group_len: usize,
+    alive: &mut Vec<u32>,
+    theta0: f64,
+    c: f64,
+) -> SolveStats {
+    let mut theta = theta0;
+    let mut rounds = 0usize;
+    let touched = alive.len();
+    loop {
+        rounds += 1;
+        let mut t1 = 0.0f64;
+        let mut t2 = 0.0f64;
+        // Drop dead groups and accumulate Eq. 19 terms from the survivors.
+        let mut w = 0usize;
+        for r in 0..alive.len() {
+            let g = alive[r] as usize;
+            let grp = &abs[g * group_len..(g + 1) * group_len];
+            let mass = simplex::positive_mass(grp);
+            if mass <= theta {
+                continue; // Proposition 3: the whole group is zeroed
+            }
+            let t = simplex::water_level_for_removed_mass(grp, theta);
+            // S_k = θ + k·μ on the current piece.
+            let s_k = theta + t.k as f64 * t.tau;
+            t1 += s_k / t.k as f64;
+            t2 += 1.0 / t.k as f64;
+            alive[w] = g as u32;
+            w += 1;
+        }
+        alive.truncate(w);
+        if t2 == 0.0 {
+            // Everything died: only possible through FP pathologies since
+            // Φ(θ*) = C > 0 requires at least one survivor.
+            return SolveStats { theta, work: rounds, touched_groups: touched };
+        }
+        let next = (t1 - c) / t2;
+        // Monotone nondecreasing; stop at the fixed point.
+        if next <= theta + 1e-13 * theta.abs().max(1.0) || rounds > 10_000 {
+            return SolveStats { theta: next.max(theta), work: rounds, touched_groups: touched };
+        }
+        theta = next;
+    }
+}
+
+/// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
+pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
+    // Initial θ from the all-active k=1 state (paper line 2):
+    // θ = (Σ_g max_g − C) / m over nonzero groups.
+    let mut alive: Vec<u32> = Vec::with_capacity(n_groups);
+    let mut sum_max = 0.0f64;
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        let mx = grp.iter().fold(0.0f32, |a, &b| a.max(b));
+        if mx > 0.0 {
+            alive.push(g as u32);
+            sum_max += mx as f64;
+        }
+    }
+    debug_assert!(!alive.is_empty());
+    let theta0 = ((sum_max - c) / alive.len() as f64).max(0.0);
+    solve_on_subset(abs, group_len, &mut alive, theta0, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{bisect, phi};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_hand_case() {
+        let abs = [1.0f32, 0.5, 0.8, 0.1];
+        let st = solve(&abs, 2, 2, 1.0);
+        assert!((st.theta - 0.4).abs() < 1e-7, "{st:?}");
+    }
+
+    #[test]
+    fn agrees_with_bisection_property() {
+        prop::check(
+            "naive == bisect",
+            250,
+            0xCD,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let c = (0.05 + 0.9 * rng.f64()) * norm;
+                (data, g, l, c)
+            },
+            |(data, g, l, c)| {
+                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                if norm <= *c || *c <= 0.0 {
+                    return Ok(());
+                }
+                let gold = bisect::solve(data, *g, *l, *c);
+                let got = solve(data, *g, *l, *c);
+                let scale = gold.theta.abs().max(1.0);
+                if (gold.theta - got.theta).abs() > 1e-6 * scale {
+                    return Err(format!("gold={} got={}", gold.theta, got.theta));
+                }
+                let p = phi(data, *g, *l, got.theta);
+                if (p - c).abs() > 1e-5 * c.max(1.0) {
+                    return Err(format!("phi(theta)={p} != C={c}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn theta_monotone_over_rounds() {
+        // Exercised implicitly by convergence; spot-check a sparse case where
+        // many groups must die.
+        let mut abs = vec![0.01f32; 40]; // 10 groups of 4, tiny mass
+        abs[0] = 5.0;
+        abs[1] = 4.0; // one heavy group
+        let st = solve(&abs, 10, 4, 0.5);
+        let p = phi(&abs, 10, 4, st.theta);
+        assert!((p - 0.5).abs() < 1e-7, "phi={p}");
+        assert!(st.theta > 0.04, "small groups must die: theta={}", st.theta);
+    }
+}

@@ -1,0 +1,141 @@
+//! Total-order sweep of Quattoni, Carreras, Collins & Darrell (ICML 2009):
+//! sort *all* breakpoints of `Φ` ascending and walk them with running sums
+//! until the interval containing its own θ̂ is found.
+//!
+//! Complexity `O(nm log(nm))` — the global sort dominates. This is the
+//! baseline the paper's Algorithm 2 improves on by (a) replacing the global
+//! sort with heaps and (b) walking the order *backwards* so only the `J`
+//! modified-suffix entries are ever materialized.
+
+use super::kernels::SortedGroups;
+use super::SolveStats;
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Group's active count grows k → k+1 at this θ.
+    Grow { g: u32, k: u32 },
+    /// Group dies (μ_g hits 0) at this θ.
+    Death { g: u32 },
+}
+
+/// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
+pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
+    let sg = SortedGroups::new(abs, n_groups, group_len);
+
+    // Collect every breakpoint: growth events r_k for k = 1..p-1 and the
+    // death event at S_p. (All-zero groups are never active.)
+    let mut events: Vec<(f64, Event)> = Vec::with_capacity(abs.len() + n_groups);
+    let mut t1 = 0.0f64; // Σ S_{k_g}/k_g over active groups
+    let mut t2 = 0.0f64; // Σ 1/k_g over active groups
+    let mut active = 0usize;
+    for g in 0..n_groups {
+        let p = sg.pos_count[g];
+        if p == 0 {
+            continue;
+        }
+        // Initial state θ→0⁺: k_g = 1.
+        t1 += sg.prefix(g, 1);
+        t2 += 1.0;
+        active += 1;
+        for k in 1..p {
+            events.push((sg.breakpoint(g, k), Event::Grow { g: g as u32, k: k as u32 }));
+        }
+        events.push((sg.full_sum[g], Event::Death { g: g as u32 }));
+    }
+    debug_assert!(active > 0, "norm > C > 0 implies at least one nonzero group");
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    // Track current count per group so Death knows what to subtract.
+    let mut kcur: Vec<u32> = vec![1; n_groups];
+    let mut consumed = 0usize;
+    for &(b, ev) in &events {
+        // State valid on [prev, b): stop if θ̂ lands before the breakpoint.
+        let theta = (t1 - c) / t2;
+        if theta < b {
+            return SolveStats { theta, work: consumed, touched_groups: n_groups };
+        }
+        consumed += 1;
+        match ev {
+            Event::Grow { g, k } => {
+                let (g, k) = (g as usize, k as usize);
+                debug_assert_eq!(kcur[g] as usize, k);
+                t1 += sg.prefix(g, k + 1) / (k + 1) as f64 - sg.prefix(g, k) / k as f64;
+                t2 += 1.0 / (k + 1) as f64 - 1.0 / k as f64;
+                kcur[g] = (k + 1) as u32;
+            }
+            Event::Death { g } => {
+                let g = g as usize;
+                let k = kcur[g] as usize;
+                t1 -= sg.prefix(g, k) / k as f64;
+                t2 -= 1.0 / k as f64;
+                active -= 1;
+            }
+        }
+        if active == 0 {
+            // All groups dead means Φ(θ) = 0 < C beyond this point — the
+            // stop condition must have fired earlier; only reachable through
+            // FP pathologies. Fall back to the last event's θ.
+            return SolveStats { theta: b, work: consumed, touched_groups: n_groups };
+        }
+    }
+    let theta = (t1 - c) / t2;
+    SolveStats { theta, work: consumed, touched_groups: n_groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{bisect, phi};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_hand_case() {
+        let abs = [1.0f32, 0.5, 0.8, 0.1];
+        let st = solve(&abs, 2, 2, 1.0);
+        assert!((st.theta - 0.4).abs() < 1e-7, "{st:?}");
+    }
+
+    #[test]
+    fn agrees_with_bisection_property() {
+        prop::check(
+            "quattoni == bisect",
+            250,
+            0xAB,
+            |rng: &mut Rng| {
+                let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                // Pick C strictly inside (0, norm) so a projection happens.
+                let c = (0.05 + 0.9 * rng.f64()) * norm;
+                (data, g, l, c)
+            },
+            |(data, g, l, c)| {
+                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                if norm <= *c || *c <= 0.0 {
+                    return Ok(()); // degenerate draw (all-zero matrix)
+                }
+                let gold = bisect::solve(data, *g, *l, *c);
+                let got = solve(data, *g, *l, *c);
+                let scale = gold.theta.abs().max(1.0);
+                if (gold.theta - got.theta).abs() > 1e-6 * scale {
+                    return Err(format!("gold={} got={}", gold.theta, got.theta));
+                }
+                let p = phi(data, *g, *l, got.theta);
+                if (p - c).abs() > 1e-5 * c.max(1.0) {
+                    return Err(format!("phi(theta)={p} != C={c}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dense_case_no_events_needed() {
+        // Large C: θ* lands before the first breakpoint (k_g = 1 piece).
+        let abs = [5.0f32, 1.0, 4.0, 1.0];
+        let st = solve(&abs, 2, 2, 8.0);
+        // θ = (5+4-8)/2 = 0.5; valid while θ < min breakpoint (4-1=3, 5-1=4)
+        assert!((st.theta - 0.5).abs() < 1e-9);
+        assert_eq!(st.work, 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Masked projection (paper §3.3, Eq. 20):
+//!
+//! ```text
+//!   P^M(Y) = Y                       if ‖Y‖₁,∞ ≤ C
+//!          = Y ⊙ sign(P_{B₁,∞^C}(|Y|))   otherwise
+//! ```
+//!
+//! i.e. keep the *support* selected by the projection but do **not** bound
+//! the surviving values — this is the PyTorch-pruning-compatible variant
+//! used in Tables 1–2 ("ℓ₁,∞ masked"), where the sparsified sub-network is
+//! expressed as a boolean mask over the weights.
+
+use super::l1inf::{project_l1inf, Algorithm, ProjInfo};
+
+/// Result of a masked projection.
+#[derive(Debug, Clone)]
+pub struct MaskedInfo {
+    /// Metadata of the inner projection that defined the support.
+    pub projection: ProjInfo,
+    /// Boolean support mask (true = kept), grouped layout as the input.
+    pub mask: Vec<bool>,
+    /// Number of kept entries.
+    pub kept: usize,
+}
+
+/// Apply the masked projection in place and return the mask.
+pub fn project_masked(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    algo: Algorithm,
+) -> MaskedInfo {
+    let mut projected = data.to_vec();
+    let projection = project_l1inf(&mut projected, n_groups, group_len, c, algo);
+    if projection.feasible {
+        let mask = vec![true; data.len()];
+        let kept = data.len();
+        return MaskedInfo { projection, mask, kept };
+    }
+    let mut mask = vec![false; data.len()];
+    let mut kept = 0usize;
+    for i in 0..data.len() {
+        if projected[i] != 0.0 {
+            mask[i] = true;
+            kept += 1;
+        } else {
+            data[i] = 0.0;
+        }
+    }
+    MaskedInfo { projection, mask, kept }
+}
+
+/// Re-apply a previously computed mask (the double-descent retrain phase
+/// keeps zeros frozen by masking after every optimizer step).
+pub fn apply_mask(data: &mut [f32], mask: &[bool]) {
+    debug_assert_eq!(data.len(), mask.len());
+    for (v, &m) in data.iter_mut().zip(mask.iter()) {
+        if !m {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::group_sparsity_pct;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn feasible_keeps_everything() {
+        let mut y = vec![0.1f32, -0.1, 0.0, 0.1];
+        let orig = y.clone();
+        let info = project_masked(&mut y, 2, 2, 10.0, Algorithm::InverseOrder);
+        assert_eq!(y, orig);
+        assert_eq!(info.kept, 4);
+    }
+
+    #[test]
+    fn same_support_as_projection_property() {
+        prop::check(
+            "masked support == projection support; survivors unbounded",
+            150,
+            0xFACE,
+            |rng: &mut Rng| {
+                let (mut data, g, l) = prop::gen_projection_matrix(rng, 6, 8);
+                for v in data.iter_mut() {
+                    if rng.chance(0.5) {
+                        *v = -*v;
+                    }
+                }
+                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let c = (0.05 + 0.8 * rng.f64()) * norm.max(1e-6);
+                (data, g, l, c)
+            },
+            |(y, g, l, c)| {
+                let mut masked = y.clone();
+                let mi = project_masked(&mut masked, *g, *l, *c, Algorithm::InverseOrder);
+                let mut proj = y.clone();
+                project_l1inf(&mut proj, *g, *l, *c, Algorithm::InverseOrder);
+                if mi.projection.feasible {
+                    return Ok(());
+                }
+                for i in 0..y.len() {
+                    let sup_m = masked[i] != 0.0;
+                    let sup_p = proj[i] != 0.0;
+                    if sup_m != sup_p {
+                        return Err(format!("support differs at {i}: masked={} proj={}", masked[i], proj[i]));
+                    }
+                    // masked keeps the original value on the support
+                    if sup_m && (masked[i] - y[i]).abs() > 1e-7 {
+                        return Err(format!("masked changed a kept value at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mask_reapplication_freezes_zeros() {
+        let mut y = vec![1.0f32, 2.0, 0.5, 3.0, 0.1, 0.2];
+        let info = project_masked(&mut y, 3, 2, 1.0, Algorithm::Bisection);
+        // pretend a gradient step revived everything
+        let mut w = vec![9.0f32; 6];
+        apply_mask(&mut w, &info.mask);
+        for i in 0..6 {
+            assert_eq!(w[i] != 0.0, info.mask[i]);
+        }
+        let _ = group_sparsity_pct(&y, 3, 2);
+    }
+}

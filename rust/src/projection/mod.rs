@@ -1,0 +1,110 @@
+//! Projection operators — the paper's algorithmic substrate.
+//!
+//! Data layout convention: a "grouped matrix" is a flat `&[f32]` of
+//! `n_groups * group_len` values with **groups contiguous**. In the paper's
+//! notation a matrix `Y ∈ R^{n×m}` has `m` columns of length `n`; here a
+//! *group* is one such column (`n_groups = m`, `group_len = n`). For the SAE
+//! encoder layer `W₁ ∈ R^{d×h}` (row-major, `d` features × `h` hidden
+//! units), each *row* is a group — the layout is identical, so the same
+//! kernels serve both without transposition.
+//!
+//! Submodules:
+//! - [`simplex`]  — projection of a single vector onto the solid ℓ₁ simplex
+//!   `Δ₁^t = {x ≥ 0 : Σxᵢ ≤ t}` (sort, Michelot, Condat) + water-level
+//!   helpers shared by the ℓ₁,∞ solvers.
+//! - [`l1`]       — ℓ₁-ball projection (vector / whole matrix).
+//! - [`l12`]      — ℓ₁,₂ ("group lasso") ball projection.
+//! - [`l1inf`]    — the ℓ₁,∞ ball: gold bisection solver, Quattoni (total
+//!   order), naive active-set (Alg. 1), Bejar elimination, Chu semismooth
+//!   Newton, and the paper's **inverse total order** (Alg. 2).
+//! - [`linf1`]    — prox of the dual ℓ∞,₁ norm via the Moreau identity.
+//! - [`masked`]   — masked projection (Eq. 20).
+//! - [`kkt`]      — optimality-condition verifier used throughout the tests.
+
+pub mod kkt;
+pub mod l1;
+pub mod l12;
+pub mod l1inf;
+pub mod linf1;
+pub mod masked;
+pub mod simplex;
+
+/// ‖Y‖₁,∞ of a grouped matrix: sum over groups of the max **absolute** value.
+pub fn norm_l1inf(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
+    debug_assert_eq!(data.len(), n_groups * group_len);
+    let mut total = 0.0f64;
+    for g in 0..n_groups {
+        let row = &data[g * group_len..(g + 1) * group_len];
+        let m = row.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        total += m as f64;
+    }
+    total
+}
+
+/// ‖Y‖∞,₁ of a grouped matrix: max over groups of the sum of absolute values
+/// (the dual norm of ℓ₁,∞; Eq. 14 of the paper).
+pub fn norm_linf1(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
+    debug_assert_eq!(data.len(), n_groups * group_len);
+    let mut best = 0.0f64;
+    for g in 0..n_groups {
+        let row = &data[g * group_len..(g + 1) * group_len];
+        let s: f64 = row.iter().map(|&x| x.abs() as f64).sum();
+        best = best.max(s);
+    }
+    best
+}
+
+/// ‖Y‖₁ (entrywise).
+pub fn norm_l1(data: &[f32]) -> f64 {
+    data.iter().map(|&x| x.abs() as f64).sum()
+}
+
+/// ‖Y‖₁,₂: sum over groups of the Euclidean norms.
+pub fn norm_l12(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
+    debug_assert_eq!(data.len(), n_groups * group_len);
+    (0..n_groups)
+        .map(|g| {
+            let row = &data[g * group_len..(g + 1) * group_len];
+            (row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt()
+        })
+        .sum()
+}
+
+/// Fraction of groups that are entirely zero ("column sparsity" of the
+/// paper's tables, in percent).
+pub fn group_sparsity_pct(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
+    debug_assert_eq!(data.len(), n_groups * group_len);
+    let zero_groups = (0..n_groups)
+        .filter(|&g| data[g * group_len..(g + 1) * group_len].iter().all(|&x| x == 0.0))
+        .count();
+    100.0 * zero_groups as f64 / n_groups.max(1) as f64
+}
+
+/// Fraction of entries equal to zero, in percent.
+pub fn sparsity_pct(data: &[f32]) -> f64 {
+    let zeros = data.iter().filter(|&&x| x == 0.0).count();
+    100.0 * zeros as f64 / data.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_small_example() {
+        // 2 groups of length 3
+        let y = [1.0f32, -2.0, 0.5, 0.0, 3.0, -1.0];
+        assert!((norm_l1inf(&y, 2, 3) - (2.0 + 3.0)).abs() < 1e-6);
+        assert!((norm_linf1(&y, 2, 3) - 4.0).abs() < 1e-6);
+        assert!((norm_l1(&y) - 7.5).abs() < 1e-6);
+        let l12 = ((1.0f64 + 4.0 + 0.25).sqrt()) + ((9.0f64 + 1.0).sqrt());
+        assert!((norm_l12(&y, 2, 3) - l12).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparsity_measures() {
+        let y = [0.0f32, 0.0, 0.0, 1.0, 0.0, 2.0];
+        assert!((group_sparsity_pct(&y, 2, 3) - 50.0).abs() < 1e-9);
+        assert!((sparsity_pct(&y) - (4.0 / 6.0 * 100.0)).abs() < 1e-9);
+    }
+}

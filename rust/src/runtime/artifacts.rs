@@ -1,0 +1,224 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered HLO module: model dimensions, the flattened parameter signature
+//! (`w1,b1,...,b4` — the order both sides index positionally), batch sizes
+//! and the artifact file per kind. This module parses and validates it.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which lowered program to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// One Adam train step (literal transfer per step).
+    Step,
+    /// Train step with a frozen w1 support mask.
+    StepMasked,
+    /// One epoch as a device-side `lax.scan` over a resident dataset.
+    Epoch,
+    /// Forward pass for evaluation (logits + reconstruction).
+    Eval,
+}
+
+impl ArtifactKind {
+    pub fn key(&self) -> &'static str {
+        match self {
+            ArtifactKind::Step => "step",
+            ArtifactKind::StepMasked => "step_masked",
+            ArtifactKind::Epoch => "epoch",
+            ArtifactKind::Eval => "eval",
+        }
+    }
+    pub const ALL: [ArtifactKind; 4] =
+        [ArtifactKind::Step, ArtifactKind::StepMasked, ArtifactKind::Epoch, ArtifactKind::Eval];
+}
+
+/// One lowered model configuration (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub hidden: usize,
+    pub k: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub n_train: usize,
+    pub steps_per_epoch: usize,
+    /// Flattened parameter shapes `[w1, b1, w2, b2, w3, b3, w4, b4]`.
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_names: Vec<String>,
+    /// artifact kind key → file name (relative to the artifacts dir).
+    pub artifacts: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelConfig {
+    /// Number of parameter leaves (8 for the SAE).
+    pub fn n_params(&self) -> usize {
+        self.param_shapes.len()
+    }
+
+    /// Total parameter element count.
+    pub fn param_elems(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Path of an artifact kind, if it was lowered.
+    pub fn artifact_path(&self, dir: &Path, kind: ArtifactKind) -> Result<PathBuf> {
+        let file = self
+            .artifacts
+            .get(kind.key())
+            .ok_or_else(|| anyhow!("config '{}' has no '{}' artifact", self.name, kind.key()))?;
+        Ok(dir.join(file))
+    }
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ModelConfig>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let configs = v
+            .get("configs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest.json: missing 'configs' array"))?
+            .iter()
+            .map(parse_config)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, configs })
+    }
+
+    /// Default artifacts directory: `$L1INF_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("L1INF_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Find a config by name.
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .ok_or_else(|| anyhow!("no config '{name}' in manifest (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.configs.iter().map(|c| c.name.as_str()).collect()
+    }
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest config: missing '{key}'"))
+}
+
+fn parse_config(v: &Json) -> Result<ModelConfig> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest config missing 'name'"))?
+        .to_string();
+    let param_shapes = v
+        .get("param_shapes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("config '{name}': missing param_shapes"))?
+        .iter()
+        .map(|s| s.as_usize_vec().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<_>>>()?;
+    let param_names = v
+        .get("param_names")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+    let artifacts = v
+        .get("artifacts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("config '{name}': missing artifacts"))?
+        .iter()
+        .map(|(k, p)| {
+            p.as_str()
+                .map(|s| (k.clone(), s.to_string()))
+                .ok_or_else(|| anyhow!("bad artifact path"))
+        })
+        .collect::<Result<_>>()?;
+    let cfg = ModelConfig {
+        d: req_usize(v, "d")?,
+        hidden: req_usize(v, "hidden")?,
+        k: req_usize(v, "k")?,
+        batch: req_usize(v, "batch")?,
+        eval_batch: req_usize(v, "eval_batch")?,
+        n_train: req_usize(v, "n_train")?,
+        steps_per_epoch: req_usize(v, "steps_per_epoch")?,
+        param_shapes,
+        param_names,
+        artifacts,
+        name,
+    };
+    // Sanity: the SAE has 8 leaves, w1 is (d, hidden), b4 is (d,).
+    if cfg.param_shapes.len() != 8 {
+        bail!("config '{}': expected 8 param leaves, got {}", cfg.name, cfg.param_shapes.len());
+    }
+    if cfg.param_shapes[0] != vec![cfg.d, cfg.hidden] {
+        bail!("config '{}': w1 shape mismatch {:?}", cfg.name, cfg.param_shapes[0]);
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn sample(d: usize, h: usize) -> String {
+        format!(
+            r#"{{"version":1,"configs":[{{"name":"t","d":{d},"hidden":{h},"k":2,"batch":8,
+               "eval_batch":8,"n_train":64,"steps_per_epoch":8,
+               "param_shapes":[[{d},{h}],[{h}],[{h},2],[2],[2,{h}],[{h}],[{h},{d}],[{d}]],
+               "param_names":["w1","b1","w2","b2","w3","b3","w4","b4"],
+               "artifacts":{{"step":"t_step.hlo.txt","eval":"t_eval.hlo.txt"}}}}]}}"#
+        )
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("l1inf_manifest_ok");
+        write_manifest(&dir, &sample(24, 8));
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.d, 24);
+        assert_eq!(c.n_params(), 8);
+        assert_eq!(c.param_elems(), 24 * 8 + 8 + 8 * 2 + 2 + 2 * 8 + 8 + 8 * 24 + 24);
+        assert!(c.artifact_path(&m.dir, ArtifactKind::Step).is_ok());
+        assert!(c.artifact_path(&m.dir, ArtifactKind::Epoch).is_err());
+        assert!(m.config("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_w1_shape() {
+        let dir = std::env::temp_dir().join("l1inf_manifest_bad");
+        // d=24 but w1 says 25 rows
+        write_manifest(&dir, &sample(24, 8).replace("[24,8]", "[25,8]"));
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_helpful_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

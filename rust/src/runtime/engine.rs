@@ -1,0 +1,146 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps `xla::PjRtClient` (CPU) with an executable cache keyed by
+//! (config, artifact kind). Two execution paths:
+//!
+//! - [`Engine::run`] — host [`Tensor`] inputs, one literal upload per call
+//!   (simple; used by the per-step trainer and evaluation);
+//! - [`Engine::run_buffers`] — pre-uploaded [`xla::PjRtBuffer`] inputs
+//!   (used by the per-epoch trainer to keep the dataset device-resident;
+//!   see EXPERIMENTS.md §Perf for the measured difference).
+//!
+//! All lowered programs return a flat tuple (`return_tuple=True` at
+//! lowering); outputs are decomposed back into host tensors.
+
+use super::artifacts::{ArtifactKind, Manifest, ModelConfig};
+use super::tensor::Tensor;
+use crate::util::Timer;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Compile-and-execute engine over the artifacts of one manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, &'static str), xla::PjRtLoadedExecutable>,
+    /// Cumulative statistics (exposed for perf reports).
+    pub stats: EngineStats,
+}
+
+/// Execution statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over `manifest`.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    /// Convenience: load the manifest from the default artifacts dir.
+    pub fn from_default_artifacts() -> Result<Engine> {
+        Engine::new(Manifest::load(Manifest::default_dir())?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn config(&self, name: &str) -> Result<ModelConfig> {
+        self.manifest.config(name).cloned()
+    }
+
+    /// Compile (or fetch from cache) the executable for (config, kind).
+    pub fn prepare(&mut self, config: &str, kind: ArtifactKind) -> Result<()> {
+        let key = (config.to_string(), kind.key());
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let cfg = self.manifest.config(config)?;
+        let path = cfg.artifact_path(&self.manifest.dir, kind)?;
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.stats.compiles += 1;
+        self.stats.compile_secs += t.secs();
+        log::info!("compiled {}:{} in {:.2}s", config, kind.key(), t.secs());
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    fn exe(&self, config: &str, kind: ArtifactKind) -> Result<&xla::PjRtLoadedExecutable> {
+        self.cache
+            .get(&(config.to_string(), kind.key()))
+            .ok_or_else(|| anyhow!("executable {config}:{} not prepared", kind.key()))
+    }
+
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&mut self, config: &str, kind: ArtifactKind, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(config, kind)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t = Timer::start();
+        let out = self
+            .exe(config, kind)?
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {config}:{}", kind.key()))?;
+        let result = Self::decompose(out)?;
+        self.stats.executions += 1;
+        self.stats.execute_secs += t.secs();
+        Ok(result)
+    }
+
+    /// Upload a tensor to the device.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        t.to_buffer(&self.client)
+    }
+
+    /// Execute with pre-uploaded device buffers.
+    pub fn run_buffers(
+        &mut self,
+        config: &str,
+        kind: ArtifactKind,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        self.prepare(config, kind)?;
+        let t = Timer::start();
+        let out = self
+            .exe(config, kind)?
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing(b) {config}:{}", kind.key()))?;
+        let result = Self::decompose(out)?;
+        self.stats.executions += 1;
+        self.stats.execute_secs += t.secs();
+        Ok(result)
+    }
+
+    fn decompose(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
+        let buf = out
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| anyhow!("executable produced no outputs"))?;
+        let mut lit = buf.to_literal_sync()?;
+        let leaves = lit.decompose_tuple()?;
+        leaves.iter().map(Tensor::from_literal).collect()
+    }
+}

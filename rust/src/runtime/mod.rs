@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The rust hot path never touches python — `make artifacts` froze the
+//! Layer-2 JAX graphs (whose dense layers are Layer-1 Pallas kernels) to
+//! HLO text; this module loads that text with
+//! `HloModuleProto::from_text_file`, compiles on the PJRT CPU client and
+//! executes with either host literals or device-resident buffers.
+//!
+//! - [`tensor`]    — host tensors ⇄ `xla::Literal` / `xla::PjRtBuffer`
+//! - [`artifacts`] — manifest discovery + shape validation
+//! - [`engine`]    — client + executable cache + typed step/epoch/eval calls
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{ArtifactKind, Manifest, ModelConfig};
+pub use engine::Engine;
+pub use tensor::Tensor;

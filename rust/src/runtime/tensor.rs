@@ -1,0 +1,158 @@
+//! Host-side tensors and conversions to/from XLA literals and buffers.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense host tensor (f32 or i32), row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    /// New f32 tensor; panics on element-count mismatch.
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    /// New i32 tensor.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    /// Scalar f32 (rank 0).
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    /// Zero-filled f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 payload (errors on i32 tensors).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Mutable f32 payload.
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// Borrow i32 payload.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Scalar extraction (f32 or i32 widened to f64).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Tensor::F32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            Tensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            _ => bail!("tensor is not a scalar (len {})", self.len()),
+        }
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes, shape): (xla::ElementType, &[u8], &[usize]) = match self {
+            Tensor::F32 { shape, data } => (
+                xla::ElementType::F32,
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) },
+                shape,
+            ),
+            Tensor::I32 { shape, data } => (
+                xla::ElementType::S32,
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) },
+                shape,
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .context("creating literal from tensor")
+    }
+
+    /// Convert from an XLA literal (copies).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Upload to a device buffer on `client`'s default device.
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            Tensor::F32 { shape, data } => client
+                .buffer_from_host_buffer::<f32>(data, shape, None)
+                .context("uploading f32 tensor"),
+            Tensor::I32 { shape, data } => client
+                .buffer_from_host_buffer::<i32>(data, shape, None)
+                .context("uploading i32 tensor"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let s = Tensor::scalar_f32(4.5);
+        assert_eq!(s.scalar().unwrap(), 4.5);
+        assert!(t.scalar().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_checked() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let z = Tensor::zeros(&[4, 5]);
+        assert_eq!(z.len(), 20);
+        assert!(z.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    // literal round-trips are covered by rust/tests/runtime_integration.rs
+    // (they require the PJRT shared library at run time).
+}

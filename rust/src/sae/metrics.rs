@@ -1,0 +1,105 @@
+//! Metrics reported by the paper's tables and figures: accuracy, column
+//! sparsity of the encoder input layer, weight mass, selected features.
+
+use crate::projection;
+
+/// Classification accuracy from logits (row-major B × k) and labels.
+/// Only the first `valid` rows are counted (tail batches are padded).
+pub fn accuracy_count(logits: &[f32], k: usize, labels: &[i32], valid: usize) -> usize {
+    let mut correct = 0usize;
+    for i in 0..valid {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+/// Sparsity metrics of the encoder input layer `w1 (d × h)` — "Colsp" in
+/// the paper's tables is the percentage of *features* (rows here, columns
+/// in the paper's orientation) entirely zeroed.
+#[derive(Debug, Clone)]
+pub struct W1Metrics {
+    /// % of feature rows identically zero.
+    pub col_sparsity_pct: f64,
+    /// % of individual weights equal to zero.
+    pub weight_sparsity_pct: f64,
+    /// Σ|w1| ("Sum of W" row in Table 2).
+    pub sum_abs: f64,
+    /// ‖w1‖₁,∞ over feature rows.
+    pub norm_l1inf: f64,
+    /// Indices of surviving (selected) features.
+    pub selected: Vec<usize>,
+}
+
+/// Compute [`W1Metrics`] for a row-major `w1` of `d` rows × `h` cols.
+pub fn w1_metrics(w1: &[f32], d: usize, h: usize) -> W1Metrics {
+    assert_eq!(w1.len(), d * h);
+    let mut selected = Vec::new();
+    for r in 0..d {
+        if w1[r * h..(r + 1) * h].iter().any(|&v| v != 0.0) {
+            selected.push(r);
+        }
+    }
+    W1Metrics {
+        col_sparsity_pct: 100.0 * (d - selected.len()) as f64 / d as f64,
+        weight_sparsity_pct: projection::sparsity_pct(w1),
+        sum_abs: projection::norm_l1(w1),
+        norm_l1inf: projection::norm_l1inf(w1, d, h),
+        selected,
+    }
+}
+
+/// Feature-selection quality against a known informative set:
+/// (precision, recall) of the selected features.
+pub fn selection_quality(selected: &[usize], informative: &[usize]) -> (f64, f64) {
+    if selected.is_empty() || informative.is_empty() {
+        return (0.0, 0.0);
+    }
+    let truth: std::collections::HashSet<_> = informative.iter().copied().collect();
+    let hits = selected.iter().filter(|i| truth.contains(i)).count();
+    (
+        hits as f64 / selected.len() as f64,
+        hits as f64 / informative.len() as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = [1.0f32, 2.0, /* -> 1 */ 3.0, 0.0 /* -> 0 */];
+        assert_eq!(accuracy_count(&logits, 2, &[1, 0], 2), 2);
+        assert_eq!(accuracy_count(&logits, 2, &[0, 0], 2), 1);
+        // padded tail ignored
+        assert_eq!(accuracy_count(&logits, 2, &[1], 1), 1);
+    }
+
+    #[test]
+    fn w1_metrics_basic() {
+        // 3 features × 2 hidden; feature 1 zeroed
+        let w1 = [0.5f32, -0.5, 0.0, 0.0, 1.0, 0.0];
+        let m = w1_metrics(&w1, 3, 2);
+        assert!((m.col_sparsity_pct - 100.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.selected, vec![0, 2]);
+        assert!((m.sum_abs - 2.0).abs() < 1e-6);
+        assert!((m.norm_l1inf - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn selection_precision_recall() {
+        let (p, r) = selection_quality(&[1, 2, 3, 4], &[2, 4, 8]);
+        assert!((p - 0.5).abs() < 1e-9);
+        assert!((r - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(selection_quality(&[], &[1]), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Supervised autoencoder (SAE) training coordinator — the application half
+//! of the paper (§5–6), driven entirely from rust over the AOT artifacts.
+//!
+//! - [`state`]   — flattened parameter/Adam state mirroring the L2 model
+//! - [`trainer`] — epoch loop with per-epoch ball projections (Algorithm 3),
+//!   the masked variant (Eq. 20), and double-descent support rewind
+//! - [`metrics`] — accuracy / column-sparsity / weight-mass reporting
+
+pub mod metrics;
+pub mod state;
+pub mod trainer;
+
+pub use state::TrainState;
+pub use trainer::{ExecMode, ProjectionMode, TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,198 @@
+//! Flattened SAE parameter + Adam state, mirroring the Layer-2 model's
+//! conventions exactly (leaf order `w1,b1,w2,b2,w3,b3,w4,b4`; He-uniform
+//! init; f32 everywhere; `t` is the 1-based Adam step counter).
+
+use crate::runtime::{ModelConfig, Tensor};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Parameters + Adam moments + step counter.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Flattened parameter leaves (8 tensors).
+    pub params: Vec<Tensor>,
+    /// First Adam moment per leaf.
+    pub m: Vec<Tensor>,
+    /// Second Adam moment per leaf.
+    pub v: Vec<Tensor>,
+    /// 1-based Adam step count (f32 in the graph).
+    pub t: f32,
+}
+
+impl TrainState {
+    /// He-uniform initialization (matches `model.init_params` in spirit;
+    /// exact values differ since the RNGs differ — both are valid inits).
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> TrainState {
+        let mut params = Vec::with_capacity(cfg.param_shapes.len());
+        for shape in &cfg.param_shapes {
+            if shape.len() == 2 {
+                let fan_in = shape[0] as f64;
+                let lim = (6.0 / fan_in).sqrt();
+                let mut data = vec![0.0f32; shape.iter().product()];
+                for v in data.iter_mut() {
+                    *v = rng.range_f64(-lim, lim) as f32;
+                }
+                params.push(Tensor::f32(shape, data));
+            } else {
+                params.push(Tensor::zeros(shape));
+            }
+        }
+        let m = cfg.param_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let v = cfg.param_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        TrainState { params, m, v, t: 0.0 }
+    }
+
+    /// Number of leaves (8).
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// `[params..., m..., v...]` — the state prefix of every train program.
+    pub fn flat_state(&self) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(3 * self.n_leaves());
+        out.extend(self.params.iter().cloned());
+        out.extend(self.m.iter().cloned());
+        out.extend(self.v.iter().cloned());
+        out
+    }
+
+    /// Build the input list of the `step` program:
+    /// `[params(8), m(8), v(8), t, x, y, lr, lam]`.
+    pub fn step_inputs(&self, x: &Tensor, y: &Tensor, lr: f32, lam: f32) -> Vec<Tensor> {
+        let mut inputs = self.flat_state();
+        inputs.push(Tensor::scalar_f32(self.t));
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(Tensor::scalar_f32(lr));
+        inputs.push(Tensor::scalar_f32(lam));
+        inputs
+    }
+
+    /// Consume the output tuple of a train program
+    /// (`[params(8), m(8), v(8), t, loss, correct]`) and update the state.
+    /// Returns `(loss, correct_count)`.
+    pub fn absorb_step(&mut self, mut out: Vec<Tensor>) -> Result<(f64, i64)> {
+        let n = self.n_leaves();
+        if out.len() != 3 * n + 3 {
+            bail!("train program returned {} leaves, expected {}", out.len(), 3 * n + 3);
+        }
+        let correct = out.pop().unwrap().scalar()? as i64;
+        let loss = out.pop().unwrap().scalar()?;
+        let t = out.pop().unwrap().scalar()? as f32;
+        self.v = out.split_off(2 * n);
+        self.m = out.split_off(n);
+        self.params = out;
+        self.t = t;
+        Ok((loss, correct))
+    }
+
+    /// Mutable access to the encoder input layer `w1 (d × hidden)` —
+    /// the matrix the paper's projections act on (groups = rows = features).
+    pub fn w1_mut(&mut self) -> Result<(&mut [f32], usize, usize)> {
+        let shape = self.params[0].shape().to_vec();
+        if shape.len() != 2 {
+            bail!("w1 is not a matrix");
+        }
+        let (d, h) = (shape[0], shape[1]);
+        Ok((self.params[0].as_f32_mut()?, d, h))
+    }
+
+    /// Immutable view of `w1`.
+    pub fn w1(&self) -> Result<(&[f32], usize, usize)> {
+        let shape = self.params[0].shape();
+        let (d, h) = (shape[0], shape[1]);
+        Ok((self.params[0].as_f32()?, d, h))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelConfig;
+    use std::collections::BTreeMap;
+
+    pub(crate) fn test_config(d: usize, h: usize, k: usize) -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            d,
+            hidden: h,
+            k,
+            batch: 8,
+            eval_batch: 8,
+            n_train: 64,
+            steps_per_epoch: 8,
+            param_shapes: vec![
+                vec![d, h],
+                vec![h],
+                vec![h, k],
+                vec![k],
+                vec![k, h],
+                vec![h],
+                vec![h, d],
+                vec![d],
+            ],
+            param_names: ["w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_ranges() {
+        let cfg = test_config(24, 8, 2);
+        let st = TrainState::init(&cfg, &mut Rng::new(0));
+        assert_eq!(st.params.len(), 8);
+        assert_eq!(st.params[0].shape(), &[24, 8]);
+        // biases zero
+        assert!(st.params[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        // weights within He-uniform limits
+        let lim = (6.0f64 / 24.0).sqrt() as f32;
+        assert!(st.params[0].as_f32().unwrap().iter().all(|&v| v.abs() <= lim));
+        assert_eq!(st.t, 0.0);
+    }
+
+    #[test]
+    fn deterministic_init_per_seed() {
+        let cfg = test_config(10, 4, 2);
+        let a = TrainState::init(&cfg, &mut Rng::new(5));
+        let b = TrainState::init(&cfg, &mut Rng::new(5));
+        assert_eq!(a.params[0].as_f32().unwrap(), b.params[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn absorb_step_roundtrip() {
+        let cfg = test_config(6, 3, 2);
+        let mut st = TrainState::init(&cfg, &mut Rng::new(1));
+        // Fake a program output: same state, t+1, loss 0.5, correct 3.
+        let mut out = st.flat_state();
+        out.push(Tensor::scalar_f32(1.0));
+        out.push(Tensor::scalar_f32(0.5));
+        out.push(Tensor::i32(&[], vec![3]));
+        let (loss, correct) = st.absorb_step(out).unwrap();
+        assert_eq!(loss, 0.5);
+        assert_eq!(correct, 3);
+        assert_eq!(st.t, 1.0);
+        assert_eq!(st.params.len(), 8);
+        assert_eq!(st.m.len(), 8);
+        assert_eq!(st.v.len(), 8);
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_arity() {
+        let cfg = test_config(6, 3, 2);
+        let mut st = TrainState::init(&cfg, &mut Rng::new(1));
+        assert!(st.absorb_step(vec![Tensor::scalar_f32(0.0)]).is_err());
+    }
+
+    #[test]
+    fn w1_view() {
+        let cfg = test_config(6, 3, 2);
+        let mut st = TrainState::init(&cfg, &mut Rng::new(1));
+        let (w1, d, h) = st.w1_mut().unwrap();
+        assert_eq!((d, h), (6, 3));
+        w1[0] = 42.0;
+        assert_eq!(st.params[0].as_f32().unwrap()[0], 42.0);
+    }
+}

@@ -1,0 +1,332 @@
+//! The SAE training loop (paper Algorithm 3): Adam steps through the AOT
+//! train program, with the chosen ball projection applied to the encoder
+//! input layer `w1` after every epoch, plus the masked variant (Eq. 20)
+//! and the double-descent (lottery-ticket rewind) schedule.
+
+use super::metrics::{self, W1Metrics};
+use super::state::TrainState;
+use crate::data::loader::Split;
+use crate::projection::l1inf::{project_l1inf, Algorithm};
+use crate::projection::masked::project_masked;
+use crate::projection::{l1, l12};
+use crate::runtime::{ArtifactKind, Engine, ModelConfig, Tensor};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+use anyhow::{ensure, Context, Result};
+
+/// Which ball constrains the encoder input layer (the paper's comparison).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProjectionMode {
+    /// No projection — the "Baseline" table rows.
+    None,
+    /// ℓ₁ ball of radius `eta` on the flattened w1.
+    L1 { eta: f64 },
+    /// ℓ₁,₂ (a.k.a. ℓ₂,₁) ball of radius `eta` over feature rows.
+    L12 { eta: f64 },
+    /// ℓ₁,∞ ball of radius `c` over feature rows (the paper's method).
+    L1Inf { c: f64 },
+    /// Masked ℓ₁,∞ (Eq. 20): keep the support, don't bound values.
+    L1InfMasked { c: f64 },
+}
+
+impl ProjectionMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjectionMode::None => "baseline",
+            ProjectionMode::L1 { .. } => "l1",
+            ProjectionMode::L12 { .. } => "l21",
+            ProjectionMode::L1Inf { .. } => "l1inf",
+            ProjectionMode::L1InfMasked { .. } => "l1inf_masked",
+        }
+    }
+}
+
+/// How train steps are executed (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One PJRT call per batch; parameters transferred every step.
+    Step,
+    /// One PJRT call per epoch (`lax.scan` artifact); the dataset stays
+    /// device-resident, parameters transfer once per epoch.
+    Epoch,
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest model config name (`tiny`, `synth_small`, `synth`, `lung`).
+    pub model: String,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Reconstruction-loss weight λ.
+    pub lambda: f32,
+    pub projection: ProjectionMode,
+    /// Which ℓ₁,∞ solver the projection uses.
+    pub algo: Algorithm,
+    pub exec: ExecMode,
+    pub seed: u64,
+    /// Lottery-ticket double descent: retrain from the initial weights with
+    /// the learned support frozen (paper §5, Frankle & Carbin schedule).
+    pub double_descent: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "synth_small".into(),
+            epochs: 20,
+            lr: 1e-3,
+            lambda: 1.0,
+            projection: ProjectionMode::L1Inf { c: 1.0 },
+            algo: Algorithm::InverseOrder,
+            exec: ExecMode::Epoch,
+            seed: 0,
+            double_descent: false,
+        }
+    }
+}
+
+/// Per-epoch log line.
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub train_acc_pct: f64,
+    /// θ of the epoch's projection (0 when feasible / no projection).
+    pub theta: f64,
+    pub col_sparsity_pct: f64,
+    pub proj_ms: f64,
+    pub exec_ms: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochLog>,
+    pub test_accuracy_pct: f64,
+    pub w1: W1Metrics,
+    /// θ of the final projection.
+    pub final_theta: f64,
+    pub train_secs: f64,
+    pub proj_secs: f64,
+    /// Second-phase (double descent) test accuracy, if enabled.
+    pub retrain_accuracy_pct: Option<f64>,
+}
+
+/// Trains one SAE on one split through the engine.
+pub struct Trainer<'e> {
+    engine: &'e mut Engine,
+    cfg: ModelConfig,
+    tc: TrainConfig,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e mut Engine, tc: TrainConfig) -> Result<Trainer<'e>> {
+        let cfg = engine.config(&tc.model)?;
+        Ok(Trainer { engine, cfg, tc })
+    }
+
+    /// Run the full schedule on `split`; returns the report.
+    pub fn train(&mut self, split: &Split) -> Result<TrainReport> {
+        ensure!(split.d == self.cfg.d, "split d={} != model d={}", split.d, self.cfg.d);
+        ensure!(
+            split.n_train >= self.cfg.n_train,
+            "split has {} train rows, model epoch window needs {}",
+            split.n_train,
+            self.cfg.n_train
+        );
+        let total = Timer::start();
+        let mut rng = Rng::new(self.tc.seed);
+        let init_state = TrainState::init(&self.cfg, &mut rng);
+        let mut state = init_state.clone();
+
+        let mut proj_secs = 0.0;
+        let mut logs = Vec::with_capacity(self.tc.epochs);
+        let mut data_rng = rng.split(1);
+
+        // Device-resident dataset for epoch mode.
+        let epoch_buffers = if self.tc.exec == ExecMode::Epoch {
+            let (x, y) = split.train_window(self.cfg.n_train);
+            Some((self.engine.upload(&x)?, self.engine.upload(&y)?))
+        } else {
+            None
+        };
+
+        for epoch in 0..self.tc.epochs {
+            let exec_t = Timer::start();
+            let (mean_loss, correct) = match self.tc.exec {
+                ExecMode::Step => self.run_epoch_steps(split, &mut state, &mut data_rng, None)?,
+                ExecMode::Epoch => {
+                    let (xb, yb) = epoch_buffers.as_ref().unwrap();
+                    self.run_epoch_scan(&mut state, &mut data_rng, xb, yb)?
+                }
+            };
+            let exec_ms = exec_t.millis();
+
+            let pt = Timer::start();
+            let theta = self.project(&mut state)?;
+            let proj_ms = pt.millis();
+            proj_secs += proj_ms / 1e3;
+
+            let (w1, d, h) = state.w1()?;
+            let seen = self.cfg.steps_per_epoch * self.cfg.batch;
+            logs.push(EpochLog {
+                epoch,
+                mean_loss,
+                train_acc_pct: 100.0 * correct as f64 / seen as f64,
+                theta,
+                col_sparsity_pct: metrics::w1_metrics(w1, d, h).col_sparsity_pct,
+                proj_ms,
+                exec_ms,
+            });
+            log::debug!(
+                "epoch {epoch}: loss={mean_loss:.4} colsp={:.2}% theta={theta:.4}",
+                logs.last().unwrap().col_sparsity_pct
+            );
+        }
+
+        let test_accuracy_pct = self.evaluate(split, &state)?;
+        let (w1, d, h) = state.w1()?;
+        let w1m = metrics::w1_metrics(w1, d, h);
+        let final_theta = logs.last().map(|l| l.theta).unwrap_or(0.0);
+
+        // Optional double descent: rewind to init, freeze the support, retrain.
+        let retrain_accuracy_pct = if self.tc.double_descent {
+            Some(self.retrain_masked(split, &init_state, &w1m)?)
+        } else {
+            None
+        };
+
+        Ok(TrainReport {
+            epochs: logs,
+            test_accuracy_pct,
+            w1: w1m,
+            final_theta,
+            train_secs: total.secs(),
+            proj_secs,
+            retrain_accuracy_pct,
+        })
+    }
+
+    /// Per-batch execution (optionally with a frozen w1 support mask).
+    fn run_epoch_steps(
+        &mut self,
+        split: &Split,
+        state: &mut TrainState,
+        rng: &mut Rng,
+        mask: Option<&Tensor>,
+    ) -> Result<(f64, i64)> {
+        let steps = self.cfg.steps_per_epoch;
+        let order = split.epoch_order(self.cfg.n_train, steps, self.cfg.batch, rng);
+        let mut loss_sum = 0.0;
+        let mut correct = 0i64;
+        for s in 0..steps {
+            let (x, y) = split.train_batch(&order, s, self.cfg.batch);
+            let mut inputs = state.step_inputs(&x, &y, self.tc.lr, self.tc.lambda);
+            let kind = if let Some(m) = mask {
+                inputs.push(m.clone());
+                ArtifactKind::StepMasked
+            } else {
+                ArtifactKind::Step
+            };
+            let out = self.engine.run(&self.cfg.name, kind, &inputs)?;
+            let (loss, c) = state.absorb_step(out)?;
+            loss_sum += loss;
+            correct += c;
+        }
+        Ok((loss_sum / steps as f64, correct))
+    }
+
+    /// Whole-epoch scan execution over device-resident data.
+    fn run_epoch_scan(
+        &mut self,
+        state: &mut TrainState,
+        rng: &mut Rng,
+        xb: &xla::PjRtBuffer,
+        yb: &xla::PjRtBuffer,
+    ) -> Result<(f64, i64)> {
+        let len = self.cfg.steps_per_epoch * self.cfg.batch;
+        let mut perm: Vec<i32> = (0..self.cfg.n_train as i32).collect();
+        rng.shuffle(&mut perm);
+        perm.truncate(len);
+
+        let mut bufs = Vec::with_capacity(3 * state.n_leaves() + 4);
+        for t in state.flat_state() {
+            bufs.push(self.engine.upload(&t)?);
+        }
+        bufs.push(self.engine.upload(&Tensor::scalar_f32(state.t))?);
+        let permb = self.engine.upload(&Tensor::i32(&[len], perm))?;
+        let lrb = self.engine.upload(&Tensor::scalar_f32(self.tc.lr))?;
+        let lamb = self.engine.upload(&Tensor::scalar_f32(self.tc.lambda))?;
+
+        let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        refs.push(xb);
+        refs.push(yb);
+        refs.push(&permb);
+        refs.push(&lrb);
+        refs.push(&lamb);
+        let out = self
+            .engine
+            .run_buffers(&self.cfg.name, ArtifactKind::Epoch, &refs)
+            .context("epoch scan execution")?;
+        state.absorb_step(out)
+    }
+
+    /// Apply the configured projection to w1; returns θ (or τ).
+    fn project(&mut self, state: &mut TrainState) -> Result<f64> {
+        let algo = self.tc.algo;
+        let mode = self.tc.projection;
+        let (w1, d, h) = state.w1_mut()?;
+        Ok(match mode {
+            ProjectionMode::None => 0.0,
+            ProjectionMode::L1 { eta } => l1::project_l1(w1, eta).tau,
+            ProjectionMode::L12 { eta } => l12::project_l12(w1, d, h, eta).tau,
+            ProjectionMode::L1Inf { c } => project_l1inf(w1, d, h, c, algo).theta,
+            ProjectionMode::L1InfMasked { c } => project_masked(w1, d, h, c, algo).projection.theta,
+        })
+    }
+
+    /// Test-set accuracy through the eval artifact.
+    fn evaluate(&mut self, split: &Split, state: &TrainState) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (x, y, valid) in split.eval_batches(self.cfg.eval_batch) {
+            let mut inputs = state.params.clone();
+            inputs.push(x);
+            let out = self.engine.run(&self.cfg.name, ArtifactKind::Eval, &inputs)?;
+            let logits = out[0].as_f32()?;
+            correct += metrics::accuracy_count(logits, self.cfg.k, &y, valid);
+            total += valid;
+        }
+        Ok(100.0 * correct as f64 / total.max(1) as f64)
+    }
+
+    /// Double-descent phase 2: rewind to `init`, freeze the learned feature
+    /// support of w1, retrain with masked steps, evaluate.
+    fn retrain_masked(
+        &mut self,
+        split: &Split,
+        init: &TrainState,
+        w1m: &W1Metrics,
+    ) -> Result<f64> {
+        let (d, h) = (self.cfg.d, self.cfg.hidden);
+        let mut mask = vec![0.0f32; d * h];
+        for &r in &w1m.selected {
+            mask[r * h..(r + 1) * h].fill(1.0);
+        }
+        let mask_t = Tensor::f32(&[d, h], mask);
+        let mut state = init.clone();
+        // Apply the mask to the rewound weights so the support starts frozen.
+        {
+            let (w1, _, _) = state.w1_mut()?;
+            for (v, m) in w1.iter_mut().zip(mask_t.as_f32()?.iter()) {
+                *v *= m;
+            }
+        }
+        let mut rng = Rng::new(self.tc.seed ^ 0xDD);
+        for _ in 0..self.tc.epochs {
+            self.run_epoch_steps(split, &mut state, &mut rng, Some(&mask_t))?;
+        }
+        self.evaluate(split, &state)
+    }
+}

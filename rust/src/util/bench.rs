@@ -1,0 +1,138 @@
+//! Micro/macro benchmark harness used by the `cargo bench` targets.
+//!
+//! The vendored crate set has no `criterion`, so this is a small,
+//! deterministic timing harness with warmup, repetition, and robust
+//! summaries. Each `[[bench]]` target sets `harness = false` and drives
+//! this module directly; results are printed as aligned tables and also
+//! written to CSV so figures can be re-plotted.
+
+use super::stats;
+use super::Timer;
+
+/// One benchmark measurement summary.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall times in milliseconds.
+    pub times_ms: Vec<f64>,
+}
+
+impl Sample {
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.times_ms)
+    }
+    pub fn std_ms(&self) -> f64 {
+        stats::std(&self.times_ms)
+    }
+    pub fn min_ms(&self) -> f64 {
+        stats::min(&self.times_ms)
+    }
+    pub fn median_ms(&self) -> f64 {
+        stats::median(&self.times_ms)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total time per case (seconds); reduces iters when slow.
+    pub max_secs_per_case: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 2, measure_iters: 7, max_secs_per_case: 20.0 }
+    }
+}
+
+impl BenchOpts {
+    /// Honor `L1INF_BENCH_FAST=1` to keep CI / smoke runs quick.
+    pub fn from_env() -> Self {
+        let mut o = BenchOpts::default();
+        if std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1") {
+            o.warmup_iters = 1;
+            o.measure_iters = 3;
+            o.max_secs_per_case = 5.0;
+        }
+        o
+    }
+}
+
+/// Time `f` (which must regenerate its own input each call if it mutates).
+/// `setup` produces a fresh input for each iteration; only `f` is timed.
+pub fn run_case<I, S, F>(name: &str, opts: &BenchOpts, mut setup: S, mut f: F) -> Sample
+where
+    S: FnMut() -> I,
+    F: FnMut(I),
+{
+    for _ in 0..opts.warmup_iters {
+        let input = setup();
+        f(input);
+    }
+    let mut times = Vec::with_capacity(opts.measure_iters);
+    let budget = Timer::start();
+    for _ in 0..opts.measure_iters {
+        let input = setup();
+        let t = Timer::start();
+        f(input);
+        times.push(t.millis());
+        if budget.secs() > opts.max_secs_per_case && times.len() >= 2 {
+            break;
+        }
+    }
+    Sample { name: name.to_string(), times_ms: times }
+}
+
+/// Print a results table (name, mean, std, min, median).
+pub fn print_table(title: &str, samples: &[Sample]) {
+    println!("\n== {title} ==");
+    let name_w = samples.iter().map(|s| s.name.len()).max().unwrap_or(4).max(4);
+    println!(
+        "{:<name_w$}  {:>12} {:>12} {:>12} {:>12}",
+        "case", "mean_ms", "std_ms", "min_ms", "median_ms"
+    );
+    for s in samples {
+        println!(
+            "{:<name_w$}  {:>12.4} {:>12.4} {:>12.4} {:>12.4}",
+            s.name,
+            s.mean_ms(),
+            s.std_ms(),
+            s.min_ms(),
+            s.median_ms()
+        );
+    }
+}
+
+/// Write samples to CSV at `path` (columns: case, mean, std, min, median).
+pub fn write_csv(path: &str, samples: &[Sample]) -> std::io::Result<()> {
+    let mut w = super::csv::CsvWriter::create(path, &["case", "mean_ms", "std_ms", "min_ms", "median_ms"])?;
+    for s in samples {
+        w.row(&[
+            s.name.clone(),
+            format!("{}", s.mean_ms()),
+            format!("{}", s.std_ms()),
+            format!("{}", s.min_ms()),
+            format!("{}", s.median_ms()),
+        ])?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let opts = BenchOpts { warmup_iters: 1, measure_iters: 3, max_secs_per_case: 5.0 };
+        let s = run_case("busy", &opts, || vec![1.0f64; 10_000], |v| {
+            let x: f64 = v.iter().sum();
+            assert!(x > 0.0);
+        });
+        assert_eq!(s.times_ms.len(), 3);
+        assert!(s.mean_ms() >= 0.0);
+        assert!(s.min_ms() <= s.mean_ms() + 1e-9);
+    }
+}

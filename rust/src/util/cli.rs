@@ -1,0 +1,136 @@
+//! Flag-style command-line parsing for the `l1inf` binary and examples.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. (The vendored crate set has no `clap`; this covers everything
+//! the launcher needs with helpful error messages.)
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclude argv[0]).
+    /// `bool_flags` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" separator: everything after is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        return Err(format!("option --{body} expects a value"));
+                    }
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    return Err(format!("option --{body} expects a value"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    /// Comma-separated f64 list option.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim().parse::<f64>().map_err(|_| format!("--{name}: bad number '{t}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = Args::parse(v(&["train", "--radius", "0.5", "--quick", "--seed=7", "pos2"]), &["quick"]).unwrap();
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.get("radius"), Some("0.5"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get_f64("radius", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(v(&["--radius"]), &[]).is_err());
+        assert!(Args::parse(v(&["--radius", "--other", "1"]), &[]).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(v(&["--radii", "0.1, 0.5,1"]), &[]).unwrap();
+        assert_eq!(a.get_f64_list("radii", &[]).unwrap(), vec![0.1, 0.5, 1.0]);
+        assert!(a.get_f64_list("radii2", &[9.0]).unwrap() == vec![9.0]);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = Args::parse(v(&["--x", "1", "--", "--notaflag"]), &[]).unwrap();
+        assert_eq!(a.positional, vec!["--notaflag"]);
+    }
+}

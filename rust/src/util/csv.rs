@@ -1,0 +1,79 @@
+//! Tiny CSV writer. Every experiment driver emits its series/rows as CSV so
+//! that the paper's figures can be re-plotted from the repo's outputs.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+/// A CSV file under construction (header written first, rows appended).
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (parent dirs included) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Append a row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", fields.join(","))
+    }
+
+    /// Append a row of f64 values.
+    pub fn row_f64(&mut self, values: &[f64]) -> std::io::Result<()> {
+        let fields: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        self.row(&fields)
+    }
+
+    /// Flush to disk.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Parse a simple (no quoting) CSV string into header + rows. Used by tests
+/// and by the report tooling to read back experiment outputs.
+pub fn parse_simple(text: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = match lines.next() {
+        Some(h) => h.split(',').map(|s| s.trim().to_string()).collect(),
+        None => return (vec![], vec![]),
+    };
+    let rows = lines
+        .map(|l| l.split(',').map(|s| s.trim().to_string()).collect())
+        .collect();
+    (header, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("l1inf_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row_f64(&[1.0, 2.5]).unwrap();
+            w.row(&["x".into(), "y".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let (h, rows) = parse_simple(&text);
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][1], "2.5");
+        assert_eq!(rows[1][0], "x");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,42 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build image is fully offline and its vendored crate set does not
+//! include `rand`, `serde`, `clap`, `criterion` or `proptest`, so this
+//! module provides minimal, well-tested replacements:
+//!
+//! - [`rng`]    — SplitMix64 + xoshiro256** PRNG with normal/uniform helpers
+//! - [`stats`]  — mean / std / percentiles / linear fits
+//! - [`csv`]    — tiny CSV writer used by the experiment drivers
+//! - [`json`]   — minimal JSON value + parser/writer (artifact manifests)
+//! - [`cli`]    — flag-style argument parser for the `l1inf` binary
+//! - [`bench`]  — timing harness used by `cargo bench` targets
+//! - [`prop`]   — property-test harness (randomized cases + shrinking-lite)
+//! - [`table`]  — fixed-width ASCII table rendering for reports
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Wall-clock timer with microsecond resolution.
+#[derive(Debug)]
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    /// Elapsed milliseconds since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}

@@ -1,0 +1,157 @@
+//! Property-test harness.
+//!
+//! `proptest` is not in the vendored crate set, so this provides the part we
+//! actually need: run a property over many randomly generated cases with a
+//! deterministic seed, and on failure report the seed + case index so the
+//! exact input can be regenerated, plus a lightweight "shrink" that retries
+//! the property on smaller versions of the failing input when the generator
+//! supports it.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop` with inputs from `gen`.
+/// Panics with a reproducible message on the first failure.
+pub fn check<T, G, P>(name: &str, cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with a shrinker: when a case fails, `shrink` proposes
+/// successively smaller candidates; the smallest still-failing one is
+/// reported.
+pub fn check_shrink<T, G, P, S>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: G,
+    mut prop: P,
+    mut shrink: S,
+) where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+    S: FnMut(&T) -> Vec<T>,
+    T: std::fmt::Debug + Clone,
+{
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop (bounded).
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut rounds = 0;
+            'outer: while rounds < 200 {
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {best_msg}\nshrunk input: {best:?}"
+            );
+        }
+    }
+}
+
+/// Common generator: random nonnegative matrix (groups contiguous),
+/// returns (data, n_groups, group_len) with occasional ties, zeros, and
+/// whole-zero groups — the adversarial structure for projection code.
+pub fn gen_projection_matrix(rng: &mut Rng, max_groups: usize, max_len: usize) -> (Vec<f32>, usize, usize) {
+    let g = rng.range(1, max_groups + 1);
+    let l = rng.range(1, max_len + 1);
+    let mut data = vec![0.0f32; g * l];
+    let tie_value = (rng.range(1, 10) as f32) / 4.0;
+    for grp in 0..g {
+        let zero_group = rng.chance(0.15);
+        for i in 0..l {
+            let v = if zero_group {
+                0.0
+            } else if rng.chance(0.2) {
+                0.0 // sparse zeros inside groups
+            } else if rng.chance(0.25) {
+                tie_value // deliberate ties across and within groups
+            } else {
+                rng.f32() * 2.0
+            };
+            data[grp * l + i] = v;
+        }
+    }
+    (data, g, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-nonneg", 50, 42, |r| vec![r.f64(); 3], |v| {
+            if v.iter().sum::<f64>() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative".into())
+            }
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, 1, |r| r.below(100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinker_reduces() {
+        // Property: all vectors shorter than 3. Generator makes len 10.
+        check_shrink(
+            "short-vectors",
+            5,
+            2,
+            |r| vec![r.below(5); 10],
+            |v| if v.len() < 3 { Ok(()) } else { Err(format!("len={}", v.len())) },
+            |v| {
+                if v.len() > 1 {
+                    vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+                } else {
+                    vec![]
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn matrix_generator_shapes() {
+        let mut r = Rng::new(9);
+        for _ in 0..100 {
+            let (d, g, l) = gen_projection_matrix(&mut r, 8, 12);
+            assert_eq!(d.len(), g * l);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+}

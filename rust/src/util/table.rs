@@ -1,0 +1,83 @@
+//! Fixed-width ASCII tables for experiment reports (paper-style tables are
+//! printed to stdout and written alongside the CSV outputs).
+
+/// A simple table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) -> &mut Self {
+        assert_eq!(fields.len(), self.header.len(), "table row arity");
+        self.rows.push(fields);
+        self
+    }
+
+    /// Render with column alignment; first column left, rest right.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |fields: &[String], widths: &[usize], out: &mut String| {
+            for i in 0..ncol {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = widths[i].saturating_sub(fields[i].chars().count());
+                if i == 0 {
+                    out.push_str(&fields[i]);
+                    out.push_str(&" ".repeat(pad));
+                } else {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(&fields[i]);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["method", "acc", "colsp"]);
+        t.row(vec!["baseline".into(), "86.60".into(), "0".into()]);
+        t.row(vec!["l1inf".into(), "92.77".into(), "99.6".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("method"));
+        assert!(lines[2].starts_with("baseline"));
+        // right-aligned numeric columns end at same offset
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Config-system and CLI-surface integration: file parsing + overrides +
+//! typed extraction + the shipped `configs/*.toml` presets, and the
+//! launcher binary's top-level commands.
+
+use l1inf::config::train::{sweep_config, train_config};
+use l1inf::config::Config;
+use l1inf::sae::trainer::{ExecMode, ProjectionMode};
+use std::process::Command;
+
+#[test]
+fn shipped_presets_parse_into_valid_train_configs() {
+    for preset in ["configs/synth.toml", "configs/lung.toml", "configs/quickstart.toml"] {
+        let cfg = Config::load(preset).unwrap_or_else(|e| panic!("{preset}: {e:#}"));
+        let tc = train_config(&cfg).unwrap_or_else(|e| panic!("{preset}: {e:#}"));
+        assert!(tc.epochs > 0, "{preset}");
+        assert!(tc.lr > 0.0, "{preset}");
+        let sweep = sweep_config(&cfg, &[1.0], &[0]);
+        assert!(!sweep.radii.is_empty(), "{preset}");
+    }
+}
+
+#[test]
+fn override_chain_file_then_set() {
+    let mut cfg = Config::load("configs/synth.toml").unwrap();
+    let before = train_config(&cfg).unwrap();
+    cfg.set_override("train.epochs=3").unwrap();
+    cfg.set_override("train.projection=\"l21\"").unwrap();
+    let after = train_config(&cfg).unwrap();
+    assert_ne!(before.epochs, after.epochs);
+    assert_eq!(after.epochs, 3);
+    assert!(matches!(after.projection, ProjectionMode::L12 { .. }));
+}
+
+#[test]
+fn exec_mode_strings() {
+    for (s, expect) in [("step", ExecMode::Step), ("epoch", ExecMode::Epoch)] {
+        let cfg = Config::parse(&format!("[train]\nexec = \"{s}\"\n")).unwrap();
+        assert_eq!(train_config(&cfg).unwrap().exec, expect);
+    }
+}
+
+fn binary() -> &'static str {
+    env!("CARGO_BIN_EXE_l1inf")
+}
+
+#[test]
+fn cli_help_and_unknown_command() {
+    let out = Command::new(binary()).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("usage:"));
+
+    let out = Command::new(binary()).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn cli_project_runs_and_reports_certificate() {
+    let out = Command::new(binary())
+        .args(["project", "--groups", "50", "--len", "20", "--radius", "0.5", "--algo", "inv_order"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("theta"), "{stdout}");
+    assert!(stdout.contains("zero groups"));
+}
+
+#[test]
+fn cli_project_all_algorithms() {
+    for algo in ["bisect", "quattoni", "naive", "bejar", "newton", "inv_order"] {
+        let out = Command::new(binary())
+            .args(["project", "--groups", "30", "--len", "10", "--radius", "0.3", "--algo", algo])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "algo {algo}: {}", String::from_utf8_lossy(&out.stderr));
+    }
+}
+
+#[test]
+fn cli_artifacts_lists_configs() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP cli_artifacts_lists_configs — run `make artifacts`");
+        return;
+    }
+    let out = Command::new(binary()).arg("artifacts").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("tiny"), "{stdout}");
+    assert!(stdout.contains("synth"));
+}
+
+#[test]
+fn cli_exp_rejects_unknown_experiment() {
+    let out = Command::new(binary()).args(["exp", "fig99"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+}

@@ -1,0 +1,99 @@
+//! Data-substrate integration: generators → log-transform → split →
+//! standardize → batches, end to end, at the paper's dimensions.
+
+use l1inf::coordinator::{dataset_for, TRAIN_FRAC};
+use l1inf::data::loader::{log_transform, stratified_split};
+use l1inf::data::lung::{make_lung, LungSpec};
+use l1inf::data::synthetic::{make_classification, SyntheticSpec};
+
+#[test]
+fn synthetic_paper_dimensions() {
+    // Paper §6.1: n=1000, d=10000, 64 informative. (Full size — this is the
+    // actual experiment input, generated in ~1s.)
+    let ds = make_classification(&SyntheticSpec::default(), 0);
+    ds.validate().unwrap();
+    assert_eq!((ds.n, ds.d, ds.k), (1000, 10_000, 2));
+    assert_eq!(ds.informative.len(), 64);
+    let counts = ds.class_counts();
+    assert!(counts.iter().all(|&c| c >= 450), "balanced-ish: {counts:?}");
+}
+
+#[test]
+fn lung_paper_dimensions() {
+    // Paper §6.2: 469 NSCLC + 536 controls × 2944 features.
+    let ds = make_lung(&LungSpec::default(), 0);
+    ds.validate().unwrap();
+    assert_eq!((ds.n, ds.d), (1005, 2944));
+    assert_eq!(ds.class_counts(), vec![536, 469]);
+    assert_eq!(ds.informative.len(), 40);
+}
+
+#[test]
+fn full_pipeline_lung() {
+    let mut ds = make_lung(
+        &LungSpec { n_cases: 60, n_controls: 70, d: 300, informative: 10, ..Default::default() },
+        1,
+    );
+    log_transform(&mut ds);
+    let sp = stratified_split(&ds, TRAIN_FRAC, 1);
+    assert_eq!(sp.n_train + sp.n_test, 130);
+    // standardized features are finite and O(1)
+    assert!(sp.x_train.iter().all(|v| v.is_finite() && v.abs() < 30.0));
+    // batches reconstruct rows exactly
+    let order: Vec<usize> = (0..sp.n_train).collect();
+    let (x, y) = sp.train_batch(&order, 0, 10);
+    assert_eq!(x.shape(), &[10, 300]);
+    assert_eq!(y.as_i32().unwrap().len(), 10);
+    assert_eq!(x.as_f32().unwrap()[..300], sp.x_train[..300]);
+}
+
+#[test]
+fn factory_matches_model_configs() {
+    // The datasets must be at least as large as the AOT epoch windows.
+    for (model, d, window) in [("tiny", 24, 64), ("synth_small", 2000, 800)] {
+        let ds = dataset_for(model, 0).unwrap();
+        assert_eq!(ds.d, d, "{model}");
+        let sp = stratified_split(&ds, TRAIN_FRAC, 0);
+        assert!(sp.n_train >= window, "{model}: {} < {window}", sp.n_train);
+    }
+}
+
+#[test]
+fn generators_vary_with_seed_but_not_within() {
+    let a = dataset_for("tiny", 0).unwrap();
+    let b = dataset_for("tiny", 0).unwrap();
+    let c = dataset_for("tiny", 1).unwrap();
+    assert_eq!(a.x, b.x);
+    assert_ne!(a.x, c.x);
+}
+
+#[test]
+fn informative_features_recoverable_by_univariate_screen() {
+    // A simple t-statistic screen must rank planted features highly —
+    // the signal the SAE is expected to find.
+    let ds = make_classification(
+        &SyntheticSpec { n: 400, d: 500, informative: 16, ..Default::default() },
+        7,
+    );
+    let mut scores: Vec<(f64, usize)> = (0..ds.d)
+        .map(|j| {
+            let (mut s0, mut s1, mut n0, mut n1) = (0.0f64, 0.0f64, 0usize, 0usize);
+            for i in 0..ds.n {
+                let v = ds.row(i)[j] as f64;
+                if ds.y[i] == 0 {
+                    s0 += v;
+                    n0 += 1;
+                } else {
+                    s1 += v;
+                    n1 += 1;
+                }
+            }
+            ((s0 / n0 as f64 - s1 / n1 as f64).abs(), j)
+        })
+        .collect();
+    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let top: std::collections::HashSet<usize> =
+        scores[..32].iter().map(|&(_, j)| j).collect();
+    let hits = ds.informative.iter().filter(|j| top.contains(j)).count();
+    assert!(hits >= 12, "only {hits}/16 informative features in top-32 screen");
+}

@@ -1,0 +1,114 @@
+//! KKT certification: every solver's output satisfies the Lemma-1
+//! optimality conditions, checked by the algorithm-independent verifier.
+
+use l1inf::projection::kkt::{verify_l1inf, Tolerance};
+use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::projection::norm_l1inf;
+use l1inf::util::prop;
+use l1inf::util::rng::Rng;
+
+#[test]
+fn all_algorithms_produce_kkt_certified_projections() {
+    prop::check(
+        "KKT certificate holds for every solver",
+        200,
+        0x44,
+        |rng: &mut Rng| {
+            let (mut data, g, l) = prop::gen_projection_matrix(rng, 10, 12);
+            for v in data.iter_mut() {
+                if rng.chance(0.5) {
+                    *v = -*v;
+                }
+            }
+            let norm = norm_l1inf(&data, g, l);
+            let c = (0.05 + 0.9 * rng.f64()) * norm.max(0.01);
+            let algo = Algorithm::ALL[rng.below(Algorithm::ALL.len())];
+            (data, g, l, c, algo)
+        },
+        |(y, g, l, c, algo)| {
+            let mut x = y.clone();
+            project_l1inf(&mut x, *g, *l, *c, *algo);
+            verify_l1inf(y, &x, *g, *l, *c, Tolerance::default())
+                .map(|_| ())
+                .map_err(|e| format!("{}: {e}", algo.name()))
+        },
+    );
+}
+
+#[test]
+fn certified_theta_matches_reported_theta() {
+    let mut rng = Rng::new(0x99);
+    for _ in 0..20 {
+        let (g, l) = (rng.range(2, 20), rng.range(2, 20));
+        let mut y = vec![0.0f32; g * l];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 3.0;
+        }
+        let norm = norm_l1inf(&y, g, l);
+        let c = 0.4 * norm;
+        if c <= 0.0 {
+            continue;
+        }
+        let mut x = y.clone();
+        let info = project_l1inf(&mut x, g, l, c, Algorithm::InverseOrder);
+        let certified = verify_l1inf(&y, &x, g, l, c, Tolerance::default()).expect("KKT holds");
+        assert!(
+            (certified - info.theta).abs() < 1e-3 * info.theta.max(1.0),
+            "certified θ {certified} vs reported {}",
+            info.theta
+        );
+    }
+}
+
+#[test]
+fn projection_is_distance_minimizing_vs_perturbations() {
+    // The projection must be closer to Y than any feasible perturbation of
+    // it — a direct (sampled) check of arg-min optimality.
+    let mut rng = Rng::new(0x55);
+    let (g, l) = (6, 8);
+    let mut y = vec![0.0f32; g * l];
+    for v in y.iter_mut() {
+        *v = (rng.f32() - 0.5) * 4.0;
+    }
+    let c = 0.5 * norm_l1inf(&y, g, l);
+    let mut x = y.clone();
+    project_l1inf(&mut x, g, l, c, Algorithm::Bisection);
+    let dist =
+        |a: &[f32]| -> f64 { a.iter().zip(y.iter()).map(|(p, q)| ((p - q) as f64).powi(2)).sum() };
+    let d_star = dist(&x);
+    for _ in 0..200 {
+        // random feasible candidate: perturb x then re-project to the ball
+        let mut cand: Vec<f32> = x.iter().map(|&v| v + (rng.f32() - 0.5) * 0.2).collect();
+        project_l1inf(&mut cand, g, l, c, Algorithm::Bisection);
+        assert!(
+            dist(&cand) + 1e-6 >= d_star,
+            "found feasible point closer than the projection"
+        );
+    }
+}
+
+#[test]
+fn verifier_rejects_tampered_outputs() {
+    let mut rng = Rng::new(0x66);
+    let (g, l) = (5, 6);
+    let mut y = vec![0.0f32; g * l];
+    for v in y.iter_mut() {
+        *v = rng.f32() * 2.0;
+    }
+    let c = 0.3 * norm_l1inf(&y, g, l);
+    let mut x = y.clone();
+    project_l1inf(&mut x, g, l, c, Algorithm::InverseOrder);
+    // sanity: untouched passes
+    assert!(verify_l1inf(&y, &x, g, l, c, Tolerance::default()).is_ok());
+    // tamper one surviving entry
+    let idx = x.iter().position(|&v| v > 1e-3).unwrap();
+    let mut bad = x.clone();
+    bad[idx] *= 0.5;
+    assert!(verify_l1inf(&y, &bad, g, l, c, Tolerance::default()).is_err());
+    // revive a zeroed entry
+    if let Some(zidx) = x.iter().position(|&v| v == 0.0) {
+        let mut bad = x;
+        bad[zidx] = 0.3;
+        assert!(verify_l1inf(&y, &bad, g, l, c, Tolerance::default()).is_err());
+    }
+}

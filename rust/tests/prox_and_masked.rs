@@ -1,0 +1,193 @@
+//! The dual-norm prox (§2.3 Moreau identity), the masked projection
+//! (§3.3 Eq. 20), and the ℓ₁/ℓ₁,₂ comparison projections as used by the
+//! SAE framework.
+
+use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::projection::linf1::prox_linf1;
+use l1inf::projection::masked::{apply_mask, project_masked};
+use l1inf::projection::{l1, l12, norm_l1, norm_l12, norm_l1inf, norm_linf1};
+use l1inf::util::prop;
+use l1inf::util::rng::Rng;
+
+fn random_signed(rng: &mut Rng, g: usize, l: usize, scale: f32) -> Vec<f32> {
+    let mut y = vec![0.0f32; g * l];
+    for v in y.iter_mut() {
+        *v = (rng.f32() - 0.5) * scale;
+    }
+    y
+}
+
+#[test]
+fn moreau_identity_exact_decomposition() {
+    prop::check(
+        "Y = prox_{C‖·‖∞,1}(Y) + P_{B₁,∞^C}(Y)",
+        200,
+        0xA0,
+        |rng: &mut Rng| {
+            let (g, l) = (rng.range(1, 10), rng.range(1, 10));
+            let y = random_signed(rng, g, l, 4.0);
+            let c = rng.f64() * 3.0 + 0.01;
+            (y, g, l, c)
+        },
+        |(y, g, l, c)| {
+            let mut prox = y.clone();
+            prox_linf1(&mut prox, *g, *l, *c, Algorithm::InverseOrder);
+            let mut proj = y.clone();
+            project_l1inf(&mut proj, *g, *l, *c, Algorithm::InverseOrder);
+            for i in 0..y.len() {
+                if (prox[i] + proj[i] - y[i]).abs() > 1e-5 {
+                    return Err(format!("decomposition fails at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prox_shrinks_dual_norm_to_theta() {
+    // For infeasible Y the prox residual has ℓ∞,₁ norm exactly θ* (every
+    // surviving group sheds θ mass, dead groups keep ≤ θ).
+    let mut rng = Rng::new(1);
+    let (g, l) = (20, 8);
+    let y = random_signed(&mut rng, g, l, 2.0);
+    let c = 0.25 * norm_l1inf(&y, g, l);
+    let mut prox = y.clone();
+    let info = prox_linf1(&mut prox, g, l, c, Algorithm::Newton);
+    assert!(!info.projection.feasible);
+    assert!(
+        (norm_linf1(&prox, g, l) - info.projection.theta).abs() < 1e-4,
+        "‖prox‖∞,1 = {} vs θ = {}",
+        norm_linf1(&prox, g, l),
+        info.projection.theta
+    );
+}
+
+#[test]
+fn prox_nonexpansive() {
+    // ‖prox(a) − prox(b)‖_F ≤ ‖a − b‖_F (firm nonexpansiveness, sampled).
+    let mut rng = Rng::new(2);
+    let (g, l) = (6, 6);
+    for _ in 0..50 {
+        let a = random_signed(&mut rng, g, l, 3.0);
+        let b: Vec<f32> = a.iter().map(|&v| v + (rng.f32() - 0.5) * 0.5).collect();
+        let c = 0.8;
+        let mut pa = a.clone();
+        prox_linf1(&mut pa, g, l, c, Algorithm::Bisection);
+        let mut pb = b.clone();
+        prox_linf1(&mut pb, g, l, c, Algorithm::Bisection);
+        let dp: f64 = pa.iter().zip(&pb).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let d: f64 = a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        assert!(dp <= d + 1e-6, "prox expanded distance: {dp} > {d}");
+    }
+}
+
+#[test]
+fn masked_projection_support_and_value_invariants() {
+    prop::check(
+        "masked keeps projection support with original values",
+        150,
+        0xA1,
+        |rng: &mut Rng| {
+            let (g, l) = (rng.range(1, 10), rng.range(1, 10));
+            let y = random_signed(rng, g, l, 3.0);
+            let norm = norm_l1inf(&y, g, l);
+            let c = (0.1 + 0.7 * rng.f64()) * norm.max(0.01);
+            (y, g, l, c)
+        },
+        |(y, g, l, c)| {
+            let mut masked = y.clone();
+            let mi = project_masked(&mut masked, *g, *l, *c, Algorithm::InverseOrder);
+            if mi.projection.feasible {
+                return Ok(());
+            }
+            let mut proj = y.clone();
+            project_l1inf(&mut proj, *g, *l, *c, Algorithm::InverseOrder);
+            for i in 0..y.len() {
+                let (sm, sp) = (masked[i] != 0.0, proj[i] != 0.0);
+                if sm != sp {
+                    return Err(format!("support mismatch at {i}"));
+                }
+                if sm && masked[i] != y[i] {
+                    return Err(format!("masked altered surviving value at {i}"));
+                }
+                if mi.mask[i] != sm {
+                    return Err(format!("mask vector inconsistent at {i}"));
+                }
+            }
+            // Masked norm dominates the projected norm (values unbounded).
+            if norm_l1inf(&masked, *g, *l) + 1e-6 < norm_l1inf(&proj, *g, *l) {
+                return Err("masked norm smaller than projected norm".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mask_freezing_is_idempotent_under_updates() {
+    let mut rng = Rng::new(3);
+    let y = random_signed(&mut rng, 8, 4, 2.0);
+    let mut w = y.clone();
+    let mi = project_masked(&mut w, 8, 4, 1.0, Algorithm::InverseOrder);
+    // Simulate gradient noise + refreeze, twice.
+    for _ in 0..2 {
+        for v in w.iter_mut() {
+            *v += 0.05;
+        }
+        apply_mask(&mut w, &mi.mask);
+        for i in 0..w.len() {
+            assert_eq!(w[i] != 0.0, mi.mask[i] && (true), "frozen support changed");
+            if !mi.mask[i] {
+                assert_eq!(w[i], 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn l1_and_l12_land_on_their_spheres() {
+    let mut rng = Rng::new(4);
+    let (g, l) = (12, 7);
+    let y = random_signed(&mut rng, g, l, 3.0);
+
+    let mut a = y.clone();
+    let eta1 = 0.3 * norm_l1(&a);
+    l1::project_l1(&mut a, eta1);
+    assert!((norm_l1(&a) - eta1).abs() < 1e-3);
+
+    let mut b = y.clone();
+    let eta2 = 0.3 * norm_l12(&b, g, l);
+    l12::project_l12(&mut b, g, l, eta2);
+    assert!((norm_l12(&b, g, l) - eta2).abs() < 1e-3);
+}
+
+#[test]
+fn three_norms_produce_increasingly_structured_sparsity() {
+    // The paper's qualitative claim: at comparable constraint tightness,
+    // ℓ₁ scatters zeros, ℓ₁,₂ and ℓ₁,∞ zero whole groups.
+    let mut rng = Rng::new(5);
+    let (g, l) = (100, 16);
+    let y = random_signed(&mut rng, g, l, 2.0);
+    let frac = 0.05;
+
+    let mut a = y.clone();
+    l1::project_l1(&mut a, frac * norm_l1(&y));
+    let mut b = y.clone();
+    l12::project_l12(&mut b, g, l, frac * norm_l12(&y, g, l));
+    let mut c = y.clone();
+    project_l1inf(&mut c, g, l, frac * norm_l1inf(&y, g, l), Algorithm::InverseOrder);
+
+    let groups_zeroed = |x: &[f32]| l1inf::projection::group_sparsity_pct(x, g, l);
+    let l1_groups = groups_zeroed(&a);
+    let l12_groups = groups_zeroed(&b);
+    let l1inf_groups = groups_zeroed(&c);
+    assert!(
+        l12_groups > l1_groups,
+        "group-lasso should zero more groups than l1 ({l12_groups} vs {l1_groups})"
+    );
+    assert!(
+        l1inf_groups > l1_groups,
+        "l1inf should zero more groups than l1 ({l1inf_groups} vs {l1_groups})"
+    );
+}

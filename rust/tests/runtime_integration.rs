@@ -1,0 +1,197 @@
+//! Integration: the PJRT runtime loads every AOT artifact and executes the
+//! train/eval programs with sensible numerics. Requires `make artifacts`.
+
+use l1inf::runtime::{ArtifactKind, Engine, Manifest, Tensor};
+use l1inf::sae::state::TrainState;
+use l1inf::util::rng::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(Engine::new(m).expect("PJRT client")),
+        Err(e) => {
+            eprintln!("SKIP runtime_integration: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_kinds_for_tiny() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cfg = engine.config("tiny").unwrap();
+    for kind in ArtifactKind::ALL {
+        assert!(
+            cfg.artifacts.contains_key(kind.key()),
+            "tiny is missing artifact kind {}",
+            kind.key()
+        );
+    }
+    assert_eq!(cfg.param_shapes[0], vec![cfg.d, cfg.hidden]);
+}
+
+#[test]
+fn eval_executes_with_expected_shapes() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.config("tiny").unwrap();
+    let state = TrainState::init(&cfg, &mut Rng::new(0));
+    let x = Tensor::zeros(&[cfg.eval_batch, cfg.d]);
+    let mut inputs = state.params.clone();
+    inputs.push(x);
+    let out = engine.run("tiny", ArtifactKind::Eval, &inputs).unwrap();
+    assert_eq!(out.len(), 2, "eval returns (logits, xhat)");
+    assert_eq!(out[0].shape(), &[cfg.eval_batch, cfg.k]);
+    assert_eq!(out[1].shape(), &[cfg.eval_batch, cfg.d]);
+}
+
+/// Build a linearly separable batch: class = sign of feature 0.
+fn toy_batch(cfg: &l1inf::runtime::ModelConfig, rng: &mut Rng, n: usize) -> (Tensor, Tensor) {
+    let mut x = vec![0.0f32; n * cfg.d];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        for j in 0..cfg.d {
+            x[i * cfg.d + j] = rng.normal() as f32;
+        }
+        y[i] = (i % 2) as i32;
+        x[i * cfg.d] += if y[i] == 1 { 2.0 } else { -2.0 };
+    }
+    (Tensor::f32(&[n, cfg.d], x), Tensor::i32(&[n], y))
+}
+
+#[test]
+fn train_step_learns_and_returns_full_state() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.config("tiny").unwrap();
+    let mut rng = Rng::new(7);
+    let mut state = TrainState::init(&cfg, &mut rng);
+    let (x, y) = toy_batch(&cfg, &mut rng, cfg.batch);
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..30 {
+        let inputs = state.step_inputs(&x, &y, 1e-2, 0.1);
+        let out = engine.run("tiny", ArtifactKind::Step, &inputs).unwrap();
+        assert_eq!(out.len(), 27, "step returns params(8)+m(8)+v(8)+t+loss+correct");
+        let (loss, correct) = state.absorb_step(out).unwrap();
+        assert!(loss.is_finite());
+        assert!(correct <= cfg.batch as i64);
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < 0.6 * first,
+        "no learning through the AOT path: {first} -> {last_loss}"
+    );
+    assert!((state.t - 30.0).abs() < 1e-6);
+}
+
+#[test]
+fn masked_step_freezes_w1_rows() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.config("tiny").unwrap();
+    let mut rng = Rng::new(8);
+    let mut state = TrainState::init(&cfg, &mut rng);
+    let (x, y) = toy_batch(&cfg, &mut rng, cfg.batch);
+
+    // Freeze the first half of the input features.
+    let mut mask = vec![1.0f32; cfg.d * cfg.hidden];
+    for r in 0..cfg.d / 2 {
+        for c in 0..cfg.hidden {
+            mask[r * cfg.hidden + c] = 0.0;
+        }
+    }
+    let mask_t = Tensor::f32(&[cfg.d, cfg.hidden], mask);
+    for _ in 0..3 {
+        let mut inputs = state.step_inputs(&x, &y, 1e-2, 0.1);
+        inputs.push(mask_t.clone());
+        let out = engine.run("tiny", ArtifactKind::StepMasked, &inputs).unwrap();
+        state.absorb_step(out).unwrap();
+    }
+    let w1 = state.params[0].as_f32().unwrap();
+    let frozen = &w1[..(cfg.d / 2) * cfg.hidden];
+    assert!(frozen.iter().all(|&v| v == 0.0), "masked rows revived");
+    let live = &w1[(cfg.d / 2) * cfg.hidden..];
+    assert!(live.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn epoch_scan_matches_sequential_steps() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let cfg = engine.config("tiny").unwrap();
+    let mut rng = Rng::new(9);
+    let init = TrainState::init(&cfg, &mut rng);
+    let (x_all, y_all) = toy_batch(&cfg, &mut rng, cfg.n_train);
+    let perm: Vec<i32> = (0..(cfg.steps_per_epoch * cfg.batch) as i32).collect();
+
+    // Path A: epoch executable (device-resident buffers).
+    let mut state_a = init.clone();
+    let xb = engine.upload(&x_all).unwrap();
+    let yb = engine.upload(&y_all).unwrap();
+    let permb = engine.upload(&Tensor::i32(&[perm.len()], perm.clone())).unwrap();
+    let (mean_loss_a, correct_a) = {
+        let mut bufs = Vec::new();
+        for t in state_a.flat_state().iter() {
+            bufs.push(engine.upload(t).unwrap());
+        }
+        bufs.push(engine.upload(&Tensor::scalar_f32(state_a.t)).unwrap());
+        let lr = engine.upload(&Tensor::scalar_f32(1e-2)).unwrap();
+        let lam = engine.upload(&Tensor::scalar_f32(0.1)).unwrap();
+        let mut refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        refs.push(&xb);
+        refs.push(&yb);
+        refs.push(&permb);
+        refs.push(&lr);
+        refs.push(&lam);
+        let out = engine.run_buffers("tiny", ArtifactKind::Epoch, &refs).unwrap();
+        state_a.absorb_step(out).unwrap()
+    };
+
+    // Path B: sequential steps over the same batches.
+    let mut state_b = init;
+    let mut losses = Vec::new();
+    let mut corrects = 0i64;
+    for s in 0..cfg.steps_per_epoch {
+        let lo = s * cfg.batch;
+        let hi = lo + cfg.batch;
+        let xs = x_all.as_f32().unwrap()[lo * cfg.d..hi * cfg.d].to_vec();
+        let ys = y_all.as_i32().unwrap()[lo..hi].to_vec();
+        let inputs = state_b.step_inputs(
+            &Tensor::f32(&[cfg.batch, cfg.d], xs),
+            &Tensor::i32(&[cfg.batch], ys),
+            1e-2,
+            0.1,
+        );
+        let out = engine.run("tiny", ArtifactKind::Step, &inputs).unwrap();
+        let (loss, c) = state_b.absorb_step(out).unwrap();
+        losses.push(loss);
+        corrects += c;
+    }
+
+    let mean_b = losses.iter().sum::<f64>() / losses.len() as f64;
+    assert!((mean_loss_a - mean_b).abs() < 1e-4, "epoch {mean_loss_a} vs steps {mean_b}");
+    assert_eq!(correct_a, corrects);
+    for (a, b) in state_a.params.iter().zip(state_b.params.iter()) {
+        let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-4, "param divergence at {i}");
+        }
+    }
+}
+
+#[test]
+fn tensor_literal_roundtrip() {
+    let Some(_engine) = engine_or_skip() else { return };
+    // f32 with shape
+    let t = Tensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 9.0, -7.25]);
+    let lit = t.to_literal().unwrap();
+    let back = Tensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+    // i32
+    let t = Tensor::i32(&[4], vec![1, -2, 3, 4]);
+    let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+    assert_eq!(t, back);
+    // scalar
+    let t = Tensor::scalar_f32(3.25);
+    let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+    assert_eq!(t, back);
+}
