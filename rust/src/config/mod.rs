@@ -6,6 +6,7 @@
 //! `[section]` headers, `key = value` with string / number / bool /
 //! flat arrays, `#` comments.
 
+pub mod serve;
 pub mod train;
 
 use anyhow::{anyhow, bail, Context, Result};

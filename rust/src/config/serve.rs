@@ -1,0 +1,66 @@
+//! Typed view of the `[serve]` config section (the projection service).
+
+use super::Config;
+use crate::projection::l1inf::Algorithm;
+use anyhow::Result;
+
+/// Settings of `l1inf serve` (file values; CLI flags override them).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address, `host:port`. Port 0 binds an ephemeral port.
+    pub addr: String,
+    /// Worker threads in the projection pool; 0 = one per available core.
+    pub threads: usize,
+    /// Default solver for requests that don't name one.
+    pub algo: Algorithm,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:7878".into(), threads: 0, algo: Algorithm::InverseOrder }
+    }
+}
+
+/// Build a [`ServeConfig`] from the `[serve]` section (all keys optional).
+pub fn serve_config(cfg: &Config) -> Result<ServeConfig> {
+    let default = ServeConfig::default();
+    Ok(ServeConfig {
+        addr: cfg.str_or("serve.addr", &default.addr),
+        threads: cfg.usize_or("serve.threads", default.threads),
+        algo: cfg
+            .str_or("serve.algo", default.algo.name())
+            .parse()
+            .map_err(anyhow::Error::msg)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let sc = serve_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(sc.addr, "127.0.0.1:7878");
+        assert_eq!(sc.threads, 0);
+        assert_eq!(sc.algo, Algorithm::InverseOrder);
+    }
+
+    #[test]
+    fn section_roundtrip() {
+        let cfg = Config::parse(
+            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\n",
+        )
+        .unwrap();
+        let sc = serve_config(&cfg).unwrap();
+        assert_eq!(sc.addr, "0.0.0.0:9000");
+        assert_eq!(sc.threads, 8);
+        assert_eq!(sc.algo, Algorithm::Newton);
+    }
+
+    #[test]
+    fn rejects_unknown_algo() {
+        let cfg = Config::parse("[serve]\nalgo = \"warp_drive\"\n").unwrap();
+        assert!(serve_config(&cfg).is_err());
+    }
+}

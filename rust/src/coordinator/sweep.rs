@@ -3,8 +3,11 @@
 
 use super::{dataset_for, TRAIN_FRAC};
 use crate::data::loader::{stratified_split, Split};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
-use crate::sae::trainer::{ProjectionMode, TrainConfig, TrainReport, Trainer};
+use crate::sae::trainer::TrainReport;
+#[cfg(feature = "pjrt")]
+use crate::sae::trainer::{ProjectionMode, TrainConfig, Trainer};
 use anyhow::Result;
 
 /// One completed training run.
@@ -19,6 +22,7 @@ pub struct RunResult {
 /// Run `base` once per (radius, seed) with the given projection-mode
 /// constructor. Splits are regenerated per seed (data seed == train seed,
 /// like the paper's "metrics over multiple seeds").
+#[cfg(feature = "pjrt")]
 pub fn radius_seed_sweep(
     engine: &mut Engine,
     base: &TrainConfig,
@@ -34,9 +38,9 @@ pub fn radius_seed_sweep(
             tc.seed = seed;
             tc.projection = make_mode(radius);
             let name = tc.projection.name();
-            log::info!("run model={} proj={name} C={radius} seed={seed}", tc.model);
+            crate::info!("run model={} proj={name} C={radius} seed={seed}", tc.model);
             let report = Trainer::new(engine, tc)?.train(&split)?;
-            log::info!(
+            crate::info!(
                 "  -> acc={:.2}% colsp={:.2}% theta={:.4}",
                 report.test_accuracy_pct,
                 report.w1.col_sparsity_pct,
@@ -49,6 +53,7 @@ pub fn radius_seed_sweep(
 }
 
 /// Run a set of named (projection, radius) table rows over seeds.
+#[cfg(feature = "pjrt")]
 pub fn table_sweep(
     engine: &mut Engine,
     base: &TrainConfig,
@@ -63,7 +68,7 @@ pub fn table_sweep(
             tc.seed = seed;
             tc.projection = mode;
             let report = Trainer::new(engine, tc)?.train(&split)?;
-            log::info!(
+            crate::info!(
                 "table row {} C={radius} seed={seed}: acc={:.2}% colsp={:.2}%",
                 mode.name(),
                 report.test_accuracy_pct,

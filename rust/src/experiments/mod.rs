@@ -5,13 +5,18 @@
 //! smoke runs; the defaults regenerate the paper-scale experiment.
 
 pub mod projbench;
-
+pub mod servebench;
 
 use crate::config::Config;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::sweep::{radius_seed_sweep, table_sweep};
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{report, sweep};
+#[cfg(feature = "pjrt")]
 use crate::projection::l1inf::Algorithm;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig};
 use crate::util::csv::CsvWriter;
 use anyhow::{bail, Result};
@@ -33,8 +38,10 @@ impl Default for ExpOpts {
 }
 
 /// All experiment ids.
-pub const ALL: &[&str] =
-    &["fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2", "trainproj"];
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
+    "trainproj", "serve_bench",
+];
 
 /// Dispatch by experiment id.
 pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
@@ -49,8 +56,42 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "table1" => table1(opts),
         "table2" => table2(opts),
         "trainproj" => trainproj(opts),
+        "serve_bench" => servebench::run(opts),
         other => bail!("unknown experiment '{other}' (have {ALL:?})"),
     }
+}
+
+/// The SAE-driving experiments need the PJRT engine; without the `pjrt`
+/// feature their stubs fail fast with one shared, actionable message
+/// instead of compiling the whole runtime stack in.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_required() -> anyhow::Error {
+    anyhow::anyhow!("this experiment drives the SAE trainer; rebuild with `--features pjrt`")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn sae_radius_curve(_model: &str, _stem: &str, _opts: &ExpOpts) -> Result<()> {
+    Err(pjrt_required())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn table1(_opts: &ExpOpts) -> Result<()> {
+    Err(pjrt_required())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn table2(_opts: &ExpOpts) -> Result<()> {
+    Err(pjrt_required())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn fig9(_opts: &ExpOpts) -> Result<()> {
+    Err(pjrt_required())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn trainproj(_opts: &ExpOpts) -> Result<()> {
+    Err(pjrt_required())
 }
 
 fn write_proj_samples(path: &Path, samples: &[projbench::ProjSample]) -> Result<()> {
@@ -158,6 +199,7 @@ fn fig3(opts: &ExpOpts) -> Result<()> {
 }
 
 /// Default model name for SAE experiments honoring --quick (synth→synth_small).
+#[cfg(feature = "pjrt")]
 fn sae_model(requested: &str, opts: &ExpOpts) -> String {
     let name = opts.cfg.str_or("train.model", requested);
     if opts.quick && name == "synth" {
@@ -167,6 +209,7 @@ fn sae_model(requested: &str, opts: &ExpOpts) -> String {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn base_train_config(model: &str, opts: &ExpOpts) -> TrainConfig {
     TrainConfig {
         model: model.to_string(),
@@ -181,12 +224,14 @@ fn base_train_config(model: &str, opts: &ExpOpts) -> TrainConfig {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn seeds(opts: &ExpOpts, default_n: usize) -> Vec<u64> {
     let n = opts.cfg.usize_or("sweep.n_seeds", if opts.quick { 1 } else { default_n });
     (0..n as u64).collect()
 }
 
 /// Figures 5+6 (synth) / 7+8 (lung): accuracy, sparsity and θ vs radius C.
+#[cfg(feature = "pjrt")]
 fn sae_radius_curve(model: &str, stem: &str, opts: &ExpOpts) -> Result<()> {
     let model = sae_model(model, opts);
     let mut engine = Engine::from_default_artifacts()?;
@@ -212,6 +257,7 @@ fn sae_radius_curve(model: &str, stem: &str, opts: &ExpOpts) -> Result<()> {
 }
 
 /// Table 1: synthetic — baseline / ℓ₁ / ℓ₂,₁ / ℓ₁,∞ / masked.
+#[cfg(feature = "pjrt")]
 fn table1(opts: &ExpOpts) -> Result<()> {
     let model = sae_model("synth", opts);
     let mut engine = Engine::from_default_artifacts()?;
@@ -234,6 +280,7 @@ fn table1(opts: &ExpOpts) -> Result<()> {
 }
 
 /// Table 2: LUNG — same comparison plus the "Sum of W" row.
+#[cfg(feature = "pjrt")]
 fn table2(opts: &ExpOpts) -> Result<()> {
     let mut engine = Engine::from_default_artifacts()?;
     let base = base_train_config("lung", opts);
@@ -255,6 +302,7 @@ fn table2(opts: &ExpOpts) -> Result<()> {
 }
 
 /// Figure 9: heat map of selected features, ℓ₁ vs ℓ₁,∞ on LUNG.
+#[cfg(feature = "pjrt")]
 fn fig9(opts: &ExpOpts) -> Result<()> {
     let mut engine = Engine::from_default_artifacts()?;
     let base = base_train_config("lung", opts);
@@ -295,6 +343,7 @@ fn fig9(opts: &ExpOpts) -> Result<()> {
 /// §4 claim: the proposed projection vs Chu's Newton inside SAE training
 /// (paper reports 2.18× on the CAE configuration). Times every epoch's
 /// pre-projection w1 on all solvers.
+#[cfg(feature = "pjrt")]
 fn trainproj(opts: &ExpOpts) -> Result<()> {
     let model = sae_model("synth", opts);
     let mut engine = Engine::from_default_artifacts()?;

@@ -1,0 +1,277 @@
+//! `l1inf exp serve_bench` — the load generator + throughput report of the
+//! projection service ([`crate::serve`]).
+//!
+//! Four measurements, written to `<outdir>/BENCH_serve.json` (and printed
+//! as tables via [`crate::util::bench`]):
+//!
+//! 1. **Single-matrix sharding speedup** — one 1000×4000 projection,
+//!    serial [`project_l1inf`] vs [`BatchProjector::project_parallel`] at
+//!    1/2/4/8 workers (the ISSUE acceptance gate is ≥2× at 4 threads);
+//! 2. **Bit-compatibility** — max |parallel − serial| over the projected
+//!    entries (must be ≤ 1e-6; for the inverse-order solver it is 0.0);
+//! 3. **Warm-start work reduction** — simulated SGD: the matrix drifts a
+//!    little each step, each step re-projects; `SolveStats::work` cold vs
+//!    warm-started through a [`ThetaCache`];
+//! 4. **Batch throughput** — a queue of heterogeneous requests drained at
+//!    1 worker vs the full pool, in requests/second.
+
+use super::ExpOpts;
+use crate::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
+use crate::serve::batch::{BatchProjector, ProjRequest};
+use crate::serve::cache::ThetaCache;
+use crate::util::bench::{self, BenchOpts, Sample};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    // Paper-orientation matrix: n rows × m columns, groups = the m columns.
+    let (n, m) = if opts.quick { (200, 800) } else { (1000, 4000) };
+    let radius = opts.cfg.f64_or("serve.bench_radius", 1.0);
+    let algo: Algorithm = opts
+        .cfg
+        .str_or("serve.bench_algo", "inv_order")
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let mut bopts = BenchOpts::from_env();
+    if opts.quick {
+        bopts.warmup_iters = 1;
+        bopts.measure_iters = 3;
+    }
+
+    let mut rng = Rng::new(0x5E17E);
+    let mut data = vec![0.0f32; n * m];
+    rng.fill_uniform_f32(&mut data);
+
+    // ── 1. single-matrix sharding speedup ────────────────────────────────
+    let serial = bench::run_case(
+        &format!("serial {n}x{m} C={radius} {}", algo.name()),
+        &bopts,
+        || data.clone(),
+        |mut y| {
+            project_l1inf(&mut y, m, n, radius, algo);
+        },
+    );
+    let mut samples: Vec<Sample> = vec![serial.clone()];
+    let mut parallel_min = BTreeMap::<usize, f64>::new();
+    for threads in [1usize, 2, 4, 8] {
+        let pool = BatchProjector::new(threads);
+        let s = bench::run_case(
+            &format!("sharded x{threads}"),
+            &bopts,
+            || data.clone(),
+            |mut y| {
+                pool.project_parallel(&mut y, m, n, radius, algo, None);
+            },
+        );
+        parallel_min.insert(threads, s.min_ms());
+        samples.push(s);
+    }
+    bench::print_table("serve_bench: one projection, serial vs sharded", &samples);
+    let speedup_at_4 = serial.min_ms() / parallel_min[&4];
+    println!("speedup at 4 threads: {speedup_at_4:.2}x (serial {:.3} ms)", serial.min_ms());
+
+    // ── 2. bit-compatibility of the parallel path ────────────────────────
+    let mut max_abs_diff = 0.0f64;
+    for check_algo in [Algorithm::InverseOrder, Algorithm::Newton] {
+        let mut reference = data.clone();
+        project_l1inf(&mut reference, m, n, radius, check_algo);
+        let mut sharded = data.clone();
+        BatchProjector::new(4).project_parallel(&mut sharded, m, n, radius, check_algo, None);
+        let diff = reference
+            .iter()
+            .zip(&sharded)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        max_abs_diff = max_abs_diff.max(diff);
+    }
+    ensure!(
+        max_abs_diff <= 1e-6,
+        "parallel projection diverged from serial: max diff {max_abs_diff:e}"
+    );
+    println!("parallel vs serial max |Δ|: {max_abs_diff:.1e} (bound 1e-6)");
+
+    // ── 3. warm-start work reduction across simulated SGD steps ──────────
+    let steps = if opts.quick { 5 } else { 10 };
+    let mut warm_report: Vec<(String, Json)> = Vec::new();
+    println!("\nwarm-start work (cold vs θ-cache warm), {steps} drift steps:");
+    for wa in [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bisection] {
+        let cache = ThetaCache::new();
+        let mut w = data.clone();
+        let mut drift_rng = Rng::new(7);
+        let mut cold_work = 0usize;
+        let mut warm_work = 0usize;
+        let mut warm_hits = 0usize;
+        for step in 0..steps {
+            // One optimizer-step-sized drift: ±0.2% multiplicative noise.
+            for v in w.iter_mut() {
+                *v *= 1.0 + 0.002 * (drift_rng.f32() - 0.5);
+            }
+            let mut cold_copy = w.clone();
+            let cold = project_l1inf(&mut cold_copy, m, n, radius, wa);
+            let hint = cache.hint_for("w", m, n);
+            let mut warm_copy = w.clone();
+            let warm = project_l1inf_with_hint(&mut warm_copy, m, n, radius, wa, hint);
+            cache.update("w", m, n, radius, warm.theta);
+            if step > 0 {
+                // Step 0 has an empty cache — both sides are cold.
+                cold_work += cold.stats.work;
+                warm_work += warm.stats.work;
+                warm_hits += usize::from(warm.stats.theta_hint.is_some());
+            }
+            let scale = cold.theta.abs().max(1.0);
+            ensure!(
+                (cold.theta - warm.theta).abs() <= 1e-6 * scale,
+                "warm start changed theta: {} vs {}",
+                warm.theta,
+                cold.theta
+            );
+        }
+        let reduction = cold_work as f64 / (warm_work.max(1)) as f64;
+        println!(
+            "  {:<10} cold work {:>8}  warm work {:>8}  reduction {:>6.1}x  (hints used {}/{})",
+            wa.name(),
+            cold_work,
+            warm_work,
+            reduction,
+            warm_hits,
+            steps - 1
+        );
+        warm_report.push((
+            wa.name().to_string(),
+            obj(vec![
+                ("cold_work", Json::Num(cold_work as f64)),
+                ("warm_work", Json::Num(warm_work as f64)),
+                ("work_reduction", Json::Num(reduction)),
+                ("hints_used", Json::Num(warm_hits as f64)),
+                ("steps_counted", Json::Num((steps - 1) as f64)),
+            ]),
+        ));
+    }
+
+    // ── 4. heterogeneous batch throughput ────────────────────────────────
+    let batch_size = if opts.quick { 24 } else { 64 };
+    let mut qrng = Rng::new(0xBA7C4);
+    let mut requests = Vec::with_capacity(batch_size);
+    for i in 0..batch_size {
+        let g = 100 + qrng.below(400);
+        let l = 20 + qrng.below(180);
+        let mut y = vec![0.0f32; g * l];
+        qrng.fill_uniform_f32(&mut y);
+        requests.push(ProjRequest {
+            key: Some(format!("m{}", i % 8)),
+            data: y,
+            n_groups: g,
+            group_len: l,
+            radius: 0.5 + qrng.f64() * 2.0,
+            algo: [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar][i % 3],
+        });
+    }
+    let pool_full = BatchProjector::new(0);
+    let pool_one = BatchProjector::new(1);
+    let one = bench::run_case(
+        &format!("batch x1 ({batch_size} reqs)"),
+        &bopts,
+        || requests.clone(),
+        |reqs| {
+            pool_one.project_batch(None, reqs);
+        },
+    );
+    let full = bench::run_case(
+        &format!("batch x{} ({batch_size} reqs)", pool_full.threads()),
+        &bopts,
+        || requests.clone(),
+        |reqs| {
+            pool_full.project_batch(None, reqs);
+        },
+    );
+    bench::print_table("serve_bench: heterogeneous queue", &[one.clone(), full.clone()]);
+    let rps_one = batch_size as f64 / (one.min_ms() / 1e3);
+    let rps_full = batch_size as f64 / (full.min_ms() / 1e3);
+    println!(
+        "throughput: {rps_one:.0} req/s at 1 worker, {rps_full:.0} req/s at {} workers",
+        pool_full.threads()
+    );
+
+    // ── report ───────────────────────────────────────────────────────────
+    let report = obj(vec![
+        (
+            "matrix",
+            obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("radius", Json::Num(radius)),
+                ("algo", Json::Str(algo.name().to_string())),
+            ]),
+        ),
+        (
+            "single_matrix",
+            obj(vec![
+                ("serial_min_ms", Json::Num(serial.min_ms())),
+                (
+                    "parallel_min_ms",
+                    Json::Obj(
+                        parallel_min
+                            .iter()
+                            .map(|(t, ms)| (t.to_string(), Json::Num(*ms)))
+                            .collect(),
+                    ),
+                ),
+                ("speedup_at_4_threads", Json::Num(speedup_at_4)),
+                ("max_abs_diff_vs_serial", Json::Num(max_abs_diff)),
+            ]),
+        ),
+        ("warm_start", Json::Obj(warm_report.into_iter().collect())),
+        (
+            "batch_throughput",
+            obj(vec![
+                ("batch_size", Json::Num(batch_size as f64)),
+                ("reqs_per_sec_1_worker", Json::Num(rps_one)),
+                (
+                    "reqs_per_sec_full_pool",
+                    obj(vec![
+                        ("workers", Json::Num(pool_full.threads() as f64)),
+                        ("reqs_per_sec", Json::Num(rps_full)),
+                    ]),
+                ),
+            ]),
+        ),
+        ("quick", Json::Bool(opts.quick)),
+    ]);
+    let path = opts.outdir.join("BENCH_serve.json");
+    std::fs::write(&path, report.to_string())?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_writes_report() {
+        let outdir = std::env::temp_dir().join("l1inf_serve_bench_test");
+        std::fs::create_dir_all(&outdir).unwrap();
+        std::env::set_var("L1INF_BENCH_FAST", "1");
+        let opts = ExpOpts { quick: true, outdir: outdir.clone(), ..Default::default() };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(outdir.join("BENCH_serve.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("single_matrix").is_some());
+        assert!(v.get("warm_start").is_some());
+        let diff = v
+            .get("single_matrix")
+            .unwrap()
+            .get("max_abs_diff_vs_serial")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(diff <= 1e-6, "bit-compat recorded: {diff}");
+        std::fs::remove_dir_all(&outdir).ok();
+    }
+}

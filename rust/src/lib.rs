@@ -46,6 +46,7 @@ pub mod experiments;
 pub mod projection;
 pub mod runtime;
 pub mod sae;
+pub mod serve;
 pub mod util;
 
 /// Crate-level result alias.

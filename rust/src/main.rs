@@ -5,62 +5,49 @@
 //! ```text
 //! l1inf project   --groups M --len N --radius C [--algo inv_order] [--seed S]
 //! l1inf train     [--config configs/synth.toml] [--set train.key=value;...]
+//! l1inf serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config F]
 //! l1inf exp NAME  [--quick] [--out results] [--config F] [--set ...]
 //! l1inf artifacts [--dir artifacts]
 //! l1inf help
 //! ```
 //!
 //! Experiment names: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2
-//! trainproj (see DESIGN.md §5).
+//! trainproj serve_bench (see DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
-use l1inf::config::{train::train_config, Config};
-use l1inf::coordinator::sweep::split_for;
+use l1inf::config::serve::serve_config;
+use l1inf::config::Config;
 use l1inf::experiments::{self, ExpOpts};
 use l1inf::projection::l1inf::{project_l1inf, Algorithm};
-use l1inf::runtime::{Engine, Manifest};
-use l1inf::sae::trainer::Trainer;
+use l1inf::runtime::Manifest;
+use l1inf::serve::server::Server;
 use l1inf::util::cli::Args;
 use l1inf::util::rng::Rng;
 use l1inf::util::Timer;
 
-const USAGE: &str = "usage: l1inf <project|train|exp|artifacts|help> [options]
+#[cfg(feature = "pjrt")]
+use l1inf::config::train::train_config;
+#[cfg(feature = "pjrt")]
+use l1inf::coordinator::sweep::split_for;
+#[cfg(feature = "pjrt")]
+use l1inf::runtime::Engine;
+#[cfg(feature = "pjrt")]
+use l1inf::sae::trainer::Trainer;
+
+const USAGE: &str = "usage: l1inf <project|train|serve|exp|artifacts|help> [options]
   project   --groups M --len N --radius C [--algo A] [--seed S]
   train     [--config FILE] [--set section.key=value;...]
+  serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config FILE]
   exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
   artifacts [--dir DIR]
-experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj";
+experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj serve_bench";
 
 fn main() {
-    init_logging();
+    l1inf::util::logging::init_from_env();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn init_logging() {
-    struct Stderr;
-    impl log::Log for Stderr {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::max_level()
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level().as_str().to_ascii_lowercase(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: Stderr = Stderr;
-    let _ = log::set_logger(&LOGGER);
-    let level = match std::env::var("L1INF_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("warn") => log::LevelFilter::Warn,
-        _ => log::LevelFilter::Info,
-    };
-    log::set_max_level(level);
 }
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -85,6 +72,7 @@ fn run() -> Result<()> {
     match cmd {
         "project" => cmd_project(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
@@ -121,6 +109,7 @@ fn cmd_project(args: &Args) -> Result<()> {
 }
 
 /// Train one SAE from a config file and print the report.
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let tc = train_config(&cfg)?;
@@ -150,6 +139,35 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("double-descent retrain accuracy {acc:.2}%");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!("`l1inf train` drives the PJRT engine; rebuild with `--features pjrt`")
+}
+
+/// Run the batched projection service until a client sends `shutdown`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut sc = serve_config(&cfg)?;
+    if let Some(addr) = args.get("addr") {
+        sc.addr = addr.to_string();
+    }
+    if let Some(t) = args.get("threads") {
+        sc.threads = t.parse().map_err(|_| anyhow::anyhow!("--threads: bad integer '{t}'"))?;
+    }
+    if let Some(a) = args.get("algo") {
+        sc.algo = a.parse().map_err(anyhow::Error::msg)?;
+    }
+    let server = Server::bind(&sc).context("binding projection service")?;
+    println!(
+        "l1inf serve: listening on {} ({} worker threads, algo {})",
+        server.local_addr()?,
+        server.threads(),
+        sc.algo.name()
+    );
+    println!("protocol: one JSON object per line; see README.md §serve");
+    server.run()
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {

@@ -19,6 +19,20 @@ use crate::projection::simplex;
 
 /// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
 pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
+    solve_hinted(abs, n_groups, group_len, c, None)
+}
+
+/// [`solve`] with a warm-start guess: one probe classifies which side of θ*
+/// the hint lies on, a second geometric probe tightens the other bracket
+/// end, then ordinary bisection runs on the (much smaller) bracket. A bad
+/// hint costs at most two extra Φ evaluations; correctness is unaffected.
+pub fn solve_hinted(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    hint: Option<f64>,
+) -> SolveStats {
     debug_assert!(c > 0.0);
     // Bracket: Φ(0) = Σ max > C; Φ(max_g S_g) = 0 < C.
     let mut lo = 0.0f64;
@@ -26,6 +40,37 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
         .map(|g| abs[g * group_len..(g + 1) * group_len].iter().map(|&v| v as f64).sum::<f64>())
         .fold(0.0f64, f64::max);
     let mut evals = 0usize;
+    let mut used_hint = None;
+    if let Some(h) = hint {
+        if h.is_finite() && h > 0.0 && h < hi {
+            used_hint = Some(h);
+            let p = phi(abs, n_groups, group_len, h);
+            evals += 1;
+            if p > c {
+                lo = h; // θ* above the hint: probe upward
+                let h2 = (2.0 * h).min(hi);
+                if h2 > lo && h2 < hi {
+                    let p2 = phi(abs, n_groups, group_len, h2);
+                    evals += 1;
+                    if p2 > c {
+                        lo = h2;
+                    } else {
+                        hi = h2;
+                    }
+                }
+            } else {
+                hi = h; // θ* at or below the hint: probe downward
+                let h2 = 0.5 * h;
+                let p2 = phi(abs, n_groups, group_len, h2);
+                evals += 1;
+                if p2 > c {
+                    lo = h2;
+                } else {
+                    hi = h2;
+                }
+            }
+        }
+    }
     for _ in 0..200 {
         if hi - lo <= 1e-14 * hi.max(1.0) {
             break;
@@ -58,7 +103,7 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
         t2 += 1.0 / t.k as f64;
     }
     let theta = if t2 > 0.0 { (t1 - c) / t2 } else { mid };
-    SolveStats { theta, work: evals, touched_groups: n_groups }
+    SolveStats { theta, work: evals, touched_groups: n_groups, theta_hint: used_hint }
 }
 
 #[cfg(test)]
@@ -86,6 +131,28 @@ mod tests {
             let st = solve(&abs, 3, 3, c);
             let p = phi(&abs, 3, 3, st.theta);
             assert!((p - c).abs() < 1e-7, "c={c} phi={p} theta={}", st.theta);
+        }
+    }
+
+    #[test]
+    fn hinted_bracket_matches_cold() {
+        let abs = [0.9f32, 0.9, 0.2, 0.7, 0.3, 0.3, 0.05, 0.0, 0.0];
+        for c in [0.1, 0.5, 1.0, 1.5] {
+            let cold = solve(&abs, 3, 3, c);
+            let scale = cold.theta.abs().max(1.0);
+            for factor in [1.0, 0.9, 1.1, 0.25, 4.0] {
+                let warm = solve_hinted(&abs, 3, 3, c, Some(cold.theta * factor));
+                assert!(
+                    (warm.theta - cold.theta).abs() < 1e-9 * scale,
+                    "c={c} factor={factor}: {} vs {}",
+                    warm.theta,
+                    cold.theta
+                );
+            }
+            for bad in [f64::NAN, f64::INFINITY, -2.0, 0.0, 1e9] {
+                let warm = solve_hinted(&abs, 3, 3, c, Some(bad));
+                assert!((warm.theta - cold.theta).abs() < 1e-9 * scale, "bad {bad}");
+            }
         }
     }
 

@@ -32,6 +32,7 @@
 //! consumed breakpoint.
 
 use super::SolveStats;
+use crate::projection::simplex;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -107,25 +108,137 @@ pub fn solve_signed_with_levels(
     group_len: usize,
     c: f64,
 ) -> (SolveStats, Vec<f64>) {
-    debug_assert!(c > 0.0);
-    // Global max-heap of upcoming breakpoints, seeded with every nonzero
-    // group's death threshold (its ℓ₁ mass — the group's largest breakpoint).
-    let mut global: BinaryHeap<(Ord64, u32)> = BinaryHeap::with_capacity(n_groups);
-    for g in 0..n_groups {
-        let sum: f64 =
-            data[g * group_len..(g + 1) * group_len].iter().map(|&v| v.abs() as f64).sum();
-        if sum > 0.0 {
-            global.push((Ord64(sum), g as u32));
-        }
-    }
-    debug_assert!(!global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
+    solve_signed_full(data, n_groups, group_len, c, None, None)
+}
 
+/// The full-control entry point behind every other `solve*` in this module:
+///
+/// - `group_sums`: per-group ℓ₁ masses, if the caller already has them
+///   (the parallel [`crate::serve::batch::BatchProjector`] computes them in
+///   its sharded first pass) — skips this function's own O(nm) seeding scan.
+/// - `theta_hint`: warm-start guess (last SGD step's θ*). The descending
+///   sweep is *entered in the middle*: every group is classified against
+///   the hint in one pass, active groups get their sweep state built
+///   directly at θ = hint (O(p) per group, no breakpoint pops), and only
+///   the breakpoints **between the hint and θ\*** are ever consumed —
+///   `work` drops from `J` (all breakpoints above θ*) to the few the hint
+///   missed by. A hint *below* θ* cannot seed a descending sweep (the root
+///   was already passed), which the seeder detects via `Φ(hint) > C` and
+///   falls back to the cold top-of-order start; correctness never depends
+///   on hint quality.
+pub fn solve_signed_full(
+    data: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    group_sums: Option<&[f64]>,
+    theta_hint: Option<f64>,
+) -> (SolveStats, Vec<f64>) {
+    debug_assert!(c > 0.0);
+    // Per-group ℓ₁ masses (death thresholds): borrowed or computed here.
+    let owned_sums: Vec<f64>;
+    let sums: &[f64] = match group_sums {
+        Some(s) => {
+            debug_assert_eq!(s.len(), n_groups);
+            s
+        }
+        None => {
+            owned_sums = (0..n_groups)
+                .map(|g| {
+                    data[g * group_len..(g + 1) * group_len]
+                        .iter()
+                        .map(|&v| v.abs() as f64)
+                        .sum()
+                })
+                .collect();
+            &owned_sums
+        }
+    };
+
+    let mut global: BinaryHeap<(Ord64, u32)> = BinaryHeap::with_capacity(n_groups);
     let mut states: Vec<Option<GroupState>> = Vec::new();
     states.resize_with(n_groups, || None);
     let mut t1 = 0.0f64; // Σ_A S_{k_g}/k_g   (incremental)
     let mut t2 = 0.0f64; // Σ_A 1/k_g         (incremental)
-    let mut consumed = 0usize;
     let mut touched = 0usize;
+    let mut used_hint: Option<f64> = None;
+
+    if let Some(h) = theta_hint.filter(|h| h.is_finite() && *h > 0.0) {
+        // Build the sweep state at θ = h into temporaries; commit only if
+        // the hint is at or above θ* (Φ(h) ≤ C), else discard and go cold.
+        let mut w_states: Vec<(u32, GroupState)> = Vec::new();
+        let mut w_heap: Vec<(Ord64, u32)> = Vec::new();
+        let mut w_t1 = 0.0f64;
+        let mut w_t2 = 0.0f64;
+        let mut phi_h = 0.0f64;
+        let mut seed_ok = true;
+        for (g, &sum) in sums.iter().enumerate() {
+            if sum <= 0.0 {
+                continue;
+            }
+            if sum <= h {
+                // Dead at θ = h; activates if the sweep descends past `sum`.
+                w_heap.push((Ord64(sum), g as u32));
+                continue;
+            }
+            // Active at θ = h: water level via one Condat pass, selected
+            // set = values strictly above it (exactly the sweep invariant).
+            let grp = &data[g * group_len..(g + 1) * group_len];
+            let abs: Vec<f32> = grp.iter().map(|v| v.abs()).collect();
+            let mu = simplex::water_level_for_removed_mass(&abs, h).tau;
+            let mut vals: Vec<Reverse<Ord32>> = Vec::new();
+            let mut ssel = 0.0f64;
+            if mu > 0.0 {
+                for &v in &abs {
+                    if (v as f64) > mu {
+                        vals.push(Reverse(Ord32(v)));
+                        ssel += v as f64;
+                    }
+                }
+            }
+            let k = vals.len();
+            if k == 0 {
+                // FP corner (a caller-supplied group sum disagreeing with
+                // Condat about mass > h): mixing pieces at different θ
+                // would corrupt the sweep invariant — abandon the warm path.
+                seed_ok = false;
+                break;
+            }
+            phi_h += (ssel - h) / k as f64;
+            w_t1 += ssel / k as f64;
+            w_t2 += 1.0 / k as f64;
+            let heap = BinaryHeap::from(vals);
+            if k >= 2 {
+                let z = heap.peek().unwrap().0 .0 as f64;
+                w_heap.push((Ord64(ssel - k as f64 * z), g as u32));
+            }
+            w_states.push((g as u32, GroupState { heap, k, ssel }));
+        }
+        if seed_ok && phi_h <= c * (1.0 + 1e-12) {
+            for (g, st) in w_states {
+                states[g as usize] = Some(st);
+                touched += 1;
+            }
+            global = BinaryHeap::from(w_heap);
+            t1 = w_t1;
+            t2 = w_t2;
+            used_hint = Some(h);
+        }
+    }
+
+    if used_hint.is_none() {
+        // Cold start: seed the global max-heap with every nonzero group's
+        // death threshold (its ℓ₁ mass — the group's largest breakpoint).
+        global.clear();
+        for (g, &sum) in sums.iter().enumerate() {
+            if sum > 0.0 {
+                global.push((Ord64(sum), g as u32));
+            }
+        }
+        debug_assert!(!global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
+    }
+
+    let mut consumed = 0usize;
 
     let finalize = |states: &[Option<GroupState>], consumed: usize, touched: usize| {
         // Exact O(touched) recompute of Eq. 19 — removes the drift the
@@ -144,7 +257,7 @@ pub fn solve_signed_with_levels(
                 mus[g] = ((st.ssel - theta) / st.k as f64).max(0.0);
             }
         }
-        (SolveStats { theta, work: consumed, touched_groups: touched }, mus)
+        (SolveStats { theta, work: consumed, touched_groups: touched, theta_hint: used_hint }, mus)
     };
 
     while let Some(&(Ord64(b), g)) = global.peek() {
@@ -296,6 +409,59 @@ mod tests {
             let p = phi(&abs, 3, 2, st.theta);
             assert!((p - c).abs() < 1e-7, "c={c} phi={p}");
         }
+    }
+
+    #[test]
+    fn warm_start_matches_cold_and_cuts_work() {
+        let mut rng = Rng::new(3);
+        let (n_groups, len) = (200, 16);
+        let mut abs = vec![0.0f32; n_groups * len];
+        rng.fill_uniform_f32(&mut abs);
+        let c = 1.5;
+        let (cold, cold_mus) = solve_signed_full(&abs, n_groups, len, c, None, None);
+        // Exact hint: same θ and levels, (almost) no breakpoints consumed.
+        let (warm, warm_mus) =
+            solve_signed_full(&abs, n_groups, len, c, None, Some(cold.theta));
+        let scale = cold.theta.abs().max(1.0);
+        assert!((warm.theta - cold.theta).abs() < 1e-9 * scale, "{warm:?} vs {cold:?}");
+        assert_eq!(warm.theta_hint, Some(cold.theta));
+        assert!(warm.work < cold.work, "warm {} !< cold {}", warm.work, cold.work);
+        for (a, b) in warm_mus.iter().zip(&cold_mus) {
+            assert!((a - b).abs() < 1e-9, "mu {a} vs {b}");
+        }
+        // Slightly-above hint (the cache's usual shape): still exact.
+        let (above, _) =
+            solve_signed_full(&abs, n_groups, len, c, None, Some(cold.theta * 1.05));
+        assert!((above.theta - cold.theta).abs() < 1e-7 * scale);
+        assert!(above.work <= cold.work);
+        // Hint below θ*: the descending sweep can't start there — must
+        // reject it (cold fallback), not return a wrong root.
+        let (below, _) =
+            solve_signed_full(&abs, n_groups, len, c, None, Some(cold.theta * 0.5));
+        assert!((below.theta - cold.theta).abs() < 1e-9 * scale);
+        assert_eq!(below.theta_hint, None);
+        // Garbage hints are harmless.
+        for bad in [1e12, 1e-12, f64::NAN, -3.0, 0.0] {
+            let (st, _) = solve_signed_full(&abs, n_groups, len, c, None, Some(bad));
+            assert!((st.theta - cold.theta).abs() < 1e-7 * scale, "hint {bad}: {st:?}");
+        }
+    }
+
+    #[test]
+    fn seeded_group_sums_match_internal_scan() {
+        let mut rng = Rng::new(9);
+        let (n_groups, len) = (40, 12);
+        let mut data = vec![0.0f32; n_groups * len];
+        for v in data.iter_mut() {
+            *v = (rng.f32() - 0.5) * 4.0;
+        }
+        let sums: Vec<f64> = (0..n_groups)
+            .map(|g| data[g * len..(g + 1) * len].iter().map(|&v| v.abs() as f64).sum())
+            .collect();
+        let (a, mus_a) = solve_signed_full(&data, n_groups, len, 2.0, None, None);
+        let (b, mus_b) = solve_signed_full(&data, n_groups, len, 2.0, Some(&sums), None);
+        assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "same summation order ⇒ same θ");
+        assert_eq!(mus_a, mus_b);
     }
 
     #[test]

@@ -100,6 +100,12 @@ pub struct SolveStats {
     pub work: usize,
     /// Groups touched (heapified / actively processed) by the solver.
     pub touched_groups: usize,
+    /// Warm-start hint the solver actually committed to (None = cold solve,
+    /// or the hint was rejected as unusable). Consecutive SGD-step
+    /// projections move θ only slightly, so a previous θ* fed back through
+    /// [`solve_theta_hinted`] cuts `work` sharply — see
+    /// [`crate::serve::cache::ThetaCache`].
+    pub theta_hint: Option<f64>,
 }
 
 /// Result of a full projection call.
@@ -121,13 +127,33 @@ pub struct ProjInfo {
 
 /// Solve for θ* on **nonnegative** grouped data with `‖Y‖₁,∞ > C > 0`.
 pub fn solve_theta(abs: &[f32], n_groups: usize, group_len: usize, c: f64, algo: Algorithm) -> SolveStats {
+    solve_theta_hinted(abs, n_groups, group_len, c, algo, None)
+}
+
+/// Like [`solve_theta`], but seeds the root search with a warm-start guess
+/// (typically last step's θ* from a [`crate::serve::cache::ThetaCache`]).
+///
+/// A hint is advisory: every solver validates it and falls back to its cold
+/// path when the hint is unusable, so any finite nonnegative value is safe.
+/// `Quattoni`, `Naive` and `Bejar` ignore hints (their sweeps/fixed points
+/// have no cheap entry point mid-order) — they stay bit-identical to cold.
+pub fn solve_theta_hinted(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    algo: Algorithm,
+    theta_hint: Option<f64>,
+) -> SolveStats {
     match algo {
-        Algorithm::Bisection => bisect::solve(abs, n_groups, group_len, c),
+        Algorithm::Bisection => bisect::solve_hinted(abs, n_groups, group_len, c, theta_hint),
         Algorithm::Quattoni => quattoni::solve(abs, n_groups, group_len, c),
         Algorithm::Naive => naive::solve(abs, n_groups, group_len, c),
         Algorithm::Bejar => bejar::solve(abs, n_groups, group_len, c),
-        Algorithm::Newton => newton::solve(abs, n_groups, group_len, c),
-        Algorithm::InverseOrder => inverse_order::solve(abs, n_groups, group_len, c),
+        Algorithm::Newton => newton::solve_hinted(abs, n_groups, group_len, c, theta_hint),
+        Algorithm::InverseOrder => {
+            inverse_order::solve_signed_full(abs, n_groups, group_len, c, None, theta_hint).0
+        }
     }
 }
 
@@ -160,6 +186,18 @@ pub fn project_l1inf(
     group_len: usize,
     c: f64,
     algo: Algorithm,
+) -> ProjInfo {
+    project_l1inf_with_hint(data, n_groups, group_len, c, algo, None)
+}
+
+/// [`project_l1inf`] with a warm-start θ hint (see [`solve_theta_hinted`]).
+pub fn project_l1inf_with_hint(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    algo: Algorithm,
+    theta_hint: Option<f64>,
 ) -> ProjInfo {
     assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
     assert!(c >= 0.0, "radius must be nonnegative");
@@ -198,11 +236,11 @@ pub fn project_l1inf(
     // directly, so no |Y| copy is materialized at all.
     let (stats, mus) = match algo {
         Algorithm::InverseOrder => {
-            inverse_order::solve_signed_with_levels(data, n_groups, group_len, c)
+            inverse_order::solve_signed_full(data, n_groups, group_len, c, None, theta_hint)
         }
         _ => {
             let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
-            let stats = solve_theta(&abs, n_groups, group_len, c, algo);
+            let stats = solve_theta_hinted(&abs, n_groups, group_len, c, algo, theta_hint);
             (stats, water_levels(&abs, n_groups, group_len, stats.theta))
         }
     };

@@ -47,12 +47,12 @@ pub(crate) fn solve_on_subset(
         if t2 == 0.0 {
             // Everything died: only possible through FP pathologies since
             // Φ(θ*) = C > 0 requires at least one survivor.
-            return SolveStats { theta, work: rounds, touched_groups: touched };
+            return SolveStats { theta, work: rounds, touched_groups: touched, theta_hint: None };
         }
         let next = (t1 - c) / t2;
         // Monotone nondecreasing; stop at the fixed point.
         if next <= theta + 1e-13 * theta.abs().max(1.0) || rounds > 10_000 {
-            return SolveStats { theta: next.max(theta), work: rounds, touched_groups: touched };
+            return SolveStats { theta: next.max(theta), work: rounds, touched_groups: touched, theta_hint: None };
         }
         theta = next;
     }

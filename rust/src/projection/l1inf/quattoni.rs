@@ -52,7 +52,7 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
         // State valid on [prev, b): stop if θ̂ lands before the breakpoint.
         let theta = (t1 - c) / t2;
         if theta < b {
-            return SolveStats { theta, work: consumed, touched_groups: n_groups };
+            return SolveStats { theta, work: consumed, touched_groups: n_groups, theta_hint: None };
         }
         consumed += 1;
         match ev {
@@ -75,11 +75,11 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
             // All groups dead means Φ(θ) = 0 < C beyond this point — the
             // stop condition must have fired earlier; only reachable through
             // FP pathologies. Fall back to the last event's θ.
-            return SolveStats { theta: b, work: consumed, touched_groups: n_groups };
+            return SolveStats { theta: b, work: consumed, touched_groups: n_groups, theta_hint: None };
         }
     }
     let theta = (t1 - c) / t2;
-    SolveStats { theta, work: consumed, touched_groups: n_groups }
+    SolveStats { theta, work: consumed, touched_groups: n_groups, theta_hint: None }
 }
 
 #[cfg(test)]

@@ -40,7 +40,7 @@ impl Engine {
     /// Create a CPU PJRT client over `manifest`.
     pub fn new(manifest: Manifest) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
+        crate::info!(
             "PJRT client: platform={} devices={}",
             client.platform_name(),
             client.device_count()
@@ -83,7 +83,7 @@ impl Engine {
             .with_context(|| format!("compiling {}", path.display()))?;
         self.stats.compiles += 1;
         self.stats.compile_secs += t.secs();
-        log::info!("compiled {}:{} in {:.2}s", config, kind.key(), t.secs());
+        crate::info!("compiled {}:{} in {:.2}s", config, kind.key(), t.secs());
         self.cache.insert(key, exe);
         Ok(())
     }

@@ -9,11 +9,18 @@
 //! - [`tensor`]    — host tensors ⇄ `xla::Literal` / `xla::PjRtBuffer`
 //! - [`artifacts`] — manifest discovery + shape validation
 //! - [`engine`]    — client + executable cache + typed step/epoch/eval calls
+//!
+//! Only [`engine`] (and the literal/buffer conversions on [`Tensor`])
+//! actually links against `libxla_extension`; both are gated behind the
+//! `pjrt` cargo feature so the projection stack, the data substrates and
+//! the serve subsystem build and test fully offline.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod tensor;
 
 pub use artifacts::{ArtifactKind, Manifest, ModelConfig};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use tensor::Tensor;

@@ -1,6 +1,10 @@
 //! Host-side tensors and conversions to/from XLA literals and buffers.
+//! (The XLA conversions are gated behind the `pjrt` feature; the host
+//! tensor itself is dependency-free and always available.)
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 /// A dense host tensor (f32 or i32), row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -83,6 +87,7 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal (copies).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let (ty, bytes, shape): (xla::ElementType, &[u8], &[usize]) = match self {
             Tensor::F32 { shape, data } => (
@@ -101,6 +106,7 @@ impl Tensor {
     }
 
     /// Convert from an XLA literal (copies).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -112,6 +118,7 @@ impl Tensor {
     }
 
     /// Upload to a device buffer on `client`'s default device.
+    #[cfg(feature = "pjrt")]
     pub fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
         match self {
             Tensor::F32 { shape, data } => client

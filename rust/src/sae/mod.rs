@@ -11,4 +11,6 @@ pub mod state;
 pub mod trainer;
 
 pub use state::TrainState;
-pub use trainer::{ExecMode, ProjectionMode, TrainConfig, TrainReport, Trainer};
+#[cfg(feature = "pjrt")]
+pub use trainer::Trainer;
+pub use trainer::{ExecMode, ProjectionMode, TrainConfig, TrainReport};

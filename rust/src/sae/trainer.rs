@@ -3,15 +3,30 @@
 //! input layer `w1` after every epoch, plus the masked variant (Eq. 20)
 //! and the double-descent (lottery-ticket rewind) schedule.
 
-use super::metrics::{self, W1Metrics};
+use super::metrics::W1Metrics;
+use crate::projection::l1inf::Algorithm;
+
+#[cfg(feature = "pjrt")]
+use super::metrics;
+#[cfg(feature = "pjrt")]
 use super::state::TrainState;
+#[cfg(feature = "pjrt")]
 use crate::data::loader::Split;
-use crate::projection::l1inf::{project_l1inf, Algorithm};
+#[cfg(feature = "pjrt")]
+use crate::projection::l1inf::project_l1inf_with_hint;
+#[cfg(feature = "pjrt")]
 use crate::projection::masked::project_masked;
+#[cfg(feature = "pjrt")]
 use crate::projection::{l1, l12};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactKind, Engine, ModelConfig, Tensor};
+#[cfg(feature = "pjrt")]
+use crate::serve::cache::ThetaCache;
+#[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use crate::util::Timer;
+#[cfg(feature = "pjrt")]
 use anyhow::{ensure, Context, Result};
 
 /// Which ball constrains the encoder input layer (the paper's comparison).
@@ -114,16 +129,22 @@ pub struct TrainReport {
 }
 
 /// Trains one SAE on one split through the engine.
+#[cfg(feature = "pjrt")]
 pub struct Trainer<'e> {
     engine: &'e mut Engine,
     cfg: ModelConfig,
     tc: TrainConfig,
+    /// Warm-start θ cache: per-epoch projections of the same matrix move
+    /// θ only slightly, so each epoch seeds the next solve (see
+    /// [`crate::serve::cache`]).
+    theta_cache: ThetaCache,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e mut Engine, tc: TrainConfig) -> Result<Trainer<'e>> {
         let cfg = engine.config(&tc.model)?;
-        Ok(Trainer { engine, cfg, tc })
+        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new() })
     }
 
     /// Run the full schedule on `split`; returns the report.
@@ -179,7 +200,7 @@ impl<'e> Trainer<'e> {
                 proj_ms,
                 exec_ms,
             });
-            log::debug!(
+            crate::debug!(
                 "epoch {epoch}: loss={mean_loss:.4} colsp={:.2}% theta={theta:.4}",
                 logs.last().unwrap().col_sparsity_pct
             );
@@ -281,7 +302,16 @@ impl<'e> Trainer<'e> {
             ProjectionMode::None => 0.0,
             ProjectionMode::L1 { eta } => l1::project_l1(w1, eta).tau,
             ProjectionMode::L12 { eta } => l12::project_l12(w1, d, h, eta).tau,
-            ProjectionMode::L1Inf { c } => project_l1inf(w1, d, h, c, algo).theta,
+            ProjectionMode::L1Inf { c } => {
+                // Epoch-over-epoch θ drifts slowly: feed last epoch's θ*
+                // back as a warm start (ISSUE: bi-level observation).
+                let hint = self.theta_cache.hint_for("w1", d, h);
+                let info = project_l1inf_with_hint(w1, d, h, c, algo, hint);
+                if !info.feasible && info.theta > 0.0 {
+                    self.theta_cache.update("w1", d, h, c, info.theta);
+                }
+                info.theta
+            }
             ProjectionMode::L1InfMasked { c } => project_masked(w1, d, h, c, algo).projection.theta,
         })
     }

@@ -1,0 +1,209 @@
+//! Warm-start θ cache.
+//!
+//! The bi-level view of projected SGD (arXiv:2407.16293) observes that the
+//! dual variable θ* of the ℓ₁,∞ projection moves slowly between consecutive
+//! projections of the *same* weight matrix: one optimizer step perturbs the
+//! matrix by O(lr), so the root of `Φ(θ) = C` barely moves. This cache
+//! remembers the last θ* per matrix key and hands the next solve a hint.
+//!
+//! The hint is returned **inflated by a small safety margin**: the
+//! inverse-total-order solver sweeps the breakpoint order *downwards*, so
+//! it can only enter mid-order when the hint is at or above the new θ*
+//! (below-root hints trigger its cold fallback). Overshooting by a few
+//! percent costs a handful of extra breakpoint pops; undershooting costs a
+//! full cold solve — so the margin buys hit rate cheaply. Bisection and
+//! Newton accept hints on either side.
+//!
+//! Thread-safe: one instance is shared by every server connection.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Multiplicative safety margin applied to returned hints (see module docs).
+pub const HINT_MARGIN: f64 = 1.05;
+
+/// Hard cap on cached keys. Keys are client-chosen strings on a
+/// long-running server, so the map must not grow without bound; past the
+/// cap the least-recently-updated entry is evicted (a stale θ is worth
+/// nothing anyway — the matrix it described has long since drifted).
+pub const MAX_ENTRIES: usize = 4096;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    theta: f64,
+    n_groups: usize,
+    group_len: usize,
+    radius: f64,
+    updates: u64,
+    /// Monotonic update stamp; the smallest stamp is evicted at capacity.
+    stamp: u64,
+}
+
+/// Aggregate cache statistics (exposed over the serve protocol's `stats` op).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub updates: u64,
+}
+
+/// θ* memo keyed by caller-chosen matrix identity (e.g. `"w1:synth"`).
+#[derive(Debug, Default)]
+pub struct ThetaCache {
+    inner: Mutex<HashMap<String, Entry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    updates: AtomicU64,
+}
+
+impl ThetaCache {
+    pub fn new() -> ThetaCache {
+        ThetaCache::default()
+    }
+
+    /// Warm-start hint for the next projection of the matrix behind `key`.
+    ///
+    /// Returns `None` (a cold solve) when the key is unknown or the cached
+    /// entry was recorded for a different shape — a reshaped matrix is a
+    /// different projection problem and its θ is meaningless here. A radius
+    /// change keeps the hint: the solvers validate hints anyway, and θ
+    /// moves continuously with C.
+    pub fn hint_for(&self, key: &str, n_groups: usize, group_len: usize) -> Option<f64> {
+        let guard = self.inner.lock().expect("theta cache poisoned");
+        match guard.get(key) {
+            Some(e) if e.n_groups == n_groups && e.group_len == group_len && e.theta > 0.0 => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.theta * HINT_MARGIN)
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record the θ* a projection just solved for.
+    pub fn update(&self, key: &str, n_groups: usize, group_len: usize, radius: f64, theta: f64) {
+        if !theta.is_finite() || theta <= 0.0 {
+            return; // feasible / degenerate projections carry no information
+        }
+        let stamp = self.updates.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.lock().expect("theta cache poisoned");
+        if guard.len() >= MAX_ENTRIES && !guard.contains_key(key) {
+            // Evict the least-recently-updated key (O(n), but only at cap).
+            if let Some(victim) =
+                guard.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            {
+                guard.remove(&victim);
+            }
+        }
+        let updates = guard.get(key).map(|e| e.updates + 1).unwrap_or(1);
+        guard.insert(
+            key.to_string(),
+            Entry { theta, n_groups, group_len, radius, updates, stamp },
+        );
+    }
+
+    /// Drop one key (e.g. when a served model is unloaded).
+    pub fn invalidate(&self, key: &str) {
+        self.inner.lock().expect("theta cache poisoned").remove(key);
+    }
+
+    /// Introspection: `(θ*, radius, updates)` recorded under `key`.
+    pub fn entry(&self, key: &str) -> Option<(f64, f64, u64)> {
+        let guard = self.inner.lock().expect("theta cache poisoned");
+        guard.get(key).map(|e| (e.theta, e.radius, e.updates))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.inner.lock().expect("theta cache poisoned").len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            updates: self.updates.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_with_margin() {
+        let cache = ThetaCache::new();
+        assert_eq!(cache.hint_for("w1", 10, 4), None);
+        cache.update("w1", 10, 4, 1.0, 2.0);
+        let h = cache.hint_for("w1", 10, 4).unwrap();
+        assert!((h - 2.0 * HINT_MARGIN).abs() < 1e-12);
+        let st = cache.stats();
+        assert_eq!((st.entries, st.hits, st.misses, st.updates), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_miss() {
+        let cache = ThetaCache::new();
+        cache.update("w1", 10, 4, 1.0, 2.0);
+        assert_eq!(cache.hint_for("w1", 10, 5), None);
+        assert_eq!(cache.hint_for("w1", 11, 4), None);
+        assert!(cache.hint_for("w1", 10, 4).is_some());
+    }
+
+    #[test]
+    fn degenerate_thetas_not_recorded() {
+        let cache = ThetaCache::new();
+        cache.update("w1", 10, 4, 1.0, 0.0);
+        cache.update("w1", 10, 4, 1.0, -1.0);
+        cache.update("w1", 10, 4, 1.0, f64::NAN);
+        assert_eq!(cache.hint_for("w1", 10, 4), None);
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let cache = ThetaCache::new();
+        cache.update("k", 2, 2, 1.0, 1.0);
+        cache.update("k", 2, 2, 1.5, 1.2);
+        assert_eq!(cache.entry("k"), Some((1.2, 1.5, 2)));
+        cache.invalidate("k");
+        assert_eq!(cache.hint_for("k", 2, 2), None);
+        assert_eq!(cache.entry("k"), None);
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_updated() {
+        let cache = ThetaCache::new();
+        for i in 0..MAX_ENTRIES {
+            cache.update(&format!("k{i}"), 2, 2, 1.0, 1.0);
+        }
+        assert_eq!(cache.stats().entries, MAX_ENTRIES);
+        // Refresh k0 so it is no longer the eviction victim, then overflow.
+        cache.update("k0", 2, 2, 1.0, 2.0);
+        cache.update("fresh", 2, 2, 1.0, 3.0);
+        let st = cache.stats();
+        assert_eq!(st.entries, MAX_ENTRIES, "cap holds");
+        assert!(cache.entry("fresh").is_some());
+        assert!(cache.entry("k0").is_some(), "refreshed key survives");
+        assert!(cache.entry("k1").is_none(), "oldest key evicted");
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache = std::sync::Arc::new(ThetaCache::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cache = cache.clone();
+                s.spawn(move || {
+                    for i in 0..100 {
+                        let key = format!("k{}", (t + i) % 3);
+                        cache.update(&key, 8, 8, 1.0, 1.0 + i as f64);
+                        let _ = cache.hint_for(&key, 8, 8);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.stats().entries, 3);
+    }
+}

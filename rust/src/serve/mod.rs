@@ -1,0 +1,33 @@
+//! `serve` — a batched, multi-threaded ℓ₁,∞ projection service.
+//!
+//! The projection algorithms in [`crate::projection::l1inf`] are
+//! single-matrix, single-thread. This subsystem turns them into a
+//! production-shaped service along three axes (Perez & Barlaud's
+//! *multi-level parallel projection* observation — the row/group structure
+//! parallelizes almost perfectly — plus the bi-level observation that θ*
+//! drifts slowly across SGD steps):
+//!
+//! - [`batch`] — a [`batch::BatchProjector`] worker pool
+//!   (`std::thread::scope`, no extra dependencies) that (a) shards the
+//!   O(nm) group passes of one large projection across threads with the
+//!   exact serial solver in the middle — bit-compatible with
+//!   [`crate::projection::l1inf::project_l1inf`] — and (b) drains queues of
+//!   heterogeneous projection requests with request-level parallelism;
+//! - [`cache`] — a [`cache::ThetaCache`] that remembers θ* per
+//!   weight-matrix key and feeds the next projection of the same matrix a
+//!   warm start through the solvers' `theta_hint` plumbing;
+//! - [`protocol`] + [`server`] — a line-delimited-JSON request/response
+//!   protocol over TCP (`l1inf serve --addr --threads`), one decoding
+//!   thread per connection, all connections sharing the projector pool and
+//!   the θ cache.
+//!
+//! The throughput experiment behind the `BENCH_serve.json` report lives in
+//! [`crate::experiments::servebench`] (`l1inf exp serve_bench`).
+
+pub mod batch;
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use batch::{BatchProjector, ProjRequest, ProjResponse};
+pub use cache::ThetaCache;

@@ -1,0 +1,316 @@
+//! Line-delimited JSON protocol of the projection service.
+//!
+//! One request per line, one response line per request, always in order.
+//! Numbers ride the crate's own minimal JSON ([`crate::util::json`]) — the
+//! vendored crate set has no serde.
+//!
+//! ```text
+//! → {"id":1,"op":"project","key":"w1","groups":3,"len":4,"radius":1.5,
+//!    "algo":"inv_order","return_data":true,"data":[...12 numbers...]}
+//! ← {"id":1,"ok":true,"theta":0.41,"radius_before":2.9,"radius_after":1.5,
+//!    "zero_groups":1,"work":7,"touched":2,"warm":false,"ms":0.08,
+//!    "data":[...]}
+//! → {"id":2,"op":"stats"}
+//! ← {"id":2,"ok":true,"threads":4,"served":1,"cache_entries":1,...}
+//! → {"id":3,"op":"ping"}            ← {"id":3,"ok":true,"pong":true}
+//! → {"id":4,"op":"shutdown"}        ← {"id":4,"ok":true,"shutting_down":true}
+//! ```
+//!
+//! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
+//! connection open.
+
+use crate::projection::l1inf::{Algorithm, ProjInfo};
+use crate::serve::cache::CacheStats;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A parsed `op: "project"` request.
+#[derive(Debug, Clone)]
+pub struct ProjectRequest {
+    /// Warm-start cache key; omit for stateless projections.
+    pub key: Option<String>,
+    pub n_groups: usize,
+    pub group_len: usize,
+    pub radius: f64,
+    pub algo: Algorithm,
+    /// `false` suppresses the projected matrix in the response (clients
+    /// that only need θ/sparsity telemetry save the echo bandwidth).
+    pub return_data: bool,
+    pub data: Vec<f32>,
+}
+
+/// Any request the service understands.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Project(Box<ProjectRequest>),
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// Request id + payload (the id is echoed on every response line).
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub id: i64,
+    pub req: Request,
+}
+
+/// Parse one request line; `default_algo` fills requests that don't name a
+/// solver (the server passes its `[serve] algo` config). `Err` carries
+/// `(id, message)` so the server can still address its error response.
+pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i64, String)> {
+    let v = json::parse(line).map_err(|e| (0, format!("bad json: {e}")))?;
+    let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as i64;
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| (id, "missing 'op'".to_string()))?;
+    let req = match op {
+        "stats" => Request::Stats,
+        "ping" => Request::Ping,
+        "shutdown" => Request::Shutdown,
+        "project" => {
+            let n_groups = v
+                .get("groups")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| (id, "project: missing 'groups'".to_string()))?;
+            let group_len = v
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| (id, "project: missing 'len'".to_string()))?;
+            let radius = v
+                .get("radius")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| (id, "project: missing 'radius'".to_string()))?;
+            if !radius.is_finite() || radius < 0.0 {
+                return Err((id, format!("project: bad radius {radius}")));
+            }
+            let algo = match v.get("algo").and_then(Json::as_str) {
+                None => default_algo,
+                Some(s) => s.parse::<Algorithm>().map_err(|e| (id, e))?,
+            };
+            let return_data = match v.get("return_data") {
+                Some(Json::Bool(b)) => *b,
+                _ => true,
+            };
+            let key = v.get("key").and_then(Json::as_str).map(str::to_string);
+            let arr = v
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| (id, "project: missing 'data'".to_string()))?;
+            // checked_mul: `groups`/`len` are client-controlled — a wrapping
+            // product could collide with data.len() and panic deep in the
+            // projector instead of producing an error response.
+            let expected = n_groups
+                .checked_mul(group_len)
+                .ok_or_else(|| (id, "project: groups*len overflows".to_string()))?;
+            if n_groups == 0 || group_len == 0 || arr.len() != expected {
+                return Err((
+                    id,
+                    format!(
+                        "project: data has {} entries, expected groups*len = {}x{}",
+                        arr.len(),
+                        n_groups,
+                        group_len
+                    ),
+                ));
+            }
+            let mut data = Vec::with_capacity(arr.len());
+            for (i, x) in arr.iter().enumerate() {
+                // Validate after the f32 cast: 1e39 is a finite f64 but an
+                // infinite f32, and an inf smuggled into the solvers comes
+                // back as `inf` in the response — which is not JSON.
+                match x.as_f64().map(|f| f as f32) {
+                    Some(f) if f.is_finite() => data.push(f),
+                    _ => return Err((id, format!("project: data[{i}] is not a finite f32"))),
+                }
+            }
+            Request::Project(Box::new(ProjectRequest {
+                key,
+                n_groups,
+                group_len,
+                radius,
+                algo,
+                return_data,
+                data,
+            }))
+        }
+        other => return Err((id, format!("unknown op '{other}'"))),
+    };
+    Ok(Envelope { id, req })
+}
+
+fn base(id: i64, ok: bool) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("ok".to_string(), Json::Bool(ok));
+    m
+}
+
+/// `{"id":…,"ok":false,"error":…}`
+pub fn error_response(id: i64, msg: &str) -> String {
+    let mut m = base(id, false);
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m).to_string()
+}
+
+/// Successful projection response (optionally echoing the projected data).
+pub fn project_response(
+    id: i64,
+    info: &ProjInfo,
+    warm: bool,
+    ms: f64,
+    data: Option<&[f32]>,
+) -> String {
+    let mut m = base(id, true);
+    m.insert("theta".to_string(), Json::Num(info.theta));
+    m.insert("radius_before".to_string(), Json::Num(info.radius_before));
+    m.insert("radius_after".to_string(), Json::Num(info.radius_after));
+    m.insert("zero_groups".to_string(), Json::Num(info.zero_groups as f64));
+    m.insert("feasible".to_string(), Json::Bool(info.feasible));
+    m.insert("work".to_string(), Json::Num(info.stats.work as f64));
+    m.insert("touched".to_string(), Json::Num(info.stats.touched_groups as f64));
+    m.insert("warm".to_string(), Json::Bool(warm));
+    m.insert("ms".to_string(), Json::Num(ms));
+    if let Some(d) = data {
+        m.insert(
+            "data".to_string(),
+            Json::Arr(d.iter().map(|&v| Json::Num(v as f64)).collect()),
+        );
+    }
+    Json::Obj(m).to_string()
+}
+
+/// `stats` op response.
+pub fn stats_response(id: i64, threads: usize, served: u64, cache: CacheStats) -> String {
+    let mut m = base(id, true);
+    m.insert("threads".to_string(), Json::Num(threads as f64));
+    m.insert("served".to_string(), Json::Num(served as f64));
+    m.insert("cache_entries".to_string(), Json::Num(cache.entries as f64));
+    m.insert("cache_hits".to_string(), Json::Num(cache.hits as f64));
+    m.insert("cache_misses".to_string(), Json::Num(cache.misses as f64));
+    m.insert("cache_updates".to_string(), Json::Num(cache.updates as f64));
+    Json::Obj(m).to_string()
+}
+
+/// `ping` op response.
+pub fn pong_response(id: i64) -> String {
+    let mut m = base(id, true);
+    m.insert("pong".to_string(), Json::Bool(true));
+    Json::Obj(m).to_string()
+}
+
+/// `shutdown` op acknowledgement.
+pub fn shutdown_response(id: i64) -> String {
+    let mut m = base(id, true);
+    m.insert("shutting_down".to_string(), Json::Bool(true));
+    Json::Obj(m).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_request_d(line: &str) -> Result<Envelope, (i64, String)> {
+        parse_request(line, Algorithm::InverseOrder)
+    }
+
+    #[test]
+    fn parses_project_roundtrip() {
+        let line = r#"{"id": 3, "op": "project", "key": "w1", "groups": 2, "len": 2,
+                       "radius": 1.0, "algo": "newton", "data": [1.0, -0.5, 0.25, 2.0]}"#
+            .replace('\n', " ");
+        let env = parse_request(&line, Algorithm::InverseOrder).unwrap();
+        assert_eq!(env.id, 3);
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.key.as_deref(), Some("w1"));
+        assert_eq!((p.n_groups, p.group_len), (2, 2));
+        assert_eq!(p.algo, Algorithm::Newton);
+        assert!(p.return_data);
+        assert_eq!(p.data, vec![1.0, -0.5, 0.25, 2.0]);
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(
+            parse_request_d(r#"{"id":1,"op":"ping"}"#).unwrap().req,
+            Request::Ping
+        ));
+        assert!(matches!(
+            parse_request_d(r#"{"id":1,"op":"stats"}"#).unwrap().req,
+            Request::Stats
+        ));
+        assert!(matches!(
+            parse_request_d(r#"{"id":1,"op":"shutdown"}"#).unwrap().req,
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn errors_carry_the_request_id() {
+        let (id, msg) =
+            parse_request_d(r#"{"id": 9, "op": "project", "groups": 2, "len": 3, "radius": 1, "data": [1]}"#)
+                .unwrap_err();
+        assert_eq!(id, 9);
+        assert!(msg.contains("expected groups*len"), "{msg}");
+        let (id, _) = parse_request_d(r#"{"id": 4, "op": "frobnicate"}"#).unwrap_err();
+        assert_eq!(id, 4);
+        let (id, _) = parse_request("not json at all").unwrap_err();
+        assert_eq!(id, 0);
+        let (id, msg) = parse_request_d(r#"{"id":2,"op":"project","groups":1,"len":1,"radius":1,"data":["x"]}"#)
+            .unwrap_err();
+        assert_eq!(id, 2);
+        assert!(msg.contains("data[0]"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_overflowing_and_empty_shapes() {
+        // groups*len wrapping to 0 must not slip past the length check.
+        let big = (1u64 << 32).to_string();
+        let line = format!(
+            r#"{{"id":7,"op":"project","groups":{big},"len":{big},"radius":1,"data":[]}}"#
+        );
+        let (id, msg) = parse_request_d(&line).unwrap_err();
+        assert_eq!(id, 7);
+        assert!(msg.contains("overflow") || msg.contains("expected"), "{msg}");
+        let (_, msg) =
+            parse_request_d(r#"{"id":8,"op":"project","groups":0,"len":3,"radius":1,"data":[]}"#)
+                .unwrap_err();
+        assert!(msg.contains("expected"), "{msg}");
+        // Finite f64 that overflows f32 must be rejected, not become inf.
+        let (_, msg) =
+            parse_request_d(r#"{"id":9,"op":"project","groups":1,"len":1,"radius":1,"data":[1e39]}"#)
+                .unwrap_err();
+        assert!(msg.contains("data[0]"), "{msg}");
+    }
+
+    #[test]
+    fn responses_are_single_json_lines() {
+        use crate::projection::l1inf::SolveStats;
+        let info = ProjInfo {
+            radius_before: 2.5,
+            radius_after: 1.0,
+            theta: 0.75,
+            zero_groups: 3,
+            feasible: false,
+            stats: SolveStats { theta: 0.75, work: 9, touched_groups: 4, theta_hint: None },
+        };
+        for line in [
+            project_response(1, &info, true, 0.5, Some(&[0.5, -0.5])),
+            project_response(2, &info, false, 0.5, None),
+            error_response(3, "nope"),
+            stats_response(4, 8, 100, CacheStats::default()),
+            pong_response(5),
+            shutdown_response(6),
+        ] {
+            assert!(!line.contains('\n'));
+            let v = crate::util::json::parse(&line).unwrap();
+            assert!(v.get("id").is_some());
+            assert!(v.get("ok").is_some());
+        }
+        let v = crate::util::json::parse(&project_response(1, &info, true, 0.5, Some(&[0.5]))).unwrap();
+        assert_eq!(v.get("theta").unwrap().as_f64(), Some(0.75));
+        assert_eq!(v.get("warm"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("data").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

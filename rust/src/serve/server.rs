@@ -1,0 +1,170 @@
+//! The TCP front of the projection service (`l1inf serve`).
+//!
+//! One OS thread per connection decodes line-delimited JSON requests
+//! ([`super::protocol`]); every connection shares one
+//! [`BatchProjector`] pool (matrix-sharded projections) and one
+//! [`ThetaCache`] (cross-request warm starts keyed by the client-supplied
+//! matrix key). A `shutdown` op from any client stops the accept loop —
+//! that is also how the integration tests tear the server down.
+
+use super::batch::BatchProjector;
+use super::cache::ThetaCache;
+use super::protocol::{self, ProjectRequest, Request};
+use crate::config::serve::ServeConfig;
+use crate::projection::l1inf::Algorithm;
+use crate::util::Timer;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared per-connection context.
+#[derive(Clone)]
+struct Shared {
+    pool: Arc<BatchProjector>,
+    cache: Arc<ThetaCache>,
+    served: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    default_algo: Algorithm,
+    addr: SocketAddr,
+}
+
+/// A bound (but not yet running) projection service.
+pub struct Server {
+    listener: TcpListener,
+    shared: Shared,
+}
+
+impl Server {
+    /// Bind the listen socket and build the shared pool + cache.
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shared = Shared {
+            pool: Arc::new(BatchProjector::new(cfg.threads)),
+            cache: Arc::new(ThetaCache::new()),
+            served: Arc::new(AtomicU64::new(0)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            default_algo: cfg.algo,
+            addr,
+        };
+        Ok(Server { listener, shared })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound address")
+    }
+
+    /// Worker threads in the projection pool.
+    pub fn threads(&self) -> usize {
+        self.shared.pool.threads()
+    }
+
+    /// Accept-and-serve until a client sends `shutdown`. Each connection
+    /// gets its own decoding thread; projections run on the shared pool.
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(stream) => {
+                    let shared = self.shared.clone();
+                    std::thread::spawn(move || {
+                        let peer = stream
+                            .peer_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "?".into());
+                        if let Err(e) = handle_connection(stream, &shared) {
+                            crate::debug!("serve: connection {peer} closed: {e}");
+                        }
+                    });
+                }
+                Err(e) => crate::warn!("serve: accept failed: {e}"),
+            }
+        }
+        crate::info!("serve: shutdown requested, accept loop stopped");
+        Ok(())
+    }
+}
+
+/// Address the shutdown handler connects to in order to wake the accept
+/// loop. A wildcard bind (0.0.0.0 / ::) is not connectable on every
+/// platform — substitute the matching loopback.
+fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        match addr {
+            SocketAddr::V4(_) => addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)),
+            SocketAddr::V6(_) => addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)),
+        }
+    }
+    addr
+}
+
+fn write_line(writer: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_request(&line, shared.default_algo) {
+            Err((id, msg)) => write_line(&mut writer, &protocol::error_response(id, &msg))?,
+            Ok(env) => match env.req {
+                Request::Ping => write_line(&mut writer, &protocol::pong_response(env.id))?,
+                Request::Stats => {
+                    let resp = protocol::stats_response(
+                        env.id,
+                        shared.pool.threads(),
+                        shared.served.load(Ordering::Relaxed),
+                        shared.cache.stats(),
+                    );
+                    write_line(&mut writer, &resp)?;
+                }
+                Request::Shutdown => {
+                    write_line(&mut writer, &protocol::shutdown_response(env.id))?;
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    // Unblock the (blocking) accept loop with a no-op
+                    // connection so it observes the flag and exits.
+                    let _ = TcpStream::connect(wake_addr(shared.addr));
+                    return Ok(());
+                }
+                Request::Project(p) => {
+                    let resp = run_project(env.id, *p, shared);
+                    write_line(&mut writer, &resp)?;
+                }
+            },
+        }
+    }
+    Ok(())
+}
+
+fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
+    let ProjectRequest { key, n_groups, group_len, radius, algo, return_data, mut data } = req;
+    let hint = key
+        .as_deref()
+        .and_then(|k| shared.cache.hint_for(k, n_groups, group_len));
+    let t = Timer::start();
+    let info = shared
+        .pool
+        .project_parallel(&mut data, n_groups, group_len, radius, algo, hint);
+    let ms = t.millis();
+    if let Some(k) = key.as_deref() {
+        if !info.feasible {
+            shared.cache.update(k, n_groups, group_len, radius, info.theta);
+        }
+    }
+    shared.served.fetch_add(1, Ordering::Relaxed);
+    let payload = if return_data { Some(&data[..]) } else { None };
+    protocol::project_response(id, &info, hint.is_some(), ms, payload)
+}

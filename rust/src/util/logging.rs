@@ -1,0 +1,113 @@
+//! Minimal leveled stderr logger (the vendored crate set has no `log`).
+//!
+//! The crate-root macros [`crate::error!`], [`crate::warn!`],
+//! [`crate::info!`], [`crate::debug!`] and [`crate::trace!`] route through
+//! [`log`]; the maximum level is a process-global atomic initialized from
+//! `L1INF_LOG` (`warn`/`info`/`debug`/`trace`, default `info`) by
+//! [`init_from_env`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+/// Set the maximum level that will be emitted.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Read the `L1INF_LOG` environment variable and set the level accordingly.
+pub fn init_from_env() {
+    let level = match std::env::var("L1INF_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    set_max_level(level);
+}
+
+/// Whether a record at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr (used by the crate-root macros).
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.label(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_thresholds() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_max_level(Level::Info); // restore the default for other tests
+    }
+}

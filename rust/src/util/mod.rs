@@ -4,6 +4,8 @@
 //! include `rand`, `serde`, `clap`, `criterion` or `proptest`, so this
 //! module provides minimal, well-tested replacements:
 //!
+//! - [`logging`] — leveled stderr logger behind the crate-root `info!`-style
+//!   macros (the vendored crate set has no `log`)
 //! - [`rng`]    — SplitMix64 + xoshiro256** PRNG with normal/uniform helpers
 //! - [`stats`]  — mean / std / percentiles / linear fits
 //! - [`csv`]    — tiny CSV writer used by the experiment drivers
@@ -17,6 +19,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;

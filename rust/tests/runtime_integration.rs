@@ -1,5 +1,7 @@
 //! Integration: the PJRT runtime loads every AOT artifact and executes the
-//! train/eval programs with sensible numerics. Requires `make artifacts`.
+//! train/eval programs with sensible numerics. Requires `make artifacts`
+//! and a `--features pjrt` build.
+#![cfg(feature = "pjrt")]
 
 use l1inf::runtime::{ArtifactKind, Engine, Manifest, Tensor};
 use l1inf::sae::state::TrainState;

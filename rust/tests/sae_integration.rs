@@ -1,6 +1,7 @@
 //! End-to-end SAE training through the full three-layer stack on the tiny
 //! config: every projection mode, both exec modes, double descent.
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a `--features pjrt` build.
+#![cfg(feature = "pjrt")]
 
 use l1inf::coordinator::sweep::split_for;
 use l1inf::projection::l1inf::Algorithm;

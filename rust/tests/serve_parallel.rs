@@ -1,0 +1,258 @@
+//! The serve subsystem end to end: the sharded [`BatchProjector`] must be
+//! indistinguishable (≤ 1e-6 elementwise) from the serial reference for
+//! every solver on random and adversarial inputs; warm-started solves must
+//! return the cold θ*; and the TCP protocol must round-trip projections.
+
+use l1inf::config::serve::ServeConfig;
+use l1inf::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
+use l1inf::projection::norm_l1inf;
+use l1inf::serve::batch::{BatchProjector, ProjRequest};
+use l1inf::serve::cache::ThetaCache;
+use l1inf::serve::server::Server;
+use l1inf::util::json;
+use l1inf::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    let mut y = vec![0.0f32; len];
+    for v in y.iter_mut() {
+        *v = (rng.f32() - 0.5) * scale;
+    }
+    y
+}
+
+/// Parallel vs serial on one input, all thread counts worth exercising.
+fn assert_parallel_matches_serial(data: &[f32], g: usize, l: usize, c: f64, algo: Algorithm) {
+    let mut serial = data.to_vec();
+    let si = project_l1inf(&mut serial, g, l, c, algo);
+    for threads in [2usize, 4, 7] {
+        // Threshold 0 forces the sharded path: these matrices are far below
+        // the production serial-fallback cutoff.
+        let pool = BatchProjector::with_min_parallel(threads, 0);
+        let mut par = data.to_vec();
+        let pi = pool.project_parallel(&mut par, g, l, c, algo, None);
+        let scale = si.theta.abs().max(1.0);
+        assert!(
+            (pi.theta - si.theta).abs() <= 1e-6 * scale,
+            "{} x{threads} g={g} l={l} c={c}: theta {} vs {}",
+            algo.name(),
+            pi.theta,
+            si.theta
+        );
+        for i in 0..par.len() {
+            assert!(
+                (par[i] - serial[i]).abs() <= 1e-6,
+                "{} x{threads} g={g} l={l} c={c}: entry {i}: {} vs {}",
+                algo.name(),
+                par[i],
+                serial[i]
+            );
+        }
+        assert_eq!(pi.zero_groups, si.zero_groups, "{} x{threads}", algo.name());
+        assert_eq!(pi.feasible, si.feasible);
+        assert!((pi.radius_before - si.radius_before).abs() <= 1e-6 * si.radius_before.max(1.0));
+        assert!((pi.radius_after - si.radius_after).abs() <= 1e-5 * si.radius_after.max(1.0));
+    }
+}
+
+#[test]
+fn parallel_matches_serial_every_algorithm_random() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for algo in Algorithm::ALL {
+        for (g, l) in [(37, 11), (64, 8), (9, 33)] {
+            let data = random_signed(&mut rng, g * l, 3.0);
+            let norm = norm_l1inf(&data, g, l);
+            for frac in [0.05, 0.4, 0.9] {
+                assert_parallel_matches_serial(&data, g, l, frac * norm, algo);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_serial_adversarial() {
+    for algo in Algorithm::ALL {
+        // All-equal entries: every breakpoint ties with every other.
+        let data = vec![0.5f32; 24 * 6];
+        assert_parallel_matches_serial(&data, 24, 6, 1.3, algo);
+        // A single group.
+        let single = vec![3.0f32, -2.0, 1.0, 0.5, -0.25, 0.0];
+        assert_parallel_matches_serial(&single, 1, 6, 1.5, algo);
+        // Groups of length one (the matrix degenerates to an ℓ₁ ball).
+        let thin: Vec<f32> = (0..40).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert_parallel_matches_serial(&thin, 40, 1, 2.0, algo);
+        // Already feasible: the projection must be the identity.
+        let feasible = vec![0.01f32; 16 * 4];
+        assert_parallel_matches_serial(&feasible, 16, 4, 100.0, algo);
+        // Mostly-zero groups with a couple of heavies.
+        let mut sparse = vec![0.0f32; 50 * 5];
+        sparse[0] = 4.0;
+        sparse[5] = -3.0;
+        sparse[127] = 2.0;
+        assert_parallel_matches_serial(&sparse, 50, 5, 1.0, algo);
+    }
+}
+
+#[test]
+fn warm_start_returns_cold_theta_for_all_hinted_solvers() {
+    let mut rng = Rng::new(0xFACE);
+    let (g, l) = (80, 12);
+    let data = random_signed(&mut rng, g * l, 2.0);
+    for algo in Algorithm::ALL {
+        let mut cold_m = data.clone();
+        let cold = project_l1inf(&mut cold_m, g, l, 1.0, algo);
+        let scale = cold.theta.abs().max(1.0);
+        for factor in [1.0, 1.05, 0.8, 3.0] {
+            let mut warm_m = data.clone();
+            let warm =
+                project_l1inf_with_hint(&mut warm_m, g, l, 1.0, algo, Some(cold.theta * factor));
+            assert!(
+                (warm.theta - cold.theta).abs() <= 1e-6 * scale,
+                "{} hint x{factor}: {} vs {}",
+                algo.name(),
+                warm.theta,
+                cold.theta
+            );
+            for i in 0..warm_m.len() {
+                assert!(
+                    (warm_m[i] - cold_m[i]).abs() <= 1e-6,
+                    "{} hint x{factor}: entry {i}",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_start_reduces_inverse_order_work() {
+    let mut rng = Rng::new(0xD1CE);
+    let (g, l) = (400, 24);
+    let data = random_signed(&mut rng, g * l, 2.0);
+    let mut m1 = data.clone();
+    let cold = project_l1inf(&mut m1, g, l, 1.0, Algorithm::InverseOrder);
+    let mut m2 = data.clone();
+    let warm =
+        project_l1inf_with_hint(&mut m2, g, l, 1.0, Algorithm::InverseOrder, Some(cold.theta));
+    assert_eq!(warm.stats.theta_hint, Some(cold.theta));
+    assert!(
+        warm.stats.work < cold.stats.work,
+        "warm work {} !< cold work {}",
+        warm.stats.work,
+        cold.stats.work
+    );
+}
+
+#[test]
+fn theta_cache_feeds_batch_queue() {
+    let mut rng = Rng::new(0xAB);
+    let (g, l) = (30, 7);
+    let cache = ThetaCache::new();
+    let pool = BatchProjector::new(3);
+    let data = random_signed(&mut rng, g * l, 2.0);
+    let mk = |d: Vec<f32>| ProjRequest {
+        key: Some("k".into()),
+        data: d,
+        n_groups: g,
+        group_len: l,
+        radius: 0.7,
+        algo: Algorithm::InverseOrder,
+    };
+    // A queue re-projecting near-identical matrices: first cold, rest warm.
+    let queue: Vec<ProjRequest> = (0..6)
+        .map(|i| mk(data.iter().map(|v| v * (1.0 + 0.0005 * i as f32)).collect()))
+        .collect();
+    let first = pool.project_batch(Some(&cache), queue[..1].to_vec());
+    assert!(!first[0].warm);
+    let rest = pool.project_batch(Some(&cache), queue[1..].to_vec());
+    for (i, r) in rest.iter().enumerate() {
+        let mut reference = queue[i + 1].data.clone();
+        let ri = project_l1inf(&mut reference, g, l, 0.7, Algorithm::InverseOrder);
+        for (a, b) in r.data.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-6, "request {i} output drifted");
+        }
+        assert!((r.info.theta - ri.theta).abs() <= 1e-9 * ri.theta.max(1.0));
+    }
+    assert!(cache.stats().hits >= 1, "queue must hit the theta cache");
+}
+
+// ── TCP server end to end ───────────────────────────────────────────────
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> json::Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+    }
+}
+
+#[test]
+fn server_projects_over_tcp_with_warm_cache() {
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut client = Client::connect(addr);
+
+    // Ping.
+    let pong = client.roundtrip(r#"{"id": 1, "op": "ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&json::Json::Bool(true)));
+    assert_eq!(pong.get("pong"), Some(&json::Json::Bool(true)));
+
+    // Project a small matrix; verify against the in-process reference.
+    let y = vec![1.0f32, -0.5, 0.25, 0.0, 0.9, 0.8, -0.7, 0.1, 1.1, 0.2, 0.3, -0.4];
+    let payload: Vec<String> = y.iter().map(|v| format!("{v}")).collect();
+    let req = format!(
+        r#"{{"id": 2, "op": "project", "key": "w1", "groups": 3, "len": 4, "radius": 1.5, "data": [{}]}}"#,
+        payload.join(",")
+    );
+    let resp = client.roundtrip(&req);
+    assert_eq!(resp.get("ok"), Some(&json::Json::Bool(true)), "{resp}");
+    let mut reference = y.clone();
+    let ri = project_l1inf(&mut reference, 3, 4, 1.5, Algorithm::InverseOrder);
+    let theta = resp.get("theta").unwrap().as_f64().unwrap();
+    assert!((theta - ri.theta).abs() < 1e-9, "{theta} vs {}", ri.theta);
+    let echoed = resp.get("data").unwrap().as_arr().unwrap();
+    assert_eq!(echoed.len(), reference.len());
+    for (a, b) in echoed.iter().zip(&reference) {
+        assert!((a.as_f64().unwrap() - *b as f64).abs() < 1e-6);
+    }
+    assert_eq!(resp.get("warm"), Some(&json::Json::Bool(false)));
+
+    // Same key again: the θ cache must warm-start without changing results.
+    let req2 = req.replace(r#""id": 2"#, r#""id": 3"#);
+    let resp2 = client.roundtrip(&req2);
+    assert_eq!(resp2.get("warm"), Some(&json::Json::Bool(true)), "{resp2}");
+    let theta2 = resp2.get("theta").unwrap().as_f64().unwrap();
+    assert!((theta2 - ri.theta).abs() < 1e-9);
+
+    // Malformed request: error response, connection stays usable.
+    let err = client.roundtrip(r#"{"id": 4, "op": "project", "groups": 2}"#);
+    assert_eq!(err.get("ok"), Some(&json::Json::Bool(false)));
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("len"));
+
+    // Stats reflect the served traffic.
+    let stats = client.roundtrip(r#"{"id": 5, "op": "stats"}"#);
+    assert_eq!(stats.get("served").unwrap().as_usize(), Some(2));
+    assert_eq!(stats.get("cache_entries").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("threads").unwrap().as_usize(), Some(2));
+
+    // Shutdown stops the accept loop and run() returns cleanly.
+    let bye = client.roundtrip(r#"{"id": 6, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&json::Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+}
