@@ -36,6 +36,7 @@ pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
         "l1" => ProjectionMode::L1 { eta: radius },
         "l21" | "l12" => ProjectionMode::L12 { eta: radius },
         "l1inf" => ProjectionMode::L1Inf { c: radius },
+        "l1inf_cols" | "cols" => ProjectionMode::L1InfCols { c: radius },
         "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
         other => bail!("unknown projection '{other}'"),
     })
@@ -84,6 +85,14 @@ mod tests {
         assert!(matches!(tc.projection, ProjectionMode::L12 { eta } if eta == 50.0));
         assert_eq!(tc.exec, ExecMode::Step);
         assert_eq!(tc.algo, Algorithm::Newton);
+    }
+
+    #[test]
+    fn parses_column_projection() {
+        assert!(matches!(
+            projection_mode("l1inf_cols", 0.5).unwrap(),
+            ProjectionMode::L1InfCols { c } if c == 0.5
+        ));
     }
 
     #[test]

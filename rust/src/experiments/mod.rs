@@ -40,13 +40,14 @@ impl Default for ExpOpts {
 /// All experiment ids.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
-    "trainproj", "serve_bench",
+    "trainproj", "serve_bench", "proj_bench",
 ];
 
 /// Dispatch by experiment id.
 pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.outdir)?;
     match name {
+        "proj_bench" => projbench::run_bench(opts),
         "fig1" => fig1(opts),
         "fig2" => fig2(opts),
         "fig3" => fig3(opts),

@@ -1,0 +1,369 @@
+//! Strided grouped-matrix views — the shape layer under every ℓ₁,∞ solver.
+//!
+//! A *grouped matrix* is a logical collection of `n_groups` groups of
+//! `group_len` scalars laid over a flat `[f32]` buffer. The seed API spelled
+//! this as a `(&[f32], usize, usize)` triple and hard-wired the contiguous
+//! layout (groups back to back). [`GroupedView`] keeps that layout as the
+//! fast path but generalizes it with two strides:
+//!
+//! - `group_stride` — distance between the first elements of consecutive
+//!   groups;
+//! - `elem_stride`  — distance between consecutive elements of one group.
+//!
+//! Two layouts cover every consumer in this crate:
+//!
+//! | constructor | groups are | strides |
+//! |---|---|---|
+//! | [`GroupedView::new`]     | contiguous runs (paper columns / SAE `w1` rows) | `(group_len, 1)` |
+//! | [`GroupedView::columns`] | columns of a row-major matrix | `(1, n_cols)` |
+//!
+//! The column view is what lets the SAE trainer project the *columns* of a
+//! row-major encoder matrix in place — no transpose copy in, no transpose
+//! copy back out. Solvers iterate groups through the view; element order
+//! within a group is index order in both layouts, so a column view and an
+//! explicitly transposed contiguous copy produce bit-identical θ.
+
+/// Read-only strided view of a grouped matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupedView<'a> {
+    data: &'a [f32],
+    n_groups: usize,
+    group_len: usize,
+    group_stride: usize,
+    elem_stride: usize,
+}
+
+/// Mutable strided view of a grouped matrix (same layout rules as
+/// [`GroupedView`]; the in-place projection writes through this).
+#[derive(Debug)]
+pub struct GroupedViewMut<'a> {
+    data: &'a mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    group_stride: usize,
+    elem_stride: usize,
+}
+
+/// Stride sanity shared by both views: groups must tile `data` without
+/// aliasing. Row layout (`elem_stride == 1`) needs `group_stride ≥
+/// group_len`; column layout (`group_stride == 1`) needs `elem_stride ≥
+/// n_groups`.
+fn check_strides(
+    data_len: usize,
+    n_groups: usize,
+    group_len: usize,
+    group_stride: usize,
+    elem_stride: usize,
+) {
+    let row_like = elem_stride == 1 && group_stride >= group_len;
+    let col_like = group_stride == 1 && elem_stride >= n_groups;
+    assert!(
+        n_groups == 0 || group_len == 0 || row_like || col_like,
+        "strides (group={group_stride}, elem={elem_stride}) would alias groups"
+    );
+    if n_groups > 0 && group_len > 0 {
+        let last = (n_groups - 1) * group_stride + (group_len - 1) * elem_stride;
+        assert!(last < data_len, "grouped view exceeds buffer: last index {last} >= {data_len}");
+    }
+}
+
+impl<'a> GroupedView<'a> {
+    /// Contiguous layout: `n_groups` back-to-back runs of `group_len`.
+    /// This is the seed `(&[f32], n_groups, group_len)` triple, verbatim.
+    pub fn new(data: &'a [f32], n_groups: usize, group_len: usize) -> GroupedView<'a> {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        GroupedView { data, n_groups, group_len, group_stride: group_len, elem_stride: 1 }
+    }
+
+    /// Column layout over a row-major `n_rows × n_cols` matrix: each of the
+    /// `n_cols` groups is one column of length `n_rows`.
+    pub fn columns(data: &'a [f32], n_rows: usize, n_cols: usize) -> GroupedView<'a> {
+        assert_eq!(data.len(), n_rows * n_cols, "grouped matrix shape mismatch");
+        GroupedView { data, n_groups: n_cols, group_len: n_rows, group_stride: 1, elem_stride: n_cols }
+    }
+
+    /// Fully general strided layout (see the module docs for the aliasing
+    /// contract enforced here).
+    pub fn with_strides(
+        data: &'a [f32],
+        n_groups: usize,
+        group_len: usize,
+        group_stride: usize,
+        elem_stride: usize,
+    ) -> GroupedView<'a> {
+        check_strides(data.len(), n_groups, group_len, group_stride, elem_stride);
+        GroupedView { data, n_groups, group_len, group_stride, elem_stride }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    pub fn group_len(&self) -> usize {
+        self.group_len
+    }
+
+    /// Logical element count (`n_groups · group_len`).
+    pub fn len(&self) -> usize {
+        self.n_groups * self.group_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when groups are back-to-back runs — the zero-cost slice path.
+    pub fn is_contiguous(&self) -> bool {
+        self.elem_stride == 1 && self.group_stride == self.group_len
+    }
+
+    /// Group `g` as a slice, when the element stride permits one.
+    #[inline]
+    pub fn group_slice(&self, g: usize) -> Option<&'a [f32]> {
+        if self.elem_stride == 1 {
+            let lo = g * self.group_stride;
+            Some(&self.data[lo..lo + self.group_len])
+        } else {
+            None
+        }
+    }
+
+    /// Visit every element of group `g` in index order.
+    #[inline]
+    pub fn for_each_in_group<F: FnMut(f32)>(&self, g: usize, mut f: F) {
+        if let Some(s) = self.group_slice(g) {
+            for &v in s {
+                f(v);
+            }
+        } else {
+            let base = g * self.group_stride;
+            for i in 0..self.group_len {
+                f(self.data[base + i * self.elem_stride]);
+            }
+        }
+    }
+
+    /// Fused per-group scan: `(max |·|, Σ|·|)` with the exact accumulation
+    /// order of the seed's `norm_l1inf` (f32 max fold) and group-sum seeding
+    /// (sequential f64 adds) — callers rely on this for bit-compatibility.
+    pub fn group_abs_max_sum(&self, g: usize) -> (f64, f64) {
+        let mut mx = 0.0f32;
+        let mut sum = 0.0f64;
+        self.for_each_in_group(g, |v| {
+            let a = v.abs();
+            mx = mx.max(a);
+            sum += a as f64;
+        });
+        (mx as f64, sum)
+    }
+
+    /// Per-group ℓ₁ mass `Σ|·|` (same accumulation order as above).
+    pub fn group_abs_sum(&self, g: usize) -> f64 {
+        let mut sum = 0.0f64;
+        self.for_each_in_group(g, |v| sum += v.abs() as f64);
+        sum
+    }
+
+    /// Gather `|group g|` into `out` (cleared first).
+    pub fn gather_group_abs(&self, g: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.group_len);
+        self.for_each_in_group(g, |v| out.push(v.abs()));
+    }
+
+    /// Gather the whole matrix as contiguous `|·|` values, group-major
+    /// (cleared first). This is how the sort/fixed-point solvers normalize
+    /// any layout into their scratch buffer.
+    pub fn gather_abs(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len());
+        for g in 0..self.n_groups {
+            self.for_each_in_group(g, |v| out.push(v.abs()));
+        }
+    }
+}
+
+impl<'a> GroupedViewMut<'a> {
+    /// Contiguous layout (see [`GroupedView::new`]).
+    pub fn new(data: &'a mut [f32], n_groups: usize, group_len: usize) -> GroupedViewMut<'a> {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        GroupedViewMut { data, n_groups, group_len, group_stride: group_len, elem_stride: 1 }
+    }
+
+    /// Column layout (see [`GroupedView::columns`]).
+    pub fn columns(data: &'a mut [f32], n_rows: usize, n_cols: usize) -> GroupedViewMut<'a> {
+        assert_eq!(data.len(), n_rows * n_cols, "grouped matrix shape mismatch");
+        GroupedViewMut {
+            data,
+            n_groups: n_cols,
+            group_len: n_rows,
+            group_stride: 1,
+            elem_stride: n_cols,
+        }
+    }
+
+    /// Fully general strided layout (same contract as
+    /// [`GroupedView::with_strides`]).
+    pub fn with_strides(
+        data: &'a mut [f32],
+        n_groups: usize,
+        group_len: usize,
+        group_stride: usize,
+        elem_stride: usize,
+    ) -> GroupedViewMut<'a> {
+        check_strides(data.len(), n_groups, group_len, group_stride, elem_stride);
+        GroupedViewMut { data, n_groups, group_len, group_stride, elem_stride }
+    }
+
+    /// Read-only view of the same layout (borrows this view).
+    pub fn as_view(&self) -> GroupedView<'_> {
+        GroupedView {
+            data: &*self.data,
+            n_groups: self.n_groups,
+            group_len: self.group_len,
+            group_stride: self.group_stride,
+            elem_stride: self.elem_stride,
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    pub fn group_len(&self) -> usize {
+        self.group_len
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_groups * self.group_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_contiguous(&self) -> bool {
+        self.elem_stride == 1 && self.group_stride == self.group_len
+    }
+
+    /// Group `g` as a mutable slice, when the element stride permits one.
+    #[inline]
+    pub fn group_slice_mut(&mut self, g: usize) -> Option<&mut [f32]> {
+        if self.elem_stride == 1 {
+            let lo = g * self.group_stride;
+            Some(&mut self.data[lo..lo + self.group_len])
+        } else {
+            None
+        }
+    }
+
+    /// Set every covered element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        if self.is_contiguous() {
+            self.data.fill(v);
+            return;
+        }
+        for g in 0..self.n_groups {
+            let base = g * self.group_stride;
+            for i in 0..self.group_len {
+                self.data[base + i * self.elem_stride] = v;
+            }
+        }
+    }
+
+    /// Mutate every element of group `g` in index order.
+    #[inline]
+    pub fn for_each_in_group_mut<F: FnMut(&mut f32)>(&mut self, g: usize, mut f: F) {
+        if self.elem_stride == 1 {
+            let lo = g * self.group_stride;
+            for v in &mut self.data[lo..lo + self.group_len] {
+                f(v);
+            }
+        } else {
+            let base = g * self.group_stride;
+            for i in 0..self.group_len {
+                f(&mut self.data[base + i * self.elem_stride]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_roundtrip() {
+        let data = [1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0];
+        let v = GroupedView::new(&data, 2, 3);
+        assert!(v.is_contiguous());
+        assert_eq!(v.group_slice(1).unwrap(), &[-4.0, 5.0, -6.0]);
+        let (mx, sum) = v.group_abs_max_sum(1);
+        assert!((mx - 6.0).abs() < 1e-9);
+        assert!((sum - 15.0).abs() < 1e-9);
+        let mut abs = Vec::new();
+        v.gather_abs(&mut abs);
+        assert_eq!(abs, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn column_view_transposes_logically() {
+        // Row-major 2×3: rows [1 2 3; 4 5 6]; columns are the groups.
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = GroupedView::columns(&data, 2, 3);
+        assert_eq!(v.n_groups(), 3);
+        assert_eq!(v.group_len(), 2);
+        assert!(!v.is_contiguous());
+        assert!(v.group_slice(0).is_none());
+        let mut col = Vec::new();
+        v.gather_group_abs(1, &mut col);
+        assert_eq!(col, vec![2.0, 5.0]);
+        assert!((v.group_abs_sum(2) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_gather_matches_explicit_transpose() {
+        let (rows, cols) = (5, 4);
+        let data: Vec<f32> = (0..rows * cols).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut transposed = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                transposed[c * rows + r] = data[r * cols + c];
+            }
+        }
+        let strided = GroupedView::columns(&data, rows, cols);
+        let contiguous = GroupedView::new(&transposed, cols, rows);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        strided.gather_abs(&mut a);
+        contiguous.gather_abs(&mut b);
+        assert_eq!(a, b, "column view must enumerate like a transpose");
+        for g in 0..cols {
+            assert_eq!(strided.group_abs_max_sum(g), contiguous.group_abs_max_sum(g));
+        }
+    }
+
+    #[test]
+    fn mutable_view_writes_through_strides() {
+        let mut data = vec![0.0f32; 6];
+        let mut v = GroupedViewMut::columns(&mut data, 2, 3);
+        v.for_each_in_group_mut(1, |x| *x = 7.0);
+        assert_eq!(data, vec![0.0, 7.0, 0.0, 0.0, 7.0, 0.0]);
+        let mut v = GroupedViewMut::new(&mut data, 2, 3);
+        v.fill(1.0);
+        assert!(data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn wrong_shape_panics() {
+        let data = [0.0f32; 5];
+        let _ = GroupedView::new(&data, 2, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "alias")]
+    fn aliasing_strides_panic() {
+        let data = [0.0f32; 12];
+        let _ = GroupedView::with_strides(&data, 4, 3, 2, 1); // overlapping rows
+    }
+}

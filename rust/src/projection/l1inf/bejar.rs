@@ -5,15 +5,84 @@
 //!
 //! Elimination bound: removing mass θ from a group lowers its max by at
 //! most θ, so `μ_g(θ) ≥ max(0, M_g − θ)` with `M_g = max_i Y[g,i]`. Hence
-//! `Φ(θ) ≥ Σ_g max(0, M_g − θ)` and the τ solving
+//! `Φ(θ) ≥ Σ_g max(0, M_g − τ)` and the τ solving
 //! `Σ_g max(0, M_g − τ) = C` (a plain simplex threshold on the max-vector)
 //! satisfies `Φ(τ) ≥ C`, i.e. `τ ≤ θ*` — a valid lower bound. Any group
 //! with total mass `‖y_g‖₁ ≤ τ` is dead at θ* as well and can be dropped
 //! before the expensive loop. (This reproduces the *effect* of the
 //! published preprocess; see DESIGN.md §3 on baseline re-implementations.)
+//!
+//! [`BejarSolver`] reuses the `|Y|` gather, the max-vector scratch and the
+//! alive-set buffer between calls; hints are ignored (same reasoning as
+//! [`super::naive`]).
 
-use super::{naive, SolveStats};
+use super::solver::{Solver, SolverScratch};
+use super::{naive, water_levels_into, Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
 use crate::projection::simplex;
+
+/// Workspace-owning Bejar solver (see [`super::solver`]).
+#[derive(Debug, Default)]
+pub struct BejarSolver {
+    ws: SolverScratch,
+    maxes32: Vec<f32>,
+    alive: Vec<u32>,
+}
+
+impl BejarSolver {
+    pub fn new() -> BejarSolver {
+        BejarSolver::default()
+    }
+}
+
+impl Solver for BejarSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Bejar
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        _hint: Option<f64>,
+        _group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let (n_groups, group_len) = (view.n_groups(), view.group_len());
+        view.gather_abs(&mut self.ws.abs);
+        // Elimination bound from the group-max vector (reused scratch).
+        self.maxes32.clear();
+        for g in 0..n_groups {
+            let grp = &self.ws.abs[g * group_len..(g + 1) * group_len];
+            self.maxes32.push(grp.iter().fold(0.0f32, |a, &b| a.max(b)));
+        }
+        let tau = simplex::threshold_condat(&self.maxes32, c).tau;
+        // Keep only groups that can survive at θ ≥ τ.
+        self.alive.clear();
+        for g in 0..n_groups {
+            let grp = &self.ws.abs[g * group_len..(g + 1) * group_len];
+            if simplex::positive_mass(grp) > tau {
+                self.alive.push(g as u32);
+            }
+        }
+        debug_assert!(!self.alive.is_empty(), "phi(tau) >= C > 0 implies survivors exist");
+        let survivors = self.alive.len();
+        let mut stats = naive::solve_on_subset(&self.ws.abs, group_len, &mut self.alive, tau, c);
+        stats.touched_groups = survivors;
+        stats
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        water_levels_into(&self.ws.abs, view.n_groups(), view.group_len(), theta, &mut self.ws.mus);
+    }
+}
 
 /// Lower bound τ ≤ θ* from the group-max vector (and the max vector itself).
 pub(crate) fn theta_lower_bound(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> f64 {
@@ -118,5 +187,23 @@ mod tests {
         }
         let st = solve(&abs, 100, 8, 0.5);
         assert!(st.touched_groups <= 5, "survivors={}", st.touched_groups);
+    }
+
+    #[test]
+    fn reused_solver_matches_free_function() {
+        let mut rng = Rng::new(8);
+        let mut solver = BejarSolver::new();
+        for (g, l) in [(20usize, 6usize), (7, 11), (20, 6)] {
+            let mut abs = vec![0.0f32; g * l];
+            rng.fill_uniform_f32(&mut abs);
+            let c = 0.25 * crate::projection::norm_l1inf(&abs, g, l);
+            if c <= 0.0 {
+                continue;
+            }
+            let free = solve(&abs, g, l, c);
+            let st = solver.solve(&GroupedView::new(&abs, g, l), c, None);
+            assert_eq!(free.theta.to_bits(), st.theta.to_bits(), "g={g} l={l}");
+            assert_eq!(free.touched_groups, st.touched_groups);
+        }
     }
 }

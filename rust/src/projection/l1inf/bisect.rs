@@ -12,10 +12,62 @@
 //!
 //! This is deliberately the *simplest possible correct* solver — it is the
 //! oracle every other implementation is property-tested against, not a
-//! competitor in the benchmarks.
+//! competitor in the benchmarks. [`BisectSolver`] wraps it in the reusable
+//! workspace (`|Y|` gather + water-level buffer); each Φ evaluation runs
+//! without materializing a level vector.
 
-use super::{phi, SolveStats};
+use super::solver::{Solver, SolverScratch};
+use super::{phi, water_levels_into, Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
 use crate::projection::simplex;
+
+/// Workspace-owning bisection solver (see [`super::solver`]).
+#[derive(Debug, Default)]
+pub struct BisectSolver {
+    ws: SolverScratch,
+}
+
+impl BisectSolver {
+    pub fn new() -> BisectSolver {
+        BisectSolver::default()
+    }
+}
+
+impl Solver for BisectSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Bisection
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        hint: Option<f64>,
+        group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let (n_groups, group_len) = (view.n_groups(), view.group_len());
+        view.gather_abs(&mut self.ws.abs);
+        // Upper bracket end Φ(max_g S_g) = 0: from the seeded masses when
+        // available, otherwise one scan (identical accumulation order).
+        let hi = match group_sums {
+            Some(s) => s.iter().cloned().fold(0.0f64, f64::max),
+            None => (0..n_groups).map(|g| view.group_abs_sum(g)).fold(0.0f64, f64::max),
+        };
+        solve_bracketed(&self.ws.abs, n_groups, group_len, c, hint, hi)
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        water_levels_into(&self.ws.abs, view.n_groups(), view.group_len(), theta, &mut self.ws.mus);
+    }
+}
 
 /// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
 pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
@@ -33,12 +85,25 @@ pub fn solve_hinted(
     c: f64,
     hint: Option<f64>,
 ) -> SolveStats {
-    debug_assert!(c > 0.0);
     // Bracket: Φ(0) = Σ max > C; Φ(max_g S_g) = 0 < C.
-    let mut lo = 0.0f64;
-    let mut hi = (0..n_groups)
+    let hi = (0..n_groups)
         .map(|g| abs[g * group_len..(g + 1) * group_len].iter().map(|&v| v as f64).sum::<f64>())
         .fold(0.0f64, f64::max);
+    solve_bracketed(abs, n_groups, group_len, c, hint, hi)
+}
+
+/// Bisection given the upper bracket end (shared by the free functions and
+/// the workspace solver, which gets `hi` from precomputed group masses).
+fn solve_bracketed(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    hint: Option<f64>,
+    mut hi: f64,
+) -> SolveStats {
+    debug_assert!(c > 0.0);
+    let mut lo = 0.0f64;
     let mut evals = 0usize;
     let mut used_hint = None;
     if let Some(h) = hint {
@@ -163,5 +228,20 @@ mod tests {
         let st = solve(&abs, 2, 2, 0.5);
         // tiny group mass 0.01 <= theta -> dead
         assert!(st.theta >= 0.01, "{st:?}");
+    }
+
+    #[test]
+    fn solver_struct_matches_free_function() {
+        let abs = [0.9f32, 0.9, 0.2, 0.7, 0.3, 0.3, 0.05, 0.0, 0.0];
+        let mut solver = BisectSolver::new();
+        for c in [0.1, 0.5, 1.0, 1.5] {
+            let free = solve(&abs, 3, 3, c);
+            let st = solver.solve(&GroupedView::new(&abs, 3, 3), c, None);
+            assert_eq!(free.theta.to_bits(), st.theta.to_bits(), "c={c}");
+            assert_eq!(free.work, st.work);
+            let mus = solver.water_levels();
+            let expect = crate::projection::l1inf::water_levels(&abs, 3, 3, st.theta);
+            assert_eq!(mus, &expect[..], "c={c}");
+        }
     }
 }

@@ -30,8 +30,22 @@
 //! Worst-case complexity `O(nm + J log(nm))`: `O(m)` global heapify +
 //! `O(p_g)` lazy heapify per *touched* group + `O(log n + log m)` per
 //! consumed breakpoint.
+//!
+//! # Workspace
+//!
+//! [`InverseOrderSolver`] owns the global heap, one `Slot` (lazy
+//! min-heap + sweep counters) per group, the touched-group list, the
+//! per-group gather scratch and the water-level buffer. After the first
+//! solve of a shape, repeated solves allocate **nothing**: heaps are
+//! rebuilt in place via `take → into_vec → clear → heapify`, which keeps
+//! the `O(p)` heapify *and* the backing allocation. The water-level
+//! handoff reads μ straight off the final sweep state — `O(touched)`,
+//! untouched groups are provably dead — instead of an `O(nm)` Condat
+//! re-pass (the perf-critical difference with [`super::water_levels`]).
 
-use super::SolveStats;
+use super::solver::{Solver, SolverScratch};
+use super::{Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
 use crate::projection::simplex;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -66,14 +80,288 @@ impl Ord for Ord32 {
     }
 }
 
-/// Lazily-created state of a touched (activated) group.
-struct GroupState {
-    /// Min-heap over the *selected* values (smallest on top).
+/// Reusable sweep state of one group: lazy min-heap over the *selected*
+/// values (smallest on top), the selected count `k` and sum `S_k`, and
+/// whether the group has been activated in the current solve.
+#[derive(Debug, Default)]
+struct Slot {
     heap: BinaryHeap<Reverse<Ord32>>,
-    /// Number of currently selected values (k).
     k: usize,
-    /// Sum of the selected values (S_k).
     ssel: f64,
+    active: bool,
+}
+
+/// Workspace-owning inverse-total-order solver (see [`super::solver`] for
+/// the lifecycle and hint contract, and the module docs for the scratch
+/// layout).
+#[derive(Debug, Default)]
+pub struct InverseOrderSolver {
+    ws: SolverScratch,
+    /// Global max-heap over the next breakpoint of each live group.
+    global: BinaryHeap<(Ord64, u32)>,
+    /// One reusable sweep slot per group (never shrinks).
+    slots: Vec<Slot>,
+    /// Groups activated by the current solve (reset list for the next one).
+    touched: Vec<u32>,
+    /// `|group|` gather used by the warm-start seeding pass.
+    grp_scratch: Vec<f32>,
+}
+
+impl InverseOrderSolver {
+    pub fn new() -> InverseOrderSolver {
+        InverseOrderSolver::default()
+    }
+
+    /// Clear the previous solve's sweep state (O(touched), keeps every
+    /// allocation).
+    fn reset(&mut self) {
+        for &g in &self.touched {
+            let s = &mut self.slots[g as usize];
+            s.heap.clear();
+            s.k = 0;
+            s.ssel = 0.0;
+            s.active = false;
+        }
+        self.touched.clear();
+        self.global.clear();
+    }
+}
+
+impl Solver for InverseOrderSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::InverseOrder
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn workspace_elems(&self) -> usize {
+        let ws = &self.ws;
+        let mut elems = ws.abs.capacity()
+            + 2 * (ws.maxes.capacity() + ws.sums.capacity() + ws.mus.capacity())
+            + 3 * self.global.capacity()
+            + self.grp_scratch.capacity()
+            + self.touched.capacity();
+        // Slot headers (~40 B each) plus every lazily-built heap buffer.
+        elems += 10 * self.slots.capacity();
+        for s in &self.slots {
+            elems += s.heap.capacity();
+        }
+        elems
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        // Water levels straight from the sweep state: untouched ⇒ dead.
+        // O(touched) — no Condat re-pass (the perf-critical difference with
+        // the generic solvers' fill).
+        let n_groups = view.n_groups();
+        self.ws.mus.clear();
+        self.ws.mus.resize(n_groups, 0.0);
+        for (g, slot) in self.slots[..n_groups].iter().enumerate() {
+            if slot.active {
+                self.ws.mus[g] = ((slot.ssel - theta) / slot.k as f64).max(0.0);
+            }
+        }
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        hint: Option<f64>,
+        group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        debug_assert!(c > 0.0);
+        let n_groups = view.n_groups();
+        self.reset();
+        if self.slots.len() < n_groups {
+            self.slots.resize_with(n_groups, Slot::default);
+        }
+
+        // Per-group ℓ₁ masses (death thresholds): borrowed from the caller
+        // or computed into the (temporarily detached) scratch buffer.
+        let mut owned_sums = std::mem::take(&mut self.ws.sums);
+        if group_sums.is_none() {
+            owned_sums.clear();
+            owned_sums.reserve(n_groups);
+            for g in 0..n_groups {
+                owned_sums.push(view.group_abs_sum(g));
+            }
+        }
+        let sums: &[f64] = match group_sums {
+            Some(s) => {
+                debug_assert_eq!(s.len(), n_groups);
+                s
+            }
+            None => &owned_sums,
+        };
+
+        let mut t1 = 0.0f64; // Σ_A S_{k_g}/k_g   (incremental)
+        let mut t2 = 0.0f64; // Σ_A 1/k_g         (incremental)
+        let mut used_hint: Option<f64> = None;
+
+        if let Some(h) = hint.filter(|h| h.is_finite() && *h > 0.0) {
+            // Build the sweep state at θ = h directly into the slots;
+            // commit only if the hint is at or above θ* (Φ(h) ≤ C), else
+            // roll back and go cold.
+            let mut phi_h = 0.0f64;
+            let mut seed_ok = true;
+            for (g, &sum) in sums.iter().enumerate() {
+                if sum <= 0.0 {
+                    continue;
+                }
+                if sum <= h {
+                    // Dead at θ = h; activates if the sweep descends past `sum`.
+                    self.global.push((Ord64(sum), g as u32));
+                    continue;
+                }
+                // Active at θ = h: water level via one Condat pass, selected
+                // set = values strictly above it (exactly the sweep invariant).
+                view.gather_group_abs(g, &mut self.grp_scratch);
+                let mu = simplex::water_level_for_removed_mass(&self.grp_scratch, h).tau;
+                let slot = &mut self.slots[g];
+                let mut vals = std::mem::take(&mut slot.heap).into_vec();
+                vals.clear();
+                let mut ssel = 0.0f64;
+                if mu > 0.0 {
+                    for &v in &self.grp_scratch {
+                        if (v as f64) > mu {
+                            vals.push(Reverse(Ord32(v)));
+                            ssel += v as f64;
+                        }
+                    }
+                }
+                let k = vals.len();
+                if k == 0 {
+                    // FP corner (a caller-supplied group sum disagreeing with
+                    // Condat about mass > h): mixing pieces at different θ
+                    // would corrupt the sweep invariant — abandon the warm path.
+                    slot.heap = BinaryHeap::from(vals); // hand the buffer back
+                    seed_ok = false;
+                    break;
+                }
+                phi_h += (ssel - h) / k as f64;
+                t1 += ssel / k as f64;
+                t2 += 1.0 / k as f64;
+                slot.heap = BinaryHeap::from(vals);
+                slot.k = k;
+                slot.ssel = ssel;
+                slot.active = true;
+                self.touched.push(g as u32);
+                if k >= 2 {
+                    let z = slot.heap.peek().unwrap().0 .0 as f64;
+                    self.global.push((Ord64(ssel - k as f64 * z), g as u32));
+                }
+            }
+            if seed_ok && phi_h <= c * (1.0 + 1e-12) {
+                used_hint = Some(h);
+            } else {
+                // Discard the partial warm state; fall through to cold.
+                self.reset();
+                t1 = 0.0;
+                t2 = 0.0;
+            }
+        }
+
+        if used_hint.is_none() {
+            // Cold start: seed the global max-heap with every nonzero group's
+            // death threshold (its ℓ₁ mass — the group's largest breakpoint).
+            for (g, &sum) in sums.iter().enumerate() {
+                if sum > 0.0 {
+                    self.global.push((Ord64(sum), g as u32));
+                }
+            }
+            debug_assert!(!self.global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
+        }
+
+        let mut consumed = 0usize;
+        loop {
+            let (b, g) = match self.global.peek() {
+                Some(&(Ord64(b), g)) => (b, g),
+                // Breakpoints exhausted: every touched group sits at its
+                // k = 1 piece — the dense regime.
+                None => break,
+            };
+            // Stop check BEFORE applying the transition: the current state is
+            // valid on [b, previous breakpoint); by induction θ̂ < previous
+            // breakpoint, so θ̂ ≥ b pins the root to this interval exactly.
+            if t2 > 0.0 {
+                let theta = (t1 - c) / t2;
+                if theta >= b {
+                    break;
+                }
+            }
+            self.global.pop();
+            consumed += 1;
+            let gi = g as usize;
+            if !self.slots[gi].active {
+                // Activation: the group is alive for θ just below its death
+                // threshold with every positive entry selected. The heap's
+                // previous backing buffer is reused (O(p) heapify, lazy by
+                // design, allocation-free in steady state).
+                let mut vals = std::mem::take(&mut self.slots[gi].heap).into_vec();
+                vals.clear();
+                let mut ssel = 0.0f64;
+                view.for_each_in_group(gi, |v| {
+                    let a = v.abs();
+                    if a > 0.0 {
+                        vals.push(Reverse(Ord32(a)));
+                        ssel += a as f64;
+                    }
+                });
+                let heap = BinaryHeap::from(vals);
+                let k = heap.len();
+                t1 += ssel / k as f64;
+                t2 += 1.0 / k as f64;
+                let slot = &mut self.slots[gi];
+                slot.heap = heap;
+                slot.k = k;
+                slot.ssel = ssel;
+                slot.active = true;
+                self.touched.push(g);
+                if k >= 2 {
+                    let z = slot.heap.peek().unwrap().0 .0 as f64;
+                    self.global.push((Ord64(ssel - k as f64 * z), g));
+                }
+            } else {
+                // Crossing r_{k−1}: the smallest selected value leaves the
+                // selected set as θ decreases (water level μ_g rises).
+                let slot = &mut self.slots[gi];
+                let Reverse(Ord32(z)) = slot.heap.pop().expect("breakpoint implies k >= 2");
+                let (old_k, old_ssel) = (slot.k, slot.ssel);
+                slot.k -= 1;
+                slot.ssel -= z as f64;
+                t1 += slot.ssel / slot.k as f64 - old_ssel / old_k as f64;
+                t2 += 1.0 / slot.k as f64 - 1.0 / old_k as f64;
+                if slot.k >= 2 {
+                    let z2 = slot.heap.peek().unwrap().0 .0 as f64;
+                    self.global.push((Ord64(slot.ssel - slot.k as f64 * z2), g));
+                }
+            }
+        }
+
+        // Exact O(touched) recompute of Eq. 19 — removes the drift the
+        // incremental T1/T2 updates accumulate over long sweeps.
+        let mut e1 = 0.0f64;
+        let mut e2 = 0.0f64;
+        for slot in self.slots[..n_groups].iter().filter(|s| s.active) {
+            e1 += slot.ssel / slot.k as f64;
+            e2 += 1.0 / slot.k as f64;
+        }
+        let theta = (e1 - c) / e2;
+        self.ws.sums = owned_sums;
+        SolveStats {
+            theta,
+            work: consumed,
+            touched_groups: self.touched.len(),
+            theta_hint: used_hint,
+        }
+    }
 }
 
 /// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
@@ -85,10 +373,6 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
 /// the solver's own final state: untouched groups are *provably dead*
 /// (their death breakpoint lies below θ*) so μ = 0 without ever scanning
 /// them, and touched groups yield `μ = (S_k − θ*)/k` in O(1).
-///
-/// This is the perf-critical difference with the generic
-/// [`super::water_levels`] recomputation, which costs a full `O(nm)`
-/// Condat pass regardless of sparsity — see EXPERIMENTS.md §Perf.
 pub fn solve_with_levels(
     abs: &[f32],
     n_groups: usize,
@@ -111,11 +395,12 @@ pub fn solve_signed_with_levels(
     solve_signed_full(data, n_groups, group_len, c, None, None)
 }
 
-/// The full-control entry point behind every other `solve*` in this module:
+/// The full-control free-function entry point (one-shot wrapper over
+/// [`InverseOrderSolver`]):
 ///
 /// - `group_sums`: per-group ℓ₁ masses, if the caller already has them
 ///   (the parallel [`crate::serve::batch::BatchProjector`] computes them in
-///   its sharded first pass) — skips this function's own O(nm) seeding scan.
+///   its sharded first pass) — skips the solver's own O(nm) seeding scan.
 /// - `theta_hint`: warm-start guess (last SGD step's θ*). The descending
 ///   sweep is *entered in the middle*: every group is classified against
 ///   the hint in one pass, active groups get their sweep state built
@@ -134,189 +419,15 @@ pub fn solve_signed_full(
     group_sums: Option<&[f64]>,
     theta_hint: Option<f64>,
 ) -> (SolveStats, Vec<f64>) {
-    debug_assert!(c > 0.0);
-    // Per-group ℓ₁ masses (death thresholds): borrowed or computed here.
-    let owned_sums: Vec<f64>;
-    let sums: &[f64] = match group_sums {
-        Some(s) => {
-            debug_assert_eq!(s.len(), n_groups);
-            s
-        }
-        None => {
-            owned_sums = (0..n_groups)
-                .map(|g| {
-                    data[g * group_len..(g + 1) * group_len]
-                        .iter()
-                        .map(|&v| v.abs() as f64)
-                        .sum()
-                })
-                .collect();
-            &owned_sums
-        }
-    };
-
-    let mut global: BinaryHeap<(Ord64, u32)> = BinaryHeap::with_capacity(n_groups);
-    let mut states: Vec<Option<GroupState>> = Vec::new();
-    states.resize_with(n_groups, || None);
-    let mut t1 = 0.0f64; // Σ_A S_{k_g}/k_g   (incremental)
-    let mut t2 = 0.0f64; // Σ_A 1/k_g         (incremental)
-    let mut touched = 0usize;
-    let mut used_hint: Option<f64> = None;
-
-    if let Some(h) = theta_hint.filter(|h| h.is_finite() && *h > 0.0) {
-        // Build the sweep state at θ = h into temporaries; commit only if
-        // the hint is at or above θ* (Φ(h) ≤ C), else discard and go cold.
-        let mut w_states: Vec<(u32, GroupState)> = Vec::new();
-        let mut w_heap: Vec<(Ord64, u32)> = Vec::new();
-        let mut w_t1 = 0.0f64;
-        let mut w_t2 = 0.0f64;
-        let mut phi_h = 0.0f64;
-        let mut seed_ok = true;
-        for (g, &sum) in sums.iter().enumerate() {
-            if sum <= 0.0 {
-                continue;
-            }
-            if sum <= h {
-                // Dead at θ = h; activates if the sweep descends past `sum`.
-                w_heap.push((Ord64(sum), g as u32));
-                continue;
-            }
-            // Active at θ = h: water level via one Condat pass, selected
-            // set = values strictly above it (exactly the sweep invariant).
-            let grp = &data[g * group_len..(g + 1) * group_len];
-            let abs: Vec<f32> = grp.iter().map(|v| v.abs()).collect();
-            let mu = simplex::water_level_for_removed_mass(&abs, h).tau;
-            let mut vals: Vec<Reverse<Ord32>> = Vec::new();
-            let mut ssel = 0.0f64;
-            if mu > 0.0 {
-                for &v in &abs {
-                    if (v as f64) > mu {
-                        vals.push(Reverse(Ord32(v)));
-                        ssel += v as f64;
-                    }
-                }
-            }
-            let k = vals.len();
-            if k == 0 {
-                // FP corner (a caller-supplied group sum disagreeing with
-                // Condat about mass > h): mixing pieces at different θ
-                // would corrupt the sweep invariant — abandon the warm path.
-                seed_ok = false;
-                break;
-            }
-            phi_h += (ssel - h) / k as f64;
-            w_t1 += ssel / k as f64;
-            w_t2 += 1.0 / k as f64;
-            let heap = BinaryHeap::from(vals);
-            if k >= 2 {
-                let z = heap.peek().unwrap().0 .0 as f64;
-                w_heap.push((Ord64(ssel - k as f64 * z), g as u32));
-            }
-            w_states.push((g as u32, GroupState { heap, k, ssel }));
-        }
-        if seed_ok && phi_h <= c * (1.0 + 1e-12) {
-            for (g, st) in w_states {
-                states[g as usize] = Some(st);
-                touched += 1;
-            }
-            global = BinaryHeap::from(w_heap);
-            t1 = w_t1;
-            t2 = w_t2;
-            used_hint = Some(h);
-        }
-    }
-
-    if used_hint.is_none() {
-        // Cold start: seed the global max-heap with every nonzero group's
-        // death threshold (its ℓ₁ mass — the group's largest breakpoint).
-        global.clear();
-        for (g, &sum) in sums.iter().enumerate() {
-            if sum > 0.0 {
-                global.push((Ord64(sum), g as u32));
-            }
-        }
-        debug_assert!(!global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
-    }
-
-    let mut consumed = 0usize;
-
-    let finalize = |states: &[Option<GroupState>], consumed: usize, touched: usize| {
-        // Exact O(touched) recompute of Eq. 19 — removes the drift the
-        // incremental T1/T2 updates accumulate over long sweeps.
-        let mut e1 = 0.0f64;
-        let mut e2 = 0.0f64;
-        for st in states.iter().flatten() {
-            e1 += st.ssel / st.k as f64;
-            e2 += 1.0 / st.k as f64;
-        }
-        let theta = (e1 - c) / e2;
-        // Water levels straight from the sweep state: untouched ⇒ dead.
-        let mut mus = vec![0.0f64; states.len()];
-        for (g, st) in states.iter().enumerate() {
-            if let Some(st) = st {
-                mus[g] = ((st.ssel - theta) / st.k as f64).max(0.0);
-            }
-        }
-        (SolveStats { theta, work: consumed, touched_groups: touched, theta_hint: used_hint }, mus)
-    };
-
-    while let Some(&(Ord64(b), g)) = global.peek() {
-        // Stop check BEFORE applying the transition: the current state is
-        // valid on [b, previous breakpoint); by induction θ̂ < previous
-        // breakpoint, so θ̂ ≥ b pins the root to this interval exactly.
-        if t2 > 0.0 {
-            let theta = (t1 - c) / t2;
-            if theta >= b {
-                return finalize(&states, consumed, touched);
-            }
-        }
-        global.pop();
-        consumed += 1;
-        let gi = g as usize;
-        match &mut states[gi] {
-            slot @ None => {
-                // Activation: the group is alive for θ just below its death
-                // threshold with every positive entry selected.
-                let grp = &data[gi * group_len..(gi + 1) * group_len];
-                let mut vals: Vec<Reverse<Ord32>> = Vec::with_capacity(grp.len());
-                let mut ssel = 0.0f64;
-                for &v in grp {
-                    let v = v.abs();
-                    if v > 0.0 {
-                        vals.push(Reverse(Ord32(v)));
-                        ssel += v as f64;
-                    }
-                }
-                let heap = BinaryHeap::from(vals); // O(p) heapify, lazy by design
-                let k = heap.len();
-                t1 += ssel / k as f64;
-                t2 += 1.0 / k as f64;
-                touched += 1;
-                if k >= 2 {
-                    let z = heap.peek().unwrap().0 .0 as f64;
-                    global.push((Ord64(ssel - k as f64 * z), g));
-                }
-                *slot = Some(GroupState { heap, k, ssel });
-            }
-            Some(st) => {
-                // Crossing r_{k−1}: the smallest selected value leaves the
-                // selected set as θ decreases (water level μ_g rises).
-                let Reverse(Ord32(z)) = st.heap.pop().expect("breakpoint implies k >= 2");
-                let (old_k, old_ssel) = (st.k, st.ssel);
-                st.k -= 1;
-                st.ssel -= z as f64;
-                t1 += st.ssel / st.k as f64 - old_ssel / old_k as f64;
-                t2 += 1.0 / st.k as f64 - 1.0 / old_k as f64;
-                if st.k >= 2 {
-                    let z2 = st.heap.peek().unwrap().0 .0 as f64;
-                    global.push((Ord64(st.ssel - st.k as f64 * z2), g));
-                }
-            }
-        }
-    }
-    // Breakpoints exhausted: every touched group sits at its k = 1 piece
-    // (θ below all growth breakpoints) — the dense regime.
-    finalize(&states, consumed, touched)
+    let mut solver = InverseOrderSolver::new();
+    let stats = solver.solve_seeded(
+        &GroupedView::new(data, n_groups, group_len),
+        c,
+        theta_hint,
+        group_sums,
+    );
+    let mus = std::mem::take(&mut solver.ws.mus);
+    (stats, mus)
 }
 
 #[cfg(test)]
@@ -476,5 +587,35 @@ mod tests {
         assert!((gold.theta - got.theta).abs() < 1e-6 * gold.theta.max(1.0));
         // Laziness: far fewer touched groups than total.
         assert!(got.touched_groups < n_groups / 4, "touched={}", got.touched_groups);
+    }
+
+    #[test]
+    fn reused_workspace_is_bit_identical_across_shapes_and_hints() {
+        let mut rng = Rng::new(0x10);
+        let mut solver = InverseOrderSolver::new();
+        // Alternate shapes and warm/cold solves through ONE workspace; every
+        // result must match a fresh solver bit for bit (no stale state).
+        for (g, l) in [(50usize, 12usize), (9, 40), (50, 12), (3, 5)] {
+            let mut data = vec![0.0f32; g * l];
+            for v in data.iter_mut() {
+                *v = (rng.f32() - 0.5) * 2.0;
+            }
+            let c = 0.3 * crate::projection::norm_l1inf(&data, g, l);
+            if c <= 0.0 {
+                continue;
+            }
+            let (fresh, fresh_mus) = solve_signed_full(&data, g, l, c, None, None);
+            let view = GroupedView::new(&data, g, l);
+            let reused = solver.solve_seeded(&view, c, None, None);
+            assert_eq!(fresh.theta.to_bits(), reused.theta.to_bits(), "g={g} l={l}");
+            assert_eq!(fresh.work, reused.work);
+            assert_eq!(fresh.touched_groups, reused.touched_groups);
+            assert_eq!(&fresh_mus[..], solver.water_levels(), "g={g} l={l}");
+            // Warm solve through the same workspace agrees with a fresh warm solve.
+            let (fresh_warm, _) = solve_signed_full(&data, g, l, c, None, Some(fresh.theta));
+            let reused_warm = solver.solve_seeded(&view, c, Some(fresh.theta), None);
+            assert_eq!(fresh_warm.theta.to_bits(), reused_warm.theta.to_bits());
+            assert_eq!(fresh_warm.work, reused_warm.work);
+        }
     }
 }

@@ -32,28 +32,56 @@ pub struct SortedGroups {
 impl SortedGroups {
     /// Sort every group descending and precompute prefix sums. `O(nm log n)`.
     pub fn new(abs: &[f32], n_groups: usize, group_len: usize) -> Self {
+        let mut sg = SortedGroups::empty();
+        sg.recompute(abs, n_groups, group_len);
+        sg
+    }
+
+    /// An unsized, unallocated instance — the reusable-workspace starting
+    /// point for [`SortedGroups::recompute`].
+    pub fn empty() -> Self {
+        SortedGroups {
+            n_groups: 0,
+            group_len: 0,
+            z: Vec::new(),
+            s: Vec::new(),
+            pos_count: Vec::new(),
+            full_sum: Vec::new(),
+        }
+    }
+
+    /// Rebuild the sorted representation for new data **reusing every
+    /// buffer** (allocation-free once capacities cover the shape). Same
+    /// sort and accumulation order as [`SortedGroups::new`], so the two
+    /// paths are bit-identical.
+    pub fn recompute(&mut self, abs: &[f32], n_groups: usize, group_len: usize) {
         debug_assert_eq!(abs.len(), n_groups * group_len);
-        let mut z = abs.to_vec();
-        let mut s = vec![0.0f64; abs.len()];
-        let mut pos_count = vec![0usize; n_groups];
-        let mut full_sum = vec![0.0f64; n_groups];
+        self.n_groups = n_groups;
+        self.group_len = group_len;
+        self.z.clear();
+        self.z.extend_from_slice(abs);
+        self.s.clear();
+        self.s.resize(abs.len(), 0.0);
+        self.pos_count.clear();
+        self.pos_count.resize(n_groups, 0);
+        self.full_sum.clear();
+        self.full_sum.resize(n_groups, 0.0);
         for g in 0..n_groups {
-            let grp = &mut z[g * group_len..(g + 1) * group_len];
+            let grp = &mut self.z[g * group_len..(g + 1) * group_len];
             grp.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
             let mut cum = 0.0f64;
             let mut p = 0usize;
             for (i, &v) in grp.iter().enumerate() {
                 debug_assert!(v >= 0.0, "SortedGroups expects nonnegative data");
                 cum += v as f64;
-                s[g * group_len + i] = cum;
+                self.s[g * group_len + i] = cum;
                 if v > 0.0 {
                     p = i + 1;
                 }
             }
-            pos_count[g] = p;
-            full_sum[g] = cum;
+            self.pos_count[g] = p;
+            self.full_sum[g] = cum;
         }
-        SortedGroups { n_groups, group_len, z, s, pos_count, full_sum }
     }
 
     /// k-th largest value of group `g` (1-based); 0.0 beyond the group.

@@ -15,14 +15,26 @@
 //! decreasing until it hits 0, so `θ*` is the unique root of `Φ(θ) = C`.
 //! The six solvers differ only in how they locate that root:
 //!
-//! | [`Algorithm`] variant | module | paper reference | complexity |
+//! | [`Algorithm`] variant | solver struct | paper reference | complexity |
 //! |---|---|---|---|
-//! | `Bisection`    | [`bisect`]        | (test oracle)            | `O(nm · iters)` |
-//! | `Quattoni`     | [`quattoni`]      | Quattoni et al. 2009     | `O(nm log nm)` |
-//! | `Naive`        | [`naive`]         | Alg. 1 / Bejar et al.    | `O(n²m·P)` worst |
-//! | `Bejar`        | [`bejar`]         | Bejar et al. 2021        | elimination + Alg. 1 |
-//! | `Newton`       | [`newton`]        | Chu et al. 2020          | `O(nm log n + m·iters)` |
-//! | `InverseOrder` | [`inverse_order`] | **this paper's Alg. 2**  | `O(nm + J log nm)` |
+//! | `Bisection`    | [`bisect::BisectSolver`]              | (test oracle)        | `O(nm · iters)` |
+//! | `Quattoni`     | [`quattoni::QuattoniSolver`]          | Quattoni et al. 2009 | `O(nm log nm)` |
+//! | `Naive`        | [`naive::NaiveSolver`]                | Alg. 1 / Bejar et al.| `O(n²m·P)` worst |
+//! | `Bejar`        | [`bejar::BejarSolver`]                | Bejar et al. 2021    | elimination + Alg. 1 |
+//! | `Newton`       | [`newton::NewtonSolver`]              | Chu et al. 2020      | `O(nm log n + m·iters)` |
+//! | `InverseOrder` | [`inverse_order::InverseOrderSolver`] | **this paper's Alg. 2** | `O(nm + J log nm)` |
+//!
+//! # Two API layers
+//!
+//! - **Workspace layer** (preferred for hot loops): a [`Solver`] struct
+//!   owns every scratch buffer and is reused across calls —
+//!   allocation-free in steady state — over [`GroupedView`] /
+//!   [`GroupedViewMut`] shapes (contiguous rows or strided columns). See
+//!   [`solver`] for the lifecycle and hint contract.
+//! - **Free functions** ([`project_l1inf`], [`solve_theta`],
+//!   [`solve_theta_hinted`]): thin wrappers that build a fresh solver per
+//!   call. One-shot convenience with exactly the workspace layer's
+//!   numerics.
 
 pub mod bejar;
 pub mod bisect;
@@ -31,7 +43,11 @@ pub mod kernels;
 pub mod naive;
 pub mod newton;
 pub mod quattoni;
+pub mod solver;
 
+pub use solver::{new_solver, project_with, Solver, SolverPool, SolverScratch};
+
+use super::grouped::{GroupedView, GroupedViewMut};
 use super::simplex;
 
 /// Which root-finding algorithm to use.
@@ -137,6 +153,7 @@ pub fn solve_theta(abs: &[f32], n_groups: usize, group_len: usize, c: f64, algo:
 /// path when the hint is unusable, so any finite nonnegative value is safe.
 /// `Quattoni`, `Naive` and `Bejar` ignore hints (their sweeps/fixed points
 /// have no cheap entry point mid-order) — they stay bit-identical to cold.
+/// (See [`solver`] for the full hint contract.)
 pub fn solve_theta_hinted(
     abs: &[f32],
     n_groups: usize,
@@ -145,41 +162,63 @@ pub fn solve_theta_hinted(
     algo: Algorithm,
     theta_hint: Option<f64>,
 ) -> SolveStats {
-    match algo {
-        Algorithm::Bisection => bisect::solve_hinted(abs, n_groups, group_len, c, theta_hint),
-        Algorithm::Quattoni => quattoni::solve(abs, n_groups, group_len, c),
-        Algorithm::Naive => naive::solve(abs, n_groups, group_len, c),
-        Algorithm::Bejar => bejar::solve(abs, n_groups, group_len, c),
-        Algorithm::Newton => newton::solve_hinted(abs, n_groups, group_len, c, theta_hint),
-        Algorithm::InverseOrder => {
-            inverse_order::solve_signed_full(abs, n_groups, group_len, c, None, theta_hint).0
-        }
+    // θ-only: skips the water-level fill, like the seed free functions did
+    // (solve-only ablation benches time exactly this).
+    let mut s = new_solver(algo);
+    s.solve_theta_seeded(&GroupedView::new(abs, n_groups, group_len), c, theta_hint, None)
+}
+
+/// Per-group water levels μ_g(θ) for nonnegative data (Proposition 1),
+/// written into `out` (cleared first). Allocation-free when `out` has
+/// capacity — the form every solver workspace uses internally.
+pub fn water_levels_into(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    theta: f64,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    out.reserve(n_groups);
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        out.push(if simplex::positive_mass(grp) <= theta {
+            0.0
+        } else {
+            simplex::water_level_for_removed_mass(grp, theta).tau
+        });
     }
 }
 
 /// Per-group water levels μ_g(θ) for nonnegative data (Proposition 1).
 pub fn water_levels(abs: &[f32], n_groups: usize, group_len: usize, theta: f64) -> Vec<f64> {
-    (0..n_groups)
-        .map(|g| {
-            let grp = &abs[g * group_len..(g + 1) * group_len];
-            if simplex::positive_mass(grp) <= theta {
-                0.0
-            } else {
-                simplex::water_level_for_removed_mass(grp, theta).tau
-            }
-        })
-        .collect()
+    let mut out = Vec::with_capacity(n_groups);
+    water_levels_into(abs, n_groups, group_len, theta, &mut out);
+    out
 }
 
-/// `Φ(θ) = Σ_g μ_g(θ)` — the root function all solvers target.
+/// `Φ(θ) = Σ_g μ_g(θ)` — the root function all solvers target. Accumulates
+/// in group order (identical FP order to summing [`water_levels`]) without
+/// materializing the levels.
 pub fn phi(abs: &[f32], n_groups: usize, group_len: usize, theta: f64) -> f64 {
-    water_levels(abs, n_groups, group_len, theta).iter().sum()
+    let mut p = 0.0f64;
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        if simplex::positive_mass(grp) > theta {
+            p += simplex::water_level_for_removed_mass(grp, theta).tau;
+        }
+    }
+    p
 }
 
 /// Project a signed grouped matrix onto `B₁,∞^C` **in place**.
 ///
 /// `data` holds `n_groups` contiguous groups of `group_len` entries.
 /// Returns projection metadata including the dual θ* and sparsity info.
+///
+/// One-shot wrapper: builds a fresh [`Solver`] per call. Hot loops should
+/// hold a solver (or a [`SolverPool`]) and call [`project_with`] instead —
+/// same numerics, no per-call allocation.
 pub fn project_l1inf(
     data: &mut [f32],
     n_groups: usize,
@@ -199,63 +238,8 @@ pub fn project_l1inf_with_hint(
     algo: Algorithm,
     theta_hint: Option<f64>,
 ) -> ProjInfo {
-    assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
-    assert!(c >= 0.0, "radius must be nonnegative");
-    let radius_before = super::norm_l1inf(data, n_groups, group_len);
-
-    // Already inside the ball: the projection is the identity (Eq. 8 note).
-    if radius_before <= c {
-        let zero_groups = (0..n_groups)
-            .filter(|&g| data[g * group_len..(g + 1) * group_len].iter().all(|&x| x == 0.0))
-            .count();
-        return ProjInfo {
-            radius_before,
-            radius_after: radius_before,
-            theta: 0.0,
-            zero_groups,
-            feasible: true,
-            stats: SolveStats::default(),
-        };
-    }
-    // Degenerate radius: the ball is {0}.
-    if c == 0.0 {
-        data.fill(0.0);
-        return ProjInfo {
-            radius_before,
-            radius_after: 0.0,
-            theta: radius_before, // limit interpretation
-            zero_groups: n_groups,
-            feasible: false,
-            stats: SolveStats::default(),
-        };
-    }
-
-    // Perf (EXPERIMENTS.md §Perf): the inverse-order solver (a) hands back
-    // the water levels from its own sweep state — O(touched) instead of an
-    // O(nm) Condat re-pass over every group — and (b) takes signed data
-    // directly, so no |Y| copy is materialized at all.
-    let (stats, mus) = match algo {
-        Algorithm::InverseOrder => {
-            inverse_order::solve_signed_full(data, n_groups, group_len, c, None, theta_hint)
-        }
-        _ => {
-            let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
-            let stats = solve_theta_hinted(&abs, n_groups, group_len, c, algo, theta_hint);
-            (stats, water_levels(&abs, n_groups, group_len, stats.theta))
-        }
-    };
-    apply_water_levels(data, n_groups, group_len, &mus);
-
-    let radius_after = super::norm_l1inf(data, n_groups, group_len);
-    let zero_groups = mus.iter().filter(|&&m| m <= 0.0).count();
-    ProjInfo {
-        radius_before,
-        radius_after,
-        theta: stats.theta,
-        zero_groups,
-        feasible: false,
-        stats,
-    }
+    let mut s = new_solver(algo);
+    project_with(&mut *s, &mut GroupedViewMut::new(data, n_groups, group_len), c, theta_hint)
 }
 
 /// Clip each signed group at its water level: `X = sign(Y)·min(|Y|, μ_g)`.
@@ -273,6 +257,24 @@ pub fn apply_water_levels(data: &mut [f32], n_groups: usize, group_len: usize, m
                     *v = if *v >= 0.0 { mu } else { -mu };
                 }
             }
+        }
+    }
+}
+
+/// [`apply_water_levels`] through a (possibly strided) mutable view.
+pub fn apply_water_levels_view(view: &mut GroupedViewMut<'_>, mus: &[f64]) {
+    debug_assert_eq!(mus.len(), view.n_groups());
+    for g in 0..view.n_groups() {
+        let mu = mus[g] as f32;
+        if mu <= 0.0 {
+            view.for_each_in_group_mut(g, |v| *v = 0.0);
+        } else {
+            view.for_each_in_group_mut(g, |v| {
+                let a = v.abs();
+                if a > mu {
+                    *v = if *v >= 0.0 { mu } else { -mu };
+                }
+            });
         }
     }
 }
@@ -313,6 +315,16 @@ mod tests {
     }
 
     #[test]
+    fn phi_matches_water_level_sum() {
+        let abs = vec![1.0f32, 0.5, 0.25, 0.9, 0.8, 0.1, 0.0, 0.0, 0.0];
+        for th in [0.0, 0.2, 0.7, 1.3, 5.0] {
+            let direct = phi(&abs, 3, 3, th);
+            let summed: f64 = water_levels(&abs, 3, 3, th).iter().sum();
+            assert_eq!(direct.to_bits(), summed.to_bits(), "theta={th}");
+        }
+    }
+
+    #[test]
     fn algorithm_parse_roundtrip() {
         for a in Algorithm::ALL {
             let parsed: Algorithm = a.name().parse().unwrap();
@@ -326,5 +338,16 @@ mod tests {
         let mut y = vec![2.0f32, -3.0, 1.5, -0.5];
         project_l1inf(&mut y, 2, 2, 1.0, Algorithm::Bisection);
         assert!(y[0] >= 0.0 && y[1] <= 0.0 && y[2] >= 0.0 && y[3] <= 0.0);
+    }
+
+    #[test]
+    fn apply_through_view_matches_flat() {
+        let base = vec![2.0f32, -3.0, 1.5, -0.5, 0.7, 0.9];
+        let mus = [1.25f64, 0.0, 0.8];
+        let mut flat = base.clone();
+        apply_water_levels(&mut flat, 3, 2, &mus);
+        let mut viewed = base.clone();
+        apply_water_levels_view(&mut GroupedViewMut::new(&mut viewed, 3, 2), &mus);
+        assert_eq!(flat, viewed);
     }
 }

@@ -6,9 +6,72 @@
 //! drops groups whose total mass fell below θ (Proposition 3), and
 //! recomputes θ from Eq. 19. θ increases monotonically (Propositions 2–3)
 //! and converges to θ* in finitely many rounds; worst case `O(n²mP)`.
+//!
+//! [`NaiveSolver`] reuses the `|Y|` gather and the alive-set index buffer
+//! between calls; hints are ignored (the fixed point has no safe warm entry
+//! — starting above θ* would break the monotone-increase invariant).
 
-use super::SolveStats;
+use super::solver::{Solver, SolverScratch};
+use super::{water_levels_into, Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
 use crate::projection::simplex;
+
+/// Workspace-owning Algorithm-1 solver (see [`super::solver`]).
+#[derive(Debug, Default)]
+pub struct NaiveSolver {
+    ws: SolverScratch,
+    alive: Vec<u32>,
+}
+
+impl NaiveSolver {
+    pub fn new() -> NaiveSolver {
+        NaiveSolver::default()
+    }
+}
+
+impl Solver for NaiveSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Naive
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        _hint: Option<f64>,
+        _group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let (n_groups, group_len) = (view.n_groups(), view.group_len());
+        view.gather_abs(&mut self.ws.abs);
+        // Initial θ from the all-active k=1 state (paper line 2), exactly
+        // as the free function computes it.
+        self.alive.clear();
+        let mut sum_max = 0.0f64;
+        for g in 0..n_groups {
+            let grp = &self.ws.abs[g * group_len..(g + 1) * group_len];
+            let mx = grp.iter().fold(0.0f32, |a, &b| a.max(b));
+            if mx > 0.0 {
+                self.alive.push(g as u32);
+                sum_max += mx as f64;
+            }
+        }
+        debug_assert!(!self.alive.is_empty());
+        let theta0 = ((sum_max - c) / self.alive.len() as f64).max(0.0);
+        solve_on_subset(&self.ws.abs, group_len, &mut self.alive, theta0, c)
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        water_levels_into(&self.ws.abs, view.n_groups(), view.group_len(), theta, &mut self.ws.mus);
+    }
+}
 
 /// Fixed-point solve restricted to the groups listed in `alive`
 /// (used directly by [`super::bejar`] after its elimination preprocess).
@@ -134,5 +197,24 @@ mod tests {
         let p = phi(&abs, 10, 4, st.theta);
         assert!((p - 0.5).abs() < 1e-7, "phi={p}");
         assert!(st.theta > 0.04, "small groups must die: theta={}", st.theta);
+    }
+
+    #[test]
+    fn reused_solver_matches_free_function() {
+        let mut rng = Rng::new(6);
+        let mut solver = NaiveSolver::new();
+        for (g, l) in [(5usize, 8usize), (12, 4), (5, 8)] {
+            let mut abs = vec![0.0f32; g * l];
+            rng.fill_uniform_f32(&mut abs);
+            let c = 0.3 * crate::projection::norm_l1inf(&abs, g, l);
+            if c <= 0.0 {
+                continue;
+            }
+            let free = solve(&abs, g, l, c);
+            let st = solver.solve(&GroupedView::new(&abs, g, l), c, None);
+            assert_eq!(free.theta.to_bits(), st.theta.to_bits(), "g={g} l={l}");
+            assert_eq!(free.work, st.work);
+            assert_eq!(free.touched_groups, st.touched_groups);
+        }
     }
 }

@@ -11,9 +11,71 @@
 //! Each Φ evaluation is `O(m log n)` after an `O(nm log n)` per-call
 //! pre-sort ([`SortedGroups`]), matching the character of the published
 //! method (whose cost is also dominated by per-iteration column scans).
+//! [`NewtonSolver`] keeps the sorted representation's buffers alive between
+//! calls, so repeated same-shaped solves re-sort in place.
 
 use super::kernels::SortedGroups;
-use super::SolveStats;
+use super::solver::{Solver, SolverScratch};
+use super::{water_levels_into, Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
+
+/// Workspace-owning semismooth-Newton solver (see [`super::solver`]).
+#[derive(Debug)]
+pub struct NewtonSolver {
+    ws: SolverScratch,
+    sg: SortedGroups,
+}
+
+impl NewtonSolver {
+    pub fn new() -> NewtonSolver {
+        NewtonSolver { ws: SolverScratch::default(), sg: SortedGroups::empty() }
+    }
+}
+
+impl Default for NewtonSolver {
+    fn default() -> Self {
+        NewtonSolver::new()
+    }
+}
+
+impl Solver for NewtonSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Newton
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        hint: Option<f64>,
+        _group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let (n_groups, group_len) = (view.n_groups(), view.group_len());
+        view.gather_abs(&mut self.ws.abs);
+        self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        solve_presorted_hinted(&self.sg, c, hint)
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        water_levels_into(&self.ws.abs, view.n_groups(), view.group_len(), theta, &mut self.ws.mus);
+    }
+
+    fn workspace_elems(&self) -> usize {
+        let ws = &self.ws;
+        ws.abs.capacity()
+            + 2 * (ws.maxes.capacity() + ws.sums.capacity() + ws.mus.capacity())
+            + self.sg.z.capacity()
+            + 2 * (self.sg.s.capacity() + self.sg.full_sum.capacity() + self.sg.pos_count.capacity())
+    }
+}
 
 /// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
 pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
@@ -185,5 +247,23 @@ mod tests {
         }
         let (p, _) = sg.phi_and_slope(theta);
         assert!((p - c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reused_solver_matches_free_function() {
+        let mut rng = Rng::new(13);
+        let mut solver = NewtonSolver::new();
+        for (g, l) in [(25usize, 10usize), (8, 30), (25, 10)] {
+            let mut abs = vec![0.0f32; g * l];
+            rng.fill_uniform_f32(&mut abs);
+            let c = 0.5 * crate::projection::norm_l1inf(&abs, g, l);
+            if c <= 0.0 {
+                continue;
+            }
+            let free = solve(&abs, g, l, c);
+            let st = solver.solve(&GroupedView::new(&abs, g, l), c, None);
+            assert_eq!(free.theta.to_bits(), st.theta.to_bits(), "g={g} l={l}");
+            assert_eq!(free.work, st.work);
+        }
     }
 }

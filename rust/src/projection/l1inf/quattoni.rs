@@ -6,9 +6,16 @@
 //! baseline the paper's Algorithm 2 improves on by (a) replacing the global
 //! sort with heaps and (b) walking the order *backwards* so only the `J`
 //! modified-suffix entries are ever materialized.
+//!
+//! [`QuattoniSolver`] keeps the `|Y|` gather, the sorted representation,
+//! the breakpoint-event list and the per-group count array alive between
+//! calls; hints are ignored (an ascending sweep has no cheap mid-order
+//! entry point), so warm and cold solves are bit-identical.
 
 use super::kernels::SortedGroups;
-use super::SolveStats;
+use super::solver::{Solver, SolverScratch};
+use super::{water_levels_into, Algorithm, SolveStats};
+use crate::projection::grouped::GroupedView;
 
 #[derive(Clone, Copy, Debug)]
 enum Event {
@@ -18,13 +25,88 @@ enum Event {
     Death { g: u32 },
 }
 
+/// Workspace-owning Quattoni solver (see [`super::solver`]).
+#[derive(Debug)]
+pub struct QuattoniSolver {
+    ws: SolverScratch,
+    sg: SortedGroups,
+    events: Vec<(f64, Event)>,
+    kcur: Vec<u32>,
+}
+
+impl QuattoniSolver {
+    pub fn new() -> QuattoniSolver {
+        QuattoniSolver { ws: SolverScratch::default(), sg: SortedGroups::empty(), events: Vec::new(), kcur: Vec::new() }
+    }
+}
+
+impl Default for QuattoniSolver {
+    fn default() -> Self {
+        QuattoniSolver::new()
+    }
+}
+
+impl Solver for QuattoniSolver {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Quattoni
+    }
+
+    fn scratch(&self) -> &SolverScratch {
+        &self.ws
+    }
+
+    fn scratch_mut(&mut self) -> &mut SolverScratch {
+        &mut self.ws
+    }
+
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        _hint: Option<f64>,
+        _group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let (n_groups, group_len) = (view.n_groups(), view.group_len());
+        view.gather_abs(&mut self.ws.abs);
+        self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        solve_sorted(&self.sg, c, &mut self.events, &mut self.kcur)
+    }
+
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64) {
+        water_levels_into(&self.ws.abs, view.n_groups(), view.group_len(), theta, &mut self.ws.mus);
+    }
+
+    fn workspace_elems(&self) -> usize {
+        let ws = &self.ws;
+        ws.abs.capacity()
+            + 2 * (ws.maxes.capacity() + ws.sums.capacity() + ws.mus.capacity())
+            + self.sg.z.capacity()
+            + 2 * (self.sg.s.capacity() + self.sg.full_sum.capacity() + self.sg.pos_count.capacity())
+            + 4 * self.events.capacity()
+            + self.kcur.capacity()
+    }
+}
+
 /// Solve for θ* on nonnegative data with `‖Y‖₁,∞ > C > 0`.
 pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveStats {
     let sg = SortedGroups::new(abs, n_groups, group_len);
+    solve_sorted(&sg, c, &mut Vec::new(), &mut Vec::new())
+}
+
+/// The sweep on a sorted representation, with caller-owned event/count
+/// scratch (cleared here; allocation-free once capacities cover the shape).
+fn solve_sorted(
+    sg: &SortedGroups,
+    c: f64,
+    events: &mut Vec<(f64, Event)>,
+    kcur: &mut Vec<u32>,
+) -> SolveStats {
+    let n_groups = sg.n_groups;
 
     // Collect every breakpoint: growth events r_k for k = 1..p-1 and the
     // death event at S_p. (All-zero groups are never active.)
-    let mut events: Vec<(f64, Event)> = Vec::with_capacity(abs.len() + n_groups);
+    events.clear();
+    events.reserve(n_groups * sg.group_len + n_groups);
     let mut t1 = 0.0f64; // Σ S_{k_g}/k_g over active groups
     let mut t2 = 0.0f64; // Σ 1/k_g over active groups
     let mut active = 0usize;
@@ -46,9 +128,10 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
     events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
     // Track current count per group so Death knows what to subtract.
-    let mut kcur: Vec<u32> = vec![1; n_groups];
+    kcur.clear();
+    kcur.resize(n_groups, 1);
     let mut consumed = 0usize;
-    for &(b, ev) in &events {
+    for &(b, ev) in events.iter() {
         // State valid on [prev, b): stop if θ̂ lands before the breakpoint.
         let theta = (t1 - c) / t2;
         if theta < b {
@@ -137,5 +220,23 @@ mod tests {
         // θ = (5+4-8)/2 = 0.5; valid while θ < min breakpoint (4-1=3, 5-1=4)
         assert!((st.theta - 0.5).abs() < 1e-9);
         assert_eq!(st.work, 0);
+    }
+
+    #[test]
+    fn reused_solver_matches_free_function() {
+        let mut rng = Rng::new(4);
+        let mut solver = QuattoniSolver::new();
+        for (g, l) in [(6usize, 9usize), (11, 3), (6, 9)] {
+            let mut abs = vec![0.0f32; g * l];
+            rng.fill_uniform_f32(&mut abs);
+            let c = 0.4 * crate::projection::norm_l1inf(&abs, g, l);
+            if c <= 0.0 {
+                continue;
+            }
+            let free = solve(&abs, g, l, c);
+            let st = solver.solve(&GroupedView::new(&abs, g, l), c, None);
+            assert_eq!(free.theta.to_bits(), st.theta.to_bits(), "g={g} l={l}");
+            assert_eq!(free.work, st.work);
+        }
     }
 }

@@ -1,0 +1,423 @@
+//! The workspace-based solver core: the [`Solver`] trait, its shared
+//! [`SolverScratch`], the [`project_with`] driver, and the [`SolverPool`]
+//! recycler used by the serve layer.
+//!
+//! # Why a trait
+//!
+//! The free-function API (`solve_theta`, `project_l1inf`) rebuilds every
+//! scratch structure — the `|Y|` copy, per-group mass arrays, lazy heaps,
+//! sorted-breakpoint buffers, the water-level vector — on every call. That
+//! is invisible for one projection and dominant when the projection runs
+//! thousands of times inside SGD or once per request in `serve`. A
+//! [`Solver`] is a long-lived object owning all of that scratch: the first
+//! solve sizes the buffers, every following solve of a same-shaped matrix
+//! is allocation-free.
+//!
+//! # Workspace lifecycle
+//!
+//! 1. **Construction** ([`new_solver`] or the per-algorithm `new()`):
+//!    all buffers empty, nothing allocated.
+//! 2. **First solve**: buffers grow to the problem shape. For the
+//!    inverse-order solver this includes one heap slot per group.
+//! 3. **Steady state**: repeated solves of same-shaped inputs reuse every
+//!    buffer (`clear()`/overwrite — capacity is retained). This is the
+//!    zero-allocation hot path measured by `l1inf exp proj_bench`.
+//! 4. **Shape change**: buffers grow (never shrink) to the new shape; no
+//!    state from the previous shape can leak into results — solvers fully
+//!    re-derive their sweep state from the input on every call, which the
+//!    `solver_workspace` integration tests pin down bit-for-bit.
+//!
+//! A solver is `Send` but not `Sync`: move it between threads freely, share
+//! it behind a pool (see [`SolverPool`]) rather than a lock-free handle.
+//!
+//! # Hint contract
+//!
+//! `hint` is an *advisory* warm start for θ* — typically the θ* of the
+//! previous projection of the same logical matrix (one optimizer step moves
+//! the root only slightly), fed back via [`Solver::last_theta`] or a
+//! [`crate::serve::cache::ThetaCache`]. The contract every implementation
+//! upholds:
+//!
+//! - **Correctness never depends on the hint.** Any `f64` is safe: NaN,
+//!   ±∞, negatives, zeros and wildly wrong magnitudes are detected and
+//!   rejected (cold fallback). `SolveStats::theta_hint` reports the hint
+//!   the solver actually committed to (`None` = cold).
+//! - **A good hint only cuts `work`.** Bisection tightens its bracket,
+//!   Newton starts at the hint (backing off geometrically if it overshot),
+//!   and the inverse-order sweep is entered mid-order so only breakpoints
+//!   between the hint and θ* are consumed. The returned θ* matches the
+//!   cold θ* to solver precision.
+//! - `Quattoni`, `Naive` and `Bejar` ignore hints (their sweeps/fixed
+//!   points have no cheap mid-order entry) and stay bit-identical to cold.
+//!
+//! For the inverse-order solver specifically, hints *at or above* θ* are
+//! usable (the sweep descends); hints below the root are rejected via a
+//! `Φ(hint) > C` check. Caches therefore inflate hints by a small margin
+//! (see [`crate::serve::cache::HINT_MARGIN`]).
+
+use super::{apply_water_levels_view, Algorithm, ProjInfo, SolveStats};
+use crate::projection::grouped::{GroupedView, GroupedViewMut};
+use std::sync::Mutex;
+
+/// Scratch buffers shared by every solver implementation. Owned (embedded)
+/// by each per-algorithm struct; exposed through [`Solver::scratch`] so the
+/// shared [`project_with`] driver can run its fused pre-pass and the
+/// water-level apply without allocating.
+#[derive(Debug, Default)]
+pub struct SolverScratch {
+    /// Contiguous `|Y|` gather (the sort/fixed-point solvers normalize any
+    /// signed/strided view into this buffer; inverse-order never fills it).
+    pub abs: Vec<f32>,
+    /// Per-group max `|·|` from the last [`project_with`] pre-pass.
+    pub maxes: Vec<f64>,
+    /// Per-group ℓ₁ mass from the last pre-pass / internal seeding scan.
+    pub sums: Vec<f64>,
+    /// Water levels μ_g of the last solve (the handoff read by
+    /// [`Solver::water_levels`]). Length = `n_groups` of that solve.
+    pub mus: Vec<f64>,
+    /// θ* of the last solve (self-warm-start across SGD steps).
+    pub last_theta: Option<f64>,
+}
+
+/// A reusable ℓ₁,∞ dual solver: finds the θ* of Lemma 1 for grouped data
+/// and hands back the per-group water levels, keeping all scratch state
+/// alive between calls. See the module docs for the workspace lifecycle
+/// and the warm-start hint contract.
+pub trait Solver: Send {
+    /// Which root-finding algorithm this solver implements.
+    fn algorithm(&self) -> Algorithm;
+
+    /// Shared scratch (read side: water levels, pre-pass stats).
+    fn scratch(&self) -> &SolverScratch;
+
+    /// Shared scratch (write side: used by [`project_with`]).
+    fn scratch_mut(&mut self) -> &mut SolverScratch;
+
+    /// Core entry point: solve `Φ(θ) = c` for `view` with
+    /// `‖Y‖₁,∞ > c > 0`, **without** producing water levels (θ-only
+    /// callers — ablation benches, custom apply pipelines — skip that
+    /// O(nm) pass entirely). Signs are ignored (`|·|` is taken on the
+    /// fly); `group_sums`, when given, must hold the per-group ℓ₁ masses
+    /// accumulated in element order as f64 (exactly what
+    /// [`GroupedView::group_abs_sum`] produces) — the solver then skips its
+    /// own seeding scan.
+    ///
+    /// Post-condition used by the parallel projector: the sort/fixed-point
+    /// solvers leave the contiguous `|Y|` gather in
+    /// [`SolverScratch::abs`] (the inverse-order solver, which never
+    /// materializes `|Y|`, leaves it untouched).
+    fn solve_theta_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        hint: Option<f64>,
+        group_sums: Option<&[f64]>,
+    ) -> SolveStats;
+
+    /// Fill [`Solver::water_levels`] with μ_g(θ) for the solve that just
+    /// ran on `view` (same view, θ = the returned `SolveStats::theta`).
+    /// O(touched) for the inverse-order solver (read off its sweep state);
+    /// one Condat pass over the `|Y|` scratch for the others.
+    fn fill_water_levels(&mut self, view: &GroupedView<'_>, theta: f64);
+
+    /// [`Solver::solve_theta_seeded`] + [`Solver::fill_water_levels`]: the
+    /// full solve whose water-level handoff [`project_with`] consumes.
+    fn solve_seeded(
+        &mut self,
+        view: &GroupedView<'_>,
+        c: f64,
+        hint: Option<f64>,
+        group_sums: Option<&[f64]>,
+    ) -> SolveStats {
+        let stats = self.solve_theta_seeded(view, c, hint, group_sums);
+        self.fill_water_levels(view, stats.theta);
+        stats
+    }
+
+    /// [`Solver::solve_seeded`] without precomputed masses; records
+    /// [`Solver::last_theta`]. This is the `solve(view, c, hint)` of the
+    /// trait contract.
+    fn solve(&mut self, view: &GroupedView<'_>, c: f64, hint: Option<f64>) -> SolveStats {
+        let stats = self.solve_seeded(view, c, hint, None);
+        self.scratch_mut().last_theta = Some(stats.theta);
+        stats
+    }
+
+    /// Water-level handoff: μ_g from the most recent solve. Only meaningful
+    /// after an infeasible projection/solve (feasible inputs never reach
+    /// the solver).
+    fn water_levels(&self) -> &[f64] {
+        &self.scratch().mus
+    }
+
+    /// θ* of the most recent solve through this workspace, if any — feed it
+    /// back as `hint` to warm-start the next projection of the same
+    /// logical matrix.
+    fn last_theta(&self) -> Option<f64> {
+        self.scratch().last_theta
+    }
+
+    /// Approximate resident workspace footprint in f32-equivalent elements
+    /// (f64 buffers count double). Workspaces grow but never shrink, so
+    /// [`SolverPool`] uses this to stop a burst of huge requests from
+    /// pinning memory forever. Implementations with large private scratch
+    /// (sorted representations, lazy heaps) override to include it.
+    fn workspace_elems(&self) -> usize {
+        let ws = self.scratch();
+        ws.abs.capacity() + 2 * (ws.maxes.capacity() + ws.sums.capacity() + ws.mus.capacity())
+    }
+}
+
+/// Fresh solver for `algo` with empty (unallocated) workspaces.
+pub fn new_solver(algo: Algorithm) -> Box<dyn Solver> {
+    match algo {
+        Algorithm::Bisection => Box::new(super::bisect::BisectSolver::new()),
+        Algorithm::Quattoni => Box::new(super::quattoni::QuattoniSolver::new()),
+        Algorithm::Naive => Box::new(super::naive::NaiveSolver::new()),
+        Algorithm::Bejar => Box::new(super::bejar::BejarSolver::new()),
+        Algorithm::Newton => Box::new(super::newton::NewtonSolver::new()),
+        Algorithm::InverseOrder => Box::new(super::inverse_order::InverseOrderSolver::new()),
+    }
+}
+
+/// Project `view` onto `B₁,∞^c` in place through a reusable solver.
+///
+/// This is the full pipeline behind [`super::project_l1inf`], restructured
+/// around the workspace:
+///
+/// 1. **Fused pre-pass** — one scan fills the solver's per-group max/mass
+///    scratch (the seed code paid two separate O(nm) scans: `norm_l1inf`
+///    plus the solver's own seeding scan).
+/// 2. Feasibility / degenerate-radius fast paths (identical semantics to
+///    the seed entry point).
+/// 3. θ solve via [`Solver::solve_seeded`], fed the pre-pass masses.
+/// 4. Water-level clip through the (possibly strided) mutable view.
+/// 5. `radius_after` folded from the pre-pass maxima and the water levels —
+///    `min(max_g, μ_g)` per surviving group is *exactly* the post-clip
+///    group max, so the seed's second O(nm) `norm_l1inf` pass is gone
+///    while the reported value stays bit-identical.
+pub fn project_with(
+    solver: &mut dyn Solver,
+    view: &mut GroupedViewMut<'_>,
+    c: f64,
+    theta_hint: Option<f64>,
+) -> ProjInfo {
+    assert!(c >= 0.0, "radius must be nonnegative");
+    let n_groups = view.n_groups();
+
+    // 1. Fused pre-pass: per-group (max |·|, Σ|·|) in one scan.
+    let radius_before = {
+        let ro = view.as_view();
+        let ws = solver.scratch_mut();
+        ws.maxes.clear();
+        ws.sums.clear();
+        let mut rb = 0.0f64;
+        for g in 0..n_groups {
+            let (mx, sum) = ro.group_abs_max_sum(g);
+            rb += mx;
+            ws.maxes.push(mx);
+            ws.sums.push(sum);
+        }
+        rb
+    };
+
+    // 2a. Already inside the ball: the projection is the identity.
+    if radius_before <= c {
+        let ws = solver.scratch_mut();
+        let zero_groups = ws.maxes.iter().filter(|&&m| m == 0.0).count();
+        ws.mus.clear();
+        return ProjInfo {
+            radius_before,
+            radius_after: radius_before,
+            theta: 0.0,
+            zero_groups,
+            feasible: true,
+            stats: SolveStats::default(),
+        };
+    }
+    // 2b. Degenerate radius: the ball is {0}.
+    if c == 0.0 {
+        view.fill(0.0);
+        let ws = solver.scratch_mut();
+        ws.mus.clear();
+        ws.mus.resize(n_groups, 0.0);
+        return ProjInfo {
+            radius_before,
+            radius_after: 0.0,
+            theta: radius_before, // limit interpretation
+            zero_groups: n_groups,
+            feasible: false,
+            stats: SolveStats::default(),
+        };
+    }
+
+    // 3. θ solve, seeded with the pre-pass group masses. The masses are
+    // lent out of the scratch for the call (the solver receives them as a
+    // plain slice) and restored after.
+    let sums = std::mem::take(&mut solver.scratch_mut().sums);
+    let stats = solver.solve_seeded(&view.as_view(), c, theta_hint, Some(&sums));
+    solver.scratch_mut().sums = sums;
+    solver.scratch_mut().last_theta = Some(stats.theta);
+
+    // 4. Clip at the water levels through the view.
+    apply_water_levels_view(view, solver.water_levels());
+
+    // 5. ‖X‖₁,∞ and zero-group count without rescanning the matrix.
+    let ws = solver.scratch();
+    let mut radius_after = 0.0f64;
+    let mut zero_groups = 0usize;
+    for g in 0..n_groups {
+        let mu = ws.mus[g];
+        if mu <= 0.0 {
+            zero_groups += 1;
+        } else {
+            // Exactly the f32 value the clip wrote.
+            let mu32 = (mu as f32) as f64;
+            radius_after += if ws.maxes[g] > mu32 { mu32 } else { ws.maxes[g] };
+        }
+    }
+    ProjInfo { radius_before, radius_after, theta: stats.theta, zero_groups, feasible: false, stats }
+}
+
+/// How many idle solvers a [`SolverPool`] retains (excess releases drop
+/// their workspaces instead of hoarding memory).
+pub const POOL_CAP: usize = 64;
+
+/// Retention budget summed over all pooled solvers, in f32-equivalent
+/// elements (≈ 512 MB): a release that would push the pooled total past
+/// this is dropped instead, so one burst of huge matrices cannot pin its
+/// scratch in a long-lived server after traffic shifts back to small ones.
+pub const POOL_BUDGET_ELEMS: usize = 128 << 20;
+
+/// A free-list of reusable solvers, shared by the serve layer so that
+/// steady-state request handling allocates nothing: each request checks a
+/// warm solver out, projects, and checks it back in. Solvers for different
+/// algorithms coexist in one pool (requests pick their algorithm).
+#[derive(Default)]
+pub struct SolverPool {
+    slots: Mutex<Vec<Box<dyn Solver>>>,
+}
+
+impl SolverPool {
+    pub fn new() -> SolverPool {
+        SolverPool::default()
+    }
+
+    /// Check out a solver for `algo`: a pooled one (warm workspaces) when
+    /// available, freshly constructed otherwise.
+    pub fn acquire(&self, algo: Algorithm) -> Box<dyn Solver> {
+        let mut slots = self.slots.lock().expect("solver pool poisoned");
+        if let Some(pos) = slots.iter().position(|s| s.algorithm() == algo) {
+            return slots.swap_remove(pos);
+        }
+        drop(slots);
+        new_solver(algo)
+    }
+
+    /// Return a solver to the pool. Dropped instead of pooled past
+    /// [`POOL_CAP`] solvers or once the pooled workspaces would exceed
+    /// [`POOL_BUDGET_ELEMS`] (see [`Solver::workspace_elems`]).
+    pub fn release(&self, solver: Box<dyn Solver>) {
+        let mut slots = self.slots.lock().expect("solver pool poisoned");
+        if slots.len() >= POOL_CAP {
+            return;
+        }
+        let pooled: usize = slots.iter().map(|s| s.workspace_elems()).sum();
+        if pooled + solver.workspace_elems() > POOL_BUDGET_ELEMS {
+            return;
+        }
+        slots.push(solver);
+    }
+
+    /// Number of idle solvers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().expect("solver pool poisoned").len()
+    }
+}
+
+impl std::fmt::Debug for SolverPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SolverPool {{ idle: {} }}", self.idle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::project_l1inf;
+    use crate::util::rng::Rng;
+
+    fn random_signed(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; len];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 3.0;
+        }
+        y
+    }
+
+    #[test]
+    fn project_with_matches_free_function_bitwise() {
+        let mut rng = Rng::new(0x50);
+        for algo in Algorithm::ALL {
+            let (g, l) = (13, 9);
+            let data = random_signed(&mut rng, g * l);
+            for c in [0.0, 0.4, 2.0, 1e6] {
+                let mut a = data.clone();
+                let ia = project_l1inf(&mut a, g, l, c, algo);
+                let mut b = data.clone();
+                let mut solver = new_solver(algo);
+                let ib = project_with(
+                    &mut *solver,
+                    &mut GroupedViewMut::new(&mut b, g, l),
+                    c,
+                    None,
+                );
+                assert_eq!(a, b, "{} c={c}: projected data must match exactly", algo.name());
+                assert_eq!(ia.theta.to_bits(), ib.theta.to_bits(), "{} c={c}", algo.name());
+                assert_eq!(ia.zero_groups, ib.zero_groups);
+                assert_eq!(ia.feasible, ib.feasible);
+                assert_eq!(ia.radius_after.to_bits(), ib.radius_after.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reused_workspace_is_exact_and_records_theta() {
+        let mut rng = Rng::new(0x51);
+        let (g, l) = (40, 7);
+        let mut solver = new_solver(Algorithm::InverseOrder);
+        assert_eq!(solver.last_theta(), None);
+        for step in 0..5 {
+            let data = random_signed(&mut rng, g * l);
+            let mut fresh = data.clone();
+            let fi = project_l1inf(&mut fresh, g, l, 0.8, Algorithm::InverseOrder);
+            let mut reused = data.clone();
+            let ri = project_with(
+                &mut *solver,
+                &mut GroupedViewMut::new(&mut reused, g, l),
+                0.8,
+                None,
+            );
+            assert_eq!(fresh, reused, "step {step}");
+            assert_eq!(fi.theta.to_bits(), ri.theta.to_bits(), "step {step}");
+            assert_eq!(solver.last_theta(), Some(ri.theta));
+        }
+    }
+
+    #[test]
+    fn pool_recycles_by_algorithm() {
+        let pool = SolverPool::new();
+        let a = pool.acquire(Algorithm::Newton);
+        let b = pool.acquire(Algorithm::InverseOrder);
+        assert_eq!(pool.idle(), 0);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.idle(), 2);
+        let c = pool.acquire(Algorithm::InverseOrder);
+        assert_eq!(c.algorithm(), Algorithm::InverseOrder);
+        assert_eq!(pool.idle(), 1);
+        let d = pool.acquire(Algorithm::InverseOrder); // pool only has Newton
+        assert_eq!(d.algorithm(), Algorithm::InverseOrder);
+        assert_eq!(pool.idle(), 1, "mismatched algorithm stays pooled");
+    }
+}

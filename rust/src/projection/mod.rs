@@ -9,18 +9,23 @@
 //! kernels serve both without transposition.
 //!
 //! Submodules:
+//! - [`grouped`]  — [`GroupedView`]/[`GroupedViewMut`]: the strided shape
+//!   layer every solver consumes (contiguous rows or matrix columns, no
+//!   transpose copies).
 //! - [`simplex`]  — projection of a single vector onto the solid ℓ₁ simplex
 //!   `Δ₁^t = {x ≥ 0 : Σxᵢ ≤ t}` (sort, Michelot, Condat) + water-level
 //!   helpers shared by the ℓ₁,∞ solvers.
 //! - [`l1`]       — ℓ₁-ball projection (vector / whole matrix).
 //! - [`l12`]      — ℓ₁,₂ ("group lasso") ball projection.
-//! - [`l1inf`]    — the ℓ₁,∞ ball: gold bisection solver, Quattoni (total
-//!   order), naive active-set (Alg. 1), Bejar elimination, Chu semismooth
-//!   Newton, and the paper's **inverse total order** (Alg. 2).
+//! - [`l1inf`]    — the ℓ₁,∞ ball: the workspace-based `Solver` trait over
+//!   six implementations — gold bisection, Quattoni (total order), naive
+//!   active-set (Alg. 1), Bejar elimination, Chu semismooth Newton, and
+//!   the paper's **inverse total order** (Alg. 2).
 //! - [`linf1`]    — prox of the dual ℓ∞,₁ norm via the Moreau identity.
 //! - [`masked`]   — masked projection (Eq. 20).
 //! - [`kkt`]      — optimality-condition verifier used throughout the tests.
 
+pub mod grouped;
 pub mod kkt;
 pub mod l1;
 pub mod l12;
@@ -28,6 +33,8 @@ pub mod l1inf;
 pub mod linf1;
 pub mod masked;
 pub mod simplex;
+
+pub use grouped::{GroupedView, GroupedViewMut};
 
 /// ‖Y‖₁,∞ of a grouped matrix: sum over groups of the max **absolute** value.
 pub fn norm_l1inf(data: &[f32], n_groups: usize, group_len: usize) -> f64 {

@@ -13,7 +13,9 @@ use super::state::TrainState;
 #[cfg(feature = "pjrt")]
 use crate::data::loader::Split;
 #[cfg(feature = "pjrt")]
-use crate::projection::l1inf::project_l1inf_with_hint;
+use crate::projection::grouped::GroupedViewMut;
+#[cfg(feature = "pjrt")]
+use crate::projection::l1inf::{new_solver, project_with, Solver};
 #[cfg(feature = "pjrt")]
 use crate::projection::masked::project_masked;
 #[cfg(feature = "pjrt")]
@@ -40,6 +42,11 @@ pub enum ProjectionMode {
     L12 { eta: f64 },
     /// ℓ₁,∞ ball of radius `c` over feature rows (the paper's method).
     L1Inf { c: f64 },
+    /// ℓ₁,∞ ball of radius `c` over encoder *columns* (hidden units),
+    /// projected in place through a strided
+    /// [`crate::projection::grouped::GroupedViewMut::columns`] view — no
+    /// transpose copy in or out.
+    L1InfCols { c: f64 },
     /// Masked ℓ₁,∞ (Eq. 20): keep the support, don't bound values.
     L1InfMasked { c: f64 },
 }
@@ -51,6 +58,7 @@ impl ProjectionMode {
             ProjectionMode::L1 { .. } => "l1",
             ProjectionMode::L12 { .. } => "l21",
             ProjectionMode::L1Inf { .. } => "l1inf",
+            ProjectionMode::L1InfCols { .. } => "l1inf_cols",
             ProjectionMode::L1InfMasked { .. } => "l1inf_masked",
         }
     }
@@ -138,13 +146,19 @@ pub struct Trainer<'e> {
     /// θ only slightly, so each epoch seeds the next solve (see
     /// [`crate::serve::cache`]).
     theta_cache: ThetaCache,
+    /// Persistent ℓ₁,∞ solver workspace: one per training run, reused by
+    /// every epoch's projection so the per-epoch hot path allocates
+    /// nothing after the first epoch (see
+    /// [`crate::projection::l1inf::solver`]).
+    solver: Box<dyn Solver>,
 }
 
 #[cfg(feature = "pjrt")]
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e mut Engine, tc: TrainConfig) -> Result<Trainer<'e>> {
         let cfg = engine.config(&tc.model)?;
-        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new() })
+        let solver = new_solver(tc.algo);
+        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new(), solver })
     }
 
     /// Run the full schedule on `split`; returns the report.
@@ -304,11 +318,28 @@ impl<'e> Trainer<'e> {
             ProjectionMode::L12 { eta } => l12::project_l12(w1, d, h, eta).tau,
             ProjectionMode::L1Inf { c } => {
                 // Epoch-over-epoch θ drifts slowly: feed last epoch's θ*
-                // back as a warm start (ISSUE: bi-level observation).
+                // back as a warm start (ISSUE: bi-level observation). The
+                // persistent solver keeps its scratch across epochs.
                 let hint = self.theta_cache.hint_for("w1", d, h);
-                let info = project_l1inf_with_hint(w1, d, h, c, algo, hint);
+                let info =
+                    project_with(&mut *self.solver, &mut GroupedViewMut::new(w1, d, h), c, hint);
                 if !info.feasible && info.theta > 0.0 {
                     self.theta_cache.update("w1", d, h, c, info.theta);
+                }
+                info.theta
+            }
+            ProjectionMode::L1InfCols { c } => {
+                // Groups = the h encoder columns (length d), projected
+                // through the strided view — no transpose copy.
+                let hint = self.theta_cache.hint_for("w1.cols", h, d);
+                let info = project_with(
+                    &mut *self.solver,
+                    &mut GroupedViewMut::columns(w1, d, h),
+                    c,
+                    hint,
+                );
+                if !info.feasible && info.theta > 0.0 {
+                    self.theta_cache.update("w1.cols", h, d, c, info.theta);
                 }
                 info.theta
             }

@@ -4,29 +4,44 @@
 //! image has no rayon/crossbeam):
 //!
 //! **Matrix-level sharding** ([`BatchProjector::project_parallel`]): the
-//! ℓ₁,∞ projection's cost is dominated by three O(nm) group passes — the
+//! ℓ₁,∞ projection's cost is dominated by the O(nm) group passes — the
 //! pre-pass (per-group max for ‖Y‖₁,∞ and per-group ℓ₁ mass to seed the
-//! solver), the θ solve, and the water-level apply pass. Groups are
-//! independent in every pass except the scalar root-find itself, so the
-//! passes shard perfectly across workers (Perez & Barlaud, *multi-level
-//! projection with exponential parallel speedup*). The θ solve in the
-//! middle stays the exact serial solver — fed the pre-computed group masses
-//! so it never rescans the matrix — which keeps the parallel path
-//! bit-compatible with [`project_l1inf`] (identical summation order per
-//! group ⇒ identical θ to the last bit, identical clipped entries).
+//! solver) and the water-level apply pass. Groups are independent in every
+//! pass except the scalar root-find itself, so the passes shard perfectly
+//! across workers (Perez & Barlaud, *multi-level projection with
+//! exponential parallel speedup*). The θ solve in the middle stays the
+//! exact serial solver — fed the pre-computed group masses so it never
+//! rescans the matrix — which keeps the parallel path bit-compatible with
+//! [`project_l1inf`](crate::projection::l1inf::project_l1inf) (identical
+//! summation order per group ⇒ identical θ to the last bit, identical
+//! clipped entries).
 //!
 //! **Request-level parallelism** ([`BatchProjector::project_batch`]): a
 //! queue of heterogeneous projection requests is drained by the pool with
 //! an atomic work-stealing cursor; each request runs the serial hinted
-//! projection, optionally warm-started through a shared
-//! [`ThetaCache`].
+//! projection, optionally warm-started through a shared [`ThetaCache`].
+//!
+//! **Workspace reuse**: every θ solve — sharded, serial-fallback or
+//! per-request — checks a [`Solver`] out of a shared [`SolverPool`] and
+//! returns it afterwards, so steady-state serving re-uses warm scratch
+//! buffers (heaps, sort buffers, water-level arrays) instead of allocating
+//! per request.
+//!
+//! Known trade-off of the workspace design for the *sort/fixed-point* solvers
+//! on the sharded path: their contiguous `|Y|` gather now happens inside
+//! the (serial) θ solve rather than inside the sharded pass-1 spawns. The
+//! gather is one memcpy-class pass — small next to those solvers' sort /
+//! fixed-point cost — and the default serving algorithm (inverse order)
+//! never materializes `|Y|` at all.
 
 use super::cache::ThetaCache;
+use crate::projection::grouped::{GroupedView, GroupedViewMut};
 use crate::projection::l1inf::{
-    apply_water_levels, inverse_order, project_l1inf_with_hint, solve_theta_hinted, water_levels,
-    Algorithm, ProjInfo, SolveStats,
+    apply_water_levels, project_with, water_levels, Algorithm, ProjInfo, SolveStats, Solver,
+    SolverPool,
 };
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// One projection job in a heterogeneous queue.
 #[derive(Debug, Clone)]
@@ -81,6 +96,9 @@ pub const MIN_PARALLEL_ELEMS: usize = 1 << 15;
 pub struct BatchProjector {
     threads: usize,
     min_parallel_elems: usize,
+    /// Recycled solver workspaces shared by every entry point (and by
+    /// clones of this projector — the serve connections all feed one pool).
+    solvers: Arc<SolverPool>,
 }
 
 impl BatchProjector {
@@ -98,11 +116,16 @@ impl BatchProjector {
         } else {
             threads
         };
-        BatchProjector { threads, min_parallel_elems }
+        BatchProjector { threads, min_parallel_elems, solvers: Arc::new(SolverPool::new()) }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The shared solver-workspace pool (exposed for introspection/tests).
+    pub fn solver_pool(&self) -> &SolverPool {
+        &self.solvers
     }
 
     /// Project one (large) matrix with the O(nm) passes sharded across the
@@ -120,21 +143,26 @@ impl BatchProjector {
         assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
         assert!(c >= 0.0, "radius must be nonnegative");
         if self.threads <= 1 || n_groups < 2 || data.len() < self.min_parallel_elems {
-            return project_l1inf_with_hint(data, n_groups, group_len, c, algo, theta_hint);
+            let mut solver = self.solvers.acquire(algo);
+            let info = project_with(
+                &mut *solver,
+                &mut GroupedViewMut::new(data, n_groups, group_len),
+                c,
+                theta_hint,
+            );
+            self.solvers.release(solver);
+            return info;
         }
         let ranges = shard_ranges(n_groups, self.threads);
 
-        // Pass 1 (parallel): per-group max (for ‖Y‖₁,∞), per-group ℓ₁ mass
-        // (solver seed), and — for the solvers that need it — the |Y| copy.
-        let need_abs = algo != Algorithm::InverseOrder;
+        // Pass 1 (parallel): per-group max (for ‖Y‖₁,∞) and per-group ℓ₁
+        // mass (solver seed), fused in one scan per shard.
         let mut maxes = vec![0.0f64; n_groups];
         let mut sums = vec![0.0f64; n_groups];
-        let mut abs: Vec<f32> = if need_abs { vec![0.0f32; data.len()] } else { Vec::new() };
         {
             let data_ro: &[f32] = &*data;
             let mut maxes_rem: &mut [f64] = &mut maxes;
             let mut sums_rem: &mut [f64] = &mut sums;
-            let mut abs_rem: &mut [f32] = &mut abs;
             std::thread::scope(|s| {
                 for &(lo, hi) in &ranges {
                     let (max_chunk, rest) =
@@ -143,21 +171,8 @@ impl BatchProjector {
                     let (sum_chunk, rest) =
                         std::mem::take(&mut sums_rem).split_at_mut(hi - lo);
                     sums_rem = rest;
-                    let abs_chunk = if need_abs {
-                        let (chunk, rest) =
-                            std::mem::take(&mut abs_rem).split_at_mut((hi - lo) * group_len);
-                        abs_rem = rest;
-                        Some(chunk)
-                    } else {
-                        None
-                    };
                     s.spawn(move || {
                         let src = &data_ro[lo * group_len..hi * group_len];
-                        if let Some(dst) = abs_chunk {
-                            for (d, &v) in dst.iter_mut().zip(src.iter()) {
-                                *d = v.abs();
-                            }
-                        }
                         for gi in 0..(hi - lo) {
                             let grp = &src[gi * group_len..(gi + 1) * group_len];
                             let mut mx = 0.0f32;
@@ -201,47 +216,45 @@ impl BatchProjector {
             };
         }
 
-        // θ solve (serial, exact): inverse-order consumes the precomputed
-        // group masses directly; the other solvers get the sharded |Y|.
-        let (stats, mus) = if algo == Algorithm::InverseOrder {
-            inverse_order::solve_signed_full(
-                data,
-                n_groups,
-                group_len,
-                c,
-                Some(&sums),
-                theta_hint,
-            )
-        } else {
-            let stats = solve_theta_hinted(&abs, n_groups, group_len, c, algo, theta_hint);
-            // Water levels shard per group like everything else.
-            let mut mus = vec![0.0f64; n_groups];
-            {
-                let abs_ro: &[f32] = &abs;
-                let mut mus_rem: &mut [f64] = &mut mus;
-                let theta = stats.theta;
-                std::thread::scope(|s| {
-                    for &(lo, hi) in &ranges {
-                        let (mu_chunk, rest) =
-                            std::mem::take(&mut mus_rem).split_at_mut(hi - lo);
-                        mus_rem = rest;
-                        s.spawn(move || {
-                            let chunk = &abs_ro[lo * group_len..hi * group_len];
-                            mu_chunk
-                                .copy_from_slice(&water_levels(chunk, hi - lo, group_len, theta));
-                        });
-                    }
-                });
-            }
-            (stats, mus)
+        // θ solve (serial, exact) on a pooled workspace: the solver consumes
+        // the precomputed group masses so it never rescans the signed data.
+        let mut solver = self.solvers.acquire(algo);
+        let stats = {
+            let view = GroupedView::new(&*data, n_groups, group_len);
+            solver.solve_theta_seeded(&view, c, theta_hint, Some(&sums))
         };
+        // Water levels: the inverse-order solver reads them off its sweep
+        // state in O(touched); every other solver would pay an O(nm) Condat
+        // pass, so that pass is sharded across the pool instead — over the
+        // |Y| gather the θ solve left in the solver scratch.
+        let mut local_mus: Vec<f64> = Vec::new();
+        if algo == Algorithm::InverseOrder {
+            let view = GroupedView::new(&*data, n_groups, group_len);
+            solver.fill_water_levels(&view, stats.theta);
+        } else {
+            local_mus = vec![0.0f64; n_groups];
+            let abs_ro: &[f32] = &solver.scratch().abs;
+            let theta = stats.theta;
+            let mut mus_rem: &mut [f64] = &mut local_mus;
+            std::thread::scope(|s| {
+                for &(lo, hi) in &ranges {
+                    let (mu_chunk, rest) = std::mem::take(&mut mus_rem).split_at_mut(hi - lo);
+                    mus_rem = rest;
+                    s.spawn(move || {
+                        let chunk = &abs_ro[lo * group_len..hi * group_len];
+                        mu_chunk.copy_from_slice(&water_levels(chunk, hi - lo, group_len, theta));
+                    });
+                }
+            });
+        }
+        let mus: &[f64] =
+            if algo == Algorithm::InverseOrder { solver.water_levels() } else { &local_mus };
 
         // Apply pass (parallel): clip each shard at its water levels and
         // fold the post-projection norm from the pass-1 maxima — the
         // clipped max of a group is min(old max, μ), so no rescan needed.
         let mut radius_after = 0.0f64;
         {
-            let mus_ref: &[f64] = &mus;
             let maxes_ref: &[f64] = &maxes;
             let mut data_rem: &mut [f32] = data;
             let shard_norms = std::thread::scope(|s| {
@@ -251,10 +264,10 @@ impl BatchProjector {
                         std::mem::take(&mut data_rem).split_at_mut((hi - lo) * group_len);
                     data_rem = rest;
                     handles.push(s.spawn(move || {
-                        apply_water_levels(chunk, hi - lo, group_len, &mus_ref[lo..hi]);
+                        apply_water_levels(chunk, hi - lo, group_len, &mus[lo..hi]);
                         let mut norm = 0.0f64;
                         for g in lo..hi {
-                            let mu = mus_ref[g];
+                            let mu = mus[g];
                             if mu > 0.0 {
                                 // Exactly the f32 value the clip wrote.
                                 let mu32 = (mu as f32) as f64;
@@ -275,20 +288,24 @@ impl BatchProjector {
         }
 
         let zero_groups = mus.iter().filter(|&&m| m <= 0.0).count();
-        ProjInfo {
+        let info = ProjInfo {
             radius_before,
             radius_after,
             theta: stats.theta,
             zero_groups,
             feasible: false,
             stats,
-        }
+        };
+        self.solvers.release(solver);
+        info
     }
 
     /// Drain a heterogeneous request queue across the pool. Requests are
     /// consumed (each response owns the projected matrix — no copies);
     /// responses come back in request order. `cache` (if any) supplies
-    /// warm-start hints by request key and learns each solved θ*.
+    /// warm-start hints by request key and learns each solved θ*. Each
+    /// worker recycles solver workspaces through the shared pool, so a
+    /// steady request stream allocates no solver scratch at all.
     pub fn project_batch(
         &self,
         cache: Option<&ThetaCache>,
@@ -296,13 +313,14 @@ impl BatchProjector {
     ) -> Vec<ProjResponse> {
         let workers = self.threads.min(requests.len()).max(1);
         if workers <= 1 {
-            return requests.into_iter().map(|r| run_request(r, cache)).collect();
+            return requests.into_iter().map(|r| run_request(r, cache, &self.solvers)).collect();
         }
         // Each slot is taken exactly once by whichever worker claims its
         // index off the atomic cursor (work stealing without unsafe).
         let slots: Vec<std::sync::Mutex<Option<ProjRequest>>> =
             requests.into_iter().map(|r| std::sync::Mutex::new(Some(r))).collect();
         let cursor = AtomicUsize::new(0);
+        let solvers = &self.solvers;
         let mut indexed: Vec<(usize, ProjResponse)> = std::thread::scope(|s| {
             let slots = &slots;
             let cursor = &cursor;
@@ -320,7 +338,7 @@ impl BatchProjector {
                             .expect("batch slot poisoned")
                             .take()
                             .expect("slot claimed twice");
-                        local.push((i, run_request(req, cache)));
+                        local.push((i, run_request(req, cache, solvers)));
                     }
                     local
                 }));
@@ -341,13 +359,20 @@ impl Default for BatchProjector {
     }
 }
 
-fn run_request(req: ProjRequest, cache: Option<&ThetaCache>) -> ProjResponse {
+fn run_request(req: ProjRequest, cache: Option<&ThetaCache>, solvers: &SolverPool) -> ProjResponse {
     let ProjRequest { key, mut data, n_groups, group_len, radius, algo } = req;
     let hint = match (&key, cache) {
         (Some(key), Some(cache)) => cache.hint_for(key, n_groups, group_len),
         _ => None,
     };
-    let info = project_l1inf_with_hint(&mut data, n_groups, group_len, radius, algo, hint);
+    let mut solver = solvers.acquire(algo);
+    let info = project_with(
+        &mut *solver,
+        &mut GroupedViewMut::new(&mut data, n_groups, group_len),
+        radius,
+        hint,
+    );
+    solvers.release(solver);
     if let (Some(key), Some(cache)) = (&key, cache) {
         if !info.feasible {
             cache.update(key, n_groups, group_len, radius, info.theta);
@@ -436,6 +461,8 @@ mod tests {
             assert!(!resp.warm);
             assert_eq!(&resp.data, exp);
         }
+        // The drained queue left its workspaces behind for the next batch.
+        assert!(pool.solver_pool().idle() >= 1, "solvers must be recycled");
     }
 
     #[test]

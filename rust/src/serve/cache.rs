@@ -14,6 +14,13 @@
 //! full cold solve — so the margin buys hit rate cheaply. Bisection and
 //! Newton accept hints on either side.
 //!
+//! Hints flow into the [`Solver`](crate::projection::l1inf::Solver)
+//! structs through the `hint` argument of `solve`/`project_with`; the full
+//! per-algorithm contract (validation, rejection, bit-identical fallback)
+//! is documented on [`crate::projection::l1inf::solver`]. A solver also
+//! remembers its *own* last θ* (`Solver::last_theta`) — this cache is the
+//! cross-workspace, cross-connection variant keyed by matrix identity.
+//!
 //! Thread-safe: one instance is shared by every server connection.
 
 use std::collections::HashMap;
