@@ -12,7 +12,7 @@
 
 use l1inf::projection::l1inf::{project_l1inf, Algorithm};
 use l1inf::projection::linf1::prox_linf1;
-use l1inf::projection::{norm_l1inf, norm_linf1};
+use l1inf::projection::{norm_l1inf, norm_linf1, GroupedView};
 use l1inf::util::rng::Rng;
 
 fn main() {
@@ -23,18 +23,18 @@ fn main() {
         *v = (rng.f32() - 0.5) * 4.0;
     }
     println!("== prox of C*||.||_inf,1 via the Moreau identity ==");
-    println!("Y: {g} groups x {l}; ‖Y‖₁,∞ = {:.3}, ‖Y‖∞,₁ = {:.3}\n", norm_l1inf(&y, g, l), norm_linf1(&y, g, l));
+    println!("Y: {g} groups x {l}; ‖Y‖₁,∞ = {:.3}, ‖Y‖∞,₁ = {:.3}\n", norm_l1inf(GroupedView::new(&y, g, l)), norm_linf1(GroupedView::new(&y, g, l)));
 
     for c in [0.5, 2.0, 8.0] {
         let mut prox = y.clone();
         let info = prox_linf1(&mut prox, g, l, c, Algorithm::InverseOrder);
         // objective value of the prox solution
         let dist: f64 = prox.iter().zip(&y).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
-        let obj = 0.5 * dist + c * norm_linf1(&prox, g, l);
+        let obj = 0.5 * dist + c * norm_linf1(GroupedView::new(&prox, g, l));
         println!(
             "C = {c:<4} θ = {:<8.4} ‖prox‖∞,₁ = {:<8.4} objective = {obj:.4}",
             info.projection.theta,
-            norm_linf1(&prox, g, l)
+            norm_linf1(GroupedView::new(&prox, g, l))
         );
     }
 
@@ -53,7 +53,7 @@ fn main() {
         prox_linf1(&mut x, g, l, (step as f64) * c, Algorithm::InverseOrder);
         if it % 10 == 0 || it == 39 {
             let dist: f64 = x.iter().zip(&target).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
-            let obj = 0.5 * dist + c * norm_linf1(&x, g, l);
+            let obj = 0.5 * dist + c * norm_linf1(GroupedView::new(&x, g, l));
             println!("iter {it:>3}: objective = {obj:.5}");
         }
     }

@@ -29,6 +29,24 @@ pub fn train_config(cfg: &Config) -> Result<TrainConfig> {
     Ok(tc)
 }
 
+/// Every name [`projection_mode`] accepts, in match-arm order. Error
+/// messages list exactly this slice, and a unit test parses every entry so
+/// the list cannot drift out of sync with the match arms.
+pub const PROJECTION_MODE_NAMES: &[&str] = &[
+    "none",
+    "baseline",
+    "l1",
+    "l21",
+    "l12",
+    "l1inf",
+    "l1inf_cols",
+    "cols",
+    "bilevel",
+    "bilevel_cols",
+    "l1inf_masked",
+    "masked",
+];
+
 /// Parse a projection-mode name + radius into a [`ProjectionMode`].
 pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
     Ok(match name {
@@ -37,8 +55,13 @@ pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
         "l21" | "l12" => ProjectionMode::L12 { eta: radius },
         "l1inf" => ProjectionMode::L1Inf { c: radius },
         "l1inf_cols" | "cols" => ProjectionMode::L1InfCols { c: radius },
+        "bilevel" => ProjectionMode::Bilevel { c: radius },
+        "bilevel_cols" => ProjectionMode::BilevelCols { c: radius },
         "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
-        other => bail!("unknown projection '{other}'"),
+        other => bail!(
+            "unknown projection '{other}' (valid: {})",
+            PROJECTION_MODE_NAMES.join(", ")
+        ),
     })
 }
 
@@ -96,10 +119,63 @@ mod tests {
     }
 
     #[test]
+    fn parses_bilevel_modes() {
+        assert!(matches!(
+            projection_mode("bilevel", 0.7).unwrap(),
+            ProjectionMode::Bilevel { c } if c == 0.7
+        ));
+        assert!(matches!(
+            projection_mode("bilevel_cols", 0.7).unwrap(),
+            ProjectionMode::BilevelCols { c } if c == 0.7
+        ));
+        let cfg = Config::parse("[train]\nprojection = \"bilevel\"\nradius = 3\n").unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert!(matches!(tc.projection, ProjectionMode::Bilevel { c } if c == 3.0));
+    }
+
+    #[test]
     fn rejects_unknown_projection() {
         assert!(projection_mode("l3", 1.0).is_err());
         let cfg = Config::parse("[train]\nexec = \"sideways\"\n").unwrap();
         assert!(train_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_projection_error_lists_every_valid_name() {
+        let msg = projection_mode("warp", 1.0).unwrap_err().to_string();
+        for name in PROJECTION_MODE_NAMES {
+            assert!(msg.contains(name), "error message misses '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn advertised_names_stay_in_sync_with_match_arms() {
+        // Every advertised name must parse…
+        for name in PROJECTION_MODE_NAMES {
+            assert!(projection_mode(name, 1.0).is_ok(), "advertised '{name}' does not parse");
+        }
+        // …and every canonical mode name must be advertised and round-trip
+        // to its own variant, so adding a match arm without updating the
+        // list (or vice versa) fails here.
+        let canonical = [
+            ProjectionMode::None,
+            ProjectionMode::L1 { eta: 1.0 },
+            ProjectionMode::L12 { eta: 1.0 },
+            ProjectionMode::L1Inf { c: 1.0 },
+            ProjectionMode::L1InfCols { c: 1.0 },
+            ProjectionMode::Bilevel { c: 1.0 },
+            ProjectionMode::BilevelCols { c: 1.0 },
+            ProjectionMode::L1InfMasked { c: 1.0 },
+        ];
+        for mode in canonical {
+            let name = mode.name();
+            assert!(
+                PROJECTION_MODE_NAMES.contains(&name),
+                "canonical name '{name}' missing from PROJECTION_MODE_NAMES"
+            );
+            let parsed = projection_mode(name, 1.0).unwrap();
+            assert_eq!(parsed.name(), name, "'{name}' does not round-trip");
+        }
     }
 
     #[test]

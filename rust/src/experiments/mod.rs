@@ -4,6 +4,7 @@
 //! the figures can be re-plotted. `--quick` shrinks grids/sizes/seeds for
 //! smoke runs; the defaults regenerate the paper-scale experiment.
 
+pub mod bilevelbench;
 pub mod projbench;
 pub mod servebench;
 
@@ -40,7 +41,7 @@ impl Default for ExpOpts {
 /// All experiment ids.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
-    "trainproj", "serve_bench", "proj_bench",
+    "trainproj", "serve_bench", "proj_bench", "bilevel_bench",
 ];
 
 /// Dispatch by experiment id.
@@ -48,6 +49,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     std::fs::create_dir_all(&opts.outdir)?;
     match name {
         "proj_bench" => projbench::run_bench(opts),
+        "bilevel_bench" => bilevelbench::run(opts),
         "fig1" => fig1(opts),
         "fig2" => fig2(opts),
         "fig3" => fig3(opts),

@@ -7,7 +7,7 @@
 //! same code.
 
 use super::ExpOpts;
-use crate::projection::grouped::GroupedViewMut;
+use crate::projection::grouped::{GroupedView, GroupedViewMut};
 use crate::projection::l1inf::{
     new_solver, project_l1inf, project_with, solve_theta, Algorithm, Solver,
 };
@@ -83,7 +83,7 @@ pub fn measure(
         m,
         radius,
         sparsity_pct: sparsity_pct(&projected),
-        col_sparsity_pct: group_sparsity_pct(&projected, m, n),
+        col_sparsity_pct: group_sparsity_pct(GroupedView::new(&projected, m, n)),
         mean_ms,
         min_ms,
         work,
@@ -224,7 +224,7 @@ pub fn run_bench(opts: &ExpOpts) -> Result<()> {
         bopts.measure_iters = bopts.measure_iters.min(3);
     }
     let data = uniform_matrix(n, m, 0xBE7C4);
-    let norm = norm_l1inf(&data, m, n);
+    let norm = norm_l1inf(GroupedView::new(&data, m, n));
     let radius_sparse = opts.cfg.f64_or("proj.bench_radius_sparse", 1.0);
     let radius_dense = opts.cfg.f64_or("proj.bench_radius_dense", 0.3 * norm);
 
@@ -254,6 +254,7 @@ pub fn run_bench(opts: &ExpOpts) -> Result<()> {
         ])
     };
     let report = jobj(vec![
+        ("meta", bench::bench_meta(&[(n, m)])),
         (
             "matrix",
             jobj(vec![
@@ -296,7 +297,7 @@ pub fn radius_grid(points: usize) -> Vec<f64> {
 
 /// Verify the norm constraint held (used as a sanity check in drivers).
 pub fn assert_on_ball(data: &[f32], n: usize, m: usize, radius: f64) {
-    let norm = norm_l1inf(data, m, n);
+    let norm = norm_l1inf(GroupedView::new(data, m, n));
     assert!(norm <= radius * (1.0 + 1e-4) + 1e-6, "‖X‖ = {norm} > C = {radius}");
 }
 
@@ -352,6 +353,7 @@ mod tests {
         // The report is written before the gate check, so it exists either way.
         let text = std::fs::read_to_string(outdir.join("BENCH_proj.json")).unwrap();
         let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("meta").unwrap().get("git_rev").is_some(), "report must carry the meta stamp");
         assert!(v.get("gate").unwrap().get("speedup").unwrap().as_f64().is_some());
         let cases = v.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), 2);

@@ -17,7 +17,7 @@
 
 use super::ExpOpts;
 use crate::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
-use crate::serve::batch::{BatchProjector, ProjRequest};
+use crate::serve::batch::{BatchProjector, ProjKind, ProjRequest};
 use crate::serve::cache::ThetaCache;
 use crate::util::bench::{self, BenchOpts, Sample};
 use crate::util::json::Json;
@@ -170,6 +170,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             group_len: l,
             radius: 0.5 + qrng.f64() * 2.0,
             algo: [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar][i % 3],
+            mode: ProjKind::Exact,
         });
     }
     let pool_full = BatchProjector::new(0);
@@ -200,6 +201,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
 
     // ── report ───────────────────────────────────────────────────────────
     let report = obj(vec![
+        ("meta", bench::bench_meta(&[(n, m)])),
         (
             "matrix",
             obj(vec![
@@ -262,6 +264,7 @@ mod tests {
         run(&opts).unwrap();
         let text = std::fs::read_to_string(outdir.join("BENCH_serve.json")).unwrap();
         let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("meta").unwrap().get("git_rev").is_some(), "report must carry the meta stamp");
         assert!(v.get("single_matrix").is_some());
         assert!(v.get("warm_start").is_some());
         let diff = v

@@ -1,0 +1,650 @@
+//! The serial bi-level ℓ₁,∞ operator (arXiv:2407.16293) and its
+//! workspace-owning [`BilevelSolver`].
+//!
+//! # Workspace lifecycle
+//!
+//! [`BilevelSolver`] follows the same reuse discipline as the exact
+//! [`Solver`](crate::projection::l1inf::Solver) structs: construction
+//! allocates nothing, the first projection sizes the scratch (the maxima
+//! gather, the radii vector, the warm-start active set), and every
+//! following projection of a same-shaped matrix is allocation-free.
+//!
+//! # `last_radii` self-warm-start
+//!
+//! The level-1 subproblem is the simplex projection of the maxima vector —
+//! solved cold by Condat's algorithm. Consecutive projections of the same
+//! (slowly drifting) matrix keep almost the same *support*: a group whose
+//! radius was positive last step almost always stays positive. The solver
+//! therefore remembers the last per-group radii and, on the next call,
+//! runs a Michelot fixed point restricted to that support, then verifies
+//! the KKT conditions against the excluded maxima (`max_{g∉S} v_g ≤ τ`).
+//! Verification passing *proves* τ optimal whatever the candidate support
+//! was, so a stale or even wrong support can only cost a cold fallback —
+//! never a wrong result. External τ hints (e.g. from a
+//! [`ThetaCache`](crate::serve::cache::ThetaCache)) enter the same way,
+//! with the candidate support `{g : v_g > hint/2}`.
+
+use crate::projection::grouped::GroupedViewMut;
+use crate::projection::l1inf::solver::{POOL_BUDGET_ELEMS, POOL_CAP};
+use crate::projection::l1inf::{ProjInfo, SolveStats};
+use crate::projection::simplex;
+use std::sync::Mutex;
+
+/// Result of one bi-level projection.
+#[derive(Debug, Clone, Copy)]
+pub struct BilevelInfo {
+    /// ‖Y‖₁,∞ before projection.
+    pub radius_before: f64,
+    /// ‖X‖₁,∞ after projection (= Σ_g r_g ≈ C when the input was outside).
+    pub radius_after: f64,
+    /// Level-1 simplex threshold τ on the maxima vector (0 when feasible;
+    /// `max_g v_g` in the degenerate `C = 0` limit).
+    pub tau: f64,
+    /// Groups whose radius collapsed to 0 (left entirely zero).
+    pub zero_groups: usize,
+    /// Number of groups with a positive radius after the solve (the level-1
+    /// active set; `0` on the feasible/degenerate fast paths).
+    pub survivors: usize,
+    /// True when the input was already inside the ball (projection = id).
+    pub feasible: bool,
+    /// τ-solve cost in value visits (Condat pass, or gather + Michelot
+    /// iterations + KKT verification on the warm path).
+    pub work: usize,
+    /// True when a warm-start candidate support was committed (its KKT
+    /// verification passed); false = cold Condat solve.
+    pub warm: bool,
+}
+
+impl BilevelInfo {
+    /// View this result through the exact-projection metadata shape (used
+    /// by the serve layer so both operator families share one response
+    /// path). `theta` carries τ — a different dual variable, same slot.
+    pub fn to_proj_info(&self) -> ProjInfo {
+        ProjInfo {
+            radius_before: self.radius_before,
+            radius_after: self.radius_after,
+            theta: self.tau,
+            zero_groups: self.zero_groups,
+            feasible: self.feasible,
+            stats: SolveStats {
+                theta: self.tau,
+                work: self.work,
+                touched_groups: self.survivors,
+                theta_hint: None,
+            },
+        }
+    }
+}
+
+/// Warm-start candidate for the level-1 τ solve.
+pub(crate) enum WarmCandidate<'a> {
+    /// No warm information: go straight to the cold Condat solve.
+    Cold,
+    /// External τ hint (candidate support `{g : v_g > hint/2}`).
+    Hint(f64),
+    /// Last solve's per-group radii (candidate support `{g : r_g > 0}`).
+    Support(&'a [f64]),
+}
+
+/// Outcome of the level-1 solve.
+pub(crate) struct TauSolve {
+    pub tau: f64,
+    /// Strictly-positive entries of the projected maxima (active set size).
+    pub k: usize,
+    /// Value visits spent (see [`BilevelInfo::work`]).
+    pub work: usize,
+    /// Warm candidate committed?
+    pub warm: bool,
+}
+
+/// Michelot fixed point restricted to a candidate support + KKT
+/// verification. Returns `None` whenever the candidate cannot be *proved*
+/// optimal — the caller falls back to the cold solve.
+fn solve_tau_restricted<F: Fn(usize, f64) -> bool>(
+    maxes: &[f32],
+    c: f64,
+    keep: F,
+    active: &mut Vec<f64>,
+) -> Option<TauSolve> {
+    active.clear();
+    let mut excluded_max = 0.0f64;
+    for (g, &v) in maxes.iter().enumerate() {
+        let v = v as f64;
+        if keep(g, v) {
+            active.push(v);
+        } else if v > excluded_max {
+            excluded_max = v;
+        }
+    }
+    if active.is_empty() {
+        return None;
+    }
+    let mut work = maxes.len();
+    loop {
+        let sum: f64 = active.iter().sum();
+        let tau = (sum - c) / active.len() as f64;
+        work += active.len();
+        // The global problem is infeasible (Σ v_g > C), so the true τ is
+        // strictly positive; a non-positive restricted τ means the support
+        // is missing mass.
+        if tau <= 0.0 {
+            return None;
+        }
+        let before = active.len();
+        active.retain(|&v| v > tau);
+        if active.is_empty() {
+            return None;
+        }
+        if active.len() == before {
+            // Michelot's τ is non-decreasing across iterations, so every
+            // value dropped earlier is ≤ τ; with the excluded maxima also
+            // ≤ τ the KKT conditions hold and τ is *the* simplex threshold.
+            if excluded_max > tau {
+                return None;
+            }
+            return Some(TauSolve { tau, k: active.len(), work, warm: true });
+        }
+    }
+}
+
+/// Level-1 solve: warm candidate first (verified), cold Condat fallback.
+/// Callers guarantee `Σ_g maxes[g] > c > 0`.
+pub(crate) fn solve_level1(
+    maxes: &[f32],
+    c: f64,
+    warm: WarmCandidate<'_>,
+    active: &mut Vec<f64>,
+) -> TauSolve {
+    let attempt = match warm {
+        WarmCandidate::Cold => None,
+        WarmCandidate::Hint(h) => {
+            if h.is_finite() && h > 0.0 {
+                let lo = 0.5 * h;
+                solve_tau_restricted(maxes, c, |_, v| v > lo, active)
+            } else {
+                None
+            }
+        }
+        WarmCandidate::Support(radii) => {
+            if radii.len() == maxes.len() {
+                solve_tau_restricted(maxes, c, |g, _| radii[g] > 0.0, active)
+            } else {
+                None
+            }
+        }
+    };
+    if let Some(ts) = attempt {
+        return ts;
+    }
+    let t = simplex::threshold_condat(maxes, c);
+    TauSolve { tau: t.tau, k: t.k, work: maxes.len(), warm: false }
+}
+
+/// How the caller must finish a root solve (see [`solve_root`]).
+pub(crate) enum RootSolve {
+    /// Input already inside the ball: the data is untouched and the info
+    /// is final (radii were set to the maxima for the next warm start).
+    Feasible(BilevelInfo),
+    /// Degenerate `C = 0`: the caller must zero the data; radii are zeroed
+    /// and the info is final.
+    Zero(BilevelInfo),
+    /// Regular solve: the caller must clamp the data at the filled radii.
+    Clamp(BilevelInfo),
+}
+
+/// The complete level-1 ("root") stage of the bi-level operator, shared by
+/// the serial [`BilevelSolver`] and the sharded [`super::tree::TreeBilevel`]
+/// so the two can never drift apart: feasibility / degenerate fast paths,
+/// warm-candidate selection (explicit `hint`, else the previous `radii` as
+/// a self-warm support), the τ solve, and the radii + metadata fold.
+/// Callers only differ in how they gather `maxes` and apply the radii.
+pub(crate) fn solve_root(
+    maxes: &[f32],
+    c: f64,
+    hint: Option<f64>,
+    radii: &mut Vec<f64>,
+    active: &mut Vec<f64>,
+) -> RootSolve {
+    let radius_before: f64 = maxes.iter().map(|&v| v as f64).sum();
+
+    // Already inside the ball: identity. Radii = the maxima themselves so
+    // the next self-warm-start still sees the live support.
+    if radius_before <= c {
+        let zero_groups = maxes.iter().filter(|&&v| v == 0.0).count();
+        radii.clear();
+        radii.extend(maxes.iter().map(|&v| v as f64));
+        return RootSolve::Feasible(BilevelInfo {
+            radius_before,
+            radius_after: radius_before,
+            tau: 0.0,
+            zero_groups,
+            survivors: 0,
+            feasible: true,
+            work: 0,
+            warm: false,
+        });
+    }
+    // Degenerate radius: the ball is {0}; τ → max_g v_g in the limit.
+    if c == 0.0 {
+        let mx = maxes.iter().fold(0.0f32, |a, &v| a.max(v)) as f64;
+        radii.clear();
+        radii.resize(maxes.len(), 0.0);
+        return RootSolve::Zero(BilevelInfo {
+            radius_before,
+            radius_after: 0.0,
+            tau: mx,
+            zero_groups: maxes.len(),
+            survivors: 0,
+            feasible: false,
+            work: 0,
+            warm: false,
+        });
+    }
+
+    // Level-1 solve: warm candidate from the explicit hint, else from the
+    // previous call's radii (the immutable borrow ends before the fill).
+    let ts = {
+        let warm = match hint {
+            Some(h) => WarmCandidate::Hint(h),
+            None if radii.len() == maxes.len() => WarmCandidate::Support(&*radii),
+            None => WarmCandidate::Cold,
+        };
+        solve_level1(maxes, c, warm, active)
+    };
+    let (radius_after, zero_groups) = fill_radii(maxes, ts.tau, radii);
+    RootSolve::Clamp(BilevelInfo {
+        radius_before,
+        radius_after,
+        tau: ts.tau,
+        zero_groups,
+        survivors: ts.k,
+        feasible: false,
+        work: ts.work,
+        warm: ts.warm,
+    })
+}
+
+/// Fill `radii` with `r_g = max(v_g − τ, 0)` and fold the post-clamp norm
+/// `Σ_g min(v_g, r_g)` (as the f32 values the clamp will write) plus the
+/// zero-group count — no matrix rescan. Shared by the serial solver and
+/// the sharded tree so both report bit-identical metadata.
+fn fill_radii(maxes: &[f32], tau: f64, radii: &mut Vec<f64>) -> (f64, usize) {
+    radii.clear();
+    radii.reserve(maxes.len());
+    let mut radius_after = 0.0f64;
+    let mut zero_groups = 0usize;
+    for &v in maxes {
+        let v = v as f64;
+        let r = (v - tau).max(0.0);
+        if r <= 0.0 {
+            zero_groups += 1;
+        } else {
+            // Exactly the f32 value the clamp writes.
+            let r32 = (r as f32) as f64;
+            radius_after += if v > r32 { r32 } else { v };
+        }
+        radii.push(r);
+    }
+    (radius_after, zero_groups)
+}
+
+/// Clamp each signed group at its radius through a (possibly strided)
+/// view: `X = sign(Y)·min(|Y|, r_g)`.
+pub fn apply_radii_view(view: &mut GroupedViewMut<'_>, radii: &[f64]) {
+    debug_assert_eq!(radii.len(), view.n_groups());
+    for (g, &r) in radii.iter().enumerate() {
+        if r <= 0.0 {
+            view.for_each_in_group_mut(g, |v| *v = 0.0);
+        } else {
+            let r32 = r as f32;
+            view.for_each_in_group_mut(g, |v| {
+                let a = (*v).abs() as f64;
+                if a > r {
+                    *v = if *v >= 0.0 { r32 } else { -r32 };
+                }
+            });
+        }
+    }
+}
+
+/// [`apply_radii_view`] over contiguous groups (the sharded tree's
+/// per-shard clamp kernel — same per-element arithmetic, same bits).
+pub fn apply_radii(data: &mut [f32], group_len: usize, radii: &[f64]) {
+    debug_assert_eq!(data.len(), group_len * radii.len());
+    for (g, &r) in radii.iter().enumerate() {
+        let grp = &mut data[g * group_len..(g + 1) * group_len];
+        if r <= 0.0 {
+            grp.fill(0.0);
+        } else {
+            let r32 = r as f32;
+            for v in grp.iter_mut() {
+                let a = (*v).abs() as f64;
+                if a > r {
+                    *v = if *v >= 0.0 { r32 } else { -r32 };
+                }
+            }
+        }
+    }
+}
+
+/// Reusable workspace for the serial bi-level operator (lifecycle and
+/// warm-start contract in the module docs).
+#[derive(Debug, Default)]
+pub struct BilevelSolver {
+    /// Per-group ℓ∞ maxima of the last projection (level 2 → 1 gather).
+    maxes: Vec<f32>,
+    /// Per-group radii of the last projection (level 1 result; the
+    /// self-warm-start support and the [`BilevelSolver::last_radii`]
+    /// handoff).
+    radii: Vec<f64>,
+    /// Warm-path Michelot active set.
+    active: Vec<f64>,
+    /// τ of the last infeasible projection (feed it to other solvers /
+    /// caches as a hint).
+    last_tau: Option<f64>,
+}
+
+impl BilevelSolver {
+    /// Empty workspace; nothing allocated until the first projection.
+    pub fn new() -> BilevelSolver {
+        BilevelSolver::default()
+    }
+
+    /// τ of the most recent infeasible projection, if any.
+    pub fn last_tau(&self) -> Option<f64> {
+        self.last_tau
+    }
+
+    /// Per-group radii of the most recent projection (empty before the
+    /// first call). For a feasible projection these are the maxima
+    /// themselves (every group "survives" at its own level).
+    pub fn last_radii(&self) -> &[f64] {
+        &self.radii
+    }
+
+    /// Approximate resident workspace footprint in f32-equivalent elements
+    /// (mirrors [`crate::projection::l1inf::Solver::workspace_elems`]).
+    pub fn workspace_elems(&self) -> usize {
+        self.maxes.capacity() + 2 * (self.radii.capacity() + self.active.capacity())
+    }
+
+    /// Forget the warm-start state (`last_radii` support + `last_tau`)
+    /// while keeping the buffer capacity. Shared pools call this so a
+    /// recycled workspace can never self-warm-start from an unrelated
+    /// request's support (the result would still be correct — the KKT
+    /// verification guarantees that — but the reported `warm` flag and the
+    /// low-order τ bits would depend on pool history).
+    pub fn reset_warm_state(&mut self) {
+        self.radii.clear();
+        self.last_tau = None;
+    }
+
+    /// Apply the bi-level operator to `view` in place.
+    ///
+    /// `hint` is an advisory τ warm start (any value is safe — see the
+    /// module docs); with `hint = None` the solver self-warm-starts from
+    /// its own `last_radii` when the group count matches.
+    pub fn project(
+        &mut self,
+        view: &mut GroupedViewMut<'_>,
+        c: f64,
+        hint: Option<f64>,
+    ) -> BilevelInfo {
+        assert!(c >= 0.0, "radius must be nonnegative");
+        let m = view.n_groups();
+
+        // Level 2 → 1: per-group |max| into the reusable gather. The fold
+        // is the exact f32 max fold of `norm_l1inf`, so `radius_before`
+        // is bit-identical to the norm of the input.
+        {
+            let ro = view.as_view();
+            self.maxes.clear();
+            self.maxes.reserve(m);
+            for g in 0..m {
+                self.maxes.push(ro.group_abs_max(g));
+            }
+        }
+
+        // Root stage (shared with the tree), then the level-1→2 finish.
+        match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+            RootSolve::Feasible(info) => {
+                self.last_tau = None;
+                info
+            }
+            RootSolve::Zero(info) => {
+                view.fill(0.0);
+                self.last_tau = None;
+                info
+            }
+            RootSolve::Clamp(info) => {
+                apply_radii_view(view, &self.radii);
+                self.last_tau = Some(info.tau);
+                info
+            }
+        }
+    }
+}
+
+/// One-shot bi-level projection of a contiguous grouped matrix (fresh
+/// workspace per call; hot loops should hold a [`BilevelSolver`]).
+pub fn project_bilevel(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+) -> BilevelInfo {
+    project_bilevel_hinted(data, n_groups, group_len, c, None)
+}
+
+/// [`project_bilevel`] with an advisory τ warm-start hint.
+pub fn project_bilevel_hinted(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    hint: Option<f64>,
+) -> BilevelInfo {
+    BilevelSolver::new().project(&mut GroupedViewMut::new(data, n_groups, group_len), c, hint)
+}
+
+/// A free-list of reusable bi-level workspaces (the serve layer's analog of
+/// [`crate::projection::l1inf::SolverPool`] for the `"bilevel"` mode):
+/// steady-state request handling checks warm workspaces out and back in
+/// instead of allocating. Shares the exact path's retention constants.
+#[derive(Debug, Default)]
+pub struct BilevelPool {
+    slots: Mutex<Vec<BilevelSolver>>,
+}
+
+impl BilevelPool {
+    pub fn new() -> BilevelPool {
+        BilevelPool::default()
+    }
+
+    /// Check a workspace out (warm when one is pooled).
+    pub fn acquire(&self) -> BilevelSolver {
+        let mut slots = self.slots.lock().expect("bilevel pool poisoned");
+        slots.pop().unwrap_or_default()
+    }
+
+    /// Return a workspace; dropped past [`POOL_CAP`] solvers or once the
+    /// pooled scratch would exceed [`POOL_BUDGET_ELEMS`]. The warm-start
+    /// state is forgotten (see [`BilevelSolver::reset_warm_state`]) so
+    /// cross-request history can never leak into `warm` flags or τ bits —
+    /// pooled solvers warm-start through the key-addressed cache instead.
+    pub fn release(&self, mut solver: BilevelSolver) {
+        solver.reset_warm_state();
+        let mut slots = self.slots.lock().expect("bilevel pool poisoned");
+        if slots.len() >= POOL_CAP {
+            return;
+        }
+        let pooled: usize = slots.iter().map(BilevelSolver::workspace_elems).sum();
+        if pooled + solver.workspace_elems() > POOL_BUDGET_ELEMS {
+            return;
+        }
+        slots.push(solver);
+    }
+
+    /// Number of idle workspaces currently pooled.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().expect("bilevel pool poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::{norm_l1inf, GroupedView};
+    use crate::util::rng::Rng;
+
+    fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        let mut y = vec![0.0f32; len];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * scale;
+        }
+        y
+    }
+
+    #[test]
+    fn feasible_is_identity() {
+        let mut y = vec![0.1f32, -0.2, 0.05, 0.0, 0.1, 0.0];
+        let orig = y.clone();
+        let info = project_bilevel(&mut y, 2, 3, 10.0);
+        assert!(info.feasible);
+        assert_eq!(y, orig);
+        assert_eq!(info.tau, 0.0);
+        assert_eq!(info.radius_before, info.radius_after);
+    }
+
+    #[test]
+    fn zero_radius_zeroes_everything() {
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        let info = project_bilevel(&mut y, 2, 2, 0.0);
+        assert!(y.iter().all(|&v| v == 0.0));
+        assert_eq!(info.zero_groups, 2);
+        assert!((info.tau - 4.0).abs() < 1e-12, "tau is the drowning level");
+    }
+
+    #[test]
+    fn result_is_feasible_and_signs_survive() {
+        let mut rng = Rng::new(0xB11);
+        for (g, l) in [(7, 5), (30, 3), (4, 40)] {
+            let y = random_signed(&mut rng, g * l, 3.0);
+            for frac in [0.1, 0.5, 0.9] {
+                let c = frac * norm_l1inf(GroupedView::new(&y, g, l));
+                let mut x = y.clone();
+                let info = project_bilevel(&mut x, g, l, c);
+                let norm = norm_l1inf(GroupedView::new(&x, g, l));
+                assert!(norm <= c * (1.0 + 1e-6) + 1e-9, "{norm} > {c}");
+                assert!((norm - info.radius_after).abs() <= 1e-9 * norm.max(1.0));
+                for (a, b) in x.iter().zip(&y) {
+                    assert!(a.abs() <= b.abs() + 1e-7, "magnitude grew");
+                    assert!(*a == 0.0 || a.signum() == b.signum(), "sign flipped");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_warm_start_matches_cold_and_commits() {
+        // Well-separated maxima clusters so small drift cannot move a group
+        // across τ: 5 "survivor" groups near 2.0, 20 "dead" groups near 0.1.
+        let mut rng = Rng::new(0xB12);
+        let (g, l) = (25, 6);
+        let mut y = vec![0.0f32; g * l];
+        for grp in 0..g {
+            let scale = if grp < 5 { 2.0 } else { 0.1 };
+            for i in 0..l {
+                let peak = if i == 0 { scale } else { 0.0 };
+                y[grp * l + i] = (rng.f32() - 0.5) * 0.02 + peak;
+            }
+        }
+        let c = 2.0;
+        let mut solver = BilevelSolver::new();
+        {
+            let mut first_m = y.clone();
+            let first = solver.project(&mut GroupedViewMut::new(&mut first_m, g, l), c, None);
+            assert!(!first.warm, "first call has no warm state");
+            assert!(!first.feasible);
+        }
+        for step in 0..4 {
+            // One optimizer-step-sized drift.
+            for v in y.iter_mut() {
+                *v *= 1.0 + 0.002 * (rng.f32() - 0.5);
+            }
+            let mut cold_m = y.clone();
+            let cold = project_bilevel(&mut cold_m, g, l, c);
+            let mut warm_m = y.clone();
+            let warm = solver.project(&mut GroupedViewMut::new(&mut warm_m, g, l), c, None);
+            assert!(warm.warm, "step {step} must commit the last_radii support");
+            assert!((warm.tau - cold.tau).abs() <= 1e-9 * cold.tau.max(1.0), "step {step}");
+            for (a, b) in warm_m.iter().zip(&cold_m) {
+                assert!((a - b).abs() <= 1e-6, "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_hints_are_safe() {
+        let mut rng = Rng::new(0xB13);
+        let (g, l) = (25, 6);
+        let y = random_signed(&mut rng, g * l, 2.0);
+        let mut cold_m = y.clone();
+        let cold = project_bilevel(&mut cold_m, g, l, 0.7);
+        for hint in [
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -1.0,
+            0.0,
+            1e-12,
+            cold.tau,
+            cold.tau * 1.05,
+            cold.tau * 100.0,
+        ] {
+            let mut m = y.clone();
+            let info = project_bilevel_hinted(&mut m, g, l, 0.7, Some(hint));
+            assert!(
+                (info.tau - cold.tau).abs() <= 1e-9 * cold.tau.max(1.0),
+                "hint {hint}: tau {} vs {}",
+                info.tau,
+                cold.tau
+            );
+            for (a, b) in m.iter().zip(&cold_m) {
+                assert!((a - b).abs() <= 1e-6, "hint {hint}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_change_resets_warm_state_safely() {
+        let mut rng = Rng::new(0xB14);
+        let mut solver = BilevelSolver::new();
+        for (g, l) in [(10, 4), (4, 10), (33, 2), (1, 16)] {
+            let y = random_signed(&mut rng, g * l, 2.5);
+            let mut reused = y.clone();
+            let ri = solver.project(&mut GroupedViewMut::new(&mut reused, g, l), 0.6, None);
+            let mut fresh = y.clone();
+            let fi = project_bilevel(&mut fresh, g, l, 0.6);
+            assert!((ri.tau - fi.tau).abs() <= 1e-9 * fi.tau.max(1.0), "{g}x{l}");
+            for (a, b) in reused.iter().zip(&fresh) {
+                assert!((a - b).abs() <= 1e-6, "{g}x{l}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_recycles_workspaces() {
+        let pool = BilevelPool::new();
+        let mut a = pool.acquire();
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        a.project(&mut GroupedViewMut::new(&mut y, 2, 2), 1.0, None);
+        let elems = a.workspace_elems();
+        assert!(elems > 0);
+        pool.release(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.acquire();
+        assert_eq!(b.workspace_elems(), elems, "warm workspace came back");
+        assert_eq!(pool.idle(), 0);
+    }
+}

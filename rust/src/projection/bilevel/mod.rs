@@ -1,0 +1,53 @@
+//! Bi-level / multi-level ℓ₁,∞ projection family — the *linear-time*
+//! sibling of the exact solvers in [`crate::projection::l1inf`].
+//!
+//! The exact projection onto `B₁,∞^C` couples every group through the dual
+//! variable θ* (Lemma 1), which is why even the paper's near-linear
+//! inverse-total-order solver carries a `J log nm` breakpoint term. The
+//! follow-up papers (Barlaud et al., arXiv:2407.16293; Perez & Barlaud,
+//! arXiv:2405.02086) replace the exact operator with a **bi-level**
+//! operator that decouples the levels:
+//!
+//! ```text
+//!   level 2 → 1:  v_g = max_i |Y[g,i]|              (per-group ℓ∞ maxima)
+//!   level 1:      r   = P_{Δ₁^C}(v)                 (ℓ₁-simplex projection)
+//!   level 1 → 2:  X[g,i] = sign(Y[g,i])·min(|Y[g,i]|, r_g)   (clamp)
+//! ```
+//!
+//! The result is always ℓ₁,∞-feasible — `‖X‖₁,∞ = Σ_g min(v_g, r_g) =
+//! Σ_g r_g ≤ C` — and idempotent, but it is a *different* operator from the
+//! exact projection (it clamps at the new radii instead of removing equal
+//! ℓ₁ mass θ* per group). What it buys:
+//!
+//! - **strictly linear time** `O(nm)`: two element passes plus one simplex
+//!   projection of an `m`-vector (reusing the water-level kernels of
+//!   [`crate::projection::simplex`]);
+//! - **embarrassing parallelism**: both element passes are independent per
+//!   group — see [`tree`] for the 2-level sharded evaluation;
+//! - in SAE training it sparsifies as well as the exact projection
+//!   (arXiv:2407.16293, Tables 1–3).
+//!
+//! Submodules:
+//! - [`bilevel`] — the serial operator: [`BilevelSolver`] (workspace-owning,
+//!   steady-state allocation-free, `last_radii` self-warm-start) and the
+//!   one-shot free functions [`project_bilevel`] /
+//!   [`project_bilevel_hinted`];
+//! - [`tree`]    — the multi-level generalization: [`TreeBilevel`] evaluates
+//!   the same operator over a configurable 2-level tree (shards of groups →
+//!   groups → elements) with the per-shard subproblems on
+//!   `std::thread::scope` workers; bit-identical to the serial operator.
+//!
+//! Integration: `train.projection = "bilevel" | "bilevel_cols"`
+//! ([`crate::config::train`]), the serve protocol's `"mode":"bilevel"`
+//! request field ([`crate::serve::protocol`]), and the
+//! `l1inf exp bilevel_bench` driver (`BENCH_bilevel.json`, with a ≥2×
+//! bi-level-vs-exact speedup gate).
+
+#[allow(clippy::module_inception)]
+pub mod bilevel;
+pub mod tree;
+
+pub use bilevel::{
+    project_bilevel, project_bilevel_hinted, BilevelInfo, BilevelPool, BilevelSolver,
+};
+pub use tree::{project_bilevel_tree, shard_ranges, TreeBilevel};

@@ -1,0 +1,241 @@
+//! Multi-level (2-level tree) evaluation of the bi-level operator.
+//!
+//! Perez & Barlaud (arXiv:2405.02086) generalize the bi-level projection
+//! to multi-level trees and observe that the level passes parallelize with
+//! exponential speedup in the tree depth: every node's reduction depends
+//! only on its own subtree. [`TreeBilevel`] instantiates the practical
+//! 2-level tree over a grouped matrix:
+//!
+//! ```text
+//!   root           τ = simplex threshold of the maxima vector   (O(m), serial)
+//!   shard level    S contiguous runs of groups                  (parallel workers)
+//!   group level    per-group |max| reduction + radius clamp     (inside each shard)
+//! ```
+//!
+//! Each `std::thread::scope` worker owns one shard and runs both per-shard
+//! subproblems — the level-2→1 maxima reduction and the level-1→2 clamp,
+//! which together are the entire `O(nm)` cost of the operator. The root
+//! subproblem is `O(m)` and stays serial, exactly like the exact sharded
+//! path in [`crate::serve::batch`] keeps its scalar θ solve serial.
+//!
+//! **Bit-compatibility:** the shard boundaries never change any arithmetic
+//! — the maxima land in the same buffer in the same order, the root τ
+//! solve consumes the same bits, and the clamp kernel is shared with the
+//! serial operator ([`bilevel::apply_radii`]) — so the tree result is
+//! bit-identical to [`BilevelSolver`](bilevel::BilevelSolver) at any shard
+//! count. (A *budget-splitting* tree that gives every shard its own
+//! ℓ₁-subproblem would be a different operator with different fixed
+//! points; this module parallelizes the canonical bi-level operator.)
+
+use super::bilevel::{self, solve_root, BilevelInfo, RootSolve};
+
+/// Contiguous group ranges `[(lo, hi))` splitting `n` groups into at most
+/// `parts` near-equal shards (also used by the serve layer's exact sharded
+/// path).
+pub fn shard_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Reusable 2-level-tree workspace for the bi-level operator (contiguous
+/// grouped layout; same lifecycle discipline as
+/// [`bilevel::BilevelSolver`]).
+#[derive(Debug)]
+pub struct TreeBilevel {
+    shards: usize,
+    maxes: Vec<f32>,
+    radii: Vec<f64>,
+    active: Vec<f64>,
+}
+
+impl TreeBilevel {
+    /// `shards = 0` means one shard per available core.
+    pub fn new(shards: usize) -> TreeBilevel {
+        let shards = if shards == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            shards
+        };
+        TreeBilevel { shards, maxes: Vec::new(), radii: Vec::new(), active: Vec::new() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Apply the bi-level operator in place with the per-shard subproblems
+    /// on scoped workers. `hint` is the same advisory τ warm start as
+    /// [`bilevel::BilevelSolver::project`] (with `None` the tree
+    /// self-warm-starts from its own last radii).
+    pub fn project(
+        &mut self,
+        data: &mut [f32],
+        n_groups: usize,
+        group_len: usize,
+        c: f64,
+        hint: Option<f64>,
+    ) -> BilevelInfo {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        assert!(c >= 0.0, "radius must be nonnegative");
+        let ranges = shard_ranges(n_groups, self.shards);
+        let parallel = self.shards > 1 && ranges.len() > 1 && group_len > 0;
+
+        // Shard level, pass 1: per-group |max| reductions. Each worker
+        // writes its own disjoint chunk of the maxima buffer; the fold per
+        // group is the serial fold, so the buffer is bit-identical to the
+        // serial gather.
+        self.maxes.clear();
+        self.maxes.resize(n_groups, 0.0);
+        if parallel {
+            let data_ro: &[f32] = &*data;
+            let mut maxes_rem: &mut [f32] = &mut self.maxes;
+            std::thread::scope(|s| {
+                for &(lo, hi) in &ranges {
+                    let (max_chunk, rest) = std::mem::take(&mut maxes_rem).split_at_mut(hi - lo);
+                    maxes_rem = rest;
+                    s.spawn(move || {
+                        // The shard is itself a contiguous grouped matrix:
+                        // reuse the one canonical abs-max fold so the bit
+                        // contract has a single source of truth.
+                        let shard = crate::projection::GroupedView::new(
+                            &data_ro[lo * group_len..hi * group_len],
+                            hi - lo,
+                            group_len,
+                        );
+                        for (gi, slot) in max_chunk.iter_mut().enumerate() {
+                            *slot = shard.group_abs_max(gi);
+                        }
+                    });
+                }
+            });
+        } else {
+            let ro = crate::projection::GroupedView::new(&*data, n_groups, group_len);
+            for (g, slot) in self.maxes.iter_mut().enumerate() {
+                *slot = ro.group_abs_max(g);
+            }
+        }
+        // Root stage — the exact code the serial operator runs (fast
+        // paths, warm-candidate selection, τ solve, radii fold), so the
+        // tree can never drift from [`bilevel::BilevelSolver`]: identical
+        // maxima bits in give identical radii bits out.
+        match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+            RootSolve::Feasible(info) => info,
+            RootSolve::Zero(info) => {
+                data.fill(0.0);
+                info
+            }
+            RootSolve::Clamp(info) => {
+                // Shard level, pass 2: clamp every shard at its radii with
+                // the serial operator's kernel.
+                if parallel {
+                    let radii_ro: &[f64] = &self.radii;
+                    let mut data_rem: &mut [f32] = data;
+                    std::thread::scope(|s| {
+                        for &(lo, hi) in &ranges {
+                            let (chunk, rest) =
+                                std::mem::take(&mut data_rem).split_at_mut((hi - lo) * group_len);
+                            data_rem = rest;
+                            s.spawn(move || {
+                                bilevel::apply_radii(chunk, group_len, &radii_ro[lo..hi]);
+                            });
+                        }
+                    });
+                } else {
+                    bilevel::apply_radii(data, group_len, &self.radii);
+                }
+                info
+            }
+        }
+    }
+}
+
+/// One-shot 2-level-tree bi-level projection (fresh workspace per call;
+/// `shards = 0` means one per available core).
+pub fn project_bilevel_tree(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    shards: usize,
+) -> BilevelInfo {
+    TreeBilevel::new(shards).project(data, n_groups, group_len, c, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::bilevel::project_bilevel;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shards_cover_exactly() {
+        for (n, p) in [(10, 3), (1, 4), (7, 7), (8, 2), (5, 1), (0, 3)] {
+            let r = shard_ranges(n, p);
+            let total: usize = r.iter().map(|(lo, hi)| hi - lo).sum();
+            assert_eq!(total, n, "n={n} p={p} {r:?}");
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            if n > 0 {
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[r.len() - 1].1, n);
+            }
+        }
+    }
+
+    #[test]
+    fn tree_is_bit_identical_to_serial_bilevel() {
+        let mut rng = Rng::new(0x7EE);
+        for (g, l) in [(37, 11), (8, 64), (64, 8), (1, 20), (20, 1)] {
+            let mut data = vec![0.0f32; g * l];
+            for v in data.iter_mut() {
+                *v = (rng.f32() - 0.5) * 3.0;
+            }
+            for c in [0.0, 0.4, 2.0, 1e6] {
+                let mut serial = data.clone();
+                let si = project_bilevel(&mut serial, g, l, c);
+                for shards in [1usize, 2, 3, 8] {
+                    let mut par = data.clone();
+                    let pi = project_bilevel_tree(&mut par, g, l, c, shards);
+                    assert_eq!(serial, par, "{g}x{l} c={c} shards={shards}");
+                    assert_eq!(si.tau.to_bits(), pi.tau.to_bits(), "{g}x{l} c={c}");
+                    assert_eq!(si.zero_groups, pi.zero_groups);
+                    assert_eq!(si.feasible, pi.feasible);
+                    assert_eq!(si.radius_after.to_bits(), pi.radius_after.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_workspace_reuse_is_exact() {
+        let mut rng = Rng::new(0x7EF);
+        let (g, l) = (40, 6);
+        let mut tree = TreeBilevel::new(4);
+        for step in 0..4 {
+            let mut data = vec![0.0f32; g * l];
+            for v in data.iter_mut() {
+                *v = (rng.f32() - 0.5) * 2.0;
+            }
+            let mut fresh = data.clone();
+            let fi = project_bilevel(&mut fresh, g, l, 0.8);
+            let ri = tree.project(&mut data, g, l, 0.8, None);
+            assert!((ri.tau - fi.tau).abs() <= 1e-9 * fi.tau.max(1.0), "step {step}");
+            for (a, b) in data.iter().zip(&fresh) {
+                assert!((a - b).abs() <= 1e-6, "step {step}");
+            }
+        }
+    }
+}

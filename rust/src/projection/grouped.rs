@@ -143,6 +143,30 @@ impl<'a> GroupedView<'a> {
         }
     }
 
+    /// Per-group `max |·|` with the exact f32 max fold of the seed's
+    /// `norm_l1inf` — the level-2→1 reduction of the bi-level operator and
+    /// the per-group term of [`crate::projection::norm_l1inf`].
+    pub fn group_abs_max(&self, g: usize) -> f32 {
+        let mut mx = 0.0f32;
+        self.for_each_in_group(g, |v| mx = mx.max(v.abs()));
+        mx
+    }
+
+    /// True when every element of group `g` is exactly zero
+    /// (short-circuits on the first nonzero).
+    pub fn group_is_zero(&self, g: usize) -> bool {
+        if let Some(s) = self.group_slice(g) {
+            return s.iter().all(|&v| v == 0.0);
+        }
+        let base = g * self.group_stride;
+        for i in 0..self.group_len {
+            if self.data[base + i * self.elem_stride] != 0.0 {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Fused per-group scan: `(max |·|, Σ|·|)` with the exact accumulation
     /// order of the seed's `norm_l1inf` (f32 max fold) and group-sum seeding
     /// (sequential f64 adds) — callers rely on this for bit-compatibility.

@@ -24,6 +24,8 @@ impl Default for Tolerance {
     }
 }
 
+use crate::projection::grouped::GroupedView;
+
 /// Verify the KKT conditions; returns the certified θ on success.
 pub fn verify_l1inf(
     y: &[f32],
@@ -39,8 +41,8 @@ pub fn verify_l1inf(
     let scale = y.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64)).max(1.0);
     let eps = tol.abs + tol.rel * scale;
 
-    let norm_before = crate::projection::norm_l1inf(y, n_groups, group_len);
-    let norm_after = crate::projection::norm_l1inf(x, n_groups, group_len);
+    let norm_before = crate::projection::norm_l1inf(GroupedView::new(y, n_groups, group_len));
+    let norm_after = crate::projection::norm_l1inf(GroupedView::new(x, n_groups, group_len));
 
     // Feasible input must be untouched.
     if norm_before <= c {
@@ -146,7 +148,7 @@ mod tests {
     fn rejects_scaled_matrix() {
         // Uniform scaling to the right norm is NOT the projection.
         let y = vec![1.0f32, 0.2, 0.8, 0.6];
-        let norm = crate::projection::norm_l1inf(&y, 2, 2);
+        let norm = crate::projection::norm_l1inf(GroupedView::new(&y, 2, 2));
         let c = 0.5 * norm;
         let x: Vec<f32> = y.iter().map(|&v| v * 0.5).collect();
         assert!(verify_l1inf(&y, &x, 2, 2, c, Tolerance::default()).is_err());

@@ -61,6 +61,7 @@ pub fn project_l12(data: &mut [f32], n_groups: usize, group_len: usize, eta: f64
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::projection::grouped::GroupedView;
     use crate::projection::norm_l12;
     use crate::util::prop;
     use crate::util::rng::Rng;
@@ -95,7 +96,7 @@ mod tests {
                 if info.feasible {
                     return Ok(());
                 }
-                let norm = norm_l12(&x, *g, *l);
+                let norm = norm_l12(GroupedView::new(&x, *g, *l));
                 if (norm - eta).abs() > 1e-4 {
                     return Err(format!("norm {norm} != eta {eta}"));
                 }

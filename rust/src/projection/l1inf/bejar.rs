@@ -126,12 +126,12 @@ mod tests {
             0xEF,
             |rng: &mut Rng| {
                 let (data, g, l) = prop::gen_projection_matrix(rng, 8, 10);
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 let c = (0.05 + 0.9 * rng.f64()) * norm;
                 (data, g, l, c)
             },
             |(data, g, l, c)| {
-                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(data, *g, *l));
                 if norm <= *c || *c <= 0.0 {
                     return Ok(());
                 }
@@ -153,12 +153,12 @@ mod tests {
             0xFE,
             |rng: &mut Rng| {
                 let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 let c = (0.05 + 0.9 * rng.f64()) * norm;
                 (data, g, l, c)
             },
             |(data, g, l, c)| {
-                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(data, *g, *l));
                 if norm <= *c || *c <= 0.0 {
                     return Ok(());
                 }
@@ -196,7 +196,7 @@ mod tests {
         for (g, l) in [(20usize, 6usize), (7, 11), (20, 6)] {
             let mut abs = vec![0.0f32; g * l];
             rng.fill_uniform_f32(&mut abs);
-            let c = 0.25 * crate::projection::norm_l1inf(&abs, g, l);
+            let c = 0.25 * crate::projection::norm_l1inf(GroupedView::new(&abs, g, l));
             if c <= 0.0 {
                 continue;
             }

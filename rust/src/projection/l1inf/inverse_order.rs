@@ -452,12 +452,12 @@ mod tests {
             0x1234,
             |rng: &mut Rng| {
                 let (data, g, l) = prop::gen_projection_matrix(rng, 10, 14);
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 let c = (0.02 + 0.96 * rng.f64()) * norm;
                 (data, g, l, c)
             },
             |(data, g, l, c)| {
-                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(data, *g, *l));
                 if norm <= *c || *c <= 0.0 {
                     return Ok(());
                 }
@@ -600,7 +600,7 @@ mod tests {
             for v in data.iter_mut() {
                 *v = (rng.f32() - 0.5) * 2.0;
             }
-            let c = 0.3 * crate::projection::norm_l1inf(&data, g, l);
+            let c = 0.3 * crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
             if c <= 0.0 {
                 continue;
             }

@@ -175,12 +175,12 @@ mod tests {
             0x77,
             |rng: &mut Rng| {
                 let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 let c = (0.05 + 0.9 * rng.f64()) * norm;
                 (data, g, l, c)
             },
             |(data, g, l, c)| {
-                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(data, *g, *l));
                 if norm <= *c || *c <= 0.0 {
                     return Ok(());
                 }
@@ -256,7 +256,7 @@ mod tests {
         for (g, l) in [(25usize, 10usize), (8, 30), (25, 10)] {
             let mut abs = vec![0.0f32; g * l];
             rng.fill_uniform_f32(&mut abs);
-            let c = 0.5 * crate::projection::norm_l1inf(&abs, g, l);
+            let c = 0.5 * crate::projection::norm_l1inf(GroupedView::new(&abs, g, l));
             if c <= 0.0 {
                 continue;
             }

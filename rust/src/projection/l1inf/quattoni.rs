@@ -187,13 +187,13 @@ mod tests {
             0xAB,
             |rng: &mut Rng| {
                 let (data, g, l) = prop::gen_projection_matrix(rng, 8, 12);
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 // Pick C strictly inside (0, norm) so a projection happens.
                 let c = (0.05 + 0.9 * rng.f64()) * norm;
                 (data, g, l, c)
             },
             |(data, g, l, c)| {
-                let norm = crate::projection::norm_l1inf(data, *g, *l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(data, *g, *l));
                 if norm <= *c || *c <= 0.0 {
                     return Ok(()); // degenerate draw (all-zero matrix)
                 }
@@ -229,7 +229,7 @@ mod tests {
         for (g, l) in [(6usize, 9usize), (11, 3), (6, 9)] {
             let mut abs = vec![0.0f32; g * l];
             rng.fill_uniform_f32(&mut abs);
-            let c = 0.4 * crate::projection::norm_l1inf(&abs, g, l);
+            let c = 0.4 * crate::projection::norm_l1inf(GroupedView::new(&abs, g, l));
             if c <= 0.0 {
                 continue;
             }

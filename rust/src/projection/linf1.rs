@@ -9,6 +9,7 @@
 //! for proximal-splitting solvers of problems regularized by the ℓ∞,₁ norm;
 //! exposing it makes the projection reusable well beyond the SAE use case.
 
+use super::grouped::GroupedView;
 use super::l1inf::{project_l1inf, Algorithm, ProjInfo};
 
 /// Result of a prox evaluation.
@@ -34,7 +35,7 @@ pub fn prox_linf1(
     for (v, p) in data.iter_mut().zip(projected.iter()) {
         *v -= *p;
     }
-    let norm_linf1_after = super::norm_linf1(data, n_groups, group_len);
+    let norm_linf1_after = super::norm_linf1(GroupedView::new(data, n_groups, group_len));
     ProxInfo { projection, norm_linf1_after }
 }
 
@@ -42,6 +43,7 @@ pub fn prox_linf1(
 mod tests {
     use super::*;
     use crate::projection::{norm_l1inf, norm_linf1};
+    // GroupedView comes in through `use super::*`.
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -82,7 +84,7 @@ mod tests {
                     }
                 }
                 // The projection part must be inside the primal ball.
-                let r = norm_l1inf(&proj, *g, *l);
+                let r = norm_l1inf(GroupedView::new(&proj, *g, *l));
                 if r > c + 1e-4 {
                     return Err(format!("projection outside ball: {r} > {c}"));
                 }
@@ -103,7 +105,7 @@ mod tests {
         let mut prox = y.clone();
         let info = prox_linf1(&mut prox, 12, 6, c, Algorithm::Bisection);
         let theta = info.projection.theta;
-        let norm = norm_linf1(&prox, 12, 6);
+        let norm = norm_linf1(GroupedView::new(&prox, 12, 6));
         assert!((norm - theta).abs() < 1e-5, "norm={norm} theta={theta}");
     }
 }

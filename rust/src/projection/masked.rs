@@ -66,6 +66,7 @@ pub fn apply_mask(data: &mut [f32], mask: &[bool]) {
 mod tests {
     use super::*;
     use crate::projection::group_sparsity_pct;
+    use crate::projection::grouped::GroupedView;
     use crate::util::prop;
     use crate::util::rng::Rng;
 
@@ -91,7 +92,7 @@ mod tests {
                         *v = -*v;
                     }
                 }
-                let norm = crate::projection::norm_l1inf(&data, g, l);
+                let norm = crate::projection::norm_l1inf(GroupedView::new(&data, g, l));
                 let c = (0.05 + 0.8 * rng.f64()) * norm.max(1e-6);
                 (data, g, l, c)
             },
@@ -129,6 +130,6 @@ mod tests {
         for i in 0..6 {
             assert_eq!(w[i] != 0.0, info.mask[i]);
         }
-        let _ = group_sparsity_pct(&y, 3, 2);
+        let _ = group_sparsity_pct(GroupedView::new(&y, 3, 2));
     }
 }

@@ -21,10 +21,19 @@
 //!   six implementations — gold bisection, Quattoni (total order), naive
 //!   active-set (Alg. 1), Bejar elimination, Chu semismooth Newton, and
 //!   the paper's **inverse total order** (Alg. 2).
+//! - [`bilevel`]  — the **bi-level / multi-level** operator family
+//!   (arXiv:2407.16293, arXiv:2405.02086): strictly linear-time,
+//!   embarrassingly parallel ℓ₁,∞-feasible projection — maxima extraction →
+//!   ℓ₁-simplex projection → per-group clamp — with a 2-level sharded tree.
 //! - [`linf1`]    — prox of the dual ℓ∞,₁ norm via the Moreau identity.
 //! - [`masked`]   — masked projection (Eq. 20).
 //! - [`kkt`]      — optimality-condition verifier used throughout the tests.
+//!
+//! The grouped norms below take a [`GroupedView`] — any layout the shape
+//! layer expresses (contiguous rows or strided matrix columns) — instead of
+//! the seed's raw `(data, n_groups, group_len)` triple.
 
+pub mod bilevel;
 pub mod grouped;
 pub mod kkt;
 pub mod l1;
@@ -37,26 +46,20 @@ pub mod simplex;
 pub use grouped::{GroupedView, GroupedViewMut};
 
 /// ‖Y‖₁,∞ of a grouped matrix: sum over groups of the max **absolute** value.
-pub fn norm_l1inf(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
-    debug_assert_eq!(data.len(), n_groups * group_len);
+pub fn norm_l1inf(view: GroupedView<'_>) -> f64 {
     let mut total = 0.0f64;
-    for g in 0..n_groups {
-        let row = &data[g * group_len..(g + 1) * group_len];
-        let m = row.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
-        total += m as f64;
+    for g in 0..view.n_groups() {
+        total += view.group_abs_max(g) as f64;
     }
     total
 }
 
 /// ‖Y‖∞,₁ of a grouped matrix: max over groups of the sum of absolute values
 /// (the dual norm of ℓ₁,∞; Eq. 14 of the paper).
-pub fn norm_linf1(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
-    debug_assert_eq!(data.len(), n_groups * group_len);
+pub fn norm_linf1(view: GroupedView<'_>) -> f64 {
     let mut best = 0.0f64;
-    for g in 0..n_groups {
-        let row = &data[g * group_len..(g + 1) * group_len];
-        let s: f64 = row.iter().map(|&x| x.abs() as f64).sum();
-        best = best.max(s);
+    for g in 0..view.n_groups() {
+        best = best.max(view.group_abs_sum(g));
     }
     best
 }
@@ -67,24 +70,21 @@ pub fn norm_l1(data: &[f32]) -> f64 {
 }
 
 /// ‖Y‖₁,₂: sum over groups of the Euclidean norms.
-pub fn norm_l12(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
-    debug_assert_eq!(data.len(), n_groups * group_len);
-    (0..n_groups)
-        .map(|g| {
-            let row = &data[g * group_len..(g + 1) * group_len];
-            (row.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt()
-        })
-        .sum()
+pub fn norm_l12(view: GroupedView<'_>) -> f64 {
+    let mut total = 0.0f64;
+    for g in 0..view.n_groups() {
+        let mut sq = 0.0f64;
+        view.for_each_in_group(g, |v| sq += (v as f64) * (v as f64));
+        total += sq.sqrt();
+    }
+    total
 }
 
 /// Fraction of groups that are entirely zero ("column sparsity" of the
 /// paper's tables, in percent).
-pub fn group_sparsity_pct(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
-    debug_assert_eq!(data.len(), n_groups * group_len);
-    let zero_groups = (0..n_groups)
-        .filter(|&g| data[g * group_len..(g + 1) * group_len].iter().all(|&x| x == 0.0))
-        .count();
-    100.0 * zero_groups as f64 / n_groups.max(1) as f64
+pub fn group_sparsity_pct(view: GroupedView<'_>) -> f64 {
+    let zero_groups = (0..view.n_groups()).filter(|&g| view.group_is_zero(g)).count();
+    100.0 * zero_groups as f64 / view.n_groups().max(1) as f64
 }
 
 /// Fraction of entries equal to zero, in percent.
@@ -101,17 +101,31 @@ mod tests {
     fn norms_small_example() {
         // 2 groups of length 3
         let y = [1.0f32, -2.0, 0.5, 0.0, 3.0, -1.0];
-        assert!((norm_l1inf(&y, 2, 3) - (2.0 + 3.0)).abs() < 1e-6);
-        assert!((norm_linf1(&y, 2, 3) - 4.0).abs() < 1e-6);
+        assert!((norm_l1inf(GroupedView::new(&y, 2, 3)) - (2.0 + 3.0)).abs() < 1e-6);
+        assert!((norm_linf1(GroupedView::new(&y, 2, 3)) - 4.0).abs() < 1e-6);
         assert!((norm_l1(&y) - 7.5).abs() < 1e-6);
         let l12 = ((1.0f64 + 4.0 + 0.25).sqrt()) + ((9.0f64 + 1.0).sqrt());
-        assert!((norm_l12(&y, 2, 3) - l12).abs() < 1e-6);
+        assert!((norm_l12(GroupedView::new(&y, 2, 3)) - l12).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms_through_column_views_match_transpose() {
+        // Row-major 2×3; column groups must give the same norms as the
+        // transposed contiguous layout.
+        let data = [1.0f32, -2.0, 0.5, 0.0, 3.0, -1.0];
+        let transposed = [1.0f32, 0.0, -2.0, 3.0, 0.5, -1.0];
+        let cols = GroupedView::columns(&data, 2, 3);
+        let rows = GroupedView::new(&transposed, 3, 2);
+        assert_eq!(norm_l1inf(cols).to_bits(), norm_l1inf(rows).to_bits());
+        assert_eq!(norm_linf1(cols).to_bits(), norm_linf1(rows).to_bits());
+        assert_eq!(norm_l12(cols).to_bits(), norm_l12(rows).to_bits());
+        assert_eq!(group_sparsity_pct(cols).to_bits(), group_sparsity_pct(rows).to_bits());
     }
 
     #[test]
     fn sparsity_measures() {
         let y = [0.0f32, 0.0, 0.0, 1.0, 0.0, 2.0];
-        assert!((group_sparsity_pct(&y, 2, 3) - 50.0).abs() < 1e-9);
+        assert!((group_sparsity_pct(GroupedView::new(&y, 2, 3)) - 50.0).abs() < 1e-9);
         assert!((sparsity_pct(&y) - (4.0 / 6.0 * 100.0)).abs() < 1e-9);
     }
 }

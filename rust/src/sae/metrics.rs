@@ -2,6 +2,7 @@
 //! sparsity of the encoder input layer, weight mass, selected features.
 
 use crate::projection;
+use crate::projection::GroupedView;
 
 /// Classification accuracy from logits (row-major B × k) and labels.
 /// Only the first `valid` rows are counted (tail batches are padded).
@@ -52,7 +53,7 @@ pub fn w1_metrics(w1: &[f32], d: usize, h: usize) -> W1Metrics {
         col_sparsity_pct: 100.0 * (d - selected.len()) as f64 / d as f64,
         weight_sparsity_pct: projection::sparsity_pct(w1),
         sum_abs: projection::norm_l1(w1),
-        norm_l1inf: projection::norm_l1inf(w1, d, h),
+        norm_l1inf: projection::norm_l1inf(GroupedView::new(w1, d, h)),
         selected,
     }
 }

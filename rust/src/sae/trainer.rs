@@ -13,6 +13,8 @@ use super::state::TrainState;
 #[cfg(feature = "pjrt")]
 use crate::data::loader::Split;
 #[cfg(feature = "pjrt")]
+use crate::projection::bilevel::BilevelSolver;
+#[cfg(feature = "pjrt")]
 use crate::projection::grouped::GroupedViewMut;
 #[cfg(feature = "pjrt")]
 use crate::projection::l1inf::{new_solver, project_with, Solver};
@@ -47,6 +49,16 @@ pub enum ProjectionMode {
     /// [`crate::projection::grouped::GroupedViewMut::columns`] view — no
     /// transpose copy in or out.
     L1InfCols { c: f64 },
+    /// Bi-level ℓ₁,∞-feasible operator of radius `c` over feature rows
+    /// (arXiv:2407.16293): strictly linear time, not the exact projection
+    /// but an equally effective sparsifier — see
+    /// [`crate::projection::bilevel`]. The logged θ is the level-1 simplex
+    /// threshold τ.
+    Bilevel { c: f64 },
+    /// [`ProjectionMode::Bilevel`] over encoder *columns* through the
+    /// strided view (the bi-level analog of
+    /// [`ProjectionMode::L1InfCols`]).
+    BilevelCols { c: f64 },
     /// Masked ℓ₁,∞ (Eq. 20): keep the support, don't bound values.
     L1InfMasked { c: f64 },
 }
@@ -59,6 +71,8 @@ impl ProjectionMode {
             ProjectionMode::L12 { .. } => "l21",
             ProjectionMode::L1Inf { .. } => "l1inf",
             ProjectionMode::L1InfCols { .. } => "l1inf_cols",
+            ProjectionMode::Bilevel { .. } => "bilevel",
+            ProjectionMode::BilevelCols { .. } => "bilevel_cols",
             ProjectionMode::L1InfMasked { .. } => "l1inf_masked",
         }
     }
@@ -151,6 +165,10 @@ pub struct Trainer<'e> {
     /// nothing after the first epoch (see
     /// [`crate::projection::l1inf::solver`]).
     solver: Box<dyn Solver>,
+    /// Persistent bi-level workspace for the `bilevel`/`bilevel_cols`
+    /// modes; its `last_radii` self-warm-start makes every epoch after the
+    /// first skip the cold level-1 solve.
+    bilevel: BilevelSolver,
 }
 
 #[cfg(feature = "pjrt")]
@@ -158,7 +176,8 @@ impl<'e> Trainer<'e> {
     pub fn new(engine: &'e mut Engine, tc: TrainConfig) -> Result<Trainer<'e>> {
         let cfg = engine.config(&tc.model)?;
         let solver = new_solver(tc.algo);
-        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new(), solver })
+        let bilevel = BilevelSolver::new();
+        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new(), solver, bilevel })
     }
 
     /// Run the full schedule on `split`; returns the report.
@@ -342,6 +361,15 @@ impl<'e> Trainer<'e> {
                     self.theta_cache.update("w1.cols", h, d, c, info.theta);
                 }
                 info.theta
+            }
+            ProjectionMode::Bilevel { c } => {
+                // Linear-time bi-level operator over feature rows; the
+                // persistent workspace self-warm-starts from its own last
+                // radii (no θ cache needed — one matrix per trainer).
+                self.bilevel.project(&mut GroupedViewMut::new(w1, d, h), c, None).tau
+            }
+            ProjectionMode::BilevelCols { c } => {
+                self.bilevel.project(&mut GroupedViewMut::columns(w1, d, h), c, None).tau
             }
             ProjectionMode::L1InfMasked { c } => project_masked(w1, d, h, c, algo).projection.theta,
         })

@@ -35,6 +35,7 @@
 //! never materializes `|Y|` at all.
 
 use super::cache::ThetaCache;
+use crate::projection::bilevel::{shard_ranges, BilevelInfo, BilevelPool, TreeBilevel};
 use crate::projection::grouped::{GroupedView, GroupedViewMut};
 use crate::projection::l1inf::{
     apply_water_levels, project_with, water_levels, Algorithm, ProjInfo, SolveStats, Solver,
@@ -42,6 +43,39 @@ use crate::projection::l1inf::{
 };
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Which operator family a projection request runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ProjKind {
+    /// The exact ℓ₁,∞ projection (one of the six [`Algorithm`] solvers).
+    #[default]
+    Exact,
+    /// The linear-time bi-level operator
+    /// ([`crate::projection::bilevel`]) — always ℓ₁,∞-feasible, not the
+    /// exact projection, embarrassingly parallel.
+    Bilevel,
+}
+
+impl ProjKind {
+    /// Canonical protocol string (`"mode"` field values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjKind::Exact => "exact",
+            ProjKind::Bilevel => "bilevel",
+        }
+    }
+}
+
+impl std::str::FromStr for ProjKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "l1inf" => Ok(ProjKind::Exact),
+            "bilevel" | "bi-level" => Ok(ProjKind::Bilevel),
+            other => Err(format!("unknown projection mode '{other}' (valid: exact, bilevel)")),
+        }
+    }
+}
 
 /// One projection job in a heterogeneous queue.
 #[derive(Debug, Clone)]
@@ -55,6 +89,9 @@ pub struct ProjRequest {
     pub group_len: usize,
     pub radius: f64,
     pub algo: Algorithm,
+    /// Operator family: exact ℓ₁,∞ (via `algo`) or the bi-level operator
+    /// (which ignores `algo`).
+    pub mode: ProjKind,
 }
 
 /// Outcome of one [`ProjRequest`].
@@ -65,25 +102,6 @@ pub struct ProjResponse {
     pub info: ProjInfo,
     /// Whether a warm-start hint was fed to the solver.
     pub warm: bool,
-}
-
-/// Contiguous group ranges `[(lo, hi))` splitting `n` groups into at most
-/// `parts` near-equal shards.
-fn shard_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.max(1).min(n.max(1));
-    let base = n / parts;
-    let extra = n % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut lo = 0usize;
-    for i in 0..parts {
-        let len = base + usize::from(i < extra);
-        if len == 0 {
-            continue;
-        }
-        out.push((lo, lo + len));
-        lo += len;
-    }
-    out
 }
 
 /// Below this many matrix entries a projection runs serially even on a
@@ -99,6 +117,8 @@ pub struct BatchProjector {
     /// Recycled solver workspaces shared by every entry point (and by
     /// clones of this projector — the serve connections all feed one pool).
     solvers: Arc<SolverPool>,
+    /// Recycled bi-level workspaces for `mode = bilevel` requests.
+    bilevels: Arc<BilevelPool>,
 }
 
 impl BatchProjector {
@@ -116,7 +136,12 @@ impl BatchProjector {
         } else {
             threads
         };
-        BatchProjector { threads, min_parallel_elems, solvers: Arc::new(SolverPool::new()) }
+        BatchProjector {
+            threads,
+            min_parallel_elems,
+            solvers: Arc::new(SolverPool::new()),
+            bilevels: Arc::new(BilevelPool::new()),
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -300,6 +325,44 @@ impl BatchProjector {
         info
     }
 
+    /// Project one matrix with the **bi-level** operator
+    /// ([`crate::projection::bilevel`]), sharding both O(nm) passes across
+    /// the pool exactly like the exact path shards its group passes. The
+    /// sharded result is bit-identical to the serial bi-level operator at
+    /// any thread count (the tree keeps the scalar level-1 solve serial,
+    /// like the exact path keeps its θ solve serial). Small matrices fall
+    /// back to a pooled serial [`crate::projection::bilevel::BilevelSolver`]
+    /// — warm workspaces, zero steady-state allocation.
+    pub fn project_bilevel_parallel(
+        &self,
+        data: &mut [f32],
+        n_groups: usize,
+        group_len: usize,
+        c: f64,
+        tau_hint: Option<f64>,
+    ) -> BilevelInfo {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        assert!(c >= 0.0, "radius must be nonnegative");
+        if self.threads <= 1 || n_groups < 2 || data.len() < self.min_parallel_elems {
+            let mut solver = self.bilevels.acquire();
+            let info = solver.project(
+                &mut GroupedViewMut::new(data, n_groups, group_len),
+                c,
+                tau_hint,
+            );
+            self.bilevels.release(solver);
+            return info;
+        }
+        // Tree scratch is O(n_groups) — negligible next to the O(nm)
+        // passes this path exists to shard, so it is built per call.
+        TreeBilevel::new(self.threads).project(data, n_groups, group_len, c, tau_hint)
+    }
+
+    /// The shared bi-level workspace pool (exposed for introspection/tests).
+    pub fn bilevel_pool(&self) -> &BilevelPool {
+        &self.bilevels
+    }
+
     /// Drain a heterogeneous request queue across the pool. Requests are
     /// consumed (each response owns the projected matrix — no copies);
     /// responses come back in request order. `cache` (if any) supplies
@@ -313,14 +376,19 @@ impl BatchProjector {
     ) -> Vec<ProjResponse> {
         let workers = self.threads.min(requests.len()).max(1);
         if workers <= 1 {
-            return requests.into_iter().map(|r| run_request(r, cache, &self.solvers)).collect();
+            return requests
+                .into_iter()
+                .map(|r| run_request(r, cache, (&*self.solvers, &*self.bilevels)))
+                .collect();
         }
         // Each slot is taken exactly once by whichever worker claims its
         // index off the atomic cursor (work stealing without unsafe).
         let slots: Vec<std::sync::Mutex<Option<ProjRequest>>> =
             requests.into_iter().map(|r| std::sync::Mutex::new(Some(r))).collect();
         let cursor = AtomicUsize::new(0);
-        let solvers = &self.solvers;
+        // Explicit derefs: &Arc<T> only coerces to &T at a coercion site,
+        // and an un-annotated tuple binding is not one.
+        let pools: (&SolverPool, &BilevelPool) = (&*self.solvers, &*self.bilevels);
         let mut indexed: Vec<(usize, ProjResponse)> = std::thread::scope(|s| {
             let slots = &slots;
             let cursor = &cursor;
@@ -338,7 +406,7 @@ impl BatchProjector {
                             .expect("batch slot poisoned")
                             .take()
                             .expect("slot claimed twice");
-                        local.push((i, run_request(req, cache, solvers)));
+                        local.push((i, run_request(req, cache, pools)));
                     }
                     local
                 }));
@@ -359,26 +427,60 @@ impl Default for BatchProjector {
     }
 }
 
-fn run_request(req: ProjRequest, cache: Option<&ThetaCache>, solvers: &SolverPool) -> ProjResponse {
-    let ProjRequest { key, mut data, n_groups, group_len, radius, algo } = req;
-    let hint = match (&key, cache) {
+/// Cache keys are namespaced per operator family: the exact θ* and the
+/// bi-level τ are different dual variables, so one client key must not
+/// feed one family's value to the other as a hint. *Both* families get a
+/// prefix, so no client-chosen key can collide with the other family's
+/// namespace (an exact request keyed `"bilevel:w1"` lands under
+/// `"exact:bilevel:w1"`, never under a bi-level entry).
+pub(crate) fn cache_key(mode: ProjKind, key: &str) -> String {
+    format!("{}:{key}", mode.name())
+}
+
+fn run_request(
+    req: ProjRequest,
+    cache: Option<&ThetaCache>,
+    (solvers, bilevels): (&SolverPool, &BilevelPool),
+) -> ProjResponse {
+    let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode } = req;
+    let ns_key = key.as_deref().map(|k| cache_key(mode, k));
+    let hint = match (&ns_key, cache) {
         (Some(key), Some(cache)) => cache.hint_for(key, n_groups, group_len),
         _ => None,
     };
-    let mut solver = solvers.acquire(algo);
-    let info = project_with(
-        &mut *solver,
-        &mut GroupedViewMut::new(&mut data, n_groups, group_len),
-        radius,
-        hint,
-    );
-    solvers.release(solver);
-    if let (Some(key), Some(cache)) = (&key, cache) {
-        if !info.feasible {
-            cache.update(key, n_groups, group_len, radius, info.theta);
+    match mode {
+        ProjKind::Exact => {
+            let mut solver = solvers.acquire(algo);
+            let info = project_with(
+                &mut *solver,
+                &mut GroupedViewMut::new(&mut data, n_groups, group_len),
+                radius,
+                hint,
+            );
+            solvers.release(solver);
+            if let (Some(key), Some(cache)) = (&ns_key, cache) {
+                if !info.feasible {
+                    cache.update(key, n_groups, group_len, radius, info.theta);
+                }
+            }
+            ProjResponse { data, info, warm: hint.is_some() }
+        }
+        ProjKind::Bilevel => {
+            let mut solver = bilevels.acquire();
+            let info = solver.project(
+                &mut GroupedViewMut::new(&mut data, n_groups, group_len),
+                radius,
+                hint,
+            );
+            bilevels.release(solver);
+            if let (Some(key), Some(cache)) = (&ns_key, cache) {
+                if !info.feasible {
+                    cache.update(key, n_groups, group_len, radius, info.tau);
+                }
+            }
+            ProjResponse { data, info: info.to_proj_info(), warm: info.warm }
         }
     }
-    ProjResponse { data, info, warm: hint.is_some() }
 }
 
 #[cfg(test)]
@@ -393,22 +495,6 @@ mod tests {
             *v = (rng.f32() - 0.5) * scale;
         }
         y
-    }
-
-    #[test]
-    fn shards_cover_exactly() {
-        for (n, p) in [(10, 3), (1, 4), (7, 7), (8, 2), (5, 1), (0, 3)] {
-            let r = shard_ranges(n, p);
-            let total: usize = r.iter().map(|(lo, hi)| hi - lo).sum();
-            assert_eq!(total, n, "n={n} p={p} {r:?}");
-            for w in r.windows(2) {
-                assert_eq!(w[0].1, w[1].0, "contiguous");
-            }
-            if n > 0 {
-                assert_eq!(r[0].0, 0);
-                assert_eq!(r[r.len() - 1].1, n);
-            }
-        }
     }
 
     #[test]
@@ -452,6 +538,7 @@ mod tests {
                 group_len: l,
                 radius: c,
                 algo,
+                mode: ProjKind::Exact,
             });
         }
         let n_requests = requests.len();
@@ -479,6 +566,7 @@ mod tests {
             group_len: l,
             radius: 1.0,
             algo: Algorithm::InverseOrder,
+            mode: ProjKind::Exact,
         };
         let first = &pool.project_batch(Some(&cache), vec![req(base.clone())])[0];
         assert!(!first.warm, "nothing cached yet");
@@ -499,5 +587,59 @@ mod tests {
             second.info.stats.work,
             ri.stats.work
         );
+    }
+
+    #[test]
+    fn bilevel_requests_route_through_the_bilevel_operator() {
+        use crate::projection::bilevel::project_bilevel;
+        let mut rng = Rng::new(17);
+        let (g, l) = (40, 9);
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let pool = BatchProjector::new(2);
+        let cache = ThetaCache::new();
+        let req = ProjRequest {
+            key: Some("w".into()),
+            data: data.clone(),
+            n_groups: g,
+            group_len: l,
+            radius: 0.8,
+            algo: Algorithm::InverseOrder,
+            mode: ProjKind::Bilevel,
+        };
+        let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
+        let mut reference = data.clone();
+        let bi = project_bilevel(&mut reference, g, l, 0.8);
+        assert_eq!(resp.data, reference, "batch bilevel == serial bilevel");
+        assert_eq!(resp.info.theta.to_bits(), bi.tau.to_bits());
+        // The τ went into the namespaced cache slot; neither the raw client
+        // key nor the exact-mode namespace saw it.
+        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w")).is_some());
+        assert!(cache.entry("w").is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Exact, "w")).is_none());
+        // Workspace recycled; a second request warm-starts through the
+        // cache (τ may differ from the cold solve only in FP round-off).
+        assert!(pool.bilevel_pool().idle() >= 1);
+        let resp2 = &pool.project_batch(Some(&cache), vec![req])[0];
+        for (a, b) in resp2.data.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn bilevel_parallel_matches_serial_bilevel() {
+        use crate::projection::bilevel::project_bilevel;
+        let mut rng = Rng::new(19);
+        let (g, l) = (123, 17);
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let pool = BatchProjector::with_min_parallel(4, 0); // force sharding
+        for c in [0.5, 5.0, 50.0] {
+            let mut serial = data.clone();
+            let si = project_bilevel(&mut serial, g, l, c);
+            let mut par = data.clone();
+            let pi = pool.project_bilevel_parallel(&mut par, g, l, c, None);
+            assert_eq!(serial, par, "c={c}");
+            assert_eq!(si.tau.to_bits(), pi.tau.to_bits(), "c={c}");
+            assert_eq!(si.zero_groups, pi.zero_groups);
+        }
     }
 }

@@ -12,7 +12,11 @@
 //!   O(nm) group passes of one large projection across threads with the
 //!   exact serial solver in the middle — bit-compatible with
 //!   [`crate::projection::l1inf::project_l1inf`] — and (b) drains queues of
-//!   heterogeneous projection requests with request-level parallelism;
+//!   heterogeneous projection requests with request-level parallelism.
+//!   Requests pick their operator family via [`batch::ProjKind`]: the
+//!   exact ℓ₁,∞ projection or the linear-time **bi-level** operator
+//!   ([`crate::projection::bilevel`]), whose two O(nm) passes shard
+//!   bit-compatibly with the serial bi-level operator;
 //! - [`cache`] — a [`cache::ThetaCache`] that remembers θ* per
 //!   weight-matrix key and feeds the next projection of the same matrix a
 //!   warm start through the solvers' `theta_hint` plumbing;
@@ -29,5 +33,5 @@ pub mod cache;
 pub mod protocol;
 pub mod server;
 
-pub use batch::{BatchProjector, ProjRequest, ProjResponse};
+pub use batch::{BatchProjector, ProjKind, ProjRequest, ProjResponse};
 pub use cache::ThetaCache;

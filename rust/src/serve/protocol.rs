@@ -7,19 +7,43 @@
 //! ```text
 //! → {"id":1,"op":"project","key":"w1","groups":3,"len":4,"radius":1.5,
 //!    "algo":"inv_order","return_data":true,"data":[...12 numbers...]}
-//! ← {"id":1,"ok":true,"theta":0.41,"radius_before":2.9,"radius_after":1.5,
-//!    "zero_groups":1,"work":7,"touched":2,"warm":false,"ms":0.08,
-//!    "data":[...]}
+//! ← {"id":1,"ok":true,"mode":"exact","theta":0.41,"radius_before":2.9,
+//!    "radius_after":1.5,"zero_groups":1,"work":7,"touched":2,"warm":false,
+//!    "ms":0.08,"data":[...]}
 //! → {"id":2,"op":"stats"}
 //! ← {"id":2,"ok":true,"threads":4,"served":1,"cache_entries":1,...}
 //! → {"id":3,"op":"ping"}            ← {"id":3,"ok":true,"pong":true}
 //! → {"id":4,"op":"shutdown"}        ← {"id":4,"ok":true,"shutting_down":true}
 //! ```
 //!
+//! # The `mode` request field
+//!
+//! A `project` request may pick its **operator family** with the optional
+//! `"mode"` field:
+//!
+//! - `"mode":"exact"` (the default, alias `"l1inf"`) — the exact ℓ₁,∞
+//!   projection; `"algo"` selects one of the six solvers.
+//! - `"mode":"bilevel"` — the linear-time bi-level operator
+//!   ([`crate::projection::bilevel`]): per-group maxima → ℓ₁-simplex
+//!   projection → clamp. Always ℓ₁,∞-feasible and embarrassingly parallel
+//!   (large matrices shard across the worker pool bit-compatibly with the
+//!   serial bi-level operator), but **not** the exact projection. `"algo"`
+//!   is ignored; the response's `"theta"` carries the level-1 simplex
+//!   threshold τ, and warm starts cache τ under a per-mode key namespace.
+//!
+//! ```text
+//! → {"id":5,"op":"project","key":"w1","mode":"bilevel","groups":3,"len":4,
+//!    "radius":1.5,"data":[...12 numbers...]}
+//! ← {"id":5,"ok":true,"mode":"bilevel","theta":0.62,"radius_before":2.9,
+//!    "radius_after":1.5,"zero_groups":1,"work":3,"touched":2,"warm":false,
+//!    "ms":0.03,"data":[...]}
+//! ```
+//!
 //! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
 //! connection open.
 
 use crate::projection::l1inf::{Algorithm, ProjInfo};
+use crate::serve::batch::ProjKind;
 use crate::serve::cache::CacheStats;
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
@@ -33,6 +57,8 @@ pub struct ProjectRequest {
     pub group_len: usize,
     pub radius: f64,
     pub algo: Algorithm,
+    /// Operator family (`"mode"` field): exact ℓ₁,∞ or bi-level.
+    pub mode: ProjKind,
     /// `false` suppresses the projected matrix in the response (clients
     /// that only need θ/sparsity telemetry save the echo bandwidth).
     pub return_data: bool,
@@ -89,6 +115,10 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 None => default_algo,
                 Some(s) => s.parse::<Algorithm>().map_err(|e| (id, e))?,
             };
+            let mode = match v.get("mode").and_then(Json::as_str) {
+                None => ProjKind::Exact,
+                Some(s) => s.parse::<ProjKind>().map_err(|e| (id, e))?,
+            };
             let return_data = match v.get("return_data") {
                 Some(Json::Bool(b)) => *b,
                 _ => true,
@@ -131,6 +161,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 group_len,
                 radius,
                 algo,
+                mode,
                 return_data,
                 data,
             }))
@@ -155,14 +186,17 @@ pub fn error_response(id: i64, msg: &str) -> String {
 }
 
 /// Successful projection response (optionally echoing the projected data).
+/// For `mode = bilevel`, `theta` carries the level-1 simplex threshold τ.
 pub fn project_response(
     id: i64,
     info: &ProjInfo,
+    mode: ProjKind,
     warm: bool,
     ms: f64,
     data: Option<&[f32]>,
 ) -> String {
     let mut m = base(id, true);
+    m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
     m.insert("theta".to_string(), Json::Num(info.theta));
     m.insert("radius_before".to_string(), Json::Num(info.radius_before));
     m.insert("radius_after".to_string(), Json::Num(info.radius_after));
@@ -226,8 +260,33 @@ mod tests {
         assert_eq!(p.key.as_deref(), Some("w1"));
         assert_eq!((p.n_groups, p.group_len), (2, 2));
         assert_eq!(p.algo, Algorithm::Newton);
+        assert_eq!(p.mode, ProjKind::Exact, "mode defaults to exact");
         assert!(p.return_data);
         assert_eq!(p.data, vec![1.0, -0.5, 0.25, 2.0]);
+    }
+
+    #[test]
+    fn parses_bilevel_mode() {
+        let line = r#"{"id":7,"op":"project","mode":"bilevel","groups":1,"len":2,"radius":1,"data":[1.0,2.0]}"#;
+        let env = parse_request_d(line).unwrap();
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.mode, ProjKind::Bilevel);
+        // Explicit exact spelling and its l1inf alias.
+        for spelling in ["exact", "l1inf"] {
+            let line = format!(
+                r#"{{"id":7,"op":"project","mode":"{spelling}","groups":1,"len":1,"radius":1,"data":[1.0]}}"#
+            );
+            let env = parse_request_d(&line).unwrap();
+            let Request::Project(p) = env.req else { panic!("not a project request") };
+            assert_eq!(p.mode, ProjKind::Exact);
+        }
+        // Unknown modes error with the valid list, carrying the id.
+        let (id, msg) = parse_request_d(
+            r#"{"id":8,"op":"project","mode":"warp","groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(id, 8);
+        assert!(msg.contains("bilevel") && msg.contains("exact"), "{msg}");
     }
 
     #[test]
@@ -255,7 +314,7 @@ mod tests {
         assert!(msg.contains("expected groups*len"), "{msg}");
         let (id, _) = parse_request_d(r#"{"id": 4, "op": "frobnicate"}"#).unwrap_err();
         assert_eq!(id, 4);
-        let (id, _) = parse_request("not json at all").unwrap_err();
+        let (id, _) = parse_request_d("not json at all").unwrap_err();
         assert_eq!(id, 0);
         let (id, msg) = parse_request_d(r#"{"id":2,"op":"project","groups":1,"len":1,"radius":1,"data":["x"]}"#)
             .unwrap_err();
@@ -296,8 +355,8 @@ mod tests {
             stats: SolveStats { theta: 0.75, work: 9, touched_groups: 4, theta_hint: None },
         };
         for line in [
-            project_response(1, &info, true, 0.5, Some(&[0.5, -0.5])),
-            project_response(2, &info, false, 0.5, None),
+            project_response(1, &info, ProjKind::Exact, true, 0.5, Some(&[0.5, -0.5])),
+            project_response(2, &info, ProjKind::Bilevel, false, 0.5, None),
             error_response(3, "nope"),
             stats_response(4, 8, 100, CacheStats::default()),
             pong_response(5),
@@ -308,8 +367,17 @@ mod tests {
             assert!(v.get("id").is_some());
             assert!(v.get("ok").is_some());
         }
-        let v = crate::util::json::parse(&project_response(1, &info, true, 0.5, Some(&[0.5]))).unwrap();
+        let v = crate::util::json::parse(&project_response(
+            1,
+            &info,
+            ProjKind::Bilevel,
+            true,
+            0.5,
+            Some(&[0.5]),
+        ))
+        .unwrap();
         assert_eq!(v.get("theta").unwrap().as_f64(), Some(0.75));
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("bilevel"));
         assert_eq!(v.get("warm"), Some(&Json::Bool(true)));
         assert_eq!(v.get("data").unwrap().as_arr().unwrap().len(), 1);
     }

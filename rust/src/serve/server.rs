@@ -7,7 +7,7 @@
 //! matrix key). A `shutdown` op from any client stops the accept loop —
 //! that is also how the integration tests tear the server down.
 
-use super::batch::BatchProjector;
+use super::batch::{self, BatchProjector, ProjKind};
 use super::cache::ThetaCache;
 use super::protocol::{self, ProjectRequest, Request};
 use crate::config::serve::ServeConfig;
@@ -150,21 +150,44 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
 }
 
 fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
-    let ProjectRequest { key, n_groups, group_len, radius, algo, return_data, mut data } = req;
-    let hint = key
+    let ProjectRequest { key, n_groups, group_len, radius, algo, mode, return_data, mut data } =
+        req;
+    // τ and θ* are different duals: warm starts live in per-mode key
+    // namespaces of the shared cache (see [`batch::cache_key`]).
+    let ns_key = key.as_deref().map(|k| batch::cache_key(mode, k));
+    let hint = ns_key
         .as_deref()
         .and_then(|k| shared.cache.hint_for(k, n_groups, group_len));
-    let t = Timer::start();
-    let info = shared
-        .pool
-        .project_parallel(&mut data, n_groups, group_len, radius, algo, hint);
-    let ms = t.millis();
-    if let Some(k) = key.as_deref() {
-        if !info.feasible {
-            shared.cache.update(k, n_groups, group_len, radius, info.theta);
+    let response = match mode {
+        ProjKind::Exact => {
+            let t = Timer::start();
+            let info = shared
+                .pool
+                .project_parallel(&mut data, n_groups, group_len, radius, algo, hint);
+            let ms = t.millis();
+            if let Some(k) = ns_key.as_deref() {
+                if !info.feasible {
+                    shared.cache.update(k, n_groups, group_len, radius, info.theta);
+                }
+            }
+            let payload = if return_data { Some(&data[..]) } else { None };
+            protocol::project_response(id, &info, mode, hint.is_some(), ms, payload)
         }
-    }
+        ProjKind::Bilevel => {
+            let t = Timer::start();
+            let info = shared
+                .pool
+                .project_bilevel_parallel(&mut data, n_groups, group_len, radius, hint);
+            let ms = t.millis();
+            if let Some(k) = ns_key.as_deref() {
+                if !info.feasible {
+                    shared.cache.update(k, n_groups, group_len, radius, info.tau);
+                }
+            }
+            let payload = if return_data { Some(&data[..]) } else { None };
+            protocol::project_response(id, &info.to_proj_info(), mode, info.warm, ms, payload)
+        }
+    };
     shared.served.fetch_add(1, Ordering::Relaxed);
-    let payload = if return_data { Some(&data[..]) } else { None };
-    protocol::project_response(id, &info, hint.is_some(), ms, payload)
+    response
 }

@@ -6,8 +6,10 @@
 //! this module directly; results are printed as aligned tables and also
 //! written to CSV so figures can be re-plotted.
 
+use super::json::Json;
 use super::stats;
 use super::Timer;
+use std::collections::BTreeMap;
 
 /// One benchmark measurement summary.
 #[derive(Debug, Clone)]
@@ -58,6 +60,50 @@ impl BenchOpts {
         }
         o
     }
+}
+
+/// Git revision the bench ran at: `GITHUB_SHA` when CI provides it, else
+/// `git rev-parse HEAD`, else `"unknown"` (benches must not fail over
+/// missing VCS metadata).
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The `meta` object every `BENCH_*.json` report embeds so the bench
+/// trajectory stays comparable across PRs: git revision, logical thread
+/// count, whether `L1INF_BENCH_FAST` shrank the measurement, and the
+/// matrix shapes measured (as `[n, m]` pairs).
+pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut m = BTreeMap::new();
+    m.insert("git_rev".to_string(), Json::Str(git_rev()));
+    m.insert("threads".to_string(), Json::Num(threads as f64));
+    m.insert("bench_fast".to_string(), Json::Bool(fast));
+    m.insert(
+        "shapes".to_string(),
+        Json::Arr(
+            shapes
+                .iter()
+                .map(|&(n, mm)| Json::Arr(vec![Json::Num(n as f64), Json::Num(mm as f64)]))
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
 }
 
 /// Time `f` (which must regenerate its own input each call if it mutates).
@@ -123,6 +169,17 @@ pub fn write_csv(path: &str, samples: &[Sample]) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn meta_has_every_stamp_field() {
+        let meta = bench_meta(&[(1000, 4000), (200, 800)]);
+        assert!(meta.get("git_rev").unwrap().as_str().is_some());
+        assert!(meta.get("threads").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(matches!(meta.get("bench_fast"), Some(Json::Bool(_))));
+        let shapes = meta.get("shapes").unwrap().as_arr().unwrap();
+        assert_eq!(shapes.len(), 2);
+        assert_eq!(shapes[0].as_usize_vec(), Some(vec![1000, 4000]));
+    }
 
     #[test]
     fn measures_something() {

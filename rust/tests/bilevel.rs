@@ -1,0 +1,306 @@
+//! The bi-level / multi-level subsystem end to end: feasibility and
+//! idempotence of the operator, the plain-ℓ₁ reduction (bit-exact), the
+//! 2-level tree vs the serial operator, the `BatchProjector` routing, and
+//! the TCP protocol's `"mode":"bilevel"` round-trip.
+
+use l1inf::config::serve::ServeConfig;
+use l1inf::projection::bilevel::{
+    project_bilevel, project_bilevel_hinted, project_bilevel_tree, BilevelSolver, TreeBilevel,
+};
+use l1inf::projection::grouped::{GroupedView, GroupedViewMut};
+use l1inf::projection::l1::project_l1;
+use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::projection::norm_l1inf;
+use l1inf::serve::server::Server;
+use l1inf::util::json;
+use l1inf::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    let mut y = vec![0.0f32; len];
+    for v in y.iter_mut() {
+        *v = (rng.f32() - 0.5) * scale;
+    }
+    y
+}
+
+/// Random and adversarial matrices in the style of the `Algorithm`
+/// equivalence tests: `(data, n_groups, group_len, radius)` cases.
+fn test_cases() -> Vec<(Vec<f32>, usize, usize, f64)> {
+    let mut rng = Rng::new(0xB1CA5E);
+    let mut cases = Vec::new();
+    for (g, l) in [(37, 11), (64, 8), (9, 33)] {
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let norm = norm_l1inf(GroupedView::new(&data, g, l));
+        for frac in [0.05, 0.4, 0.9] {
+            cases.push((data.clone(), g, l, frac * norm));
+        }
+    }
+    // All-equal entries: every maxima ties with every other.
+    cases.push((vec![0.5f32; 24 * 6], 24, 6, 1.3));
+    // A single group.
+    cases.push((vec![3.0f32, -2.0, 1.0, 0.5, -0.25, 0.0], 1, 6, 1.5));
+    // Groups of length one (the operator degenerates to the ℓ₁ ball).
+    cases.push(((0..40).map(|i| (i as f32 * 0.37).sin()).collect(), 40, 1, 2.0));
+    // Already feasible: must be the identity.
+    cases.push((vec![0.01f32; 16 * 4], 16, 4, 100.0));
+    // Mostly-zero groups with a couple of heavies.
+    let mut sparse = vec![0.0f32; 50 * 5];
+    sparse[0] = 4.0;
+    sparse[5] = -3.0;
+    sparse[127] = 2.0;
+    cases.push((sparse, 50, 5, 1.0));
+    cases
+}
+
+#[test]
+fn bilevel_is_feasible_and_idempotent() {
+    for (data, g, l, c) in test_cases() {
+        let mut once = data.clone();
+        let info = project_bilevel(&mut once, g, l, c);
+        let norm = norm_l1inf(GroupedView::new(&once, g, l));
+        assert!(
+            norm <= c * (1.0 + 1e-6) + 1e-9,
+            "{g}x{l} C={c}: infeasible result ‖X‖₁,∞ = {norm}"
+        );
+        assert!(
+            (norm - info.radius_after).abs() <= 1e-9 * norm.max(1.0),
+            "{g}x{l} C={c}: reported radius_after drifted"
+        );
+        // Idempotence: projecting the projection is a no-op ≤ 1e-6.
+        let mut twice = once.clone();
+        let info2 = project_bilevel(&mut twice, g, l, c);
+        for (a, b) in twice.iter().zip(&once) {
+            assert!((a - b).abs() <= 1e-6, "{g}x{l} C={c}: not idempotent");
+        }
+        assert!(
+            info2.feasible || info2.tau <= 1e-6 * c.max(1.0),
+            "{g}x{l} C={c}: second pass re-projected (tau = {})",
+            info2.tau
+        );
+        // Signs and magnitudes never grow.
+        for (a, b) in once.iter().zip(&data) {
+            assert!(a.abs() <= b.abs() + 1e-7);
+            assert!(*a == 0.0 || a.signum() == b.signum());
+        }
+    }
+}
+
+#[test]
+fn reduces_to_plain_l1_bitwise_when_every_group_has_one_nonzero() {
+    // One nonzero per group ⇒ the ℓ₁,∞ geometry degenerates to the ℓ₁ ball
+    // and the bi-level operator must agree with `project_l1` *bit-exactly*:
+    // the maxima vector enumerates exactly the nonzeros, so the level-1
+    // Condat solve sees the same values in the same order as the flat ℓ₁
+    // projection (magnitudes ≥ 0.6 > C keep Condat's running threshold
+    // positive, so the interleaved zeros never enter its active set), and
+    // the clamp writes the identical `(|y| − τ)₊` floats.
+    let mut rng = Rng::new(0x11B1);
+    for (g, l) in [(50, 7), (200, 3), (12, 1)] {
+        let mut data = vec![0.0f32; g * l];
+        for grp in 0..g {
+            // Group 0 keeps its nonzero at element 0 so both scans start
+            // from the same first value; other groups place it anywhere.
+            let pos = if grp == 0 { 0 } else { rng.below(l) };
+            let mag = 0.6f32 + 1.4 * rng.f32();
+            let sign: f32 = if rng.chance(0.5) { -1.0 } else { 1.0 };
+            data[grp * l + pos] = sign * mag;
+        }
+        let c = 0.5;
+        let mut bi = data.clone();
+        let bi_info = project_bilevel(&mut bi, g, l, c);
+        let mut l1 = data.clone();
+        let l1_info = project_l1(&mut l1, c);
+        assert_eq!(
+            bi_info.tau.to_bits(),
+            l1_info.tau.to_bits(),
+            "{g}x{l}: bi-level τ must equal the ℓ₁ soft-threshold bit-exactly"
+        );
+        assert_eq!(bi, l1, "{g}x{l}: projected entries must match bit-exactly");
+        // And the exact ℓ₁,∞ projection agrees up to solver precision.
+        let mut exact = data.clone();
+        project_l1inf(&mut exact, g, l, c, Algorithm::Bisection);
+        for (a, b) in bi.iter().zip(&exact) {
+            assert!((a - b).abs() <= 1e-5, "{g}x{l}: bi-level vs exact projection");
+        }
+    }
+}
+
+#[test]
+fn tree_matches_serial_bilevel_everywhere() {
+    for (data, g, l, c) in test_cases() {
+        let mut serial = data.clone();
+        let si = project_bilevel(&mut serial, g, l, c);
+        for shards in [1usize, 2, 4, 7] {
+            let mut par = data.clone();
+            let pi = project_bilevel_tree(&mut par, g, l, c, shards);
+            for i in 0..par.len() {
+                assert!(
+                    (par[i] - serial[i]).abs() <= 1e-6,
+                    "{g}x{l} C={c} shards={shards}: entry {i}: {} vs {}",
+                    par[i],
+                    serial[i]
+                );
+            }
+            let scale = si.tau.abs().max(1.0);
+            assert!((pi.tau - si.tau).abs() <= 1e-6 * scale, "{g}x{l} C={c} shards={shards}");
+            assert_eq!(pi.zero_groups, si.zero_groups, "{g}x{l} C={c} shards={shards}");
+            assert_eq!(pi.feasible, si.feasible);
+        }
+    }
+}
+
+#[test]
+fn warm_paths_match_cold_everywhere() {
+    for (data, g, l, c) in test_cases() {
+        let mut cold = data.clone();
+        let ci = project_bilevel(&mut cold, g, l, c);
+        let scale = ci.tau.abs().max(1.0);
+        // External hints on either side of τ, plus hostile values.
+        for hint in [ci.tau, ci.tau * 1.05, ci.tau * 0.5, ci.tau * 10.0, 0.0, f64::NAN] {
+            let mut warm = data.clone();
+            let wi = project_bilevel_hinted(&mut warm, g, l, c, Some(hint));
+            assert!(
+                (wi.tau - ci.tau).abs() <= 1e-6 * scale,
+                "{g}x{l} C={c} hint={hint}: τ {} vs {}",
+                wi.tau,
+                ci.tau
+            );
+            for (a, b) in warm.iter().zip(&cold) {
+                assert!((a - b).abs() <= 1e-6, "{g}x{l} C={c} hint={hint}");
+            }
+        }
+        // Self-warm-start: a persistent workspace re-projecting the same
+        // matrix must reproduce the cold result.
+        let mut solver = BilevelSolver::new();
+        for _ in 0..2 {
+            let mut warm = data.clone();
+            let wi = solver.project(&mut GroupedViewMut::new(&mut warm, g, l), c, None);
+            assert!((wi.tau - ci.tau).abs() <= 1e-6 * scale, "{g}x{l} C={c} self-warm");
+            for (a, b) in warm.iter().zip(&cold) {
+                assert!((a - b).abs() <= 1e-6, "{g}x{l} C={c} self-warm");
+            }
+        }
+        // Tree with a hint agrees too.
+        let mut tree = TreeBilevel::new(3);
+        let mut warm = data.clone();
+        let wi = tree.project(&mut warm, g, l, c, Some(ci.tau * 1.05));
+        assert!((wi.tau - ci.tau).abs() <= 1e-6 * scale, "{g}x{l} C={c} tree hint");
+        for (a, b) in warm.iter().zip(&cold) {
+            assert!((a - b).abs() <= 1e-6, "{g}x{l} C={c} tree hint");
+        }
+    }
+}
+
+#[test]
+fn column_view_matches_explicit_transpose() {
+    let mut rng = Rng::new(0xC01);
+    let (rows, cols) = (9, 14);
+    let data = random_signed(&mut rng, rows * cols, 2.0);
+    // Transpose by hand, project contiguously, transpose back.
+    let mut transposed = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            transposed[c * rows + r] = data[r * cols + c];
+        }
+    }
+    let info_t = project_bilevel(&mut transposed, cols, rows, 0.8);
+    // Project the columns in place through the strided view.
+    let mut strided = data.clone();
+    let info_s = BilevelSolver::new().project(
+        &mut GroupedViewMut::columns(&mut strided, rows, cols),
+        0.8,
+        None,
+    );
+    assert_eq!(info_t.tau.to_bits(), info_s.tau.to_bits());
+    for r in 0..rows {
+        for c in 0..cols {
+            assert_eq!(
+                strided[r * cols + c].to_bits(),
+                transposed[c * rows + r].to_bits(),
+                "column view must be bit-identical to the transposed run"
+            );
+        }
+    }
+}
+
+// ── TCP round-trip with mode = bilevel ──────────────────────────────────
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> json::Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+    }
+}
+
+#[test]
+fn server_round_trips_bilevel_mode() {
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+
+    let (g, l, c) = (3usize, 4usize, 1.5f64);
+    let y = vec![1.0f32, -0.5, 0.25, 0.0, 0.9, 0.8, -0.7, 0.1, 1.1, 0.2, 0.3, -0.4];
+    let payload: Vec<String> = y.iter().map(|v| format!("{v}")).collect();
+    let req = format!(
+        r#"{{"id": 2, "op": "project", "key": "w1", "mode": "bilevel", "groups": {g}, "len": {l}, "radius": {c}, "data": [{}]}}"#,
+        payload.join(",")
+    );
+    let resp = client.roundtrip(&req);
+    assert_eq!(resp.get("ok"), Some(&json::Json::Bool(true)), "{resp}");
+    assert_eq!(resp.get("mode").unwrap().as_str(), Some("bilevel"));
+    assert_eq!(resp.get("warm"), Some(&json::Json::Bool(false)));
+
+    // The echoed matrix matches the in-process operator and is feasible.
+    let mut reference = y.clone();
+    let ri = project_bilevel(&mut reference, g, l, c);
+    let theta = resp.get("theta").unwrap().as_f64().unwrap();
+    assert!((theta - ri.tau).abs() < 1e-9, "{theta} vs {}", ri.tau);
+    let echoed = resp.get("data").unwrap().as_arr().unwrap();
+    assert_eq!(echoed.len(), reference.len());
+    let mut returned = Vec::with_capacity(echoed.len());
+    for (a, b) in echoed.iter().zip(&reference) {
+        let a = a.as_f64().unwrap();
+        assert!((a - *b as f64).abs() < 1e-6);
+        returned.push(a as f32);
+    }
+    let norm = norm_l1inf(GroupedView::new(&returned, g, l));
+    assert!(norm <= c * (1.0 + 1e-6), "served matrix infeasible: {norm} > {c}");
+
+    // Same key again: the bi-level τ cache namespace warm-starts without
+    // changing the result.
+    let req2 = req.replace(r#""id": 2"#, r#""id": 3"#);
+    let resp2 = client.roundtrip(&req2);
+    assert_eq!(resp2.get("warm"), Some(&json::Json::Bool(true)), "{resp2}");
+    let theta2 = resp2.get("theta").unwrap().as_f64().unwrap();
+    assert!((theta2 - ri.tau).abs() <= 1e-6 * ri.tau.max(1.0));
+
+    // An exact-mode request under the same key stays cold: the τ cached by
+    // the bi-level mode must not leak into the exact θ namespace.
+    let req3 = req
+        .replace(r#""id": 2"#, r#""id": 4"#)
+        .replace(r#""mode": "bilevel", "#, "");
+    let resp3 = client.roundtrip(&req3);
+    assert_eq!(resp3.get("mode").unwrap().as_str(), Some("exact"));
+    assert_eq!(resp3.get("warm"), Some(&json::Json::Bool(false)), "{resp3}");
+
+    let bye = client.roundtrip(r#"{"id": 9, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&json::Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+}

@@ -3,12 +3,12 @@
 //! structured corner cases, and paper-scale shapes.
 
 use l1inf::projection::l1inf::{project_l1inf, solve_theta, Algorithm};
-use l1inf::projection::{norm_l1inf, sparsity_pct};
+use l1inf::projection::{norm_l1inf, sparsity_pct, GroupedView};
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
 
 fn all_solvers_agree(data: &[f32], g: usize, l: usize, c: f64) -> Result<(), String> {
-    let norm = norm_l1inf(data, g, l);
+    let norm = norm_l1inf(GroupedView::new(data, g, l));
     if norm <= c || c <= 0.0 {
         return Ok(());
     }
@@ -59,7 +59,7 @@ fn random_matrices_all_algorithms_agree() {
                     *v = -*v;
                 }
             }
-            let norm = norm_l1inf(&data, g, l);
+            let norm = norm_l1inf(GroupedView::new(&data, g, l));
             let c = rng.f64() * 1.2 * norm.max(0.1);
             (data, g, l, c)
         },
@@ -159,7 +159,7 @@ fn work_counters_reflect_sparsity_regimes() {
     rng.fill_uniform_f32(&mut data);
     let abs = data;
     let tight = solve_theta(&abs, m, n, 0.5, Algorithm::InverseOrder);
-    let loose = solve_theta(&abs, m, n, 0.95 * norm_l1inf(&abs, m, n), Algorithm::InverseOrder);
+    let loose = solve_theta(&abs, m, n, 0.95 * norm_l1inf(GroupedView::new(&abs, m, n)), Algorithm::InverseOrder);
     assert!(
         tight.touched_groups < loose.touched_groups,
         "tight {} !< loose {}",

@@ -3,7 +3,7 @@
 
 use l1inf::projection::kkt::{verify_l1inf, Tolerance};
 use l1inf::projection::l1inf::{project_l1inf, Algorithm};
-use l1inf::projection::norm_l1inf;
+use l1inf::projection::{norm_l1inf, GroupedView};
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
 
@@ -20,7 +20,7 @@ fn all_algorithms_produce_kkt_certified_projections() {
                     *v = -*v;
                 }
             }
-            let norm = norm_l1inf(&data, g, l);
+            let norm = norm_l1inf(GroupedView::new(&data, g, l));
             let c = (0.05 + 0.9 * rng.f64()) * norm.max(0.01);
             let algo = Algorithm::ALL[rng.below(Algorithm::ALL.len())];
             (data, g, l, c, algo)
@@ -44,7 +44,7 @@ fn certified_theta_matches_reported_theta() {
         for v in y.iter_mut() {
             *v = (rng.f32() - 0.5) * 3.0;
         }
-        let norm = norm_l1inf(&y, g, l);
+        let norm = norm_l1inf(GroupedView::new(&y, g, l));
         let c = 0.4 * norm;
         if c <= 0.0 {
             continue;
@@ -70,7 +70,7 @@ fn projection_is_distance_minimizing_vs_perturbations() {
     for v in y.iter_mut() {
         *v = (rng.f32() - 0.5) * 4.0;
     }
-    let c = 0.5 * norm_l1inf(&y, g, l);
+    let c = 0.5 * norm_l1inf(GroupedView::new(&y, g, l));
     let mut x = y.clone();
     project_l1inf(&mut x, g, l, c, Algorithm::Bisection);
     let dist =
@@ -95,7 +95,7 @@ fn verifier_rejects_tampered_outputs() {
     for v in y.iter_mut() {
         *v = rng.f32() * 2.0;
     }
-    let c = 0.3 * norm_l1inf(&y, g, l);
+    let c = 0.3 * norm_l1inf(GroupedView::new(&y, g, l));
     let mut x = y.clone();
     project_l1inf(&mut x, g, l, c, Algorithm::InverseOrder);
     // sanity: untouched passes

@@ -5,7 +5,7 @@
 use l1inf::projection::l1inf::{project_l1inf, Algorithm};
 use l1inf::projection::linf1::prox_linf1;
 use l1inf::projection::masked::{apply_mask, project_masked};
-use l1inf::projection::{l1, l12, norm_l1, norm_l12, norm_l1inf, norm_linf1};
+use l1inf::projection::{l1, l12, norm_l1, norm_l12, norm_l1inf, norm_linf1, GroupedView};
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
 
@@ -51,14 +51,14 @@ fn prox_shrinks_dual_norm_to_theta() {
     let mut rng = Rng::new(1);
     let (g, l) = (20, 8);
     let y = random_signed(&mut rng, g, l, 2.0);
-    let c = 0.25 * norm_l1inf(&y, g, l);
+    let c = 0.25 * norm_l1inf(GroupedView::new(&y, g, l));
     let mut prox = y.clone();
     let info = prox_linf1(&mut prox, g, l, c, Algorithm::Newton);
     assert!(!info.projection.feasible);
     assert!(
-        (norm_linf1(&prox, g, l) - info.projection.theta).abs() < 1e-4,
+        (norm_linf1(GroupedView::new(&prox, g, l)) - info.projection.theta).abs() < 1e-4,
         "‖prox‖∞,1 = {} vs θ = {}",
-        norm_linf1(&prox, g, l),
+        norm_linf1(GroupedView::new(&prox, g, l)),
         info.projection.theta
     );
 }
@@ -91,7 +91,7 @@ fn masked_projection_support_and_value_invariants() {
         |rng: &mut Rng| {
             let (g, l) = (rng.range(1, 10), rng.range(1, 10));
             let y = random_signed(rng, g, l, 3.0);
-            let norm = norm_l1inf(&y, g, l);
+            let norm = norm_l1inf(GroupedView::new(&y, g, l));
             let c = (0.1 + 0.7 * rng.f64()) * norm.max(0.01);
             (y, g, l, c)
         },
@@ -116,7 +116,7 @@ fn masked_projection_support_and_value_invariants() {
                 }
             }
             // Masked norm dominates the projected norm (values unbounded).
-            if norm_l1inf(&masked, *g, *l) + 1e-6 < norm_l1inf(&proj, *g, *l) {
+            if norm_l1inf(GroupedView::new(&masked, *g, *l)) + 1e-6 < norm_l1inf(GroupedView::new(&proj, *g, *l)) {
                 return Err("masked norm smaller than projected norm".into());
             }
             Ok(())
@@ -157,9 +157,9 @@ fn l1_and_l12_land_on_their_spheres() {
     assert!((norm_l1(&a) - eta1).abs() < 1e-3);
 
     let mut b = y.clone();
-    let eta2 = 0.3 * norm_l12(&b, g, l);
+    let eta2 = 0.3 * norm_l12(GroupedView::new(&b, g, l));
     l12::project_l12(&mut b, g, l, eta2);
-    assert!((norm_l12(&b, g, l) - eta2).abs() < 1e-3);
+    assert!((norm_l12(GroupedView::new(&b, g, l)) - eta2).abs() < 1e-3);
 }
 
 #[test]
@@ -174,11 +174,11 @@ fn three_norms_produce_increasingly_structured_sparsity() {
     let mut a = y.clone();
     l1::project_l1(&mut a, frac * norm_l1(&y));
     let mut b = y.clone();
-    l12::project_l12(&mut b, g, l, frac * norm_l12(&y, g, l));
+    l12::project_l12(&mut b, g, l, frac * norm_l12(GroupedView::new(&y, g, l)));
     let mut c = y.clone();
-    project_l1inf(&mut c, g, l, frac * norm_l1inf(&y, g, l), Algorithm::InverseOrder);
+    project_l1inf(&mut c, g, l, frac * norm_l1inf(GroupedView::new(&y, g, l)), Algorithm::InverseOrder);
 
-    let groups_zeroed = |x: &[f32]| l1inf::projection::group_sparsity_pct(x, g, l);
+    let groups_zeroed = |x: &[f32]| l1inf::projection::group_sparsity_pct(GroupedView::new(x, g, l));
     let l1_groups = groups_zeroed(&a);
     let l12_groups = groups_zeroed(&b);
     let l1inf_groups = groups_zeroed(&c);

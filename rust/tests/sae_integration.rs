@@ -41,6 +41,9 @@ fn all_projection_modes_train_to_high_accuracy() {
         ProjectionMode::L1 { eta: 4.0 },
         ProjectionMode::L12 { eta: 3.0 },
         ProjectionMode::L1Inf { c: 0.6 },
+        // The linear-time bi-level operator must train as well as the
+        // exact projection at the same radius (arXiv:2407.16293).
+        ProjectionMode::Bilevel { c: 0.6 },
         // Masked keeps values unbounded, so θ grows and the support shrinks
         // faster; on the 24-feature tiny set it needs a looser radius (the
         // masked≈projected equivalence in Tables 1-2 is a d≫100 phenomenon).
@@ -59,7 +62,12 @@ fn all_projection_modes_train_to_high_accuracy() {
         let first = report.epochs.first().unwrap().mean_loss;
         let last = report.epochs.last().unwrap().mean_loss;
         assert!(last < first, "{}: loss {first} -> {last}", projection.name());
-        if matches!(projection, ProjectionMode::L1Inf { .. } | ProjectionMode::L1InfMasked { .. }) {
+        if matches!(
+            projection,
+            ProjectionMode::L1Inf { .. }
+                | ProjectionMode::Bilevel { .. }
+                | ProjectionMode::L1InfMasked { .. }
+        ) {
             assert!(
                 report.w1.col_sparsity_pct > 20.0,
                 "{} should sparsify features, got {:.1}%",

@@ -5,8 +5,8 @@
 
 use l1inf::config::serve::ServeConfig;
 use l1inf::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
-use l1inf::projection::norm_l1inf;
-use l1inf::serve::batch::{BatchProjector, ProjRequest};
+use l1inf::projection::{norm_l1inf, GroupedView};
+use l1inf::serve::batch::{BatchProjector, ProjKind, ProjRequest};
 use l1inf::serve::cache::ThetaCache;
 use l1inf::serve::server::Server;
 use l1inf::util::json;
@@ -62,7 +62,7 @@ fn parallel_matches_serial_every_algorithm_random() {
     for algo in Algorithm::ALL {
         for (g, l) in [(37, 11), (64, 8), (9, 33)] {
             let data = random_signed(&mut rng, g * l, 3.0);
-            let norm = norm_l1inf(&data, g, l);
+            let norm = norm_l1inf(GroupedView::new(&data, g, l));
             for frac in [0.05, 0.4, 0.9] {
                 assert_parallel_matches_serial(&data, g, l, frac * norm, algo);
             }
@@ -158,6 +158,7 @@ fn theta_cache_feeds_batch_queue() {
         group_len: l,
         radius: 0.7,
         algo: Algorithm::InverseOrder,
+        mode: ProjKind::Exact,
     };
     // A queue re-projecting near-identical matrices: first cold, rest warm.
     let queue: Vec<ProjRequest> = (0..6)

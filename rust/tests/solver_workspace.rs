@@ -22,7 +22,7 @@ use l1inf::util::rng::Rng;
 
 /// All six solvers agree with the bisection oracle on θ and entries.
 fn all_solvers_agree(data: &[f32], g: usize, l: usize, c: f64) -> Result<(), String> {
-    let norm = norm_l1inf(data, g, l);
+    let norm = norm_l1inf(GroupedView::new(data, g, l));
     if norm <= c || c <= 0.0 {
         return Ok(());
     }
@@ -69,13 +69,13 @@ fn degenerate_group_len_one_reduces_to_l1_ball() {
             for v in data.iter_mut() {
                 *v = if rng.chance(0.2) { 0.0 } else { (rng.f32() - 0.5) * 4.0 };
             }
-            let c = rng.f64() * 1.2 * norm_l1inf(&data, n, 1).max(0.1);
+            let c = rng.f64() * 1.2 * norm_l1inf(GroupedView::new(&data, n, 1)).max(0.1);
             (data, n, c)
         },
         |(data, n, c)| {
             all_solvers_agree(data, *n, 1, *c)?;
             // Cross-check against the dedicated ℓ₁ projection.
-            let norm = norm_l1inf(data, *n, 1);
+            let norm = norm_l1inf(GroupedView::new(data, *n, 1));
             if norm > *c && *c > 0.0 {
                 let mut via_l1inf = data.clone();
                 project_l1inf(&mut via_l1inf, *n, 1, *c, Algorithm::InverseOrder);
@@ -104,13 +104,13 @@ fn degenerate_single_group_waterfilling() {
             for v in data.iter_mut() {
                 *v = if rng.chance(0.25) { 0.5 } else { (rng.f32() - 0.5) * 3.0 };
             }
-            let c = rng.f64() * 1.2 * norm_l1inf(&data, 1, l).max(0.1);
+            let c = rng.f64() * 1.2 * norm_l1inf(GroupedView::new(&data, 1, l)).max(0.1);
             (data, l, c)
         },
         |(data, l, c)| {
             all_solvers_agree(data, 1, *l, *c)?;
             // A single group is clipped so its max equals C exactly.
-            let norm = norm_l1inf(data, 1, *l);
+            let norm = norm_l1inf(GroupedView::new(data, 1, *l));
             if norm > *c && *c > 0.0 {
                 let mut out = data.clone();
                 let info = project_l1inf(&mut out, 1, *l, *c, Algorithm::InverseOrder);
@@ -141,7 +141,7 @@ fn degenerate_zero_groups_mixed_in() {
                     data[grp * l + i] = (rng.f32() - 0.5) * 2.0;
                 }
             }
-            let c = rng.f64() * 1.1 * norm_l1inf(&data, g, l).max(0.05);
+            let c = rng.f64() * 1.1 * norm_l1inf(GroupedView::new(&data, g, l)).max(0.05);
             (data, g, l, c)
         },
         |(data, g, l, c)| all_solvers_agree(data, *g, *l, *c),
@@ -165,7 +165,7 @@ fn degenerate_tied_magnitudes_across_groups() {
                 let x = vals[rng.below(3)];
                 *v = if rng.chance(0.5) { -x } else { x };
             }
-            let c = rng.f64() * 1.1 * norm_l1inf(&data, g, l).max(0.1);
+            let c = rng.f64() * 1.1 * norm_l1inf(GroupedView::new(&data, g, l)).max(0.1);
             (data, g, l, c)
         },
         |(data, g, l, c)| all_solvers_agree(data, *g, *l, *c),
@@ -186,7 +186,7 @@ fn reused_solver_exactly_matches_fresh_across_shapes() {
             for v in data.iter_mut() {
                 *v = (rng.f32() - 0.5) * 3.0;
             }
-            let norm = norm_l1inf(&data, g, l);
+            let norm = norm_l1inf(GroupedView::new(&data, g, l));
             for c in [0.2 * norm, 0.8 * norm, norm + 1.0] {
                 if c <= 0.0 {
                     continue;
@@ -235,7 +235,7 @@ fn stale_hint_from_previous_shape_cannot_corrupt() {
         for v in b.iter_mut() {
             *v = (rng.f32() - 0.5) * 0.8;
         }
-        let c = 0.4 * norm_l1inf(&b, 8, 17);
+        let c = 0.4 * norm_l1inf(GroupedView::new(&b, 8, 17));
         let mut cold = b.clone();
         let ci = project_l1inf(&mut cold, 8, 17, c, algo);
         let mut hinted = b.clone();
