@@ -1,0 +1,426 @@
+//! `l1inf exp bench_gate` — the CI bench-regression gate.
+//!
+//! Reads the four fresh bench reports (`BENCH_proj.json`, `BENCH_serve.json`,
+//! `BENCH_bilevel.json`, `BENCH_kernels.json`) from `--out` and diffs their
+//! key metrics against the committed floors/ceilings in
+//! `ci/bench_baselines.json`. The comparison table is printed, written to
+//! `<out>/bench_gate.md` (the CI step appends that file to
+//! `$GITHUB_STEP_SUMMARY`), and the run fails if any metric breaks its
+//! bound — *after* the table is written, so the summary always renders.
+//! One exception: the kernel-speedup floor is waived (reported as "below
+//! floor (waived)") when the producing process was pinned to the scalar
+//! dispatch — it timed scalar against scalar, which measures nothing.
+//! Quick-mode noise is *not* a waiver: speedups are same-machine ratios,
+//! and the gap between `baseline` and `value` is the tolerance for it.
+//!
+//! Baseline file format (repo root, `ci/bench_baselines.json`):
+//!
+//! ```json
+//! { "metrics": { "<name>": { "kind": "min"|"max", "value": 1.5, "baseline": 2.4 } } }
+//! ```
+//!
+//! `kind: "min"` fails when `current < value` (speedups — machine-normalized
+//! ratios, not wall-clock, so they compare across runners); `kind: "max"`
+//! fails when `current > value` (correctness drift bounds). `baseline` is
+//! the informational typical value; the gap between it and `value` is the
+//! tolerance band. Metric names are resolved by [`extract`] — adding a
+//! metric to the JSON without a matching extractor is an error, so typos
+//! fail loudly instead of silently gating nothing.
+
+use super::ExpOpts;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// The four reports the gate consumes.
+const REPORTS: [&str; 4] =
+    ["BENCH_proj.json", "BENCH_serve.json", "BENCH_bilevel.json", "BENCH_kernels.json"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    /// Fails when `current < bound` (higher is better; ratios only).
+    Min,
+    /// Fails when `current > bound` (drift/diff ceilings).
+    Max,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "min" => Ok(Kind::Min),
+            "max" => Ok(Kind::Max),
+            other => bail!("baseline kind must be 'min' or 'max', got '{other}'"),
+        }
+    }
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Min => "min",
+            Kind::Max => "max",
+        }
+    }
+}
+
+/// One gated metric after extraction.
+struct Row {
+    name: String,
+    kind: Kind,
+    bound: f64,
+    baseline: Option<f64>,
+    current: f64,
+    pass: bool,
+    /// Breach waived instead of failing CI (only the kernel speedup of a
+    /// scalar-pinned process — see [`waived`]). Correctness bounds and all
+    /// other speedup floors are never waived.
+    waived: bool,
+}
+
+/// Pull `name` out of the parsed reports. Every gateable metric is a
+/// machine-normalized ratio or an absolute correctness bound — never raw
+/// wall-clock, which does not compare across runners.
+fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
+    let get = |file: &str, path: &[&str]| -> Result<f64> {
+        let mut v = reports.get(file).ok_or_else(|| anyhow!("{file} not loaded"))?;
+        for seg in path {
+            v = v.get(seg).ok_or_else(|| anyhow!("{file}: missing key '{seg}'"))?;
+        }
+        v.as_f64().ok_or_else(|| anyhow!("{file}: {path:?} is not a number"))
+    };
+    match name {
+        "proj.reuse_speedup_dense" => get("BENCH_proj.json", &["gate", "speedup"]),
+        "proj.max_abs_diff" => {
+            let cases = reports
+                .get("BENCH_proj.json")
+                .and_then(|v| v.get("cases"))
+                .and_then(Json::as_arr)
+                .context("BENCH_proj.json: missing cases[]")?;
+            let mut worst = 0.0f64;
+            for c in cases {
+                worst = worst.max(
+                    c.get("max_abs_diff")
+                        .and_then(Json::as_f64)
+                        .context("BENCH_proj.json: case without max_abs_diff")?,
+                );
+            }
+            Ok(worst)
+        }
+        "serve.speedup_at_4_threads" => {
+            get("BENCH_serve.json", &["single_matrix", "speedup_at_4_threads"])
+        }
+        "serve.max_abs_diff" => {
+            get("BENCH_serve.json", &["single_matrix", "max_abs_diff_vs_serial"])
+        }
+        "serve.warm_reduction_inv_order" => {
+            get("BENCH_serve.json", &["warm_start", "inv_order", "work_reduction"])
+        }
+        "bilevel.speedup_dense" => get("BENCH_bilevel.json", &["gate", "speedup"]),
+        "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
+        "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
+        other => bail!("no extractor for baseline metric '{other}' (typo in ci/bench_baselines.json?)"),
+    }
+}
+
+/// Whether a breached floor is waived rather than a CI failure. Exactly
+/// one case: the kernel speedup when the producing process was pinned to
+/// the scalar path (`L1INF_FORCE_SCALAR=1` ⇒ `dispatch: "scalar"`) — it
+/// then timed scalar against scalar, so ~1.0× is meaningless, not a
+/// regression. Every other speedup floor stays enforced even on `--quick`
+/// reports: these are same-machine ratios, so runner load cancels out and
+/// the gap between `baseline` and `value` is the noise tolerance.
+fn waived(reports: &BTreeMap<&'static str, Json>, name: &str) -> bool {
+    name == "kernels.speedup_pre_pass_dense_contig"
+        && reports
+            .get("BENCH_kernels.json")
+            .and_then(|v| v.get("dispatch"))
+            .and_then(Json::as_str)
+            == Some("scalar")
+}
+
+/// Locate the committed baselines: explicit `gate.baselines` config, else
+/// `ci/bench_baselines.json` relative to the working directory or its
+/// parent (CI runs with `working-directory: rust`).
+fn baselines_path(opts: &ExpOpts) -> PathBuf {
+    let explicit = opts.cfg.str_or("gate.baselines", "");
+    if !explicit.is_empty() {
+        return PathBuf::from(explicit);
+    }
+    for cand in ["ci/bench_baselines.json", "../ci/bench_baselines.json"] {
+        if std::path::Path::new(cand).exists() {
+            return PathBuf::from(cand);
+        }
+    }
+    PathBuf::from("ci/bench_baselines.json")
+}
+
+fn fmt_val(v: f64) -> String {
+    if v != 0.0 && v.abs() < 1e-3 {
+        format!("{v:.2e}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let bpath = baselines_path(opts);
+    let btext = std::fs::read_to_string(&bpath)
+        .with_context(|| format!("reading bench baselines {}", bpath.display()))?;
+    let bjson = json::parse(&btext).map_err(|e| anyhow!("{}: {e}", bpath.display()))?;
+    let metrics = bjson
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .context("baselines file must have a 'metrics' object")?;
+
+    let mut reports: BTreeMap<&'static str, Json> = BTreeMap::new();
+    let mut kernels_by_report: Vec<(String, String)> = Vec::new();
+    for file in REPORTS {
+        let path = opts.outdir.join(file);
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} (run the four bench experiments first)", path.display())
+        })?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{file}: {e}"))?;
+        let kernel = v
+            .get("meta")
+            .and_then(|m| m.get("kernel"))
+            .and_then(Json::as_str)
+            .with_context(|| format!("{file}: meta.kernel missing — stale report?"))?
+            .to_string();
+        kernels_by_report.push((file.to_string(), kernel));
+        reports.insert(file, v);
+    }
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (name, spec) in metrics {
+        let kind = Kind::parse(
+            spec.get("kind").and_then(Json::as_str).context("metric without 'kind'")?,
+        )?;
+        let bound =
+            spec.get("value").and_then(Json::as_f64).context("metric without 'value'")?;
+        let baseline = spec.get("baseline").and_then(Json::as_f64);
+        let current = extract(&reports, name)?;
+        let pass = match kind {
+            Kind::Min => current >= bound,
+            Kind::Max => current <= bound,
+        };
+        let is_waived = !pass && waived(&reports, name);
+        rows.push(Row { name: name.clone(), kind, bound, baseline, current, pass, waived: is_waived });
+    }
+    ensure!(!rows.is_empty(), "baselines file gates no metrics");
+
+    // Render: markdown for $GITHUB_STEP_SUMMARY, the same table to stdout.
+    let mut md = String::new();
+    md.push_str("## Bench regression gate\n\n");
+    md.push_str(&format!(
+        "Baselines: `{}` · kernel dispatch: {}\n\n",
+        bpath.display(),
+        kernels_by_report
+            .iter()
+            .map(|(f, k)| format!("`{}`={k}", f.trim_end_matches(".json")))
+            .collect::<Vec<_>>()
+            .join(" "),
+    ));
+    md.push_str("| metric | kind | bound | baseline | current | status |\n");
+    md.push_str("|---|---|---|---|---|---|\n");
+    for r in &rows {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            r.name,
+            r.kind.name(),
+            fmt_val(r.bound),
+            r.baseline.map(fmt_val).unwrap_or_else(|| "—".to_string()),
+            fmt_val(r.current),
+            if r.pass {
+                "✅ ok"
+            } else if r.waived {
+                "⚠️ below floor (waived: scalar dispatch)"
+            } else {
+                "❌ REGRESSION"
+            },
+        ));
+    }
+    let md_path = opts.outdir.join("bench_gate.md");
+    std::fs::write(&md_path, &md)?;
+
+    println!("\n== bench_gate (baselines {}) ==", bpath.display());
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(6).max(6);
+    println!("{:<name_w$}  {:>4} {:>12} {:>12} {:>12}  status", "metric", "kind", "bound", "baseline", "current");
+    for r in &rows {
+        println!(
+            "{:<name_w$}  {:>4} {:>12} {:>12} {:>12}  {}",
+            r.name,
+            r.kind.name(),
+            fmt_val(r.bound),
+            r.baseline.map(fmt_val).unwrap_or_else(|| "—".to_string()),
+            fmt_val(r.current),
+            if r.pass {
+                "ok"
+            } else if r.waived {
+                "below floor (waived)"
+            } else {
+                "REGRESSION"
+            },
+        );
+    }
+    println!("wrote {}", md_path.display());
+
+    let failing: Vec<&Row> = rows.iter().filter(|r| !r.pass && !r.waived).collect();
+    ensure!(
+        failing.is_empty(),
+        "bench regression: {}",
+        failing
+            .iter()
+            .map(|r| format!(
+                "{} = {} breaks {} bound {}",
+                r.name,
+                fmt_val(r.current),
+                r.kind.name(),
+                fmt_val(r.bound)
+            ))
+            .collect::<Vec<_>>()
+            .join("; ")
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn write(path: &std::path::Path, text: &str) {
+        std::fs::write(path, text).unwrap();
+    }
+
+    /// Minimal synthetic reports matching the real benches' shapes.
+    fn fake_reports(dir: &std::path::Path, kernel_speedup: f64, kernel_dispatch: &str) {
+        let meta = r#""meta": {"git_rev": "test", "threads": 4, "bench_fast": true, "kernel": "portable", "shapes": [[10, 20]]}"#;
+        write(
+            &dir.join("BENCH_proj.json"),
+            &format!(
+                r#"{{{meta}, "gate": {{"speedup": 1.6}}, "cases": [{{"max_abs_diff": 0.0}}, {{"max_abs_diff": 2e-8}}]}}"#
+            ),
+        );
+        write(
+            &dir.join("BENCH_serve.json"),
+            &format!(
+                r#"{{{meta}, "single_matrix": {{"speedup_at_4_threads": 2.2, "max_abs_diff_vs_serial": 0.0}},
+                   "warm_start": {{"inv_order": {{"work_reduction": 40.0}}}}}}"#
+            ),
+        );
+        write(
+            &dir.join("BENCH_bilevel.json"),
+            &format!(r#"{{{meta}, "gate": {{"speedup": 3.5, "enforced": true}}}}"#),
+        );
+        write(
+            &dir.join("BENCH_kernels.json"),
+            &format!(
+                r#"{{{meta}, "dispatch": "{kernel_dispatch}", "gate": {{"speedup": {kernel_speedup}}}, "agreement": {{"max": 1e-9}}}}"#
+            ),
+        );
+    }
+
+    fn baselines_json() -> &'static str {
+        r#"{"metrics": {
+            "proj.reuse_speedup_dense": {"kind": "min", "value": 1.15, "baseline": 1.8},
+            "proj.max_abs_diff": {"kind": "max", "value": 1e-6, "baseline": 0.0},
+            "serve.speedup_at_4_threads": {"kind": "min", "value": 1.15, "baseline": 2.4},
+            "serve.max_abs_diff": {"kind": "max", "value": 1e-6, "baseline": 0.0},
+            "serve.warm_reduction_inv_order": {"kind": "min", "value": 1.0, "baseline": 20.0},
+            "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
+            "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
+            "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0}
+        }}"#
+    }
+
+    fn opts_for(dir: &std::path::Path, baselines: &std::path::Path) -> ExpOpts {
+        let mut cfg = Config::default();
+        cfg.set_override(&format!("gate.baselines={}", baselines.display())).unwrap();
+        ExpOpts { quick: true, outdir: dir.to_path_buf(), cfg }
+    }
+
+    #[test]
+    fn passes_and_renders_table_on_good_metrics() {
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_ok_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_reports(&dir, 2.4, "portable");
+        let bl = dir.join("baselines.json");
+        write(&bl, baselines_json());
+        run(&opts_for(&dir, &bl)).unwrap();
+        let md = std::fs::read_to_string(dir.join("bench_gate.md")).unwrap();
+        assert!(md.contains("| kernels.speedup_pre_pass_dense_contig |"), "{md}");
+        assert!(!md.contains("REGRESSION"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fails_but_still_writes_table_on_regression() {
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_reports(&dir, 1.1, "portable"); // below the 1.5 kernel floor
+        let bl = dir.join("baselines.json");
+        write(&bl, baselines_json());
+        let err = run(&opts_for(&dir, &bl)).unwrap_err().to_string();
+        assert!(err.contains("kernels.speedup_pre_pass_dense_contig"), "{err}");
+        let md = std::fs::read_to_string(dir.join("bench_gate.md")).unwrap();
+        assert!(md.contains("REGRESSION"), "table written before failing: {md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn waived_source_gate_is_reported_but_does_not_fail() {
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_waived_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Below the 1.5 floor, but the producing process was pinned to the
+        // scalar dispatch (nothing was raced) — the regression job must
+        // surface it without failing CI.
+        fake_reports(&dir, 1.1, "scalar");
+        let bl = dir.join("baselines.json");
+        write(&bl, baselines_json());
+        run(&opts_for(&dir, &bl)).unwrap();
+        let md = std::fs::read_to_string(dir.join("bench_gate.md")).unwrap();
+        assert!(md.contains("waived"), "{md}");
+        assert!(!md.contains("❌"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_metric_name_fails_loudly() {
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_typo_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_reports(&dir, 2.4, "portable");
+        let bl = dir.join("baselines.json");
+        write(&bl, r#"{"metrics": {"proj.reuse_speedup_dence": {"kind": "min", "value": 1.0}}}"#);
+        let err = run(&opts_for(&dir, &bl)).unwrap_err().to_string();
+        assert!(err.contains("no extractor"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn committed_baselines_file_parses_and_gates_known_metrics() {
+        // Guard the real ci/bench_baselines.json: every metric it names
+        // must have an extractor and a valid kind.
+        let mut path = std::path::PathBuf::from("../ci/bench_baselines.json");
+        if !path.exists() {
+            path = std::path::PathBuf::from("ci/bench_baselines.json");
+        }
+        let text = std::fs::read_to_string(&path).expect("committed baselines present");
+        let v = json::parse(&text).unwrap();
+        let metrics = v.get("metrics").and_then(Json::as_obj).unwrap();
+        assert!(metrics.len() >= 6, "baselines should gate the key metrics");
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_real_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_reports(&dir, 2.4, "portable");
+        let reports: BTreeMap<&'static str, Json> = REPORTS
+            .iter()
+            .map(|f| {
+                let t = std::fs::read_to_string(dir.join(f)).unwrap();
+                (*f, json::parse(&t).unwrap())
+            })
+            .collect();
+        for (name, spec) in metrics {
+            Kind::parse(spec.get("kind").and_then(Json::as_str).unwrap()).unwrap();
+            assert!(spec.get("value").and_then(Json::as_f64).is_some(), "{name} needs value");
+            extract(&reports, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,408 @@
+//! `l1inf exp kernel_bench` — scalar vs dispatched timings of the dense
+//! kernel layer ([`crate::projection::dense`]), written to
+//! `<outdir>/BENCH_kernels.json`.
+//!
+//! Cells are the cross product of
+//!
+//! - **op**: `pre_pass` (fused per-group max+mass — the solver seeding
+//!   scan), `maxima_gather` (the bi-level level-2→1 reduction),
+//!   `clamp` (the water-level / radius apply);
+//! - **data**: `dense` (U[0,1) everywhere) and `sparse` (90 % zeros, ~30 %
+//!   whole-zero groups);
+//! - **view**: `contig` (groups back to back) and `cols` (strided column
+//!   view over a row-major matrix — the blocked-traversal path).
+//!
+//! Every cell is measured on the paper's 1000×4000 benchmark shape even
+//! under `--quick` (only repetition counts shrink): the acceptance gate is
+//! ≥[`KERNEL_SPEEDUP_GATE`]× dispatched-vs-scalar on the **dense contig
+//! pre-pass** cell, and that cell is only meaningful at full size.
+//! Correctness is enforced unconditionally: scalar and dispatched results
+//! of every cell must agree to ≤1e-6 (per-group maxima and every clamped
+//! element are bit-identical by the lane contract; only f64 mass sums may
+//! drift, by ≈n·ε₆₄). This bench's *own* exit code enforces the wall-clock
+//! gate only on full runs — under `--quick` (3 reps) or a scalar-pinned
+//! process it records the result and exits 0. That is deliberate layering,
+//! not a CI loophole: in CI the committed floor in `ci/bench_baselines.json`
+//! (same 1.5× value, applied by `exp bench_gate` to this quick report)
+//! still fails the job on a real regression. The floor sits ~40 % below
+//! the typical speedup, and both timing arms run on the same machine, so
+//! runner load largely cancels out of the ratio; only a scalar-pinned
+//! process (speedup ≡ 1, nothing raced) is waived by the gate.
+
+use super::{projbench, ExpOpts};
+use crate::projection::dense::{self, Dispatch};
+use crate::projection::grouped::{GroupedView, GroupedViewMut};
+use crate::util::bench::{self, BenchOpts, Sample};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+/// Minimum dispatched-vs-scalar speedup on the dense contiguous pre-pass
+/// cell (the ISSUE acceptance gate).
+pub const KERNEL_SPEEDUP_GATE: f64 = 1.5;
+
+/// Agreement bound between the scalar and dispatched results of any cell.
+pub const KERNEL_AGREEMENT_BOUND: f64 = 1e-6;
+
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// One (op, data, view) measurement.
+struct Cell {
+    op: &'static str,
+    data: &'static str,
+    view: &'static str,
+    scalar_min_ms: f64,
+    dispatched_min_ms: f64,
+    speedup: f64,
+    /// Max relative deviation between the scalar and dispatched results.
+    max_rel_diff: f64,
+}
+
+impl Cell {
+    fn id(&self) -> String {
+        format!("{}_{}_{}", self.op, self.data, self.view)
+    }
+}
+
+fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+/// Mutable view over `buf` in the cell's layout.
+fn view_mut(buf: &mut [f32], colwise: bool, n: usize, m: usize) -> GroupedViewMut<'_> {
+    if colwise {
+        GroupedViewMut::columns(buf, n, m)
+    } else {
+        GroupedViewMut::new(buf, m, n)
+    }
+}
+
+/// The two physical layouts of one logical matrix: `contig` is group-major
+/// (`m` groups × `n`), `transposed` is the row-major `n × m` buffer whose
+/// columns are the same groups.
+struct Layouts {
+    contig: Vec<f32>,
+    transposed: Vec<f32>,
+}
+
+impl Layouts {
+    fn new(contig: Vec<f32>, n: usize, m: usize) -> Layouts {
+        let mut transposed = vec![0.0f32; n * m];
+        for g in 0..m {
+            for j in 0..n {
+                transposed[j * m + g] = contig[g * n + j];
+            }
+        }
+        Layouts { contig, transposed }
+    }
+}
+
+fn sparse_matrix(n: usize, m: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x5AA5);
+    let mut data = vec![0.0f32; n * m];
+    for g in 0..m {
+        if rng.chance(0.3) {
+            continue; // whole-zero group
+        }
+        for j in 0..n {
+            if rng.chance(0.1) {
+                data[g * n + j] = rng.f32() * 2.0;
+            }
+        }
+    }
+    data
+}
+
+/// Time one closure (min-of-reps via the shared bench harness).
+fn time_op<F: FnMut()>(name: &str, bopts: &BenchOpts, mut f: F) -> Sample {
+    bench::run_case(name, bopts, || (), |_| f())
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    // Gated shape by default even under --quick: the acceptance criterion
+    // names the 1000×4000 dense contiguous pre-pass cell, and only the
+    // repetition counts shrink. (`kern.n`/`kern.m` config overrides exist
+    // for the debug-mode unit test, where a 4M-element sweep is too slow.)
+    let n = opts.cfg.usize_or("kern.n", 1000);
+    let m = opts.cfg.usize_or("kern.m", 4000);
+    let mut bopts = BenchOpts::from_env();
+    if opts.quick {
+        bopts.warmup_iters = 1;
+        bopts.measure_iters = 3;
+        bopts.max_secs_per_case = 5.0;
+    }
+    let dispatched = Dispatch::active();
+    println!("kernel_bench: scalar vs {} on {n}x{m} (quick={})", dispatched.name(), opts.quick);
+
+    let datasets: [(&'static str, Layouts); 2] = [
+        ("dense", Layouts::new(projbench::uniform_matrix(n, m, 0x4E57), n, m)),
+        ("sparse", Layouts::new(sparse_matrix(n, m), n, m)),
+    ];
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut agreement_max = 0.0f64;
+
+    for (data_name, layouts) in &datasets {
+        let data_name: &'static str = *data_name;
+        // Clamp levels: half of each group's max (scalar reference) — zero
+        // groups get level 0, exercising the group-kill path.
+        let ref_view = GroupedView::new(&layouts.contig, m, n);
+        let mut ref_maxes = vec![0.0f32; m];
+        dense::group_maxes_into_slice_with(Dispatch::Scalar, &ref_view, &mut ref_maxes);
+        let levels: Vec<f64> = ref_maxes.iter().map(|&v| 0.5 * v as f64).collect();
+
+        for view_name in ["contig", "cols"] {
+            let colwise = view_name == "cols";
+            let base: &Vec<f32> = if colwise { &layouts.transposed } else { &layouts.contig };
+            let view = if colwise {
+                GroupedView::columns(base, n, m)
+            } else {
+                GroupedView::new(base, m, n)
+            };
+
+            // ── correctness first (outside any timed region), one diff
+            //    per op so a regression is attributable to its kernel ──
+            let (mut ms, mut ss) = (Vec::new(), Vec::new());
+            let rs = dense::group_stats_into_with(Dispatch::Scalar, &view, &mut ms, &mut ss);
+            let (mut md, mut sd) = (Vec::new(), Vec::new());
+            let rd = dense::group_stats_into_with(dispatched, &view, &mut md, &mut sd);
+            let mut pre_pass_diff = rel_diff(rs, rd);
+            for g in 0..m {
+                pre_pass_diff =
+                    pre_pass_diff.max(rel_diff(ms[g], md[g])).max(rel_diff(ss[g], sd[g]));
+            }
+            let mut gs = vec![0.0f32; m];
+            let mut gd = vec![0.0f32; m];
+            dense::group_maxes_into_slice_with(Dispatch::Scalar, &view, &mut gs);
+            dense::group_maxes_into_slice_with(dispatched, &view, &mut gd);
+            let mut gather_diff = 0.0f64;
+            for g in 0..m {
+                gather_diff = gather_diff.max(rel_diff(gs[g] as f64, gd[g] as f64));
+            }
+            let mut cs = base.clone();
+            let mut cd = base.clone();
+            dense::clamp_groups_with(Dispatch::Scalar, &mut view_mut(&mut cs, colwise, n, m), &levels);
+            dense::clamp_groups_with(dispatched, &mut view_mut(&mut cd, colwise, n, m), &levels);
+            let mut clamp_diff = 0.0f64;
+            for (a, b) in cs.iter().zip(&cd) {
+                clamp_diff = clamp_diff.max(rel_diff(*a as f64, *b as f64));
+            }
+            agreement_max = agreement_max.max(pre_pass_diff).max(gather_diff).max(clamp_diff);
+
+            // ── timings ──
+            let mut samples: Vec<Sample> = Vec::new();
+
+            let (mut tm, mut ts) = (Vec::new(), Vec::new());
+            let sc = time_op(&format!("pre_pass scalar  {data_name}/{view_name}"), &bopts, || {
+                std::hint::black_box(dense::group_stats_into_with(
+                    Dispatch::Scalar,
+                    &view,
+                    &mut tm,
+                    &mut ts,
+                ));
+            });
+            let di = time_op(
+                &format!("pre_pass {:<8} {data_name}/{view_name}", dispatched.name()),
+                &bopts,
+                || {
+                    std::hint::black_box(dense::group_stats_into_with(
+                        dispatched, &view, &mut tm, &mut ts,
+                    ));
+                },
+            );
+            cells.push(Cell {
+                op: "pre_pass",
+                data: data_name,
+                view: view_name,
+                scalar_min_ms: sc.min_ms(),
+                dispatched_min_ms: di.min_ms(),
+                speedup: sc.min_ms() / di.min_ms().max(1e-9),
+                max_rel_diff: pre_pass_diff,
+            });
+            samples.push(sc);
+            samples.push(di);
+
+            let mut gout = vec![0.0f32; m];
+            let sc = time_op(&format!("gather   scalar  {data_name}/{view_name}"), &bopts, || {
+                dense::group_maxes_into_slice_with(Dispatch::Scalar, &view, &mut gout);
+                std::hint::black_box(gout[0]);
+            });
+            let di = time_op(
+                &format!("gather   {:<8} {data_name}/{view_name}", dispatched.name()),
+                &bopts,
+                || {
+                    dense::group_maxes_into_slice_with(dispatched, &view, &mut gout);
+                    std::hint::black_box(gout[0]);
+                },
+            );
+            cells.push(Cell {
+                op: "maxima_gather",
+                data: data_name,
+                view: view_name,
+                scalar_min_ms: sc.min_ms(),
+                dispatched_min_ms: di.min_ms(),
+                speedup: sc.min_ms() / di.min_ms().max(1e-9),
+                max_rel_diff: gather_diff,
+            });
+            samples.push(sc);
+            samples.push(di);
+
+            let sc = bench::run_case(
+                &format!("clamp    scalar  {data_name}/{view_name}"),
+                &bopts,
+                || base.clone(),
+                |mut y| {
+                    dense::clamp_groups_with(
+                        Dispatch::Scalar,
+                        &mut view_mut(&mut y, colwise, n, m),
+                        &levels,
+                    );
+                    std::hint::black_box(y[0]);
+                },
+            );
+            let di = bench::run_case(
+                &format!("clamp    {:<8} {data_name}/{view_name}", dispatched.name()),
+                &bopts,
+                || base.clone(),
+                |mut y| {
+                    dense::clamp_groups_with(dispatched, &mut view_mut(&mut y, colwise, n, m), &levels);
+                    std::hint::black_box(y[0]);
+                },
+            );
+            cells.push(Cell {
+                op: "clamp",
+                data: data_name,
+                view: view_name,
+                scalar_min_ms: sc.min_ms(),
+                dispatched_min_ms: di.min_ms(),
+                speedup: sc.min_ms() / di.min_ms().max(1e-9),
+                max_rel_diff: clamp_diff,
+            });
+            samples.push(sc);
+            samples.push(di);
+
+            bench::print_table(&format!("kernel_bench: {data_name}/{view_name}"), &samples);
+        }
+    }
+
+    let agreement_pass = agreement_max <= KERNEL_AGREEMENT_BOUND;
+    let gate_cell = cells
+        .iter()
+        .find(|c| c.op == "pre_pass" && c.data == "dense" && c.view == "contig")
+        .expect("gated cell measured");
+    let gate_speedup = gate_cell.speedup;
+    let gate_pass = gate_speedup >= KERNEL_SPEEDUP_GATE;
+    // --quick timings (3 reps on a possibly loaded runner) and scalar-pinned
+    // processes record the gate without enforcing it; full runs enforce.
+    let enforce = !opts.quick && dispatched != Dispatch::Scalar;
+    println!(
+        "\nkernel dispatch {}: dense contig pre-pass speedup {gate_speedup:.2}x \
+         (gate ≥ {KERNEL_SPEEDUP_GATE}x: {}{}), agreement max {agreement_max:.2e} (bound {KERNEL_AGREEMENT_BOUND:.0e})",
+        dispatched.name(),
+        if gate_pass { "PASS" } else { "FAIL" },
+        if enforce { "" } else { ", advisory" },
+    );
+
+    let report = jobj(vec![
+        ("meta", bench::bench_meta(&[(n, m)])),
+        ("dispatch", Json::Str(dispatched.name().to_string())),
+        ("matrix", jobj(vec![("n", Json::Num(n as f64)), ("m", Json::Num(m as f64))])),
+        (
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        jobj(vec![
+                            ("id", Json::Str(c.id())),
+                            ("op", Json::Str(c.op.to_string())),
+                            ("data", Json::Str(c.data.to_string())),
+                            ("view", Json::Str(c.view.to_string())),
+                            ("scalar_min_ms", Json::Num(c.scalar_min_ms)),
+                            ("dispatched_min_ms", Json::Num(c.dispatched_min_ms)),
+                            ("speedup", Json::Num(c.speedup)),
+                            ("max_rel_diff", Json::Num(c.max_rel_diff)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gate",
+            jobj(vec![
+                ("case", Json::Str("pre_pass_dense_contig".to_string())),
+                ("speedup", Json::Num(gate_speedup)),
+                ("threshold", Json::Num(KERNEL_SPEEDUP_GATE)),
+                ("pass", Json::Bool(gate_pass)),
+                ("enforced", Json::Bool(enforce)),
+            ]),
+        ),
+        (
+            "agreement",
+            jobj(vec![
+                ("bound", Json::Num(KERNEL_AGREEMENT_BOUND)),
+                ("max", Json::Num(agreement_max)),
+                ("pass", Json::Bool(agreement_pass)),
+            ]),
+        ),
+        ("quick", Json::Bool(opts.quick)),
+    ]);
+    let path = opts.outdir.join("BENCH_kernels.json");
+    std::fs::write(&path, report.to_string())?;
+    println!("wrote {}", path.display());
+
+    ensure!(
+        agreement_pass,
+        "scalar vs dispatched kernels diverged: {agreement_max:e} > {KERNEL_AGREEMENT_BOUND:e}"
+    );
+    if enforce {
+        ensure!(
+            gate_pass,
+            "dispatched kernel speedup {gate_speedup:.3}x below the {KERNEL_SPEEDUP_GATE}x gate"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_writes_report_with_agreement() {
+        let outdir =
+            std::env::temp_dir().join(format!("l1inf_kernel_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&outdir).unwrap();
+        // Debug-mode run: shrink the matrix (awkward sizes on purpose —
+        // 97 is not a lane multiple) so the sweep stays fast.
+        let mut cfg = crate::config::Config::default();
+        cfg.set_override("kern.n=97").unwrap();
+        cfg.set_override("kern.m=160").unwrap();
+        let opts = ExpOpts { quick: true, outdir: outdir.clone(), cfg };
+        // Agreement must hold unconditionally; the wall-clock gate is
+        // advisory under --quick (this test runs in debug builds where the
+        // portable lanes don't vectorize), so run() must succeed.
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(outdir.join("BENCH_kernels.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        crate::util::bench::assert_kernel_stamp(v.get("meta").unwrap());
+        assert_eq!(
+            v.get("dispatch").unwrap().as_str().unwrap(),
+            crate::projection::dense::kernel_name()
+        );
+        let cells = v.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 12, "3 ops x 2 datasets x 2 views");
+        for c in cells {
+            assert!(c.get("max_rel_diff").unwrap().as_f64().unwrap() <= 1e-6);
+            assert!(c.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert_eq!(v.get("agreement").unwrap().get("pass").unwrap(), &Json::Bool(true));
+        assert_eq!(
+            v.get("gate").unwrap().get("case").unwrap().as_str().unwrap(),
+            "pre_pass_dense_contig"
+        );
+        std::fs::remove_dir_all(&outdir).ok();
+    }
+}

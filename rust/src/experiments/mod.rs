@@ -4,7 +4,9 @@
 //! the figures can be re-plotted. `--quick` shrinks grids/sizes/seeds for
 //! smoke runs; the defaults regenerate the paper-scale experiment.
 
+pub mod benchgate;
 pub mod bilevelbench;
+pub mod kernelbench;
 pub mod projbench;
 pub mod servebench;
 
@@ -41,7 +43,7 @@ impl Default for ExpOpts {
 /// All experiment ids.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
-    "trainproj", "serve_bench", "proj_bench", "bilevel_bench",
+    "trainproj", "serve_bench", "proj_bench", "bilevel_bench", "kernel_bench", "bench_gate",
 ];
 
 /// Dispatch by experiment id.
@@ -50,6 +52,8 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
     match name {
         "proj_bench" => projbench::run_bench(opts),
         "bilevel_bench" => bilevelbench::run(opts),
+        "kernel_bench" => kernelbench::run(opts),
+        "bench_gate" => benchgate::run(opts),
         "fig1" => fig1(opts),
         "fig2" => fig2(opts),
         "fig3" => fig3(opts),

@@ -354,6 +354,7 @@ mod tests {
         let text = std::fs::read_to_string(outdir.join("BENCH_proj.json")).unwrap();
         let v = crate::util::json::parse(&text).unwrap();
         assert!(v.get("meta").unwrap().get("git_rev").is_some(), "report must carry the meta stamp");
+        crate::util::bench::assert_kernel_stamp(v.get("meta").unwrap());
         assert!(v.get("gate").unwrap().get("speedup").unwrap().as_f64().is_some());
         let cases = v.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), 2);

@@ -265,6 +265,7 @@ mod tests {
         let text = std::fs::read_to_string(outdir.join("BENCH_serve.json")).unwrap();
         let v = crate::util::json::parse(&text).unwrap();
         assert!(v.get("meta").unwrap().get("git_rev").is_some(), "report must carry the meta stamp");
+        crate::util::bench::assert_kernel_stamp(v.get("meta").unwrap());
         assert!(v.get("single_matrix").is_some());
         assert!(v.get("warm_start").is_some());
         let diff = v

@@ -289,22 +289,13 @@ fn fill_radii(maxes: &[f32], tau: f64, radii: &mut Vec<f64>) -> (f64, usize) {
 }
 
 /// Clamp each signed group at its radius through a (possibly strided)
-/// view: `X = sign(Y)·min(|Y|, r_g)`.
+/// view: `X = sign(Y)·min(|Y|, r_g)`, on the dispatched dense clamp
+/// kernel. (The kernel compares in f32 against `r as f32` where the seed
+/// compared in f64 against `r`; the two are value-identical because no
+/// f32 lies strictly between an f64 and its nearest-rounded f32 — see the
+/// [`crate::projection::dense`] docs.)
 pub fn apply_radii_view(view: &mut GroupedViewMut<'_>, radii: &[f64]) {
-    debug_assert_eq!(radii.len(), view.n_groups());
-    for (g, &r) in radii.iter().enumerate() {
-        if r <= 0.0 {
-            view.for_each_in_group_mut(g, |v| *v = 0.0);
-        } else {
-            let r32 = r as f32;
-            view.for_each_in_group_mut(g, |v| {
-                let a = (*v).abs() as f64;
-                if a > r {
-                    *v = if *v >= 0.0 { r32 } else { -r32 };
-                }
-            });
-        }
-    }
+    crate::projection::dense::clamp_groups(view, radii);
 }
 
 /// [`apply_radii_view`] over contiguous groups (the sharded tree's
@@ -313,16 +304,11 @@ pub fn apply_radii(data: &mut [f32], group_len: usize, radii: &[f64]) {
     debug_assert_eq!(data.len(), group_len * radii.len());
     for (g, &r) in radii.iter().enumerate() {
         let grp = &mut data[g * group_len..(g + 1) * group_len];
-        if r <= 0.0 {
+        let r32 = r as f32;
+        if r32 <= 0.0 {
             grp.fill(0.0);
         } else {
-            let r32 = r as f32;
-            for v in grp.iter_mut() {
-                let a = (*v).abs() as f64;
-                if a > r {
-                    *v = if *v >= 0.0 { r32 } else { -r32 };
-                }
-            }
+            crate::projection::dense::clamp_to_level(grp, r32);
         }
     }
 }
@@ -391,18 +377,15 @@ impl BilevelSolver {
         hint: Option<f64>,
     ) -> BilevelInfo {
         assert!(c >= 0.0, "radius must be nonnegative");
-        let m = view.n_groups();
 
-        // Level 2 → 1: per-group |max| into the reusable gather. The fold
-        // is the exact f32 max fold of `norm_l1inf`, so `radius_before`
-        // is bit-identical to the norm of the input.
+        // Level 2 → 1: per-group |max| into the reusable gather, on the
+        // dispatched dense kernels (blocked tile traversal for column
+        // views). Max folds are order-insensitive, so `radius_before`
+        // stays bit-identical to `norm_l1inf` of the input under every
+        // dispatch.
         {
             let ro = view.as_view();
-            self.maxes.clear();
-            self.maxes.reserve(m);
-            for g in 0..m {
-                self.maxes.push(ro.group_abs_max(g));
-            }
+            crate::projection::dense::group_maxes_into(&ro, &mut self.maxes);
         }
 
         // Root stage (shared with the tree), then the level-1→2 finish.

@@ -107,24 +107,20 @@ impl TreeBilevel {
                     maxes_rem = rest;
                     s.spawn(move || {
                         // The shard is itself a contiguous grouped matrix:
-                        // reuse the one canonical abs-max fold so the bit
+                        // reuse the one canonical abs-max kernel so the bit
                         // contract has a single source of truth.
                         let shard = crate::projection::GroupedView::new(
                             &data_ro[lo * group_len..hi * group_len],
                             hi - lo,
                             group_len,
                         );
-                        for (gi, slot) in max_chunk.iter_mut().enumerate() {
-                            *slot = shard.group_abs_max(gi);
-                        }
+                        crate::projection::dense::group_maxes_into_slice(&shard, max_chunk);
                     });
                 }
             });
         } else {
             let ro = crate::projection::GroupedView::new(&*data, n_groups, group_len);
-            for (g, slot) in self.maxes.iter_mut().enumerate() {
-                *slot = ro.group_abs_max(g);
-            }
+            crate::projection::dense::group_maxes_into_slice(&ro, &mut self.maxes);
         }
         // Root stage — the exact code the serial operator runs (fast
         // paths, warm-candidate selection, τ solve, radii fold), so the

@@ -1,0 +1,1322 @@
+//! Runtime-dispatched SIMD kernels for the O(nm) dense element passes.
+//!
+//! The paper's `O(nm + J log nm)` bound means that once the breakpoint term
+//! `J` is small (warm starts, sparse radii), wall time is dominated by the
+//! dense passes every operator shares: the fused abs-max/mass pre-pass, the
+//! water-level / radius clamp, the bi-level maxima gather, the `|Y|`
+//! normalization gather, and the grouped norms. This module is the single
+//! home for those passes, with three implementations selected at runtime:
+//!
+//! | [`Dispatch`] | path | selected when |
+//! |---|---|---|
+//! | `Avx2`     | `std::arch` AVX2/FMA intrinsics | x86-64 with AVX2+FMA detected |
+//! | `Portable` | 8-lane chunked scalar code that autovectorizes | everything else |
+//! | `Scalar`   | the seed's sequential loops | `L1INF_FORCE_SCALAR=1` |
+//!
+//! # The lane-8 accumulation contract
+//!
+//! Every reduction kernel in this module follows one canonical pattern:
+//! element `j` of a group accumulates into lane `j mod 8` (f32 max fold per
+//! lane, sequential f64 adds per lane), and the 8 lanes are combined with
+//! the fixed tree `((l0⊕l1)⊕(l2⊕l3)) ⊕ ((l4⊕l5)⊕(l6⊕l7))`. Because the
+//! lane assignment depends only on the element's *index within its group*,
+//! the contiguous kernels, the strided single-group kernels and the blocked
+//! column-tile traversal all produce **bit-identical** results — a column
+//! view and an explicitly transposed contiguous copy agree to the last bit,
+//! exactly as the shape layer promises ([`GroupedView`] docs). The AVX2
+//! path evaluates the same lanes with `vmaxps`/`vaddpd` (IEEE-exact, one
+//! lane each) and reduces through the same tree, so `Avx2` ≡ `Portable`
+//! bit for bit.
+//!
+//! `Scalar` keeps the seed's strictly sequential accumulation order. Max
+//! folds are order-insensitive for non-NaN data, so per-group maxima (and
+//! everything derived from them: `norm_l1inf`, the bi-level gather) are
+//! bit-identical across all three dispatches; f64 *sums* are reordered by
+//! the lane split, so sums (and the θ/τ they seed) agree with `Scalar` to
+//! ≈`n·ε₆₄` relative — far below the 1e-6 gate the compat tests enforce.
+//! The one deliberate rounding difference: `Avx2` accumulates squared norms
+//! (`norm_l12`) with fused multiply-adds (`vfmaddpd` / `f64::mul_add` on
+//! the strided path), which is *more* accurate than the portable mul+add
+//! but not bit-equal to it.
+//!
+//! Clamp kernels are elementwise (no accumulator), so all three dispatches
+//! are bit-identical on them (signed zeros of killed groups excepted: the
+//! group-kill fill writes `+0.0`).
+//!
+//! # Overrides
+//!
+//! `L1INF_FORCE_SCALAR=1` in the environment pins the process to `Scalar`
+//! (read once, cached). [`force_dispatch_for_thread`] pins the *calling
+//! thread* — the hook the compat tests and `l1inf exp kernel_bench` use to
+//! time/compare paths in one process; it does not propagate to spawned
+//! worker threads.
+
+use super::grouped::{GroupedView, GroupedViewMut};
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Accumulator lanes of the canonical reduction pattern (see module docs).
+pub const LANES: usize = 8;
+
+/// Column-tile width of the blocked strided traversal: 64 f32 = 256 B of
+/// each row, so every cache line read is fully consumed (the per-group
+/// strided walk paid one line per element).
+const COL_TILE: usize = 64;
+
+/// Which kernel implementation runs (see the module docs for selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The seed's sequential loops (`L1INF_FORCE_SCALAR=1`).
+    Scalar,
+    /// 8-lane chunked portable code (autovectorizes on any target).
+    Portable,
+    /// AVX2/FMA `std::arch` intrinsics (runtime-detected, x86-64 only).
+    Avx2,
+}
+
+impl Dispatch {
+    /// Every dispatch variant (keep in sync with [`Dispatch::name`]; the
+    /// bench report tests validate `meta.kernel` stamps against this).
+    pub const ALL: [Dispatch; 3] = [Dispatch::Scalar, Dispatch::Portable, Dispatch::Avx2];
+
+    /// Stable name stamped into `bench_meta` and the BENCH_*.json reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Portable => "portable",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    /// Best available path on this machine (ignores the env override).
+    pub fn detect() -> Dispatch {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if have_avx2() {
+                return Dispatch::Avx2;
+            }
+        }
+        Dispatch::Portable
+    }
+
+    /// The selection rule, factored out so the env contract is unit-testable
+    /// without process-global env mutation.
+    pub fn resolve(force_scalar: bool) -> Dispatch {
+        if force_scalar {
+            Dispatch::Scalar
+        } else {
+            Dispatch::detect()
+        }
+    }
+
+    /// Process-wide active dispatch: `L1INF_FORCE_SCALAR=1` forces
+    /// [`Dispatch::Scalar`], otherwise the detected best path. Read once,
+    /// cached for the process lifetime.
+    pub fn active() -> Dispatch {
+        static ACTIVE: OnceLock<Dispatch> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            Dispatch::resolve(std::env::var("L1INF_FORCE_SCALAR").ok().as_deref() == Some("1"))
+        })
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn have_avx2() -> bool {
+    // std caches the cpuid probe; these are two relaxed atomic loads.
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<Dispatch>> = const { Cell::new(None) };
+}
+
+/// Pin the calling thread to a dispatch (`None` restores the process-wide
+/// selection). Test/bench hook — worker threads spawned by the sharded
+/// paths are *not* affected.
+pub fn force_dispatch_for_thread(d: Option<Dispatch>) {
+    OVERRIDE.with(|c| c.set(d));
+}
+
+/// Dispatch the next kernel call on this thread resolves to.
+#[inline]
+pub fn current() -> Dispatch {
+    OVERRIDE.with(|c| c.get()).unwrap_or_else(Dispatch::active)
+}
+
+/// Name of the process-wide active path (`"avx2" | "portable" | "scalar"`)
+/// — stamped into every BENCH_*.json via `bench_meta`.
+pub fn kernel_name() -> &'static str {
+    Dispatch::active().name()
+}
+
+// ───────────────────────── lane reduction tree ─────────────────────────
+
+/// Fixed max tree over the 8 lanes (order-insensitive for non-NaN input,
+/// but fixed anyway so every path is bit-identical by construction).
+#[inline]
+fn reduce8_max(l: &[f32; LANES]) -> f32 {
+    (l[0].max(l[1])).max(l[2].max(l[3])).max((l[4].max(l[5])).max(l[6].max(l[7])))
+}
+
+/// Fixed sum tree over the 8 lanes — the one reorder the dispatched paths
+/// apply to f64 accumulation (documented in the module docs).
+#[inline]
+fn reduce8_sum(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+// ─────────────────── contiguous per-group kernels ───────────────────
+
+/// Fused per-group scan: `(max |·|, Σ|·| as f64)` — the pre-pass every
+/// solver seeding path consumes. Dispatched on [`current`].
+pub fn abs_max_and_mass(s: &[f32]) -> (f32, f64) {
+    abs_max_and_mass_with(current(), s)
+}
+
+/// [`abs_max_and_mass`] with an explicit dispatch (bench/test entry).
+pub fn abs_max_and_mass_with(d: Dispatch, s: &[f32]) -> (f32, f64) {
+    match d {
+        Dispatch::Scalar => {
+            let mut mx = 0.0f32;
+            let mut sum = 0.0f64;
+            for &v in s {
+                let a = v.abs();
+                mx = mx.max(a);
+                sum += a as f64;
+            }
+            (mx, sum)
+        }
+        Dispatch::Portable => abs_max_and_mass_portable(s),
+        Dispatch::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                return unsafe { abs_max_and_mass_avx2(s) };
+            }
+            abs_max_and_mass_portable(s)
+        }
+    }
+}
+
+fn abs_max_and_mass_portable(s: &[f32]) -> (f32, f64) {
+    let mut maxs = [0.0f32; LANES];
+    let mut sums = [0.0f64; LANES];
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for (k, &v) in ch.iter().enumerate() {
+            let a = v.abs();
+            maxs[k] = maxs[k].max(a);
+            sums[k] += a as f64;
+        }
+    }
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        let a = v.abs();
+        maxs[k] = maxs[k].max(a);
+        sums[k] += a as f64;
+    }
+    (reduce8_max(&maxs), reduce8_sum(&sums))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_max_and_mass_avx2(s: &[f32]) -> (f32, f64) {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let mut vmax = _mm256_setzero_ps();
+    let mut sum_lo = _mm256_setzero_pd();
+    let mut sum_hi = _mm256_setzero_pd();
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let v = _mm256_loadu_ps(ch.as_ptr());
+        let a = _mm256_andnot_ps(sign_mask, v);
+        // Operand order matters for NaN: max_ps returns the *second* operand
+        // when the first is NaN, which matches `acc.max(a)` (NaN `a` keeps
+        // the accumulator) since the accumulator itself can never be NaN.
+        vmax = _mm256_max_ps(a, vmax);
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(a));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a));
+        sum_lo = _mm256_add_pd(sum_lo, dlo);
+        sum_hi = _mm256_add_pd(sum_hi, dhi);
+    }
+    let mut maxs = [0.0f32; LANES];
+    _mm256_storeu_ps(maxs.as_mut_ptr(), vmax);
+    let mut sums = [0.0f64; LANES];
+    _mm256_storeu_pd(sums.as_mut_ptr(), sum_lo);
+    _mm256_storeu_pd(sums.as_mut_ptr().add(4), sum_hi);
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        let a = v.abs();
+        maxs[k] = maxs[k].max(a);
+        sums[k] += a as f64;
+    }
+    (reduce8_max(&maxs), reduce8_sum(&sums))
+}
+
+/// Per-group `max |·|` (the bi-level level-2→1 reduction and the
+/// `norm_l1inf` term). Bit-identical across all dispatches for non-NaN
+/// input (max folds are order-insensitive).
+pub fn abs_max(s: &[f32]) -> f32 {
+    abs_max_with(current(), s)
+}
+
+/// [`abs_max`] with an explicit dispatch.
+pub fn abs_max_with(d: Dispatch, s: &[f32]) -> f32 {
+    match d {
+        Dispatch::Scalar => {
+            let mut mx = 0.0f32;
+            for &v in s {
+                mx = mx.max(v.abs());
+            }
+            mx
+        }
+        Dispatch::Portable => abs_max_portable(s),
+        Dispatch::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                return unsafe { abs_max_avx2(s) };
+            }
+            abs_max_portable(s)
+        }
+    }
+}
+
+fn abs_max_portable(s: &[f32]) -> f32 {
+    let mut maxs = [0.0f32; LANES];
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for (k, &v) in ch.iter().enumerate() {
+            maxs[k] = maxs[k].max(v.abs());
+        }
+    }
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        maxs[k] = maxs[k].max(v.abs());
+    }
+    reduce8_max(&maxs)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_max_avx2(s: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let mut vmax = _mm256_setzero_ps();
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let a = _mm256_andnot_ps(sign_mask, _mm256_loadu_ps(ch.as_ptr()));
+        vmax = _mm256_max_ps(a, vmax);
+    }
+    let mut maxs = [0.0f32; LANES];
+    _mm256_storeu_ps(maxs.as_mut_ptr(), vmax);
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        maxs[k] = maxs[k].max(v.abs());
+    }
+    reduce8_max(&maxs)
+}
+
+/// Per-group ℓ₁ mass `Σ|·|` as f64. Bit-identical to the sum half of
+/// [`abs_max_and_mass`] under every dispatch (same lanes, same adds), so
+/// callers may mix the two freely.
+pub fn abs_sum(s: &[f32]) -> f64 {
+    abs_sum_with(current(), s)
+}
+
+/// [`abs_sum`] with an explicit dispatch.
+pub fn abs_sum_with(d: Dispatch, s: &[f32]) -> f64 {
+    match d {
+        Dispatch::Scalar => {
+            let mut sum = 0.0f64;
+            for &v in s {
+                sum += v.abs() as f64;
+            }
+            sum
+        }
+        Dispatch::Portable => abs_sum_portable(s),
+        Dispatch::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                return unsafe { abs_sum_avx2(s) };
+            }
+            abs_sum_portable(s)
+        }
+    }
+}
+
+fn abs_sum_portable(s: &[f32]) -> f64 {
+    let mut sums = [0.0f64; LANES];
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for (k, &v) in ch.iter().enumerate() {
+            sums[k] += v.abs() as f64;
+        }
+    }
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        sums[k] += v.abs() as f64;
+    }
+    reduce8_sum(&sums)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_sum_avx2(s: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let mut sum_lo = _mm256_setzero_pd();
+    let mut sum_hi = _mm256_setzero_pd();
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let a = _mm256_andnot_ps(sign_mask, _mm256_loadu_ps(ch.as_ptr()));
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(a));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a));
+        sum_lo = _mm256_add_pd(sum_lo, dlo);
+        sum_hi = _mm256_add_pd(sum_hi, dhi);
+    }
+    let mut sums = [0.0f64; LANES];
+    _mm256_storeu_pd(sums.as_mut_ptr(), sum_lo);
+    _mm256_storeu_pd(sums.as_mut_ptr().add(4), sum_hi);
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        sums[k] += v.abs() as f64;
+    }
+    reduce8_sum(&sums)
+}
+
+/// Per-group Σv² as f64 (the `norm_l12` term). The AVX2 path uses fused
+/// multiply-adds; portable uses mul+add (see the module docs).
+pub fn sumsq(s: &[f32]) -> f64 {
+    sumsq_with(current(), s)
+}
+
+/// [`sumsq`] with an explicit dispatch.
+pub fn sumsq_with(d: Dispatch, s: &[f32]) -> f64 {
+    match d {
+        Dispatch::Scalar => {
+            let mut sum = 0.0f64;
+            for &v in s {
+                sum += (v as f64) * (v as f64);
+            }
+            sum
+        }
+        Dispatch::Portable => sumsq_portable(s),
+        Dispatch::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                return unsafe { sumsq_avx2(s) };
+            }
+            sumsq_portable(s)
+        }
+    }
+}
+
+fn sumsq_portable(s: &[f32]) -> f64 {
+    let mut sums = [0.0f64; LANES];
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        for (k, &v) in ch.iter().enumerate() {
+            let x = v as f64;
+            sums[k] += x * x;
+        }
+    }
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        let x = v as f64;
+        sums[k] += x * x;
+    }
+    reduce8_sum(&sums)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn sumsq_avx2(s: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let mut sum_lo = _mm256_setzero_pd();
+    let mut sum_hi = _mm256_setzero_pd();
+    let mut chunks = s.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let v = _mm256_loadu_ps(ch.as_ptr());
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        sum_lo = _mm256_fmadd_pd(dlo, dlo, sum_lo);
+        sum_hi = _mm256_fmadd_pd(dhi, dhi, sum_hi);
+    }
+    let mut sums = [0.0f64; LANES];
+    _mm256_storeu_pd(sums.as_mut_ptr(), sum_lo);
+    _mm256_storeu_pd(sums.as_mut_ptr().add(4), sum_hi);
+    for (k, &v) in chunks.remainder().iter().enumerate() {
+        // Tail lanes use the same fused rounding as the vector body.
+        let x = v as f64;
+        sums[k] = x.mul_add(x, sums[k]);
+    }
+    reduce8_sum(&sums)
+}
+
+/// Clamp a group at its (positive) level: `x ← sign(x)·min(|x|, level)`,
+/// keeping values with `|x| ≤ level` bit-untouched (NaNs included). All
+/// dispatches are bit-identical (pure elementwise select).
+pub fn clamp_to_level(s: &mut [f32], level: f32) {
+    clamp_to_level_with(current(), s, level)
+}
+
+/// [`clamp_to_level`] with an explicit dispatch.
+pub fn clamp_to_level_with(d: Dispatch, s: &mut [f32], level: f32) {
+    if d == Dispatch::Avx2 {
+        #[cfg(target_arch = "x86_64")]
+        if have_avx2() {
+            unsafe { clamp_avx2(s, level) };
+            return;
+        }
+    }
+    for v in s.iter_mut() {
+        let a = v.abs();
+        if a > level {
+            *v = if *v >= 0.0 { level } else { -level };
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn clamp_avx2(s: &mut [f32], level: f32) {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let vlvl = _mm256_set1_ps(level);
+    let mut chunks = s.chunks_exact_mut(LANES);
+    for ch in chunks.by_ref() {
+        let v = _mm256_loadu_ps(ch.as_ptr());
+        let a = _mm256_andnot_ps(sign_mask, v);
+        // a > level is false for NaN, so NaNs are kept — like the scalar `if`.
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, vlvl);
+        // Clamped elements have |x| > level ≥ 0, so x ≠ ±0 and the sign bit
+        // agrees with the scalar `*v >= 0.0` test.
+        let clamped = _mm256_or_ps(vlvl, _mm256_and_ps(v, sign_mask));
+        _mm256_storeu_ps(ch.as_mut_ptr(), _mm256_blendv_ps(v, clamped, gt));
+    }
+    for v in chunks.into_remainder() {
+        let a = v.abs();
+        if a > level {
+            *v = if *v >= 0.0 { level } else { -level };
+        }
+    }
+}
+
+// ─────────────────── strided single-group kernels ───────────────────
+
+/// Lane-8 fused scan of one strided group (`data[base + j·stride]`,
+/// `j < len`) — bit-identical to [`abs_max_and_mass`] on the gathered
+/// contiguous copy of the same group.
+pub(crate) fn abs_max_and_mass_strided(
+    data: &[f32],
+    base: usize,
+    len: usize,
+    stride: usize,
+) -> (f32, f64) {
+    abs_max_and_mass_strided_with(current(), data, base, len, stride)
+}
+
+pub(crate) fn abs_max_and_mass_strided_with(
+    d: Dispatch,
+    data: &[f32],
+    base: usize,
+    len: usize,
+    stride: usize,
+) -> (f32, f64) {
+    if d == Dispatch::Scalar {
+        let mut mx = 0.0f32;
+        let mut sum = 0.0f64;
+        for j in 0..len {
+            let a = data[base + j * stride].abs();
+            mx = mx.max(a);
+            sum += a as f64;
+        }
+        return (mx, sum);
+    }
+    let mut maxs = [0.0f32; LANES];
+    let mut sums = [0.0f64; LANES];
+    for j in 0..len {
+        let a = data[base + j * stride].abs();
+        let k = j & (LANES - 1);
+        maxs[k] = maxs[k].max(a);
+        sums[k] += a as f64;
+    }
+    (reduce8_max(&maxs), reduce8_sum(&sums))
+}
+
+/// Strided per-group `max |·|` (bit-identical to [`abs_max`] on the
+/// gathered group under every dispatch — max is order-insensitive).
+pub(crate) fn abs_max_strided(data: &[f32], base: usize, len: usize, stride: usize) -> f32 {
+    let mut mx = 0.0f32;
+    for j in 0..len {
+        mx = mx.max(data[base + j * stride].abs());
+    }
+    mx
+}
+
+/// Strided per-group Σv², lane-8 with the dispatch's `norm_l12` rounding
+/// (fused on `Avx2`, mul+add otherwise) so a column view matches the
+/// transposed contiguous kernel bit for bit *per dispatch*.
+pub(crate) fn sumsq_strided_with(
+    d: Dispatch,
+    data: &[f32],
+    base: usize,
+    len: usize,
+    stride: usize,
+) -> f64 {
+    match d {
+        Dispatch::Scalar => {
+            let mut sum = 0.0f64;
+            for j in 0..len {
+                let x = data[base + j * stride] as f64;
+                sum += x * x;
+            }
+            sum
+        }
+        Dispatch::Portable => {
+            let mut sums = [0.0f64; LANES];
+            for j in 0..len {
+                let x = data[base + j * stride] as f64;
+                sums[j & (LANES - 1)] += x * x;
+            }
+            reduce8_sum(&sums)
+        }
+        Dispatch::Avx2 => {
+            let mut sums = [0.0f64; LANES];
+            for j in 0..len {
+                let x = data[base + j * stride] as f64;
+                let k = j & (LANES - 1);
+                // `mul_add` is correctly-rounded fused — identical to the
+                // contiguous path's vfmaddpd lanes.
+                sums[k] = x.mul_add(x, sums[k]);
+            }
+            reduce8_sum(&sums)
+        }
+    }
+}
+
+// ───────────────── blocked column-tile row updates ─────────────────
+
+/// One row's contribution to a column tile's (max, sum) lane accumulators.
+/// Elementwise per column ⇒ the AVX2 and portable bodies are bit-identical.
+#[inline]
+fn row_stats(d: Dispatch, row: &[f32], maxs: &mut [f32], sums: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if d == Dispatch::Avx2 && have_avx2() {
+        unsafe { row_stats_avx2(row, maxs, sums) };
+        return;
+    }
+    let _ = d;
+    for ((&v, m), s) in row.iter().zip(maxs.iter_mut()).zip(sums.iter_mut()) {
+        let a = v.abs();
+        *m = m.max(a);
+        *s += a as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn row_stats_avx2(row: &[f32], maxs: &mut [f32], sums: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let n = row.len();
+    let mut c = 0usize;
+    while c + LANES <= n {
+        let a = _mm256_andnot_ps(sign_mask, _mm256_loadu_ps(row.as_ptr().add(c)));
+        let m = _mm256_loadu_ps(maxs.as_ptr().add(c));
+        _mm256_storeu_ps(maxs.as_mut_ptr().add(c), _mm256_max_ps(a, m));
+        let dlo = _mm256_cvtps_pd(_mm256_castps256_ps128(a));
+        let dhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(a));
+        let slo = _mm256_loadu_pd(sums.as_ptr().add(c));
+        let shi = _mm256_loadu_pd(sums.as_ptr().add(c + 4));
+        _mm256_storeu_pd(sums.as_mut_ptr().add(c), _mm256_add_pd(slo, dlo));
+        _mm256_storeu_pd(sums.as_mut_ptr().add(c + 4), _mm256_add_pd(shi, dhi));
+        c += LANES;
+    }
+    while c < n {
+        let a = row[c].abs();
+        maxs[c] = maxs[c].max(a);
+        sums[c] += a as f64;
+        c += 1;
+    }
+}
+
+/// One row's contribution to a column tile's max lane accumulators.
+#[inline]
+fn row_max(d: Dispatch, row: &[f32], maxs: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if d == Dispatch::Avx2 && have_avx2() {
+        unsafe { row_max_avx2(row, maxs) };
+        return;
+    }
+    let _ = d;
+    for (&v, m) in row.iter().zip(maxs.iter_mut()) {
+        *m = m.max(v.abs());
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn row_max_avx2(row: &[f32], maxs: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let n = row.len();
+    let mut c = 0usize;
+    while c + LANES <= n {
+        let a = _mm256_andnot_ps(sign_mask, _mm256_loadu_ps(row.as_ptr().add(c)));
+        let m = _mm256_loadu_ps(maxs.as_ptr().add(c));
+        _mm256_storeu_ps(maxs.as_mut_ptr().add(c), _mm256_max_ps(a, m));
+        c += LANES;
+    }
+    while c < n {
+        maxs[c] = maxs[c].max(row[c].abs());
+        c += 1;
+    }
+}
+
+/// Blocked column traversal computing per-column `(max |·|, Σ|·|)`, calling
+/// `sink` once per column in column order. Row `r` lands in lane `r mod 8`
+/// — the same lane the contiguous kernel assigns element `r` of the
+/// transposed group, so the results are bit-identical to it.
+fn cols_stats_fold<F: FnMut(f32, f64)>(
+    d: Dispatch,
+    data: &[f32],
+    n_cols: usize,
+    n_rows: usize,
+    row_stride: usize,
+    mut sink: F,
+) {
+    let mut c0 = 0usize;
+    while c0 < n_cols {
+        let tw = COL_TILE.min(n_cols - c0);
+        let mut tmax = [[0.0f32; COL_TILE]; LANES];
+        let mut tsum = [[0.0f64; COL_TILE]; LANES];
+        for r in 0..n_rows {
+            let lane = r & (LANES - 1);
+            let start = r * row_stride + c0;
+            row_stats(d, &data[start..start + tw], &mut tmax[lane][..tw], &mut tsum[lane][..tw]);
+        }
+        for c in 0..tw {
+            let mv = [
+                tmax[0][c], tmax[1][c], tmax[2][c], tmax[3][c], tmax[4][c], tmax[5][c],
+                tmax[6][c], tmax[7][c],
+            ];
+            let sv = [
+                tsum[0][c], tsum[1][c], tsum[2][c], tsum[3][c], tsum[4][c], tsum[5][c],
+                tsum[6][c], tsum[7][c],
+            ];
+            sink(reduce8_max(&mv), reduce8_sum(&sv));
+        }
+        c0 += tw;
+    }
+}
+
+/// Blocked column traversal for per-column `max |·|` only.
+fn cols_max_fold<F: FnMut(f32)>(
+    d: Dispatch,
+    data: &[f32],
+    n_cols: usize,
+    n_rows: usize,
+    row_stride: usize,
+    mut sink: F,
+) {
+    let mut c0 = 0usize;
+    while c0 < n_cols {
+        let tw = COL_TILE.min(n_cols - c0);
+        let mut tmax = [[0.0f32; COL_TILE]; LANES];
+        for r in 0..n_rows {
+            let lane = r & (LANES - 1);
+            let start = r * row_stride + c0;
+            row_max(d, &data[start..start + tw], &mut tmax[lane][..tw]);
+        }
+        for c in 0..tw {
+            let mv = [
+                tmax[0][c], tmax[1][c], tmax[2][c], tmax[3][c], tmax[4][c], tmax[5][c],
+                tmax[6][c], tmax[7][c],
+            ];
+            sink(reduce8_max(&mv));
+        }
+        c0 += tw;
+    }
+}
+
+// ───────────────────── view-level fused passes ─────────────────────
+
+/// The fused pre-pass of `project_with` and the sharded batch path: fill
+/// `maxes`/`sums` (cleared first) with every group's `(max |·|, Σ|·|)` and
+/// return `‖Y‖₁,∞` accumulated over groups in group order. Column views
+/// take the blocked traversal instead of a per-group strided walk.
+pub fn group_stats_into(
+    view: &GroupedView<'_>,
+    maxes: &mut Vec<f64>,
+    sums: &mut Vec<f64>,
+) -> f64 {
+    group_stats_into_with(current(), view, maxes, sums)
+}
+
+/// [`group_stats_into`] with an explicit dispatch.
+pub fn group_stats_into_with(
+    d: Dispatch,
+    view: &GroupedView<'_>,
+    maxes: &mut Vec<f64>,
+    sums: &mut Vec<f64>,
+) -> f64 {
+    let n_groups = view.n_groups();
+    maxes.clear();
+    sums.clear();
+    maxes.reserve(n_groups);
+    sums.reserve(n_groups);
+    let mut radius = 0.0f64;
+    let (group_stride, elem_stride) = view.strides();
+    if elem_stride == 1 {
+        for g in 0..n_groups {
+            let (mx, sum) = abs_max_and_mass_with(d, view.group_slice(g).unwrap_or(&[]));
+            radius += mx as f64;
+            maxes.push(mx as f64);
+            sums.push(sum);
+        }
+    } else if d == Dispatch::Scalar {
+        let data = view.raw_data();
+        for g in 0..n_groups {
+            let (mx, sum) = abs_max_and_mass_strided_with(
+                Dispatch::Scalar,
+                data,
+                g * group_stride,
+                view.group_len(),
+                elem_stride,
+            );
+            radius += mx as f64;
+            maxes.push(mx as f64);
+            sums.push(sum);
+        }
+    } else {
+        debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+        cols_stats_fold(
+            d,
+            view.raw_data(),
+            n_groups,
+            view.group_len(),
+            elem_stride,
+            |mx, sum| {
+                radius += mx as f64;
+                maxes.push(mx as f64);
+                sums.push(sum);
+            },
+        );
+    }
+    radius
+}
+
+/// Per-group `max |·|` written into `out[g]` (`out.len() == n_groups`) —
+/// the bi-level maxima gather, shard-friendly (the 2-level tree hands each
+/// worker its own disjoint chunk). Bit-identical across dispatches.
+pub fn group_maxes_into_slice(view: &GroupedView<'_>, out: &mut [f32]) {
+    group_maxes_into_slice_with(current(), view, out)
+}
+
+/// [`group_maxes_into_slice`] with an explicit dispatch.
+pub fn group_maxes_into_slice_with(d: Dispatch, view: &GroupedView<'_>, out: &mut [f32]) {
+    let n_groups = view.n_groups();
+    debug_assert_eq!(out.len(), n_groups);
+    let (group_stride, elem_stride) = view.strides();
+    if elem_stride == 1 {
+        for (g, slot) in out.iter_mut().enumerate() {
+            *slot = abs_max_with(d, view.group_slice(g).unwrap_or(&[]));
+        }
+    } else if d == Dispatch::Scalar {
+        let data = view.raw_data();
+        for (g, slot) in out.iter_mut().enumerate() {
+            *slot = abs_max_strided(data, g * group_stride, view.group_len(), elem_stride);
+        }
+    } else {
+        debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+        let mut it = out.iter_mut();
+        cols_max_fold(d, view.raw_data(), n_groups, view.group_len(), elem_stride, |mx| {
+            *it.next().expect("sink called n_cols times") = mx;
+        });
+    }
+}
+
+/// [`group_maxes_into_slice`] into a cleared/resized `Vec`.
+pub fn group_maxes_into(view: &GroupedView<'_>, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(view.n_groups(), 0.0);
+    group_maxes_into_slice(view, out);
+}
+
+/// `‖Y‖₁,∞` through the kernels: per-group maxima are bit-identical across
+/// dispatches, and the group-order f64 fold is sequential in all of them —
+/// so this norm is bit-stable under `L1INF_FORCE_SCALAR`.
+pub fn norm_l1inf(view: &GroupedView<'_>) -> f64 {
+    norm_l1inf_with(current(), view)
+}
+
+/// [`norm_l1inf`] with an explicit dispatch.
+pub fn norm_l1inf_with(d: Dispatch, view: &GroupedView<'_>) -> f64 {
+    let n_groups = view.n_groups();
+    let (group_stride, elem_stride) = view.strides();
+    let mut total = 0.0f64;
+    if elem_stride == 1 {
+        for g in 0..n_groups {
+            total += abs_max_with(d, view.group_slice(g).unwrap_or(&[])) as f64;
+        }
+    } else if d == Dispatch::Scalar {
+        let data = view.raw_data();
+        for g in 0..n_groups {
+            total += abs_max_strided(data, g * group_stride, view.group_len(), elem_stride) as f64;
+        }
+    } else {
+        debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+        cols_max_fold(d, view.raw_data(), n_groups, view.group_len(), elem_stride, |mx| {
+            total += mx as f64;
+        });
+    }
+    total
+}
+
+/// `‖Y‖∞,₁` (max over groups of `Σ|·|`) through the kernels.
+pub fn norm_linf1(view: &GroupedView<'_>) -> f64 {
+    norm_linf1_with(current(), view)
+}
+
+/// [`norm_linf1`] with an explicit dispatch.
+pub fn norm_linf1_with(d: Dispatch, view: &GroupedView<'_>) -> f64 {
+    let n_groups = view.n_groups();
+    let (group_stride, elem_stride) = view.strides();
+    let mut best = 0.0f64;
+    if elem_stride == 1 {
+        for g in 0..n_groups {
+            best = best.max(abs_sum_with(d, view.group_slice(g).unwrap_or(&[])));
+        }
+    } else if d == Dispatch::Scalar {
+        let data = view.raw_data();
+        for g in 0..n_groups {
+            let (_, sum) = abs_max_and_mass_strided_with(
+                Dispatch::Scalar,
+                data,
+                g * group_stride,
+                view.group_len(),
+                elem_stride,
+            );
+            best = best.max(sum);
+        }
+    } else {
+        debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+        cols_stats_fold(d, view.raw_data(), n_groups, view.group_len(), elem_stride, |_, sum| {
+            best = best.max(sum);
+        });
+    }
+    best
+}
+
+/// `‖Y‖₁,₂` (sum over groups of Euclidean norms) through the kernels
+/// (fused multiply-adds on the AVX2 path).
+pub fn norm_l12(view: &GroupedView<'_>) -> f64 {
+    norm_l12_with(current(), view)
+}
+
+/// [`norm_l12`] with an explicit dispatch.
+pub fn norm_l12_with(d: Dispatch, view: &GroupedView<'_>) -> f64 {
+    let n_groups = view.n_groups();
+    let (group_stride, elem_stride) = view.strides();
+    let mut total = 0.0f64;
+    if elem_stride == 1 {
+        for g in 0..n_groups {
+            total += sumsq_with(d, view.group_slice(g).unwrap_or(&[])).sqrt();
+        }
+    } else {
+        let data = view.raw_data();
+        for g in 0..n_groups {
+            total += sumsq_strided_with(d, data, g * group_stride, view.group_len(), elem_stride)
+                .sqrt();
+        }
+    }
+    total
+}
+
+/// Gather the whole view as contiguous `|·|` values, group-major, into
+/// `out` (cleared/resized first) — how the sort/fixed-point solvers
+/// normalize any layout. A pure permutation+abs, so every dispatch is
+/// bit-identical; column views take a blocked transpose instead of one
+/// cache line per element.
+pub fn abs_gather(view: &GroupedView<'_>, out: &mut Vec<f32>) {
+    abs_gather_with(current(), view, out)
+}
+
+/// [`abs_gather`] with an explicit dispatch.
+pub fn abs_gather_with(d: Dispatch, view: &GroupedView<'_>, out: &mut Vec<f32>) {
+    let (n_groups, group_len) = (view.n_groups(), view.group_len());
+    out.clear();
+    out.resize(n_groups * group_len, 0.0);
+    let (group_stride, elem_stride) = view.strides();
+    if elem_stride == 1 {
+        for g in 0..n_groups {
+            let src = view.group_slice(g).unwrap_or(&[]);
+            for (dst, &v) in out[g * group_len..(g + 1) * group_len].iter_mut().zip(src) {
+                *dst = v.abs();
+            }
+        }
+        return;
+    }
+    debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+    let data = view.raw_data();
+    if d == Dispatch::Scalar {
+        for g in 0..n_groups {
+            for (r, dst) in out[g * group_len..(g + 1) * group_len].iter_mut().enumerate() {
+                *dst = data[g + r * elem_stride].abs();
+            }
+        }
+        return;
+    }
+    // Blocked transpose: tiles of 32×32 keep both the strided reads and the
+    // contiguous writes inside the cache.
+    const TR: usize = 32;
+    let (n_cols, n_rows) = (n_groups, group_len);
+    let mut c0 = 0usize;
+    while c0 < n_cols {
+        let c1 = (c0 + TR).min(n_cols);
+        let mut r0 = 0usize;
+        while r0 < n_rows {
+            let r1 = (r0 + TR).min(n_rows);
+            for c in c0..c1 {
+                let dst = &mut out[c * n_rows..(c + 1) * n_rows];
+                for (r, slot) in dst[r0..r1].iter_mut().enumerate() {
+                    *slot = data[c + (r0 + r) * elem_stride].abs();
+                }
+            }
+            r0 = r1;
+        }
+        c0 = c1;
+    }
+}
+
+// ───────────────────────── clamp over views ─────────────────────────
+
+/// Clamp every group of `view` at its level: groups whose `levels[g] as
+/// f32 ≤ 0` are zero-filled, others get [`clamp_to_level`]. This is the
+/// water-level apply *and* the bi-level radius clamp (the f32 vs f64
+/// kill/compare variants of the seed are value-identical — no f32 lies
+/// strictly between a f64 level and its nearest-rounded f32). Column views
+/// take a blocked row-major traversal.
+pub fn clamp_groups(view: &mut GroupedViewMut<'_>, levels: &[f64]) {
+    clamp_groups_with(current(), view, levels)
+}
+
+/// [`clamp_groups`] with an explicit dispatch.
+pub fn clamp_groups_with(d: Dispatch, view: &mut GroupedViewMut<'_>, levels: &[f64]) {
+    debug_assert_eq!(levels.len(), view.n_groups());
+    let (_, elem_stride) = view.strides();
+    if elem_stride == 1 {
+        for (g, &mu) in levels.iter().enumerate() {
+            let lvl = mu as f32;
+            if let Some(grp) = view.group_slice_mut(g) {
+                if lvl <= 0.0 {
+                    grp.fill(0.0);
+                } else {
+                    clamp_to_level_with(d, grp, lvl);
+                }
+            }
+        }
+        return;
+    }
+    if d == Dispatch::Scalar {
+        for (g, &mu) in levels.iter().enumerate() {
+            let lvl = mu as f32;
+            if lvl <= 0.0 {
+                view.for_each_in_group_mut(g, |v| *v = 0.0);
+            } else {
+                view.for_each_in_group_mut(g, |v| {
+                    let a = v.abs();
+                    if a > lvl {
+                        *v = if *v >= 0.0 { lvl } else { -lvl };
+                    }
+                });
+            }
+        }
+        return;
+    }
+    let (n_cols, n_rows) = (view.n_groups(), view.group_len());
+    let (group_stride, row_stride) = view.strides();
+    debug_assert_eq!(group_stride, 1, "non-unit strides on both axes");
+    let data = view.raw_data_mut();
+    let mut c0 = 0usize;
+    while c0 < n_cols {
+        let tw = COL_TILE.min(n_cols - c0);
+        let mut lvl = [0.0f32; COL_TILE];
+        for (l, &m) in lvl.iter_mut().zip(&levels[c0..c0 + tw]) {
+            *l = m as f32;
+        }
+        for r in 0..n_rows {
+            let start = r * row_stride + c0;
+            clamp_row(d, &mut data[start..start + tw], &lvl[..tw]);
+        }
+        c0 += tw;
+    }
+}
+
+/// Per-row clamp against per-column levels (the blocked column clamp's
+/// inner kernel). Elementwise ⇒ bit-identical across dispatches.
+#[inline]
+fn clamp_row(d: Dispatch, row: &mut [f32], lvl: &[f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if d == Dispatch::Avx2 && have_avx2() {
+        unsafe { clamp_row_avx2(row, lvl) };
+        return;
+    }
+    let _ = d;
+    for (v, &l) in row.iter_mut().zip(lvl) {
+        if l <= 0.0 {
+            *v = 0.0;
+        } else {
+            let a = v.abs();
+            if a > l {
+                *v = if *v >= 0.0 { l } else { -l };
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn clamp_row_avx2(row: &mut [f32], lvl: &[f32]) {
+    use std::arch::x86_64::*;
+    let sign_mask = _mm256_set1_ps(-0.0);
+    let zero = _mm256_setzero_ps();
+    let n = row.len();
+    let mut c = 0usize;
+    while c + LANES <= n {
+        let v = _mm256_loadu_ps(row.as_ptr().add(c));
+        let l = _mm256_loadu_ps(lvl.as_ptr().add(c));
+        let a = _mm256_andnot_ps(sign_mask, v);
+        let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(a, l);
+        let clamped = _mm256_or_ps(l, _mm256_and_ps(v, sign_mask));
+        let kept = _mm256_blendv_ps(v, clamped, gt);
+        let kill = _mm256_cmp_ps::<_CMP_LE_OQ>(l, zero);
+        _mm256_storeu_ps(row.as_mut_ptr().add(c), _mm256_blendv_ps(kept, zero, kill));
+        c += LANES;
+    }
+    while c < n {
+        let l = lvl[c];
+        if l <= 0.0 {
+            row[c] = 0.0;
+        } else {
+            let a = row[c].abs();
+            if a > l {
+                row[c] = if row[c] >= 0.0 { l } else { -l };
+            }
+        }
+        c += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every dispatch actually runnable on this machine.
+    fn dispatches() -> Vec<Dispatch> {
+        let mut ds = vec![Dispatch::Scalar, Dispatch::Portable];
+        if Dispatch::detect() == Dispatch::Avx2 {
+            ds.push(Dispatch::Avx2);
+        }
+        ds
+    }
+
+    fn adversarial(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        for x in v.iter_mut() {
+            *x = match rng.below(8) {
+                0 => 0.0,
+                1 => 0.5, // ties
+                2 => -0.5,
+                3 => 1.0e-41, // subnormal
+                4 => -1.0e-41,
+                _ => (rng.f32() - 0.5) * 4.0,
+            };
+        }
+        v
+    }
+
+    #[test]
+    fn resolver_honors_force_scalar() {
+        assert_eq!(Dispatch::resolve(true), Dispatch::Scalar);
+        assert_ne!(Dispatch::resolve(false), Dispatch::Scalar);
+        assert!(matches!(kernel_name(), "avx2" | "portable" | "scalar"));
+    }
+
+    #[test]
+    fn thread_override_round_trips() {
+        assert_eq!(current(), Dispatch::active());
+        force_dispatch_for_thread(Some(Dispatch::Scalar));
+        assert_eq!(current(), Dispatch::Scalar);
+        force_dispatch_for_thread(None);
+        assert_eq!(current(), Dispatch::active());
+    }
+
+    #[test]
+    fn reductions_agree_across_dispatches_on_awkward_lengths() {
+        let mut rng = Rng::new(0xD15);
+        for len in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 31, 33, 100, 257] {
+            let s = adversarial(&mut rng, len);
+            let (mx0, sum0) = abs_max_and_mass_with(Dispatch::Scalar, &s);
+            let sq0 = sumsq_with(Dispatch::Scalar, &s);
+            for d in dispatches() {
+                let (mx, sum) = abs_max_and_mass_with(d, &s);
+                assert_eq!(mx.to_bits(), mx0.to_bits(), "{d:?} len={len} max");
+                assert!(
+                    (sum - sum0).abs() <= 1e-6 * sum0.abs().max(1.0),
+                    "{d:?} len={len}: sum {sum} vs {sum0}"
+                );
+                assert_eq!(abs_max_with(d, &s).to_bits(), mx0.to_bits());
+                // The dedicated sum kernel must be bit-identical to the sum
+                // half of the fused kernel (callers mix the two freely).
+                assert_eq!(abs_sum_with(d, &s).to_bits(), sum.to_bits(), "{d:?} len={len}");
+                let sq = sumsq_with(d, &s);
+                assert!((sq - sq0).abs() <= 1e-6 * sq0.abs().max(1.0), "{d:?} len={len} sumsq");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_paths_are_bit_identical_to_each_other() {
+        // Portable and AVX2 share the lane-8 contract exactly (sums too).
+        if Dispatch::detect() != Dispatch::Avx2 {
+            return;
+        }
+        let mut rng = Rng::new(0xD16);
+        for len in [5usize, 8, 23, 64, 129, 1000] {
+            let s = adversarial(&mut rng, len);
+            let (mp, sp) = abs_max_and_mass_with(Dispatch::Portable, &s);
+            let (ma, sa) = abs_max_and_mass_with(Dispatch::Avx2, &s);
+            assert_eq!(mp.to_bits(), ma.to_bits(), "len={len}");
+            assert_eq!(sp.to_bits(), sa.to_bits(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn clamp_is_bit_identical_across_dispatches() {
+        let mut rng = Rng::new(0xD17);
+        for len in [1usize, 7, 8, 9, 33, 100] {
+            let base = adversarial(&mut rng, len);
+            for level in [0.25f32, 0.5, 1.0e-41, 3.0] {
+                let mut want = base.clone();
+                clamp_to_level_with(Dispatch::Scalar, &mut want, level);
+                for d in dispatches() {
+                    let mut got = base.clone();
+                    clamp_to_level_with(d, &mut got, level);
+                    for (a, b) in want.iter().zip(&got) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{d:?} len={len} level={level}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_kernels_match_contiguous_transpose() {
+        let mut rng = Rng::new(0xD18);
+        let (rows, cols) = (37, 11); // rows not a lane multiple
+        let data = adversarial(&mut rng, rows * cols);
+        let mut transposed = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                transposed[c * rows + r] = data[r * cols + c];
+            }
+        }
+        for d in dispatches() {
+            for g in 0..cols {
+                let grp = &transposed[g * rows..(g + 1) * rows];
+                let (mc, sc) = abs_max_and_mass_with(d, grp);
+                let (ms, ss) = abs_max_and_mass_strided_with(d, &data, g, rows, cols);
+                assert_eq!(mc.to_bits(), ms.to_bits(), "{d:?} g={g}");
+                assert_eq!(sc.to_bits(), ss.to_bits(), "{d:?} g={g}");
+                let qc = sumsq_with(d, grp);
+                let qs = sumsq_strided_with(d, &data, g, rows, cols);
+                assert_eq!(qc.to_bits(), qs.to_bits(), "{d:?} g={g} sumsq");
+            }
+        }
+    }
+
+    #[test]
+    fn column_view_ops_match_transposed_contiguous_bitwise() {
+        let mut rng = Rng::new(0xD19);
+        for (rows, cols) in [(19usize, 11usize), (70, 130), (8, 64), (3, 200)] {
+            let data = adversarial(&mut rng, rows * cols);
+            let mut transposed = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    transposed[c * rows + r] = data[r * cols + c];
+                }
+            }
+            let cview = GroupedView::columns(&data, rows, cols);
+            let tview = GroupedView::new(&transposed, cols, rows);
+            for d in dispatches() {
+                let (mut mc, mut sc) = (Vec::new(), Vec::new());
+                let (mut mt, mut st) = (Vec::new(), Vec::new());
+                let rc = group_stats_into_with(d, &cview, &mut mc, &mut sc);
+                let rt = group_stats_into_with(d, &tview, &mut mt, &mut st);
+                assert_eq!(rc.to_bits(), rt.to_bits(), "{d:?} {rows}x{cols} radius");
+                assert_eq!(mc, mt, "{d:?} maxes");
+                assert_eq!(sc, st, "{d:?} sums");
+                assert_eq!(
+                    norm_l1inf_with(d, &cview).to_bits(),
+                    norm_l1inf_with(d, &tview).to_bits()
+                );
+                assert_eq!(
+                    norm_linf1_with(d, &cview).to_bits(),
+                    norm_linf1_with(d, &tview).to_bits()
+                );
+                assert_eq!(
+                    norm_l12_with(d, &cview).to_bits(),
+                    norm_l12_with(d, &tview).to_bits()
+                );
+                let (mut gc, mut gt) = (Vec::new(), Vec::new());
+                abs_gather_with(d, &cview, &mut gc);
+                abs_gather_with(d, &tview, &mut gt);
+                assert_eq!(gc, gt, "{d:?} gather");
+                let mut maxes = vec![0.0f32; cols];
+                group_maxes_into_slice_with(d, &cview, &mut maxes);
+                for (g, &mx) in maxes.iter().enumerate() {
+                    assert_eq!(mx.to_bits(), abs_max_with(d, tview.group_slice(g).unwrap()).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clamp_groups_column_view_matches_contiguous() {
+        let mut rng = Rng::new(0xD1A);
+        let (rows, cols) = (23, 40);
+        let data = adversarial(&mut rng, rows * cols);
+        let levels: Vec<f64> =
+            (0..cols).map(|c| if c % 5 == 0 { 0.0 } else { 0.05 + 0.02 * c as f64 }).collect();
+        let mut transposed = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                transposed[c * rows + r] = data[r * cols + c];
+            }
+        }
+        for d in dispatches() {
+            let mut tcopy = transposed.clone();
+            clamp_groups_with(d, &mut GroupedViewMut::new(&mut tcopy, cols, rows), &levels);
+            let mut ccopy = data.clone();
+            clamp_groups_with(d, &mut GroupedViewMut::columns(&mut ccopy, rows, cols), &levels);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(
+                        ccopy[r * cols + c].to_bits(),
+                        tcopy[c * rows + r].to_bits(),
+                        "{d:?} r={r} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_inputs_are_safe() {
+        for d in dispatches() {
+            assert_eq!(abs_max_with(d, &[]), 0.0);
+            let (mx, sum) = abs_max_and_mass_with(d, &[]);
+            assert_eq!((mx, sum), (0.0, 0.0));
+            assert_eq!(sumsq_with(d, &[]), 0.0);
+            let zeros = vec![0.0f32; 17];
+            let (mx, sum) = abs_max_and_mass_with(d, &zeros);
+            assert_eq!((mx, sum), (0.0, 0.0));
+        }
+    }
+}

@@ -22,6 +22,14 @@
 //! copy back out. Solvers iterate groups through the view; element order
 //! within a group is index order in both layouts, so a column view and an
 //! explicitly transposed contiguous copy produce bit-identical θ.
+//!
+//! The per-group reductions below route through the runtime-dispatched
+//! kernels of [`crate::projection::dense`] (AVX2 / portable-lane / scalar).
+//! The dense layer's lane-8 accumulation contract assigns element `j` of a
+//! group by `j mod 8` regardless of layout, which is what keeps the
+//! cross-layout bit-identity promise intact under vectorization.
+
+use crate::projection::dense;
 
 /// Read-only strided view of a grouped matrix.
 #[derive(Debug, Clone, Copy)]
@@ -143,13 +151,26 @@ impl<'a> GroupedView<'a> {
         }
     }
 
-    /// Per-group `max |·|` with the exact f32 max fold of the seed's
-    /// `norm_l1inf` — the level-2→1 reduction of the bi-level operator and
-    /// the per-group term of [`crate::projection::norm_l1inf`].
+    /// Buffer underlying the view (kernel-layer access).
+    pub(crate) fn raw_data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// `(group_stride, elem_stride)` (kernel-layer access).
+    pub(crate) fn strides(&self) -> (usize, usize) {
+        (self.group_stride, self.elem_stride)
+    }
+
+    /// Per-group `max |·|` — the level-2→1 reduction of the bi-level
+    /// operator and the per-group term of [`crate::projection::norm_l1inf`].
+    /// Routed through [`dense`]; bit-identical across every dispatch (max
+    /// folds are order-insensitive for non-NaN data).
     pub fn group_abs_max(&self, g: usize) -> f32 {
-        let mut mx = 0.0f32;
-        self.for_each_in_group(g, |v| mx = mx.max(v.abs()));
-        mx
+        if let Some(s) = self.group_slice(g) {
+            dense::abs_max(s)
+        } else {
+            dense::abs_max_strided(self.data, g * self.group_stride, self.group_len, self.elem_stride)
+        }
     }
 
     /// True when every element of group `g` is exactly zero
@@ -167,25 +188,32 @@ impl<'a> GroupedView<'a> {
         true
     }
 
-    /// Fused per-group scan: `(max |·|, Σ|·|)` with the exact accumulation
-    /// order of the seed's `norm_l1inf` (f32 max fold) and group-sum seeding
-    /// (sequential f64 adds) — callers rely on this for bit-compatibility.
+    /// Fused per-group scan: `(max |·|, Σ|·|)` through the dispatched
+    /// kernel layer. The accumulation order is the dense layer's lane-8
+    /// contract (the seed's strictly sequential order under
+    /// `L1INF_FORCE_SCALAR=1`); whatever the dispatch, it depends only on
+    /// the element index within the group, so callers comparing layouts —
+    /// column view vs transposed contiguous copy — still get bit-identical
+    /// results, and caller-supplied seed sums must come from this method
+    /// (or [`GroupedView::group_abs_sum`]) to stay bit-compatible.
     pub fn group_abs_max_sum(&self, g: usize) -> (f64, f64) {
-        let mut mx = 0.0f32;
-        let mut sum = 0.0f64;
-        self.for_each_in_group(g, |v| {
-            let a = v.abs();
-            mx = mx.max(a);
-            sum += a as f64;
-        });
+        let (mx, sum) = if let Some(s) = self.group_slice(g) {
+            dense::abs_max_and_mass(s)
+        } else {
+            dense::abs_max_and_mass_strided(
+                self.data,
+                g * self.group_stride,
+                self.group_len,
+                self.elem_stride,
+            )
+        };
         (mx as f64, sum)
     }
 
-    /// Per-group ℓ₁ mass `Σ|·|` (same accumulation order as above).
+    /// Per-group ℓ₁ mass `Σ|·|` (same accumulation contract as
+    /// [`GroupedView::group_abs_max_sum`]).
     pub fn group_abs_sum(&self, g: usize) -> f64 {
-        let mut sum = 0.0f64;
-        self.for_each_in_group(g, |v| sum += v.abs() as f64);
-        sum
+        self.group_abs_max_sum(g).1
     }
 
     /// Gather `|group g|` into `out` (cleared first).
@@ -197,13 +225,10 @@ impl<'a> GroupedView<'a> {
 
     /// Gather the whole matrix as contiguous `|·|` values, group-major
     /// (cleared first). This is how the sort/fixed-point solvers normalize
-    /// any layout into their scratch buffer.
+    /// any layout into their scratch buffer. Column views take the dense
+    /// layer's blocked transpose instead of one cache line per element.
     pub fn gather_abs(&self, out: &mut Vec<f32>) {
-        out.clear();
-        out.reserve(self.len());
-        for g in 0..self.n_groups {
-            self.for_each_in_group(g, |v| out.push(v.abs()));
-        }
+        dense::abs_gather(self, out);
     }
 }
 
@@ -268,6 +293,16 @@ impl<'a> GroupedViewMut<'a> {
 
     pub fn is_contiguous(&self) -> bool {
         self.elem_stride == 1 && self.group_stride == self.group_len
+    }
+
+    /// Buffer underlying the view (kernel-layer access).
+    pub(crate) fn raw_data_mut(&mut self) -> &mut [f32] {
+        self.data
+    }
+
+    /// `(group_stride, elem_stride)` (kernel-layer access).
+    pub(crate) fn strides(&self) -> (usize, usize) {
+        (self.group_stride, self.elem_stride)
     }
 
     /// Group `g` as a mutable slice, when the element stride permits one.

@@ -57,11 +57,12 @@ impl Solver for BejarSolver {
     ) -> SolveStats {
         let (n_groups, group_len) = (view.n_groups(), view.group_len());
         view.gather_abs(&mut self.ws.abs);
-        // Elimination bound from the group-max vector (reused scratch).
+        // Elimination bound from the group-max vector (reused scratch,
+        // dispatched max kernel).
         self.maxes32.clear();
         for g in 0..n_groups {
             let grp = &self.ws.abs[g * group_len..(g + 1) * group_len];
-            self.maxes32.push(grp.iter().fold(0.0f32, |a, &b| a.max(b)));
+            self.maxes32.push(crate::projection::dense::abs_max(grp));
         }
         let tau = simplex::threshold_condat(&self.maxes32, c).tau;
         // Keep only groups that can survive at θ ≥ τ.
@@ -87,7 +88,7 @@ impl Solver for BejarSolver {
 /// Lower bound τ ≤ θ* from the group-max vector (and the max vector itself).
 pub(crate) fn theta_lower_bound(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> f64 {
     let maxes: Vec<f32> = (0..n_groups)
-        .map(|g| abs[g * group_len..(g + 1) * group_len].iter().fold(0.0f32, |a, &b| a.max(b)))
+        .map(|g| crate::projection::dense::abs_max(&abs[g * group_len..(g + 1) * group_len]))
         .collect();
     // Σ max(0, M_g − τ) = C  ⇒  τ = simplex threshold at radius C.
     simplex::threshold_condat(&maxes, c).tau

@@ -85,9 +85,11 @@ pub fn solve_hinted(
     c: f64,
     hint: Option<f64>,
 ) -> SolveStats {
-    // Bracket: Φ(0) = Σ max > C; Φ(max_g S_g) = 0 < C.
+    // Bracket: Φ(0) = Σ max > C; Φ(max_g S_g) = 0 < C. The per-group mass
+    // runs on the dispatched dense kernel — the same accumulation the
+    // workspace solver's seeded path uses, keeping the two bit-identical.
     let hi = (0..n_groups)
-        .map(|g| abs[g * group_len..(g + 1) * group_len].iter().map(|&v| v as f64).sum::<f64>())
+        .map(|g| crate::projection::dense::abs_sum(&abs[g * group_len..(g + 1) * group_len]))
         .fold(0.0f64, f64::max);
     solve_bracketed(abs, n_groups, group_len, c, hint, hi)
 }

@@ -566,9 +566,10 @@ mod tests {
         for v in data.iter_mut() {
             *v = (rng.f32() - 0.5) * 4.0;
         }
-        let sums: Vec<f64> = (0..n_groups)
-            .map(|g| data[g * len..(g + 1) * len].iter().map(|&v| v.abs() as f64).sum())
-            .collect();
+        // Caller-supplied masses must use the canonical kernel accumulation
+        // (`group_abs_sum`) to stay bit-compatible with the internal scan.
+        let view = GroupedView::new(&data, n_groups, len);
+        let sums: Vec<f64> = (0..n_groups).map(|g| view.group_abs_sum(g)).collect();
         let (a, mus_a) = solve_signed_full(&data, n_groups, len, 2.0, None, None);
         let (b, mus_b) = solve_signed_full(&data, n_groups, len, 2.0, Some(&sums), None);
         assert_eq!(a.theta.to_bits(), b.theta.to_bits(), "same summation order ⇒ same θ");

@@ -243,40 +243,26 @@ pub fn project_l1inf_with_hint(
 }
 
 /// Clip each signed group at its water level: `X = sign(Y)·min(|Y|, μ_g)`.
+/// Runs on the dispatched [`crate::projection::dense`] clamp kernel
+/// (elementwise select — bit-identical across every dispatch).
 pub fn apply_water_levels(data: &mut [f32], n_groups: usize, group_len: usize, mus: &[f64]) {
     debug_assert_eq!(mus.len(), n_groups);
-    for g in 0..n_groups {
-        let mu = mus[g] as f32;
+    for (g, &mu) in mus.iter().enumerate() {
+        let mu = mu as f32;
         let grp = &mut data[g * group_len..(g + 1) * group_len];
         if mu <= 0.0 {
             grp.fill(0.0);
         } else {
-            for v in grp.iter_mut() {
-                let a = v.abs();
-                if a > mu {
-                    *v = if *v >= 0.0 { mu } else { -mu };
-                }
-            }
+            super::dense::clamp_to_level(grp, mu);
         }
     }
 }
 
-/// [`apply_water_levels`] through a (possibly strided) mutable view.
+/// [`apply_water_levels`] through a (possibly strided) mutable view —
+/// column views take the dense layer's blocked row-major traversal instead
+/// of a per-group strided walk.
 pub fn apply_water_levels_view(view: &mut GroupedViewMut<'_>, mus: &[f64]) {
-    debug_assert_eq!(mus.len(), view.n_groups());
-    for g in 0..view.n_groups() {
-        let mu = mus[g] as f32;
-        if mu <= 0.0 {
-            view.for_each_in_group_mut(g, |v| *v = 0.0);
-        } else {
-            view.for_each_in_group_mut(g, |v| {
-                let a = v.abs();
-                if a > mu {
-                    *v = if *v >= 0.0 { mu } else { -mu };
-                }
-            });
-        }
-    }
+    super::dense::clamp_groups(view, mus);
 }
 
 #[cfg(test)]

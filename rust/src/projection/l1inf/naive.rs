@@ -57,7 +57,7 @@ impl Solver for NaiveSolver {
         let mut sum_max = 0.0f64;
         for g in 0..n_groups {
             let grp = &self.ws.abs[g * group_len..(g + 1) * group_len];
-            let mx = grp.iter().fold(0.0f32, |a, &b| a.max(b));
+            let mx = crate::projection::dense::abs_max(grp);
             if mx > 0.0 {
                 self.alive.push(g as u32);
                 sum_max += mx as f64;
@@ -129,7 +129,7 @@ pub fn solve(abs: &[f32], n_groups: usize, group_len: usize, c: f64) -> SolveSta
     let mut sum_max = 0.0f64;
     for g in 0..n_groups {
         let grp = &abs[g * group_len..(g + 1) * group_len];
-        let mx = grp.iter().fold(0.0f32, |a, &b| a.max(b));
+        let mx = crate::projection::dense::abs_max(grp);
         if mx > 0.0 {
             alive.push(g as u32);
             sum_max += mx as f64;

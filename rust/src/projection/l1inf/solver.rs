@@ -98,9 +98,9 @@ pub trait Solver: Send {
     /// callers — ablation benches, custom apply pipelines — skip that
     /// O(nm) pass entirely). Signs are ignored (`|·|` is taken on the
     /// fly); `group_sums`, when given, must hold the per-group ℓ₁ masses
-    /// accumulated in element order as f64 (exactly what
-    /// [`GroupedView::group_abs_sum`] produces) — the solver then skips its
-    /// own seeding scan.
+    /// accumulated with the dense kernel layer's canonical order (exactly
+    /// what [`GroupedView::group_abs_sum`] produces) — the solver then
+    /// skips its own seeding scan and stays bit-identical to it.
     ///
     /// Post-condition used by the parallel projector: the sort/fixed-point
     /// solvers leave the contiguous `|Y|` gather in
@@ -205,20 +205,14 @@ pub fn project_with(
     assert!(c >= 0.0, "radius must be nonnegative");
     let n_groups = view.n_groups();
 
-    // 1. Fused pre-pass: per-group (max |·|, Σ|·|) in one scan.
+    // 1. Fused pre-pass: per-group (max |·|, Σ|·|) in one scan through the
+    //    dispatched dense kernels — SIMD on contiguous groups, the blocked
+    //    tile traversal on column views (no more one-cache-line-per-element
+    //    strided walks on the `l1inf_cols` path).
     let radius_before = {
         let ro = view.as_view();
         let ws = solver.scratch_mut();
-        ws.maxes.clear();
-        ws.sums.clear();
-        let mut rb = 0.0f64;
-        for g in 0..n_groups {
-            let (mx, sum) = ro.group_abs_max_sum(g);
-            rb += mx;
-            ws.maxes.push(mx);
-            ws.sums.push(sum);
-        }
-        rb
+        crate::projection::dense::group_stats_into(&ro, &mut ws.maxes, &mut ws.sums)
     };
 
     // 2a. Already inside the ball: the projection is the identity.

@@ -9,6 +9,10 @@
 //! kernels serve both without transposition.
 //!
 //! Submodules:
+//! - [`dense`]    — runtime-dispatched SIMD kernel layer (AVX2/FMA,
+//!   8-lane portable, `L1INF_FORCE_SCALAR` scalar) under every O(nm)
+//!   dense pass: fused abs-max/mass pre-pass, water-level/radius clamps,
+//!   maxima gathers, grouped norms, blocked column traversal.
 //! - [`grouped`]  — [`GroupedView`]/[`GroupedViewMut`]: the strided shape
 //!   layer every solver consumes (contiguous rows or matrix columns, no
 //!   transpose copies).
@@ -34,6 +38,7 @@
 //! the seed's raw `(data, n_groups, group_len)` triple.
 
 pub mod bilevel;
+pub mod dense;
 pub mod grouped;
 pub mod kkt;
 pub mod l1;
@@ -45,39 +50,31 @@ pub mod simplex;
 
 pub use grouped::{GroupedView, GroupedViewMut};
 
-/// ‖Y‖₁,∞ of a grouped matrix: sum over groups of the max **absolute** value.
+/// ‖Y‖₁,∞ of a grouped matrix: sum over groups of the max **absolute**
+/// value. Runs on the dispatched [`dense`] kernels; per-group maxima are
+/// bit-identical across every dispatch, so this norm is bit-stable under
+/// `L1INF_FORCE_SCALAR`.
 pub fn norm_l1inf(view: GroupedView<'_>) -> f64 {
-    let mut total = 0.0f64;
-    for g in 0..view.n_groups() {
-        total += view.group_abs_max(g) as f64;
-    }
-    total
+    dense::norm_l1inf(&view)
 }
 
 /// ‖Y‖∞,₁ of a grouped matrix: max over groups of the sum of absolute values
-/// (the dual norm of ℓ₁,∞; Eq. 14 of the paper).
+/// (the dual norm of ℓ₁,∞; Eq. 14 of the paper). Dispatched through
+/// [`dense`] (the lane split reorders the f64 adds — ≤1e-6-class drift vs
+/// the scalar path, bit-identical across layouts).
 pub fn norm_linf1(view: GroupedView<'_>) -> f64 {
-    let mut best = 0.0f64;
-    for g in 0..view.n_groups() {
-        best = best.max(view.group_abs_sum(g));
-    }
-    best
+    dense::norm_linf1(&view)
 }
 
-/// ‖Y‖₁ (entrywise).
+/// ‖Y‖₁ (entrywise), dispatched through [`dense`].
 pub fn norm_l1(data: &[f32]) -> f64 {
-    data.iter().map(|&x| x.abs() as f64).sum()
+    dense::abs_sum(data)
 }
 
-/// ‖Y‖₁,₂: sum over groups of the Euclidean norms.
+/// ‖Y‖₁,₂: sum over groups of the Euclidean norms. Dispatched through
+/// [`dense`] (fused multiply-adds on the AVX2 path).
 pub fn norm_l12(view: GroupedView<'_>) -> f64 {
-    let mut total = 0.0f64;
-    for g in 0..view.n_groups() {
-        let mut sq = 0.0f64;
-        view.for_each_in_group(g, |v| sq += (v as f64) * (v as f64));
-        total += sq.sqrt();
-    }
-    total
+    dense::norm_l12(&view)
 }
 
 /// Fraction of groups that are entirely zero ("column sparsity" of the

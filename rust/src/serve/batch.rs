@@ -197,16 +197,14 @@ impl BatchProjector {
                         std::mem::take(&mut sums_rem).split_at_mut(hi - lo);
                     sums_rem = rest;
                     s.spawn(move || {
+                        // Per-group fused scan on the dispatched dense
+                        // kernel — the exact accumulation `project_with`'s
+                        // serial pre-pass uses, so the sharded path stays
+                        // bit-identical to it.
                         let src = &data_ro[lo * group_len..hi * group_len];
                         for gi in 0..(hi - lo) {
                             let grp = &src[gi * group_len..(gi + 1) * group_len];
-                            let mut mx = 0.0f32;
-                            let mut sum = 0.0f64;
-                            for &v in grp {
-                                let a = v.abs();
-                                mx = mx.max(a);
-                                sum += a as f64;
-                            }
+                            let (mx, sum) = crate::projection::dense::abs_max_and_mass(grp);
                             max_chunk[gi] = mx as f64;
                             sum_chunk[gi] = sum;
                         }

@@ -85,8 +85,10 @@ fn git_rev() -> String {
 
 /// The `meta` object every `BENCH_*.json` report embeds so the bench
 /// trajectory stays comparable across PRs: git revision, logical thread
-/// count, whether `L1INF_BENCH_FAST` shrank the measurement, and the
-/// matrix shapes measured (as `[n, m]` pairs).
+/// count, whether `L1INF_BENCH_FAST` shrank the measurement, the active
+/// kernel dispatch (`"avx2" | "portable" | "scalar"` — so every number is
+/// attributable to the code path that produced it), and the matrix shapes
+/// measured (as `[n, m]` pairs).
 pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
@@ -94,6 +96,10 @@ pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
     m.insert("git_rev".to_string(), Json::Str(git_rev()));
     m.insert("threads".to_string(), Json::Num(threads as f64));
     m.insert("bench_fast".to_string(), Json::Bool(fast));
+    m.insert(
+        "kernel".to_string(),
+        Json::Str(crate::projection::dense::kernel_name().to_string()),
+    );
     m.insert(
         "shapes".to_string(),
         Json::Arr(
@@ -104,6 +110,21 @@ pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
         ),
     );
     Json::Obj(m)
+}
+
+/// Test helper shared by every bench report test: assert that a
+/// [`bench_meta`] object stamps a known kernel dispatch. Centralized so a
+/// new dispatch name only has to be added to
+/// [`crate::projection::dense::Dispatch`], not to each test.
+pub fn assert_kernel_stamp(meta: &Json) {
+    let kernel = meta
+        .get("kernel")
+        .and_then(Json::as_str)
+        .expect("report meta must record the kernel dispatch that produced it");
+    assert!(
+        crate::projection::dense::Dispatch::ALL.iter().any(|d| d.name() == kernel),
+        "unknown kernel dispatch stamp '{kernel}'"
+    );
 }
 
 /// Time `f` (which must regenerate its own input each call if it mutates).
@@ -176,6 +197,7 @@ mod tests {
         assert!(meta.get("git_rev").unwrap().as_str().is_some());
         assert!(meta.get("threads").unwrap().as_f64().unwrap() >= 1.0);
         assert!(matches!(meta.get("bench_fast"), Some(Json::Bool(_))));
+        assert_kernel_stamp(&meta);
         let shapes = meta.get("shapes").unwrap().as_arr().unwrap();
         assert_eq!(shapes.len(), 2);
         assert_eq!(shapes[0].as_usize_vec(), Some(vec![1000, 4000]));

@@ -1,0 +1,246 @@
+//! Scalar-vs-SIMD compatibility of the dense kernel layer, end to end:
+//!
+//! 1. **Dispatch contract** — `L1INF_FORCE_SCALAR` resolves to the scalar
+//!    path, everything else to the detected best path.
+//! 2. **Projection-level agreement** — every exact solver
+//!    (`Algorithm::ALL`) and the bi-level operator, run on adversarial
+//!    inputs (group lengths off the 8-lane width, cross-group ties,
+//!    denormals, whole-zero groups, signed zeros), must agree between the
+//!    forced-scalar and dispatched kernel paths to ≤1e-6 — and bit-exactly
+//!    wherever the kernels only differ by the documented f64 accumulator
+//!    tree (per-group maxima, clamps, hence the whole bi-level operator
+//!    and `norm_l1inf`).
+//! 3. **Cross-layout bit-identity per dispatch** — a strided column view
+//!    and an explicitly transposed contiguous copy produce bit-identical
+//!    projections under *each* dispatch, because the lane-8 contract
+//!    assigns accumulator lanes by element index, not by memory layout.
+
+use l1inf::projection::bilevel::project_bilevel;
+use l1inf::projection::dense::{self, Dispatch};
+use l1inf::projection::grouped::{GroupedView, GroupedViewMut};
+use l1inf::projection::l1inf::{new_solver, project_l1inf, project_with, Algorithm};
+use l1inf::projection::{norm_l1inf, norm_l12, norm_linf1};
+use l1inf::util::rng::Rng;
+
+/// Run `f` with the calling thread pinned to `d`, restoring the default
+/// dispatch afterwards even on panic.
+fn with_dispatch<T>(d: Dispatch, f: impl FnOnce() -> T) -> T {
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            dense::force_dispatch_for_thread(None);
+        }
+    }
+    dense::force_dispatch_for_thread(Some(d));
+    let _r = Reset;
+    f()
+}
+
+/// Every dispatch actually runnable on this machine.
+fn runnable_dispatches() -> Vec<Dispatch> {
+    let mut ds = vec![Dispatch::Scalar, Dispatch::Portable];
+    if Dispatch::detect() == Dispatch::Avx2 {
+        ds.push(Dispatch::Avx2);
+    }
+    ds
+}
+
+/// Lane-hostile shapes: group lengths straddling the 8-lane width,
+/// single-element groups, single-group matrices.
+const SHAPES: [(usize, usize); 6] = [(5, 9), (13, 1), (1, 17), (40, 7), (8, 33), (20, 16)];
+
+/// Adversarial signed matrix: whole-zero groups, in-group zeros, heavy
+/// cross-group ties at ±0.5, f32 denormals, and ordinary signed noise.
+fn adversarial_matrix(rng: &mut Rng, g: usize, l: usize) -> Vec<f32> {
+    let mut data = vec![0.0f32; g * l];
+    for grp in 0..g {
+        if rng.chance(0.15) {
+            continue; // whole-zero group
+        }
+        for i in 0..l {
+            data[grp * l + i] = match rng.below(10) {
+                0 => 0.0,
+                1 => 0.5,
+                2 => -0.5,
+                3 => 1.0e-41,  // subnormal
+                4 => -2.5e-42, // subnormal
+                _ => (rng.f32() - 0.5) * 3.0,
+            };
+        }
+    }
+    data
+}
+
+#[test]
+fn force_scalar_env_contract() {
+    assert_eq!(Dispatch::resolve(true), Dispatch::Scalar);
+    let best = Dispatch::resolve(false);
+    assert_ne!(best, Dispatch::Scalar);
+    assert_eq!(best, Dispatch::detect());
+    // The process-wide selection is one of the three named paths, and the
+    // bench-meta stamp uses exactly its name.
+    assert!(matches!(dense::kernel_name(), "avx2" | "portable" | "scalar"));
+    assert_eq!(dense::kernel_name(), Dispatch::active().name());
+}
+
+#[test]
+fn every_exact_solver_agrees_between_scalar_and_dispatched_paths() {
+    let mut rng = Rng::new(0xFC01);
+    for &(g, l) in &SHAPES {
+        let data = adversarial_matrix(&mut rng, g, l);
+        let norm = with_dispatch(Dispatch::Scalar, || norm_l1inf(GroupedView::new(&data, g, l)));
+        if norm <= 1e-9 {
+            continue;
+        }
+        for c in [0.2 * norm, 0.7 * norm] {
+            for algo in Algorithm::ALL {
+                let mut scalar = data.clone();
+                let si = with_dispatch(Dispatch::Scalar, || {
+                    project_l1inf(&mut scalar, g, l, c, algo)
+                });
+                let mut dispatched = data.clone();
+                let di = project_l1inf(&mut dispatched, g, l, c, algo);
+                let scale = si.theta.abs().max(1.0);
+                assert!(
+                    (si.theta - di.theta).abs() <= 1e-6 * scale,
+                    "{} {g}x{l} c={c}: θ scalar {} vs dispatched {}",
+                    algo.name(),
+                    si.theta,
+                    di.theta
+                );
+                for (i, (a, b)) in scalar.iter().zip(&dispatched).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-6,
+                        "{} {g}x{l} c={c}: element {i}: {a} vs {b}",
+                        algo.name()
+                    );
+                }
+                assert_eq!(si.zero_groups, di.zero_groups, "{} {g}x{l} c={c}", algo.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn bilevel_operator_is_bit_exact_between_scalar_and_dispatched_paths() {
+    // The bi-level operator only consumes per-group maxima (bit-identical
+    // across dispatches — max folds are order-insensitive) and the clamp
+    // kernel (elementwise) — so scalar vs dispatched is exact, not ≤1e-6.
+    let mut rng = Rng::new(0xFC02);
+    for &(g, l) in &SHAPES {
+        let data = adversarial_matrix(&mut rng, g, l);
+        let norm = with_dispatch(Dispatch::Scalar, || norm_l1inf(GroupedView::new(&data, g, l)));
+        if norm <= 1e-9 {
+            continue;
+        }
+        for c in [0.2 * norm, 0.7 * norm] {
+            let mut scalar = data.clone();
+            let si = with_dispatch(Dispatch::Scalar, || project_bilevel(&mut scalar, g, l, c));
+            let mut dispatched = data.clone();
+            let di = project_bilevel(&mut dispatched, g, l, c);
+            assert_eq!(si.tau.to_bits(), di.tau.to_bits(), "{g}x{l} c={c}");
+            assert_eq!(scalar, dispatched, "{g}x{l} c={c}");
+            assert_eq!(si.zero_groups, di.zero_groups);
+            assert_eq!(si.radius_after.to_bits(), di.radius_after.to_bits());
+        }
+    }
+}
+
+#[test]
+fn column_view_matches_transpose_bitwise_under_every_dispatch() {
+    let mut rng = Rng::new(0xFC03);
+    let (rows, cols) = (19, 11); // rows off the lane width
+    let data = adversarial_matrix(&mut rng, rows, cols);
+    let mut transposed_base = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            transposed_base[c * rows + r] = data[r * cols + c];
+        }
+    }
+    for d in runnable_dispatches() {
+        for algo in [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bisection] {
+            for c in [0.5, 2.0] {
+                with_dispatch(d, || {
+                    let mut transposed = transposed_base.clone();
+                    let ti = project_l1inf(&mut transposed, cols, rows, c, algo);
+                    let mut strided = data.clone();
+                    let mut solver = new_solver(algo);
+                    let si = project_with(
+                        &mut *solver,
+                        &mut GroupedViewMut::columns(&mut strided, rows, cols),
+                        c,
+                        None,
+                    );
+                    assert_eq!(
+                        ti.theta.to_bits(),
+                        si.theta.to_bits(),
+                        "{d:?} {} c={c}",
+                        algo.name()
+                    );
+                    for r in 0..rows {
+                        for cc in 0..cols {
+                            assert_eq!(
+                                strided[r * cols + cc].to_bits(),
+                                transposed[cc * rows + r].to_bits(),
+                                "{d:?} {} c={c} ({r},{cc})",
+                                algo.name()
+                            );
+                        }
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_norms_agree_between_scalar_and_dispatched_paths() {
+    let mut rng = Rng::new(0xFC04);
+    for &(g, l) in &SHAPES {
+        let data = adversarial_matrix(&mut rng, g, l);
+        let view = GroupedView::new(&data, g, l);
+        let (n1s, nls, n2s) = with_dispatch(Dispatch::Scalar, || {
+            (norm_l1inf(view), norm_linf1(view), norm_l12(view))
+        });
+        let (n1d, nld, n2d) = (norm_l1inf(view), norm_linf1(view), norm_l12(view));
+        // ℓ₁,∞ is max-based ⇒ bit-exact across dispatches.
+        assert_eq!(n1s.to_bits(), n1d.to_bits(), "{g}x{l} norm_l1inf");
+        assert!((nls - nld).abs() <= 1e-6 * nls.max(1.0), "{g}x{l}: {nls} vs {nld}");
+        assert!((n2s - n2d).abs() <= 1e-6 * n2s.max(1.0), "{g}x{l}: {n2s} vs {n2d}");
+    }
+}
+
+#[test]
+fn denormal_heavy_groups_stay_finite_and_agree() {
+    // A matrix dominated by subnormals with one ordinary group: the lane
+    // split must neither flush, reorder into NaN, nor disagree with the
+    // sequential scalar path beyond the documented bound.
+    let (g, l) = (6usize, 11usize);
+    let mut data = vec![1.0e-41f32; g * l];
+    for i in 0..l {
+        data[i] = if i % 2 == 0 { 0.75 } else { -0.75 }; // group 0: ordinary + ties
+    }
+    data[2 * l] = -3.0e-43; // signed subnormal
+    data[3 * l..4 * l].fill(0.0); // whole-zero group
+    let norm = with_dispatch(Dispatch::Scalar, || norm_l1inf(GroupedView::new(&data, g, l)));
+    assert!(norm.is_finite() && norm > 0.0);
+    for algo in Algorithm::ALL {
+        let c = 0.4 * norm;
+        let mut scalar = data.clone();
+        let si = with_dispatch(Dispatch::Scalar, || project_l1inf(&mut scalar, g, l, c, algo));
+        let mut dispatched = data.clone();
+        let di = project_l1inf(&mut dispatched, g, l, c, algo);
+        assert!(si.theta.is_finite() && di.theta.is_finite(), "{}", algo.name());
+        assert!(
+            (si.theta - di.theta).abs() <= 1e-6 * si.theta.abs().max(1.0),
+            "{}: {} vs {}",
+            algo.name(),
+            si.theta,
+            di.theta
+        );
+        for (a, b) in scalar.iter().zip(&dispatched) {
+            assert!(a.is_finite() && b.is_finite());
+            assert!((a - b).abs() <= 1e-6, "{}", algo.name());
+        }
+    }
+}
