@@ -14,7 +14,7 @@ use l1inf::coordinator::{dataset_for, sweep::split_for};
 use l1inf::projection::l1inf::Algorithm;
 use l1inf::runtime::Engine;
 use l1inf::sae::metrics::selection_quality;
-use l1inf::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, Trainer};
+use l1inf::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, Trainer, WeightSource};
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::var("QUICKSTART_MODEL").unwrap_or_else(|_| "synth_small".into());
@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         lr: 1e-3,
         lambda: 1.0,
         projection: ProjectionMode::L1Inf { c: 0.1 },
+        weights: WeightSource::Uniform,
         algo: Algorithm::InverseOrder,
         exec: ExecMode::Epoch,
         seed: 0,

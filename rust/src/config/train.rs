@@ -3,7 +3,7 @@
 
 use super::Config;
 
-use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig};
+use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, WeightSource};
 use anyhow::{bail, Result};
 
 /// Build a [`TrainConfig`] from the `[train]` section (all keys optional,
@@ -26,7 +26,30 @@ pub fn train_config(cfg: &Config) -> Result<TrainConfig> {
     tc.algo = cfg.str_or("train.algo", "inv_order").parse().map_err(anyhow::Error::msg)?;
     let radius = cfg.f64_or("train.radius", 1.0);
     tc.projection = projection_mode(&cfg.str_or("train.projection", "l1inf"), radius)?;
+    tc.weights = weight_source(cfg)?;
     Ok(tc)
+}
+
+/// Parse the weighted-mode price source: an explicit `train.weights =
+/// [...]` list wins; otherwise `train.weight_source = "uniform" |
+/// "variance"` (default uniform). Explicit prices are validated for
+/// positivity here (length is validated against the projected matrix at
+/// the first projection — the config layer does not know the shape).
+pub fn weight_source(cfg: &Config) -> Result<WeightSource> {
+    let explicit = cfg.f64_vec_or("train.weights", &[]);
+    if !explicit.is_empty() {
+        for (i, &w) in explicit.iter().enumerate() {
+            if !w.is_finite() || w <= 0.0 {
+                bail!("train.weights[{i}] = {w} is not a positive finite price");
+            }
+        }
+        return Ok(WeightSource::Explicit(explicit.into_iter().map(|w| w as f32).collect()));
+    }
+    match cfg.str_or("train.weight_source", "uniform").as_str() {
+        "uniform" => Ok(WeightSource::Uniform),
+        "variance" => Ok(WeightSource::Variance),
+        other => bail!("train.weight_source must be 'uniform' or 'variance', got '{other}'"),
+    }
 }
 
 /// Every name [`projection_mode`] accepts, in match-arm order. Error
@@ -45,6 +68,10 @@ pub const PROJECTION_MODE_NAMES: &[&str] = &[
     "bilevel_cols",
     "l1inf_masked",
     "masked",
+    "weighted_l1inf",
+    "weighted",
+    "weighted_l1inf_cols",
+    "weighted_cols",
 ];
 
 /// Parse a projection-mode name + radius into a [`ProjectionMode`].
@@ -58,6 +85,10 @@ pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
         "bilevel" => ProjectionMode::Bilevel { c: radius },
         "bilevel_cols" => ProjectionMode::BilevelCols { c: radius },
         "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
+        "weighted_l1inf" | "weighted" => ProjectionMode::WeightedL1Inf { c: radius },
+        "weighted_l1inf_cols" | "weighted_cols" => {
+            ProjectionMode::WeightedL1InfCols { c: radius }
+        }
         other => bail!(
             "unknown projection '{other}' (valid: {})",
             PROJECTION_MODE_NAMES.join(", ")
@@ -166,6 +197,8 @@ mod tests {
             ProjectionMode::Bilevel { c: 1.0 },
             ProjectionMode::BilevelCols { c: 1.0 },
             ProjectionMode::L1InfMasked { c: 1.0 },
+            ProjectionMode::WeightedL1Inf { c: 1.0 },
+            ProjectionMode::WeightedL1InfCols { c: 1.0 },
         ];
         for mode in canonical {
             let name = mode.name();
@@ -176,6 +209,44 @@ mod tests {
             let parsed = projection_mode(name, 1.0).unwrap();
             assert_eq!(parsed.name(), name, "'{name}' does not round-trip");
         }
+    }
+
+    #[test]
+    fn parses_weighted_modes_and_weight_sources() {
+        assert!(matches!(
+            projection_mode("weighted_l1inf", 0.4).unwrap(),
+            ProjectionMode::WeightedL1Inf { c } if c == 0.4
+        ));
+        assert!(matches!(
+            projection_mode("weighted", 0.4).unwrap(),
+            ProjectionMode::WeightedL1Inf { .. }
+        ));
+        assert!(matches!(
+            projection_mode("weighted_cols", 0.4).unwrap(),
+            ProjectionMode::WeightedL1InfCols { .. }
+        ));
+        // Default source is uniform.
+        let cfg = Config::parse("[train]\nprojection = \"weighted_l1inf\"\nradius = 2\n").unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert!(matches!(tc.projection, ProjectionMode::WeightedL1Inf { c } if c == 2.0));
+        assert_eq!(tc.weights, WeightSource::Uniform);
+        // Explicit price list.
+        let cfg =
+            Config::parse("[train]\nprojection = \"weighted\"\nweights = [1.0, 2.5, 0.5]\n")
+                .unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert_eq!(tc.weights, WeightSource::Explicit(vec![1.0, 2.5, 0.5]));
+        // Variance-derived prices.
+        let cfg = Config::parse(
+            "[train]\nprojection = \"weighted\"\nweight_source = \"variance\"\n",
+        )
+        .unwrap();
+        assert_eq!(train_config(&cfg).unwrap().weights, WeightSource::Variance);
+        // Bad prices and unknown sources fail loudly.
+        let cfg = Config::parse("[train]\nweights = [1.0, -2.0]\n").unwrap();
+        assert!(train_config(&cfg).is_err());
+        let cfg = Config::parse("[train]\nweight_source = \"entropy\"\n").unwrap();
+        assert!(train_config(&cfg).is_err());
     }
 
     #[test]

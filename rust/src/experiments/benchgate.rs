@@ -1,8 +1,8 @@
 //! `l1inf exp bench_gate` — the CI bench-regression gate.
 //!
-//! Reads the four fresh bench reports (`BENCH_proj.json`, `BENCH_serve.json`,
-//! `BENCH_bilevel.json`, `BENCH_kernels.json`) from `--out` and diffs their
-//! key metrics against the committed floors/ceilings in
+//! Reads the five fresh bench reports (`BENCH_proj.json`, `BENCH_serve.json`,
+//! `BENCH_bilevel.json`, `BENCH_kernels.json`, `BENCH_weighted.json`) from
+//! `--out` and diffs their key metrics against the committed floors/ceilings in
 //! `ci/bench_baselines.json`. The comparison table is printed, written to
 //! `<out>/bench_gate.md` (the CI step appends that file to
 //! `$GITHUB_STEP_SUMMARY`), and the run fails if any metric breaks its
@@ -33,9 +33,14 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-/// The four reports the gate consumes.
-const REPORTS: [&str; 4] =
-    ["BENCH_proj.json", "BENCH_serve.json", "BENCH_bilevel.json", "BENCH_kernels.json"];
+/// The five reports the gate consumes.
+const REPORTS: [&str; 5] = [
+    "BENCH_proj.json",
+    "BENCH_serve.json",
+    "BENCH_bilevel.json",
+    "BENCH_kernels.json",
+    "BENCH_weighted.json",
+];
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Kind {
@@ -116,6 +121,7 @@ fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
         "bilevel.speedup_dense" => get("BENCH_bilevel.json", &["gate", "speedup"]),
         "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
         "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
+        "weighted.uniform_agreement_max" => get("BENCH_weighted.json", &["agreement", "max"]),
         other => bail!("no extractor for baseline metric '{other}' (typo in ci/bench_baselines.json?)"),
     }
 }
@@ -316,6 +322,12 @@ mod tests {
                 r#"{{{meta}, "dispatch": "{kernel_dispatch}", "gate": {{"speedup": {kernel_speedup}}}, "agreement": {{"max": 1e-9}}}}"#
             ),
         );
+        write(
+            &dir.join("BENCH_weighted.json"),
+            &format!(
+                r#"{{{meta}, "agreement": {{"max": 0.0, "theta_diff": 0.0}}, "gate": {{"value": 0.0, "pass": true}}}}"#
+            ),
+        );
     }
 
     fn baselines_json() -> &'static str {
@@ -327,7 +339,8 @@ mod tests {
             "serve.warm_reduction_inv_order": {"kind": "min", "value": 1.0, "baseline": 20.0},
             "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
             "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
-            "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0}
+            "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},
+            "weighted.uniform_agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0}
         }}"#
     }
 

@@ -9,6 +9,7 @@ pub mod bilevelbench;
 pub mod kernelbench;
 pub mod projbench;
 pub mod servebench;
+pub mod weightedbench;
 
 use crate::config::Config;
 #[cfg(feature = "pjrt")]
@@ -20,7 +21,7 @@ use crate::projection::l1inf::Algorithm;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 #[cfg(feature = "pjrt")]
-use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig};
+use crate::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, WeightSource};
 use crate::util::csv::CsvWriter;
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
@@ -43,7 +44,8 @@ impl Default for ExpOpts {
 /// All experiment ids.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
-    "trainproj", "serve_bench", "proj_bench", "bilevel_bench", "kernel_bench", "bench_gate",
+    "trainproj", "serve_bench", "proj_bench", "bilevel_bench", "kernel_bench", "weighted_bench",
+    "bench_gate",
 ];
 
 /// Dispatch by experiment id.
@@ -53,6 +55,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "proj_bench" => projbench::run_bench(opts),
         "bilevel_bench" => bilevelbench::run(opts),
         "kernel_bench" => kernelbench::run(opts),
+        "weighted_bench" => weightedbench::run(opts),
         "bench_gate" => benchgate::run(opts),
         "fig1" => fig1(opts),
         "fig2" => fig2(opts),
@@ -224,6 +227,7 @@ fn base_train_config(model: &str, opts: &ExpOpts) -> TrainConfig {
         lr: opts.cfg.f64_or("train.lr", 1e-3) as f32,
         lambda: opts.cfg.f64_or("train.lambda", 1.0) as f32,
         projection: ProjectionMode::None,
+        weights: WeightSource::Uniform,
         algo: Algorithm::InverseOrder,
         exec: ExecMode::Epoch,
         seed: 0,

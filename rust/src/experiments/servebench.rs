@@ -18,7 +18,7 @@
 use super::ExpOpts;
 use crate::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
 use crate::serve::batch::{BatchProjector, ProjKind, ProjRequest};
-use crate::serve::cache::ThetaCache;
+use crate::serve::cache::{CacheKey, Family, ThetaCache};
 use crate::util::bench::{self, BenchOpts, Sample};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -114,10 +114,11 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             }
             let mut cold_copy = w.clone();
             let cold = project_l1inf(&mut cold_copy, m, n, radius, wa);
-            let hint = cache.hint_for("w", m, n);
+            let ck = CacheKey::new(Family::Exact, "w");
+            let hint = cache.hint_for(&ck, m, n);
             let mut warm_copy = w.clone();
             let warm = project_l1inf_with_hint(&mut warm_copy, m, n, radius, wa, hint);
-            cache.update("w", m, n, radius, warm.theta);
+            cache.update(&ck, m, n, radius, warm.theta);
             if step > 0 {
                 // Step 0 has an empty cache — both sides are cold.
                 cold_work += cold.stats.work;
@@ -171,6 +172,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             radius: 0.5 + qrng.f64() * 2.0,
             algo: [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar][i % 3],
             mode: ProjKind::Exact,
+            weights: None,
         });
     }
     let pool_full = BatchProjector::new(0);

@@ -1,0 +1,242 @@
+//! `l1inf exp weighted_bench` — the weighted ℓ₁,∞ family's correctness +
+//! timing report, written to `<outdir>/BENCH_weighted.json`.
+//!
+//! Three weight profiles on the benchmark matrix:
+//!
+//! - **uniform** (`w ≡ 1`): the reduction cell. The weighted projection
+//!   must agree with the exact bisection projection within ≤1e-6
+//!   elementwise (**enforced** — in fact the two are asserted
+//!   bit-identical here) and the gate metric
+//!   `weighted.uniform_agreement_max` feeds `ci/bench_baselines.json`;
+//! - **random** (`w ∈ [0.2, 4.2)`): generic prices;
+//! - **skewed** (half the groups priced 4×): the feature-pricing workload.
+//!
+//! Every cell's result must pass the weighted KKT certificate
+//! ([`crate::projection::kkt::verify_l1inf_weighted`]) before any timing
+//! is trusted, and the weighted bi-level operator's output is checked
+//! feasible in the weighted ball. Each cell times the exact weighted
+//! solver (bisection-class) against the linear-time weighted bi-level
+//! operator — correctness bounds are gated, wall-clock is informational.
+
+use super::{projbench, ExpOpts};
+use crate::projection::kkt::{self, Tolerance};
+use crate::projection::l1inf::{project_l1inf, Algorithm};
+use crate::projection::weighted::{
+    norm_l1inf_weighted, project_bilevel_weighted, project_l1inf_weighted,
+};
+use crate::projection::GroupedView;
+use crate::util::bench::{self, BenchOpts};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+
+fn jobj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// One weight-profile measurement cell.
+struct Cell {
+    label: &'static str,
+    radius: f64,
+    /// Certified price λ from the weighted KKT verifier.
+    lambda: f64,
+    weighted_min_ms: f64,
+    bilevel_min_ms: f64,
+    /// Weighted norm after projection (boundary evidence).
+    norm_after: f64,
+}
+
+/// `n` = group length, `m` = groups (proj_bench orientation).
+fn measure_cell(
+    data: &[f32],
+    n: usize,
+    m: usize,
+    weights: &[f32],
+    label: &'static str,
+    bopts: &BenchOpts,
+) -> Result<Cell> {
+    let norm = norm_l1inf_weighted(GroupedView::new(data, m, n), weights);
+    let radius = 0.3 * norm;
+
+    // Correctness first: exact weighted projection + KKT certificate.
+    let mut x = data.to_vec();
+    project_l1inf_weighted(&mut x, m, n, radius, weights);
+    let lambda = kkt::verify_l1inf_weighted(data, &x, m, n, weights, radius, Tolerance::default())
+        .map_err(|e| anyhow::anyhow!("{label}: weighted KKT certificate failed: {e}"))?;
+    let norm_after = norm_l1inf_weighted(GroupedView::new(&x, m, n), weights);
+    ensure!(
+        norm_after <= radius * (1.0 + 1e-6),
+        "{label}: weighted projection infeasible: {norm_after} > {radius}"
+    );
+
+    // Weighted bi-level: feasible in the same ball.
+    let mut b = data.to_vec();
+    project_bilevel_weighted(&mut b, m, n, radius, weights);
+    let bl_norm = norm_l1inf_weighted(GroupedView::new(&b, m, n), weights);
+    ensure!(
+        bl_norm <= radius * (1.0 + 1e-6),
+        "{label}: weighted bi-level infeasible: {bl_norm} > {radius}"
+    );
+
+    // Timings.
+    let weighted_s = bench::run_case(
+        &format!("weighted l1inf  {label} C={radius:.3}"),
+        bopts,
+        || data.to_vec(),
+        |mut y| {
+            project_l1inf_weighted(&mut y, m, n, radius, weights);
+        },
+    );
+    let bilevel_s = bench::run_case(
+        &format!("weighted bilevel {label} C={radius:.3}"),
+        bopts,
+        || data.to_vec(),
+        |mut y| {
+            project_bilevel_weighted(&mut y, m, n, radius, weights);
+        },
+    );
+    bench::print_table(&format!("weighted_bench: {label} (C={radius:.3})"), &[
+        weighted_s.clone(),
+        bilevel_s.clone(),
+    ]);
+    Ok(Cell {
+        label,
+        radius,
+        lambda,
+        weighted_min_ms: weighted_s.min_ms(),
+        bilevel_min_ms: bilevel_s.min_ms(),
+        norm_after,
+    })
+}
+
+fn cell_json(c: &Cell) -> Json {
+    jobj(vec![
+        ("label", Json::Str(c.label.into())),
+        ("radius", Json::Num(c.radius)),
+        ("lambda", Json::Num(c.lambda)),
+        ("weighted_min_ms", Json::Num(c.weighted_min_ms)),
+        ("bilevel_min_ms", Json::Num(c.bilevel_min_ms)),
+        ("norm_after", Json::Num(c.norm_after)),
+        ("kkt_pass", Json::Bool(true)),
+    ])
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    // The weighted solver is bisection-class (each Φ_w evaluation is one
+    // O(nm) pass), so the quick profile — which the debug-mode unit test
+    // also drives — stays small.
+    let (n, m) = if opts.quick { (150, 400) } else { (1000, 2000) };
+    let mut bopts = BenchOpts::from_env();
+    if opts.quick {
+        bopts.warmup_iters = 1;
+        bopts.measure_iters = 3;
+        bopts.max_secs_per_case = 5.0;
+    }
+    let data = projbench::uniform_matrix(n, m, 0x3E167);
+
+    // ── 1. the uniform-weights reduction gate ───────────────────────────
+    // With w ≡ 1 the weighted projection must be *bit-identical* to the
+    // exact bisection projection; the gated report metric is the observed
+    // elementwise max |Δ| (bound 1e-6 in ci/bench_baselines.json, actual
+    // value 0 by construction — any nonzero bit is a reduction bug).
+    let ones = vec![1.0f32; m];
+    let norm = norm_l1inf_weighted(GroupedView::new(&data, m, n), &ones);
+    let radius = 0.3 * norm;
+    let mut exact = data.clone();
+    let ei = project_l1inf(&mut exact, m, n, radius, Algorithm::Bisection);
+    let mut uniform = data.clone();
+    let ui = project_l1inf_weighted(&mut uniform, m, n, radius, &ones);
+    let mut agreement_max = 0.0f64;
+    for (a, b) in uniform.iter().zip(&exact) {
+        agreement_max = agreement_max.max((a - b).abs() as f64);
+    }
+    let theta_diff = (ui.theta - ei.theta).abs();
+    ensure!(
+        agreement_max <= 1e-6 && theta_diff <= 1e-9 * ei.theta.max(1.0),
+        "uniform-weights reduction drifted: max |Δ| = {agreement_max:e}, θ diff = {theta_diff:e}"
+    );
+    println!(
+        "uniform weights vs exact bisection: max |Δ| = {agreement_max:.1e} (bound 1e-6), θ diff = {theta_diff:.1e}"
+    );
+
+    // ── 2. per-profile cells (KKT-certified, timed) ─────────────────────
+    let mut rng = Rng::new(0x3E168);
+    let random_w: Vec<f32> = (0..m).map(|_| 0.2 + rng.f32() * 4.0).collect();
+    let skewed_w: Vec<f32> =
+        (0..m).map(|g| if g % 2 == 0 { 1.0 } else { 4.0 }).collect();
+    let cells = vec![
+        measure_cell(&data, n, m, &ones, "uniform", &bopts)?,
+        measure_cell(&data, n, m, &random_w, "random", &bopts)?,
+        measure_cell(&data, n, m, &skewed_w, "skewed", &bopts)?,
+    ];
+
+    let report = jobj(vec![
+        ("meta", bench::bench_meta(&[(n, m)])),
+        (
+            "matrix",
+            jobj(vec![
+                ("n", Json::Num(n as f64)),
+                ("m", Json::Num(m as f64)),
+                ("norm_weighted_uniform", Json::Num(norm)),
+            ]),
+        ),
+        (
+            "agreement",
+            jobj(vec![
+                ("max", Json::Num(agreement_max)),
+                ("theta_diff", Json::Num(theta_diff)),
+                ("baseline_algo", Json::Str(Algorithm::Bisection.name().into())),
+            ]),
+        ),
+        ("cases", Json::Arr(cells.iter().map(cell_json).collect())),
+        (
+            "gate",
+            jobj(vec![
+                ("metric", Json::Str("uniform_agreement_max".into())),
+                ("value", Json::Num(agreement_max)),
+                ("threshold", Json::Num(1e-6)),
+                ("pass", Json::Bool(agreement_max <= 1e-6)),
+            ]),
+        ),
+        ("quick", Json::Bool(opts.quick)),
+    ]);
+    let path = opts.outdir.join("BENCH_weighted.json");
+    std::fs::write(&path, report.to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_writes_report_with_certified_cells() {
+        let outdir =
+            std::env::temp_dir().join(format!("l1inf_weighted_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&outdir).unwrap();
+        let opts = ExpOpts { quick: true, outdir: outdir.clone(), ..Default::default() };
+        run(&opts).unwrap();
+        let text = std::fs::read_to_string(outdir.join("BENCH_weighted.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("meta").unwrap().get("git_rev").is_some());
+        crate::util::bench::assert_kernel_stamp(v.get("meta").unwrap());
+        let agreement = v.get("agreement").unwrap().get("max").unwrap().as_f64().unwrap();
+        assert!(agreement <= 1e-6, "uniform agreement {agreement} above bound");
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 3);
+        for c in cases {
+            assert_eq!(c.get("kkt_pass"), Some(&Json::Bool(true)));
+            let radius = c.get("radius").unwrap().as_f64().unwrap();
+            let after = c.get("norm_after").unwrap().as_f64().unwrap();
+            assert!(after <= radius * (1.0 + 1e-6), "cell infeasible in report");
+            assert!(c.get("lambda").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert_eq!(
+            v.get("gate").unwrap().get("pass"),
+            Some(&Json::Bool(true)),
+            "gate must pass"
+        );
+        std::fs::remove_dir_all(&outdir).ok();
+    }
+}

@@ -12,8 +12,8 @@
 //! ```
 //!
 //! Experiment names: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2
-//! trainproj serve_bench proj_bench bilevel_bench kernel_bench bench_gate
-//! (see DESIGN.md §5).
+//! trainproj serve_bench proj_bench bilevel_bench kernel_bench
+//! weighted_bench bench_gate (see DESIGN.md §5).
 
 use anyhow::{bail, Context, Result};
 use l1inf::config::serve::serve_config;
@@ -41,7 +41,7 @@ const USAGE: &str = "usage: l1inf <project|train|serve|exp|artifacts|help> [opti
   serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config FILE]
   exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
   artifacts [--dir DIR]
-experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj serve_bench proj_bench bilevel_bench kernel_bench bench_gate";
+experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj serve_bench proj_bench bilevel_bench kernel_bench weighted_bench bench_gate";
 
 fn main() {
     l1inf::util::logging::init_from_env();

@@ -125,6 +125,129 @@ pub fn verify_l1inf(
     Ok(theta)
 }
 
+/// Verify the KKT conditions of the **weighted** projection
+/// `P_{B_{w,1,∞}^C}(Y)` (see [`crate::projection::weighted`]); returns the
+/// certified price λ on success. A candidate `X` is optimal iff
+///
+/// 1. feasibility: `Σ_g w_g·max|X_g| ≤ C` (with equality when the input
+///    was outside the ball);
+/// 2. clipping structure: `X[g,i] = sign(Y[g,i])·min(|Y[g,i]|, μ_g)` for
+///    per-group levels `μ_g ≥ 0` with `Σ_g w_g μ_g = C`;
+/// 3. price-proportional mass removal: groups with `μ_g > 0` all satisfy
+///    `removed_g / w_g = λ` for one shared λ; groups with `μ_g = 0`
+///    satisfy `‖y_g‖₁ ≤ λ·w_g`.
+///
+/// With `w ≡ 1` these are exactly the unweighted conditions of
+/// [`verify_l1inf`] and the certified λ is θ.
+pub fn verify_l1inf_weighted(
+    y: &[f32],
+    x: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    c: f64,
+    tol: Tolerance,
+) -> Result<f64, String> {
+    if y.len() != n_groups * group_len || x.len() != y.len() {
+        return Err("shape mismatch".into());
+    }
+    if weights.len() != n_groups {
+        return Err(format!("{} weights for {n_groups} groups", weights.len()));
+    }
+    if let Some(w) = weights.iter().find(|w| !w.is_finite() || **w <= 0.0) {
+        return Err(format!("non-positive weight {w}"));
+    }
+    let scale = y.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64)).max(1.0);
+    let eps = tol.abs + tol.rel * scale;
+    let wv = GroupedView::new(y, n_groups, group_len);
+    let xv = GroupedView::new(x, n_groups, group_len);
+    let norm_before = crate::projection::weighted::norm_l1inf_weighted(wv, weights);
+    let norm_after = crate::projection::weighted::norm_l1inf_weighted(xv, weights);
+
+    // Feasible input must be untouched.
+    if norm_before <= c {
+        for i in 0..y.len() {
+            if (y[i] - x[i]).abs() as f64 > eps {
+                return Err(format!("feasible input modified at {i}"));
+            }
+        }
+        return Ok(0.0);
+    }
+    // 1. Feasibility with equality (projection lands on the boundary).
+    let wsum: f64 = weights.iter().map(|&w| w as f64).sum();
+    if norm_after > c + eps * wsum {
+        return Err(format!("weighted ‖X‖ = {norm_after} > C = {c}"));
+    }
+    if c > 0.0 && norm_after < c - eps * wsum {
+        return Err(format!("projection strictly inside the ball: {norm_after} < {c}"));
+    }
+
+    // 2. + 3. structure per group; λ_g = removed_g / w_g must agree.
+    let mut lambda: Option<f64> = None;
+    let mut mus = vec![0.0f64; n_groups];
+    for g in 0..n_groups {
+        let yg = &y[g * group_len..(g + 1) * group_len];
+        let xg = &x[g * group_len..(g + 1) * group_len];
+        let wg = weights[g] as f64;
+        let mu = xg.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64));
+        mus[g] = mu;
+        let mut removed = 0.0f64;
+        for i in 0..group_len {
+            let (yi, xi) = (yg[i] as f64, xg[i] as f64);
+            if xi != 0.0 && xi.signum() != yi.signum() {
+                return Err(format!("sign flip at group {g} idx {i}"));
+            }
+            let (ya, xa) = (yi.abs(), xi.abs());
+            if xa > ya + eps {
+                return Err(format!("|X| grew at group {g} idx {i}: {xa} > {ya}"));
+            }
+            let expect = ya.min(mu);
+            if (xa - expect).abs() > eps {
+                return Err(format!(
+                    "not a clip at group {g} idx {i}: |x|={xa}, min(|y|,mu)={expect}"
+                ));
+            }
+            removed += ya - xa;
+        }
+        if mu > eps {
+            let lg = removed / wg;
+            match lambda {
+                None => lambda = Some(lg),
+                Some(l) => {
+                    if (lg - l).abs() > eps * group_len as f64 / wg.min(1.0) {
+                        return Err(format!(
+                            "price violated: group {g} removed {removed} (λ_g = {lg}), expected λ = {l}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let lambda = lambda.ok_or("no active group in an infeasible projection")?;
+    // Dead groups: mass must be ≤ λ·w_g.
+    for g in 0..n_groups {
+        if mus[g] <= eps {
+            let wg = weights[g] as f64;
+            let mass: f64 = y[g * group_len..(g + 1) * group_len]
+                .iter()
+                .map(|&v| v.abs() as f64)
+                .sum();
+            if mass > lambda * wg + eps * group_len as f64 {
+                return Err(format!(
+                    "group {g} was killed but its mass {mass} exceeds λ·w = {}",
+                    lambda * wg
+                ));
+            }
+        }
+    }
+    // Σ w_g·μ_g = C.
+    let mu_sum: f64 = mus.iter().zip(weights).map(|(&m, &w)| w as f64 * m).sum();
+    if (mu_sum - c).abs() > eps * wsum {
+        return Err(format!("Σ w·μ = {mu_sum} != C = {c}"));
+    }
+    Ok(lambda)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +290,82 @@ mod tests {
         let y = vec![2.0f32, 2.0];
         let x = vec![0.1f32, 0.1]; // deep inside the ball of radius 1 (one group)
         assert!(verify_l1inf(&y, &x, 1, 2, 1.0, Tolerance::default()).is_err());
+    }
+
+    #[test]
+    fn weighted_accepts_true_weighted_projection() {
+        use crate::projection::weighted::project_l1inf_weighted;
+        let mut rng = Rng::new(14);
+        let (g, l) = (10, 5);
+        let mut y = vec![0.0f32; g * l];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 2.0;
+        }
+        let w: Vec<f32> = (0..g).map(|_| 0.3 + rng.f32() * 3.0).collect();
+        let mut x = y.clone();
+        project_l1inf_weighted(&mut x, g, l, 0.8, &w);
+        let lambda = verify_l1inf_weighted(&y, &x, g, l, &w, 0.8, Tolerance::default()).unwrap();
+        assert!(lambda > 0.0);
+    }
+
+    #[test]
+    fn weighted_with_uniform_weights_certifies_the_exact_projection() {
+        let mut rng = Rng::new(15);
+        let (g, l) = (8, 4);
+        let mut y = vec![0.0f32; g * l];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * 2.0;
+        }
+        let ones = vec![1.0f32; g];
+        let mut x = y.clone();
+        project_l1inf(&mut x, g, l, 0.6, Algorithm::Bisection);
+        let theta = verify_l1inf(&y, &x, g, l, 0.6, Tolerance::default()).unwrap();
+        let lambda =
+            verify_l1inf_weighted(&y, &x, g, l, &ones, 0.6, Tolerance::default()).unwrap();
+        assert!((theta - lambda).abs() < 1e-9, "λ at w≡1 must be θ");
+    }
+
+    #[test]
+    fn weighted_rejects_unweighted_projection_under_skewed_prices() {
+        // The exact *unweighted* projection of a matrix whose groups are
+        // priced very differently is not the weighted projection.
+        let mut rng = Rng::new(16);
+        let (g, l) = (6, 5);
+        let mut y = vec![0.0f32; g * l];
+        for v in y.iter_mut() {
+            *v = 0.5 + rng.f32();
+        }
+        let w: Vec<f32> = (0..g).map(|i| if i % 2 == 0 { 0.25 } else { 4.0 }).collect();
+        let c = 0.3 * crate::projection::weighted::norm_l1inf_weighted(
+            GroupedView::new(&y, g, l),
+            &w,
+        );
+        let mut x = y.clone();
+        project_l1inf(&mut x, g, l, c, Algorithm::Bisection);
+        assert!(
+            verify_l1inf_weighted(&y, &x, g, l, &w, c, Tolerance::default()).is_err(),
+            "unweighted projection must fail the weighted certificate"
+        );
+    }
+
+    #[test]
+    fn weighted_rejects_bad_inputs() {
+        let y = vec![1.0f32, 0.2, 0.8, 0.6];
+        let x = vec![0.5f32, 0.2, 0.4, 0.3];
+        assert!(verify_l1inf_weighted(&y, &x, 2, 2, &[1.0], 0.5, Tolerance::default()).is_err());
+        assert!(
+            verify_l1inf_weighted(&y, &x, 2, 2, &[1.0, -1.0], 0.5, Tolerance::default()).is_err()
+        );
+        // Uniform scaling to the right weighted norm is not the projection.
+        let w = [1.0f32, 2.0];
+        let norm = crate::projection::weighted::norm_l1inf_weighted(
+            GroupedView::new(&y, 2, 2),
+            &w,
+        );
+        let scaled: Vec<f32> = y.iter().map(|&v| v * 0.5).collect();
+        assert!(
+            verify_l1inf_weighted(&y, &scaled, 2, 2, &w, 0.5 * norm, Tolerance::default())
+                .is_err()
+        );
     }
 }

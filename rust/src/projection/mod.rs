@@ -29,9 +29,14 @@
 //!   (arXiv:2407.16293, arXiv:2405.02086): strictly linear-time,
 //!   embarrassingly parallel ℓ₁,∞-feasible projection — maxima extraction →
 //!   ℓ₁-simplex projection → per-group clamp — with a 2-level sharded tree.
+//! - [`weighted`] — the **weighted** ℓ₁,∞ family (arXiv:2009.02980
+//!   lineage): per-group prices `w_g` scale each group's budget share —
+//!   weighted simplex kernel, weighted ℓ₁,∞ projection (bit-identical to
+//!   the exact family at `w ≡ 1`), weighted bi-level operator.
 //! - [`linf1`]    — prox of the dual ℓ∞,₁ norm via the Moreau identity.
 //! - [`masked`]   — masked projection (Eq. 20).
-//! - [`kkt`]      — optimality-condition verifier used throughout the tests.
+//! - [`kkt`]      — optimality-condition verifier (unweighted and
+//!   weighted certificates) used throughout the tests.
 //!
 //! The grouped norms below take a [`GroupedView`] — any layout the shape
 //! layer expresses (contiguous rows or strided matrix columns) — instead of
@@ -47,6 +52,7 @@ pub mod l1inf;
 pub mod linf1;
 pub mod masked;
 pub mod simplex;
+pub mod weighted;
 
 pub use grouped::{GroupedView, GroupedViewMut};
 

@@ -1,0 +1,355 @@
+//! The **weighted bi-level** operator: per-group maxima gather →
+//! weighted-ℓ₁-simplex projection of the maxima (through the
+//! [`super::simplex`] kernel) → per-group clamp.
+//!
+//! This is the weighted analog of [`crate::projection::bilevel`]: strictly
+//! linear time, embarrassingly parallel, always feasible in the weighted
+//! ball `Σ_g w_g·max|X_g| ≤ C` — but not the exact weighted projection.
+//! The level-1 subproblem is exactly the weighted simplex threshold on the
+//! maxima vector `v` with prices `w`: radii `r_g = max(v_g − τ·w_g, 0)`
+//! with `Σ_g w_g r_g = C`.
+//!
+//! **Uniform-weights contract**: with all `w_g = 1` every step performs
+//! the identical floating-point operations as
+//! [`crate::projection::bilevel::project_bilevel`]'s cold path, so the
+//! projected entries and τ are bit-identical (pinned by
+//! `tests/differential.rs`).
+//!
+//! Warm starts mirror the unweighted operator: an advisory τ hint selects
+//! the candidate support `{g : v_g > (hint/2)·w_g}`, a restricted weighted
+//! Michelot fixed point runs on it, and the KKT conditions are verified
+//! against the excluded maxima (`max_{g∉S} v_g/w_g ≤ τ`) — verification
+//! passing *proves* τ optimal, so a hostile hint can only cost a cold
+//! fallback, never a wrong result.
+
+use super::simplex::weighted_threshold_condat;
+use crate::projection::bilevel::bilevel::apply_radii_view;
+use crate::projection::bilevel::BilevelInfo;
+use crate::projection::grouped::GroupedViewMut;
+
+/// Restricted weighted Michelot + KKT verification; `None` when the
+/// candidate support cannot be proved optimal (caller falls back cold).
+fn solve_tau_restricted_weighted(
+    maxes: &[f32],
+    weights: &[f32],
+    c: f64,
+    keep: impl Fn(usize, f64) -> bool,
+    active: &mut Vec<(f64, f64)>,
+) -> Option<(f64, usize, usize)> {
+    active.clear();
+    let mut excluded_max = 0.0f64; // max of v_g / w_g over the excluded set
+    for (g, (&v, &w)) in maxes.iter().zip(weights).enumerate() {
+        let (v, w) = (v as f64, w as f64);
+        if keep(g, v) {
+            active.push((v, w));
+        } else if v / w > excluded_max {
+            excluded_max = v / w;
+        }
+    }
+    if active.is_empty() {
+        return None;
+    }
+    let mut work = maxes.len();
+    loop {
+        let sum_wv: f64 = active.iter().map(|&(v, w)| w * v).sum();
+        let sum_w2: f64 = active.iter().map(|&(_, w)| w * w).sum();
+        let tau = (sum_wv - c) / sum_w2;
+        work += active.len();
+        // The global problem is infeasible (Σ w·v > C), so the true τ is
+        // strictly positive; a non-positive restricted τ means the support
+        // misses mass.
+        if tau <= 0.0 {
+            return None;
+        }
+        let before = active.len();
+        active.retain(|&(v, w)| v > tau * w);
+        if active.is_empty() {
+            return None;
+        }
+        if active.len() == before {
+            // Michelot's τ is non-decreasing across iterations, so every
+            // pair dropped earlier satisfies v ≤ τw; with the excluded
+            // breakpoints also ≤ τ the KKT conditions hold.
+            if excluded_max > tau {
+                return None;
+            }
+            return Some((tau, active.len(), work));
+        }
+    }
+}
+
+/// Reusable workspace for the weighted bi-level operator.
+#[derive(Debug, Default)]
+pub struct WeightedBilevelSolver {
+    maxes: Vec<f32>,
+    radii: Vec<f64>,
+    active: Vec<(f64, f64)>,
+    last_tau: Option<f64>,
+}
+
+impl WeightedBilevelSolver {
+    pub fn new() -> WeightedBilevelSolver {
+        WeightedBilevelSolver::default()
+    }
+
+    /// τ of the most recent infeasible projection, if any.
+    pub fn last_tau(&self) -> Option<f64> {
+        self.last_tau
+    }
+
+    /// Per-group radii of the most recent projection.
+    pub fn last_radii(&self) -> &[f64] {
+        &self.radii
+    }
+
+    /// Apply the weighted bi-level operator to `view` in place. `hint` is
+    /// an advisory τ warm start; any value is safe (see module docs).
+    pub fn project(
+        &mut self,
+        view: &mut GroupedViewMut<'_>,
+        c: f64,
+        weights: &[f32],
+        hint: Option<f64>,
+    ) -> BilevelInfo {
+        assert!(c >= 0.0, "radius must be nonnegative");
+        assert_eq!(weights.len(), view.n_groups(), "one weight per group");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "weights must be strictly positive finite prices"
+        );
+
+        // Level 2 → 1: per-group |max| on the dispatched dense kernels.
+        {
+            let ro = view.as_view();
+            crate::projection::dense::group_maxes_into(&ro, &mut self.maxes);
+        }
+        let maxes = &self.maxes;
+
+        // Weighted radius, folded in group order (w ≡ 1 ⇒ the same adds
+        // as the unweighted `solve_root`).
+        let mut radius_before = 0.0f64;
+        for (g, &w) in weights.iter().enumerate() {
+            radius_before += w as f64 * maxes[g] as f64;
+        }
+
+        // Already inside the ball: identity; radii = the maxima so a
+        // future warm start still sees the live support.
+        if radius_before <= c {
+            let zero_groups = maxes.iter().filter(|&&v| v == 0.0).count();
+            self.radii.clear();
+            self.radii.extend(maxes.iter().map(|&v| v as f64));
+            self.last_tau = None;
+            return BilevelInfo {
+                radius_before,
+                radius_after: radius_before,
+                tau: 0.0,
+                zero_groups,
+                survivors: 0,
+                feasible: true,
+                work: 0,
+                warm: false,
+            };
+        }
+        // Degenerate radius: the ball is {0}; τ → max_g v_g/w_g.
+        if c == 0.0 {
+            let mut mx = 0.0f64;
+            for (g, &w) in weights.iter().enumerate() {
+                mx = mx.max(maxes[g] as f64 / w as f64);
+            }
+            self.radii.clear();
+            self.radii.resize(maxes.len(), 0.0);
+            view.fill(0.0);
+            self.last_tau = None;
+            return BilevelInfo {
+                radius_before,
+                radius_after: 0.0,
+                tau: mx,
+                zero_groups: maxes.len(),
+                survivors: 0,
+                feasible: false,
+                work: 0,
+                warm: false,
+            };
+        }
+
+        // Level-1 solve: verified warm candidate from the hint, else the
+        // cold weighted-Condat kernel.
+        let attempt = match hint {
+            Some(h) if h.is_finite() && h > 0.0 => {
+                let lo = 0.5 * h;
+                solve_tau_restricted_weighted(
+                    maxes,
+                    weights,
+                    c,
+                    |g, v| v > lo * weights[g] as f64,
+                    &mut self.active,
+                )
+            }
+            _ => None,
+        };
+        let (tau, survivors, work, warm) = match attempt {
+            Some((tau, k, work)) => (tau, k, work, true),
+            None => {
+                let t = weighted_threshold_condat(maxes, weights, c);
+                (t.tau, t.k, maxes.len(), false)
+            }
+        };
+
+        // Radii + metadata fold (the weighted `fill_radii`): r_g =
+        // max(v_g − τ·w_g, 0), weighted norm folded as the clamp's f32s.
+        self.radii.clear();
+        self.radii.reserve(maxes.len());
+        let mut radius_after = 0.0f64;
+        let mut zero_groups = 0usize;
+        for (g, &v) in maxes.iter().enumerate() {
+            let v = v as f64;
+            let r = (v - tau * weights[g] as f64).max(0.0);
+            if r <= 0.0 {
+                zero_groups += 1;
+            } else {
+                // Exactly the f32 value the clamp writes.
+                let r32 = (r as f32) as f64;
+                let eff = if v > r32 { r32 } else { v };
+                radius_after += weights[g] as f64 * eff;
+            }
+            self.radii.push(r);
+        }
+        apply_radii_view(view, &self.radii);
+        self.last_tau = Some(tau);
+        BilevelInfo {
+            radius_before,
+            radius_after,
+            tau,
+            zero_groups,
+            survivors,
+            feasible: false,
+            work,
+            warm,
+        }
+    }
+}
+
+/// One-shot weighted bi-level projection of a contiguous grouped matrix.
+/// With all-ones `weights` this is bit-identical to
+/// [`crate::projection::bilevel::project_bilevel`].
+pub fn project_bilevel_weighted(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    weights: &[f32],
+) -> BilevelInfo {
+    project_bilevel_weighted_hinted(data, n_groups, group_len, c, weights, None)
+}
+
+/// [`project_bilevel_weighted`] with an advisory τ warm-start hint.
+pub fn project_bilevel_weighted_hinted(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    weights: &[f32],
+    hint: Option<f64>,
+) -> BilevelInfo {
+    WeightedBilevelSolver::new().project(
+        &mut GroupedViewMut::new(data, n_groups, group_len),
+        c,
+        weights,
+        hint,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::bilevel::project_bilevel;
+    use crate::projection::weighted::norm_l1inf_weighted;
+    use crate::projection::GroupedView;
+    use crate::util::rng::Rng;
+
+    fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        let mut y = vec![0.0f32; len];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * scale;
+        }
+        y
+    }
+
+    fn random_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| 0.2 + rng.f32() * 4.0).collect()
+    }
+
+    #[test]
+    fn uniform_weights_bit_identical_to_unweighted_bilevel() {
+        let mut rng = Rng::new(0xB31);
+        for (g, l) in [(17, 5), (40, 3), (1, 12), (9, 1)] {
+            let data = random_signed(&mut rng, g * l, 3.0);
+            let ones = vec![1.0f32; g];
+            for c in [0.0, 0.5, 3.0, 1e6] {
+                let mut plain = data.clone();
+                let pi = project_bilevel(&mut plain, g, l, c);
+                let mut weighted = data.clone();
+                let wi = project_bilevel_weighted(&mut weighted, g, l, c, &ones);
+                assert_eq!(plain, weighted, "{g}x{l} c={c}");
+                assert_eq!(pi.tau.to_bits(), wi.tau.to_bits(), "{g}x{l} c={c}");
+                assert_eq!(pi.radius_before.to_bits(), wi.radius_before.to_bits());
+                assert_eq!(pi.radius_after.to_bits(), wi.radius_after.to_bits());
+                assert_eq!(pi.zero_groups, wi.zero_groups);
+                assert_eq!(pi.feasible, wi.feasible);
+            }
+        }
+    }
+
+    #[test]
+    fn result_is_feasible_in_the_weighted_ball() {
+        let mut rng = Rng::new(0xB32);
+        for (g, l) in [(11, 6), (30, 4)] {
+            let data = random_signed(&mut rng, g * l, 3.0);
+            let w = random_weights(&mut rng, g);
+            let norm = norm_l1inf_weighted(GroupedView::new(&data, g, l), &w);
+            for frac in [0.1, 0.5, 0.9] {
+                let c = frac * norm;
+                let mut x = data.clone();
+                let info = project_bilevel_weighted(&mut x, g, l, c, &w);
+                let after = norm_l1inf_weighted(GroupedView::new(&x, g, l), &w);
+                assert!(after <= c * (1.0 + 1e-6) + 1e-9, "{after} > {c}");
+                assert!((after - info.radius_after).abs() <= 1e-9 * after.max(1.0));
+                // Idempotent ≤ 1e-6.
+                let mut twice = x.clone();
+                project_bilevel_weighted(&mut twice, g, l, c, &w);
+                for (a, b) in twice.iter().zip(&x) {
+                    assert!((a - b).abs() <= 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_hints_are_safe() {
+        let mut rng = Rng::new(0xB33);
+        let (g, l) = (25, 6);
+        let data = random_signed(&mut rng, g * l, 2.0);
+        let w = random_weights(&mut rng, g);
+        let mut cold_m = data.clone();
+        let cold = project_bilevel_weighted(&mut cold_m, g, l, 0.7, &w);
+        for hint in
+            [f64::NAN, f64::INFINITY, -1.0, 0.0, cold.tau, cold.tau * 1.05, cold.tau * 50.0]
+        {
+            let mut m = data.clone();
+            let info = project_bilevel_weighted_hinted(&mut m, g, l, 0.7, &w, Some(hint));
+            assert!(
+                (info.tau - cold.tau).abs() <= 1e-9 * cold.tau.max(1.0),
+                "hint {hint}: τ {} vs {}",
+                info.tau,
+                cold.tau
+            );
+            for (a, b) in m.iter().zip(&cold_m) {
+                assert!((a - b).abs() <= 1e-6, "hint {hint}");
+            }
+        }
+        // A near-exact hint commits the warm path.
+        let mut m = data.clone();
+        let info = project_bilevel_weighted_hinted(&mut m, g, l, 0.7, &w, Some(cold.tau * 1.01));
+        assert!(info.warm, "a good hint must commit the verified support");
+    }
+}

@@ -1,0 +1,158 @@
+//! The **weighted** ℓ₁,∞ projection family (Perez et al.,
+//! arXiv:2009.02980 lineage): per-group prices `w_g > 0` scale each
+//! group's contribution to the budget, so the ball becomes
+//!
+//! ```text
+//!   B_{w,1,∞}^C = {X : Σ_g w_g · max_i |X[g,i]| ≤ C}
+//! ```
+//!
+//! With all `w_g = 1` this is exactly the unweighted ball, and every
+//! operator in this module is written so that the uniform-weights code
+//! path performs the *identical* sequence of floating-point operations as
+//! its unweighted counterpart (`x·1.0` and `x/1.0` are exact in IEEE 754)
+//! — `project_l1inf_weighted` with all-ones weights is **bit-identical**
+//! to [`crate::projection::l1inf::project_l1inf`] with the bisection
+//! solver, and the weighted bi-level operator is bit-identical to
+//! [`crate::projection::bilevel::project_bilevel`]. The differential test
+//! suite (`tests/differential.rs`) pins both reductions down.
+//!
+//! Submodules:
+//! - [`simplex`] — the weighted ℓ₁-simplex threshold kernel
+//!   `Σᵢ wᵢ·max(yᵢ − τwᵢ, 0) = a` (sort oracle, Michelot, Condat-style),
+//!   generalizing [`crate::projection::simplex`] with per-coordinate
+//!   weights. This is the level-1 kernel of the weighted bi-level
+//!   operator and the weighted-ℓ₁-ball projection in its own right.
+//! - [`solver`]  — [`WeightedSolver`] / [`project_l1inf_weighted`]: the
+//!   weighted ℓ₁,∞ projection. The dual variable is a *price* λ: every
+//!   surviving group `g` loses ℓ₁ mass `λ·w_g` (expensive groups pay
+//!   more), and `Σ_g w_g μ_g = C` at the optimum. Solved by safeguarded
+//!   bisection + one exact linear solve on the final piece, exactly like
+//!   the unweighted gold solver.
+//! - [`bilevel`] — the weighted bi-level operator: maxima gather →
+//!   weighted-simplex projection of the maxima (through the new kernel) →
+//!   per-group clamp. Linear time, always feasible in the weighted ball.
+//!
+//! The dense O(nm) passes (fused max/mass pre-pass, `|Y|` gather, clamp)
+//! all run on the runtime-dispatched [`crate::projection::dense`] kernels
+//! — the weighted layer adds only O(n_groups) work on top.
+
+pub mod bilevel;
+pub mod simplex;
+pub mod solver;
+
+pub use bilevel::{project_bilevel_weighted, project_bilevel_weighted_hinted};
+pub use solver::{project_l1inf_weighted, project_l1inf_weighted_hinted, WeightedSolver};
+
+use crate::projection::grouped::GroupedView;
+
+/// Validate a per-group weight vector: one strictly positive finite price
+/// per group. Returns an error message suitable for protocol/config
+/// surfaces (the solver entry points `assert!` on the same predicate).
+pub fn validate_weights(weights: &[f32], n_groups: usize) -> Result<(), String> {
+    if weights.len() != n_groups {
+        return Err(format!(
+            "weights has {} entries, expected one per group = {n_groups}",
+            weights.len()
+        ));
+    }
+    for (g, &w) in weights.iter().enumerate() {
+        if !w.is_finite() || w <= 0.0 {
+            return Err(format!("weights[{g}] = {w} is not a positive finite price"));
+        }
+    }
+    Ok(())
+}
+
+/// Weighted ℓ₁,∞ norm `Σ_g w_g · max_i |X[g,i]|`, folded over groups in
+/// group order on the dispatched per-group maxima (with `w ≡ 1` the adds
+/// are bit-identical to [`crate::projection::norm_l1inf`]).
+pub fn norm_l1inf_weighted(view: GroupedView<'_>, weights: &[f32]) -> f64 {
+    debug_assert_eq!(weights.len(), view.n_groups());
+    let mut norm = 0.0f64;
+    for (g, &w) in weights.iter().enumerate() {
+        norm += w as f64 * view.group_abs_max(g) as f64;
+    }
+    norm
+}
+
+/// Derive per-group prices from per-group variance: `w_g =
+/// sqrt(var_g / mean_var)`, clamped to `[0.1, 10]` so a dead or explosive
+/// group cannot zero out or dominate the budget. A matrix whose groups
+/// all share one variance (or whose variance is all zero) gets exactly
+/// uniform weights `1.0` — the weighted operators then reduce bit-exactly
+/// to the unweighted family. This is the `weight_source = "variance"`
+/// trainer mode: high-variance (expensive, informative) features pay a
+/// higher price per unit of ℓ∞ radius.
+pub fn weights_from_variance(view: GroupedView<'_>) -> Vec<f32> {
+    let g = view.n_groups();
+    let l = view.group_len().max(1) as f64;
+    let mut vars = Vec::with_capacity(g);
+    for grp in 0..g {
+        let mut sum = 0.0f64;
+        view.for_each_in_group(grp, |v| sum += v as f64);
+        let mean = sum / l;
+        let mut ss = 0.0f64;
+        view.for_each_in_group(grp, |v| {
+            let d = v as f64 - mean;
+            ss += d * d;
+        });
+        vars.push(ss / l);
+    }
+    let mean_var: f64 = vars.iter().sum::<f64>() / g.max(1) as f64;
+    if mean_var <= 0.0 {
+        return vec![1.0; g];
+    }
+    vars.into_iter()
+        .map(|v| ((v / mean_var).sqrt().clamp(0.1, 10.0)) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::norm_l1inf;
+
+    #[test]
+    fn validate_weights_contract() {
+        assert!(validate_weights(&[1.0, 2.0], 2).is_ok());
+        assert!(validate_weights(&[1.0], 2).is_err());
+        assert!(validate_weights(&[1.0, 0.0], 2).is_err());
+        assert!(validate_weights(&[1.0, -3.0], 2).is_err());
+        assert!(validate_weights(&[1.0, f32::NAN], 2).is_err());
+        assert!(validate_weights(&[1.0, f32::INFINITY], 2).is_err());
+    }
+
+    #[test]
+    fn weighted_norm_reduces_bitwise_at_uniform_weights() {
+        let y = [1.0f32, -2.0, 0.5, 0.0, 3.0, -1.0];
+        let v = GroupedView::new(&y, 2, 3);
+        let w = [1.0f32, 1.0];
+        assert_eq!(
+            norm_l1inf_weighted(v, &w).to_bits(),
+            norm_l1inf(v).to_bits(),
+            "uniform weights must not perturb a single bit"
+        );
+        let w2 = [2.0f32, 0.5];
+        assert!((norm_l1inf_weighted(v, &w2) - (2.0 * 2.0 + 0.5 * 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variance_weights_uniform_on_equal_variance() {
+        // Two groups with identical variance ⇒ exactly uniform prices.
+        let y = [1.0f32, -1.0, 0.0, 1.0, -1.0, 0.0];
+        let w = weights_from_variance(GroupedView::new(&y, 2, 3));
+        assert_eq!(w, vec![1.0, 1.0]);
+        // All-zero matrix ⇒ uniform too (no division by zero).
+        let z = [0.0f32; 6];
+        assert_eq!(weights_from_variance(GroupedView::new(&z, 2, 3)), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn variance_weights_price_spread_and_clamp() {
+        // Group 0 noisy, group 1 quiet: w0 > 1 > w1, both inside the clamp.
+        let y = [5.0f32, -5.0, 5.0, -5.0, 0.01, -0.01, 0.01, -0.01];
+        let w = weights_from_variance(GroupedView::new(&y, 2, 4));
+        assert!(w[0] > 1.0 && w[1] < 1.0, "{w:?}");
+        assert!(w.iter().all(|&x| (0.1..=10.0).contains(&x)), "{w:?}");
+    }
+}

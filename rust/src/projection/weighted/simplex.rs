@@ -1,0 +1,329 @@
+//! Projection of a vector onto the solid **weighted** ℓ₁ simplex
+//! `Δ_{w,1}^a = {x ∈ R₊^n : Σᵢ wᵢxᵢ ≤ a}` with per-coordinate prices
+//! `wᵢ > 0` (Perez et al., "Efficient Projection Algorithms onto the
+//! Weighted ℓ₁ Ball", arXiv:2009.02980).
+//!
+//! The projection of `y` is `xᵢ = max(yᵢ − τ·wᵢ, 0)` for the unique
+//! `τ ≥ 0` with `Σᵢ wᵢ·max(yᵢ − τwᵢ, 0) = a` (or `τ = 0` when `y` is
+//! already feasible). On the active set `A = {i : yᵢ > τwᵢ}` the
+//! threshold solves `τ = (Σ_A wᵢyᵢ − a) / Σ_A wᵢ²`, so every unweighted
+//! algorithm generalizes by replacing counts with `Σ w²` and sums with
+//! `Σ w·y`, and the breakpoint order `yᵢ` with `yᵢ/wᵢ`:
+//!
+//! - [`weighted_threshold_sort`]     — sort by `yᵢ/wᵢ` + prefix scan,
+//!   `O(n log n)` (the oracle).
+//! - [`weighted_threshold_michelot`] — iterative set reduction.
+//! - [`weighted_threshold_condat`]   — Condat-style single pass + cleanup,
+//!   `O(n)` observed; the default everywhere in the weighted family.
+//!
+//! **Uniform-weights contract**: with every `wᵢ = 1.0` each function here
+//! performs the *identical* sequence of f64 operations as its counterpart
+//! in [`crate::projection::simplex`] (`x·1.0 = x` and `x/1.0 = x` exactly,
+//! and the running `Σ w²` accumulates `1.0`s into the exact integer the
+//! unweighted code gets from `len as f64`) — so the returned `τ` is
+//! bit-identical, which is what lets the weighted ℓ₁,∞ and bi-level
+//! operators reduce bit-exactly to the unweighted family.
+
+pub use crate::projection::simplex::Threshold;
+
+const FEASIBLE: Threshold = Threshold { tau: 0.0, k: 0 };
+
+/// Weighted sum of positive parts `Σ_{yᵢ>0} wᵢyᵢ` (the radius at which τ
+/// hits exactly 0). With `w ≡ 1` the filtered adds are bit-identical to
+/// [`crate::projection::simplex::positive_mass`].
+#[inline]
+pub fn weighted_positive_mass(y: &[f32], w: &[f32]) -> f64 {
+    debug_assert_eq!(y.len(), w.len());
+    y.iter()
+        .zip(w)
+        .filter(|(&v, _)| v > 0.0)
+        .map(|(&v, &wi)| wi as f64 * v as f64)
+        .sum()
+}
+
+/// Sort-based weighted threshold (oracle implementation).
+pub fn weighted_threshold_sort(y: &[f32], w: &[f32], a: f64) -> Threshold {
+    assert!(a >= 0.0);
+    assert_eq!(y.len(), w.len(), "one weight per coordinate");
+    if weighted_positive_mass(y, w) <= a {
+        return Threshold { k: y.iter().filter(|&&v| v > 0.0).count(), ..FEASIBLE };
+    }
+    // Pairs (y, w) sorted by breakpoint y/w descending.
+    let mut z: Vec<(f64, f64)> =
+        y.iter().zip(w).map(|(&v, &wi)| (v as f64, wi as f64)).collect();
+    z.sort_by(|p, q| (q.0 / q.1).partial_cmp(&(p.0 / p.1)).unwrap());
+    let mut cum_wy = 0.0f64;
+    let mut cum_w2 = 0.0f64;
+    let mut tau = 0.0f64;
+    let mut k = 0usize;
+    for (i, &(yi, wi)) in z.iter().enumerate() {
+        cum_wy += wi * yi;
+        cum_w2 += wi * wi;
+        let t = (cum_wy - a) / cum_w2;
+        if yi / wi > t {
+            tau = t;
+            k = i + 1;
+        } else {
+            break;
+        }
+    }
+    Threshold { tau: tau.max(0.0), k }
+}
+
+/// Michelot's iterative algorithm with weights: repeatedly discard pairs
+/// with `yᵢ ≤ τwᵢ` and re-solve the restricted threshold.
+pub fn weighted_threshold_michelot(y: &[f32], w: &[f32], a: f64) -> Threshold {
+    assert!(a >= 0.0);
+    assert_eq!(y.len(), w.len(), "one weight per coordinate");
+    if weighted_positive_mass(y, w) <= a {
+        return Threshold { k: y.iter().filter(|&&v| v > 0.0).count(), ..FEASIBLE };
+    }
+    let mut v: Vec<(f64, f64)> =
+        y.iter().zip(w).map(|(&x, &wi)| (x as f64, wi as f64)).collect();
+    loop {
+        let sum_wy: f64 = v.iter().map(|&(x, wi)| wi * x).sum();
+        let sum_w2: f64 = v.iter().map(|&(_, wi)| wi * wi).sum();
+        let tau = (sum_wy - a) / sum_w2;
+        let before = v.len();
+        v.retain(|&(x, wi)| x > tau * wi);
+        if v.len() == before || v.is_empty() {
+            return Threshold { tau: tau.max(0.0), k: v.len() };
+        }
+    }
+}
+
+/// Condat-style weighted threshold (default). Mirrors
+/// [`crate::projection::simplex::threshold_condat`] step for step with the
+/// running state `(W, Q) = (Σ wᵢyᵢ, Σ wᵢ²)` over the candidate active set
+/// and `ρ = (W − a)/Q`; membership tests compare `yᵢ` against `ρ·wᵢ`.
+pub fn weighted_threshold_condat(y: &[f32], w: &[f32], a: f64) -> Threshold {
+    assert!(a >= 0.0);
+    assert_eq!(y.len(), w.len(), "one weight per coordinate");
+    if y.is_empty() {
+        return FEASIBLE;
+    }
+    // Degenerate radius: everything must go under water. τ = max yᵢ/wᵢ is
+    // the canonical level.
+    if a == 0.0 {
+        let mx = y
+            .iter()
+            .zip(w)
+            .fold(f64::NEG_INFINITY, |m, (&v, &wi)| m.max(v as f64 / wi as f64));
+        if mx <= 0.0 {
+            return FEASIBLE;
+        }
+        return Threshold { tau: mx, k: 0 };
+    }
+    // v: candidate active set of (y, w) pairs.
+    // Invariant: rho = (wsum − a)/qsum with wsum = Σ w·y, qsum = Σ w².
+    let mut v: Vec<(f64, f64)> = Vec::with_capacity(16);
+    let mut vtilde: Vec<(f64, f64)> = Vec::new();
+    let (y0, w0) = (y[0] as f64, w[0] as f64);
+    v.push((y0, w0));
+    let mut wsum = w0 * y0;
+    let mut qsum = w0 * w0;
+    let mut rho = (w0 * y0 - a) / (w0 * w0);
+    for (&yi, &wi) in y[1..].iter().zip(&w[1..]) {
+        let (yn, wn) = (yi as f64, wi as f64);
+        if yn > rho * wn {
+            // ρ of v ∪ {n}, updated incrementally.
+            rho += wn * (yn - rho * wn) / (qsum + wn * wn);
+            if rho > (wn * yn - a) / (wn * wn) {
+                v.push((yn, wn));
+                wsum += wn * yn;
+                qsum += wn * wn;
+            } else {
+                // Current v likely all dominated: park it, restart from n.
+                vtilde.append(&mut v);
+                v.push((yn, wn));
+                wsum = wn * yn;
+                qsum = wn * wn;
+                rho = (wn * yn - a) / (wn * wn);
+            }
+        }
+    }
+    if !vtilde.is_empty() {
+        for &(yn, wn) in &vtilde {
+            if yn > rho * wn {
+                v.push((yn, wn));
+                wsum += wn * yn;
+                qsum += wn * wn;
+                rho += wn * (yn - rho * wn) / qsum;
+            }
+        }
+    }
+    // Cleanup sweeps: drop members with y ≤ ρ·w until stable.
+    loop {
+        let before = v.len();
+        let mut i = 0;
+        while i < v.len() {
+            let (yi, wi) = v[i];
+            if yi <= rho * wi {
+                v.swap_remove(i);
+                wsum -= wi * yi;
+                qsum -= wi * wi;
+                if v.is_empty() {
+                    // FP pathology only (exact arithmetic keeps ≥ 1
+                    // element for a > 0): fall back to the sort oracle.
+                    return weighted_threshold_sort(y, w, a);
+                }
+                rho += wi * (rho * wi - yi) / qsum;
+            } else {
+                i += 1;
+            }
+        }
+        if v.len() == before {
+            break;
+        }
+    }
+    // Recompute ρ from the exact running sums for numerical robustness.
+    let tau = (wsum - a) / qsum;
+    if tau <= 0.0 {
+        return Threshold { k: y.iter().filter(|&&x| x > 0.0).count(), ..FEASIBLE };
+    }
+    Threshold { tau, k: v.len() }
+}
+
+/// Apply a weighted water level in place: `yᵢ ← max(yᵢ − τ·wᵢ, 0)`.
+pub fn apply_weighted_threshold(y: &mut [f32], w: &[f32], tau: f64) {
+    debug_assert_eq!(y.len(), w.len());
+    for (v, &wi) in y.iter_mut().zip(w) {
+        *v = (*v as f64 - tau * wi as f64).max(0.0) as f32;
+    }
+}
+
+/// Project `y` onto `Δ_{w,1}^a` in place using the Condat-style kernel.
+pub fn project_weighted_simplex(y: &mut [f32], w: &[f32], a: f64) {
+    let t = weighted_threshold_condat(y, w, a);
+    if t.tau > 0.0 {
+        apply_weighted_threshold(y, w, t.tau);
+    } else {
+        for v in y.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::simplex::{threshold_condat, threshold_michelot, threshold_sort};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn gen_case(rng: &mut Rng) -> (Vec<f32>, Vec<f32>, f64) {
+        let n = rng.range(1, 50);
+        let mut y = vec![0.0f32; n];
+        let mut w = vec![1.0f32; n];
+        for v in y.iter_mut() {
+            *v = if rng.chance(0.2) {
+                0.0
+            } else if rng.chance(0.2) {
+                -rng.f32()
+            } else if rng.chance(0.25) {
+                0.5 // ties
+            } else {
+                rng.f32() * 3.0
+            };
+        }
+        for wi in w.iter_mut() {
+            *wi = 0.2 + rng.f32() * 4.0;
+        }
+        let a = rng.f64() * 2.0;
+        (y, w, a)
+    }
+
+    #[test]
+    fn known_small_case() {
+        // y = [3, 1], w = [1, 2], a = 1. Breakpoints y/w: 3 and 0.5.
+        // k=1: τ = (3−1)/1 = 2 > 0.5 ⇒ stop; x = [1, 0], Σ w·x = 1. ✓
+        let y = [3.0f32, 1.0];
+        let w = [1.0f32, 2.0];
+        for t in [
+            weighted_threshold_sort(&y, &w, 1.0),
+            weighted_threshold_michelot(&y, &w, 1.0),
+            weighted_threshold_condat(&y, &w, 1.0),
+        ] {
+            assert!((t.tau - 2.0).abs() < 1e-9, "{t:?}");
+            assert_eq!(t.k, 1);
+        }
+    }
+
+    #[test]
+    fn uniform_weights_reduce_bitwise_to_unweighted() {
+        let mut rng = Rng::new(0x11E1);
+        for _ in 0..300 {
+            let (y, _, a) = gen_case(&mut rng);
+            let ones = vec![1.0f32; y.len()];
+            let (ws, wm, wc) = (
+                weighted_threshold_sort(&y, &ones, a),
+                weighted_threshold_michelot(&y, &ones, a),
+                weighted_threshold_condat(&y, &ones, a),
+            );
+            let (us, um, uc) =
+                (threshold_sort(&y, a), threshold_michelot(&y, a), threshold_condat(&y, a));
+            assert_eq!(ws.tau.to_bits(), us.tau.to_bits(), "sort drifted: {ws:?} vs {us:?}");
+            assert_eq!(wm.tau.to_bits(), um.tau.to_bits(), "michelot drifted");
+            assert_eq!(wc.tau.to_bits(), uc.tau.to_bits(), "condat drifted");
+            assert_eq!((ws.k, wm.k, wc.k), (us.k, um.k, uc.k));
+        }
+    }
+
+    #[test]
+    fn agreement_property() {
+        prop::check(
+            "weighted thresholds agree (sort = michelot = condat)",
+            300,
+            0xC0FFE2,
+            gen_case,
+            |(y, w, a)| {
+                let ts = weighted_threshold_sort(y, w, *a);
+                let tm = weighted_threshold_michelot(y, w, *a);
+                let tc = weighted_threshold_condat(y, w, *a);
+                if (ts.tau - tm.tau).abs() > 1e-6 {
+                    return Err(format!("sort {ts:?} != michelot {tm:?}"));
+                }
+                if (ts.tau - tc.tau).abs() > 1e-6 {
+                    return Err(format!("sort {ts:?} != condat {tc:?}"));
+                }
+                // Feasibility: Σ w·x = a when the input was infeasible.
+                if ts.tau > 0.0 {
+                    let s: f64 = y
+                        .iter()
+                        .zip(w)
+                        .map(|(&v, &wi)| {
+                            wi as f64 * (v as f64 - ts.tau * wi as f64).max(0.0)
+                        })
+                        .sum();
+                    if (s - a).abs() > 1e-5 {
+                        return Err(format!("projected weighted mass {s} != radius {a}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_radius_drowns_by_price() {
+        let y = [0.4f32, 0.6];
+        let w = [2.0f32, 1.0];
+        let t = weighted_threshold_condat(&y, &w, 0.0);
+        assert!((t.tau - 0.6).abs() < 1e-12, "τ = max y/w, got {t:?}");
+        let mut z = y;
+        project_weighted_simplex(&mut z, &w, 0.0);
+        assert!(z.iter().all(|&v| v.abs() < 1e-6), "{z:?}");
+    }
+
+    #[test]
+    fn single_element_and_negatives() {
+        let t = weighted_threshold_condat(&[6.0], &[2.0], 2.0);
+        // τ = (2·6 − 2)/4 = 2.5; x = 6 − 2·2.5 = 1; w·x = 2. ✓
+        assert!((t.tau - 2.5).abs() < 1e-9, "{t:?}");
+        let mut y = [-1.0f32, 0.5, -0.2];
+        project_weighted_simplex(&mut y, &[1.0, 1.0, 1.0], 10.0);
+        assert_eq!(y.to_vec(), vec![0.0, 0.5, 0.0]);
+    }
+}

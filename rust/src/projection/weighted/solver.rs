@@ -1,0 +1,629 @@
+//! The weighted ℓ₁,∞ projection: [`WeightedSolver`] (workspace-owning,
+//! warm-startable) and the one-shot [`project_l1inf_weighted`] wrappers.
+//!
+//! # The weighted dual
+//!
+//! Projecting onto `{X : Σ_g w_g·max_i |X[g,i]| ≤ C}` clips each group at
+//! a water level `μ_g`; the KKT conditions couple the groups through one
+//! scalar *price* λ ≥ 0: a surviving group `g` loses ℓ₁ mass exactly
+//! `λ·w_g` (expensive groups pay proportionally more), a dead group has
+//! `‖y_g‖₁ ≤ λ·w_g`, and `Σ_g w_g μ_g = C` at the optimum. With `w ≡ 1`,
+//! λ *is* the unweighted θ* of Lemma 1. The root function
+//!
+//! ```text
+//!   Φ_w(λ) = Σ_g w_g · μ_g(λ·w_g)
+//! ```
+//!
+//! is continuous, convex, piecewise linear and strictly decreasing until
+//! it hits 0, so λ* is found exactly like the unweighted gold solver:
+//! safeguarded bisection + one exact linear solve on the final piece
+//! (`λ = (Σ_A w_g S_{k_g}/k_g − C) / (Σ_A w_g²/k_g)`, the weighted
+//! Eq. 19).
+//!
+//! # Uniform-weights bit-identity
+//!
+//! Every arithmetic step multiplies or divides by `w_g` exactly where the
+//! unweighted pipeline ([`crate::projection::l1inf::solver::project_with`]
+//! driving [`crate::projection::l1inf::bisect::BisectSolver`]) has an
+//! implicit `1.0`, in the same order — so with all-ones weights the
+//! projected entries, λ and every `ProjInfo` field are **bit-identical**
+//! to `project_l1inf(..., Algorithm::Bisection)`. `tests/differential.rs`
+//! enforces this on every suite shape.
+//!
+//! # Workspace lifecycle & warm starts
+//!
+//! [`WeightedSolver`] follows the same reuse discipline as the exact
+//! solver structs: construction allocates nothing, the first projection
+//! sizes the scratch, same-shaped repeats are allocation-free. With
+//! `hint = None` the solver self-warm-starts from its own `last_theta`
+//! (like [`crate::projection::bilevel::BilevelSolver`] self-warms from
+//! its radii); hints are *advisory* — any `f64` is safe (NaN/±∞/negative/
+//! absurd magnitudes are rejected, cold fallback), a usable hint only
+//! tightens the bisection bracket, and the final exact piece solve makes
+//! warm and cold results agree to solver precision regardless.
+
+use crate::projection::grouped::GroupedViewMut;
+use crate::projection::l1inf::{apply_water_levels_view, ProjInfo, SolveStats};
+use crate::projection::simplex;
+
+/// `Φ_w(λ) = Σ_g w_g·μ_g(λ·w_g)` over contiguous nonnegative grouped
+/// data — the weighted root function (group-order accumulation; with
+/// `w ≡ 1` bit-identical to [`crate::projection::l1inf::phi`]).
+pub fn phi_weighted(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    lambda: f64,
+) -> f64 {
+    debug_assert_eq!(weights.len(), n_groups);
+    let mut p = 0.0f64;
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        let wg = weights[g] as f64;
+        let theta_g = lambda * wg;
+        if simplex::positive_mass(grp) > theta_g {
+            p += wg * simplex::water_level_for_removed_mass(grp, theta_g).tau;
+        }
+    }
+    p
+}
+
+/// Per-group water levels `μ_g(λ·w_g)` written into `out` (cleared
+/// first); with `w ≡ 1` bit-identical to
+/// [`crate::projection::l1inf::water_levels_into`].
+pub fn water_levels_weighted_into(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    lambda: f64,
+    out: &mut Vec<f64>,
+) {
+    debug_assert_eq!(weights.len(), n_groups);
+    out.clear();
+    out.reserve(n_groups);
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        let theta_g = lambda * weights[g] as f64;
+        out.push(if simplex::positive_mass(grp) <= theta_g {
+            0.0
+        } else {
+            simplex::water_level_for_removed_mass(grp, theta_g).tau
+        });
+    }
+}
+
+/// Bisection on `Φ_w(λ) = c` + exact final-piece solve. Mirrors the
+/// unweighted gold solver's `solve_bracketed` step for step; `hi` is the
+/// caller-computed upper bracket end `max_g S_g/w_g` (where Φ_w = 0).
+fn solve_bracketed_weighted(
+    abs: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    c: f64,
+    hint: Option<f64>,
+    mut hi: f64,
+) -> SolveStats {
+    debug_assert!(c > 0.0);
+    let mut lo = 0.0f64;
+    let mut evals = 0usize;
+    let mut used_hint = None;
+    if let Some(h) = hint {
+        if h.is_finite() && h > 0.0 && h < hi {
+            used_hint = Some(h);
+            let p = phi_weighted(abs, n_groups, group_len, weights, h);
+            evals += 1;
+            if p > c {
+                lo = h; // λ* above the hint: probe upward
+                let h2 = (2.0 * h).min(hi);
+                if h2 > lo && h2 < hi {
+                    let p2 = phi_weighted(abs, n_groups, group_len, weights, h2);
+                    evals += 1;
+                    if p2 > c {
+                        lo = h2;
+                    } else {
+                        hi = h2;
+                    }
+                }
+            } else {
+                hi = h; // λ* at or below the hint: probe downward
+                let h2 = 0.5 * h;
+                let p2 = phi_weighted(abs, n_groups, group_len, weights, h2);
+                evals += 1;
+                if p2 > c {
+                    lo = h2;
+                } else {
+                    hi = h2;
+                }
+            }
+        }
+    }
+    for _ in 0..200 {
+        if hi - lo <= 1e-14 * hi.max(1.0) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        let p = phi_weighted(abs, n_groups, group_len, weights, mid);
+        evals += 1;
+        if p > c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Exact solve on the (almost surely unique) piece containing [lo, hi]:
+    // μ_g = (S_{k_g} − λw_g)/k_g on the piece, Σ w_g μ_g = c.
+    let mid = 0.5 * (lo + hi);
+    let mut t1 = 0.0f64; // Σ w_g · S_k / k over active groups
+    let mut t2 = 0.0f64; // Σ w_g² / k over active groups
+    for g in 0..n_groups {
+        let grp = &abs[g * group_len..(g + 1) * group_len];
+        let wg = weights[g] as f64;
+        let theta_g = mid * wg;
+        if simplex::positive_mass(grp) <= theta_g {
+            continue; // dead at λ*
+        }
+        let t = simplex::water_level_for_removed_mass(grp, theta_g);
+        if t.tau <= 0.0 || t.k == 0 {
+            continue;
+        }
+        // S_k = θ_g + k·μ on this piece.
+        let s_k = theta_g + t.k as f64 * t.tau;
+        t1 += wg * (s_k / t.k as f64);
+        t2 += wg * wg / t.k as f64;
+    }
+    let theta = if t2 > 0.0 { (t1 - c) / t2 } else { mid };
+    SolveStats { theta, work: evals, touched_groups: n_groups, theta_hint: used_hint }
+}
+
+/// Reusable workspace for the weighted ℓ₁,∞ projection (lifecycle and
+/// hint contract in the module docs).
+#[derive(Debug, Default)]
+pub struct WeightedSolver {
+    /// Contiguous `|Y|` gather of the last solve.
+    abs: Vec<f32>,
+    /// Per-group max `|·|` from the fused pre-pass.
+    maxes: Vec<f64>,
+    /// Per-group ℓ₁ mass from the fused pre-pass.
+    sums: Vec<f64>,
+    /// Water levels μ_g of the last solve.
+    mus: Vec<f64>,
+    /// Reusable all-ones price vector for [`WeightedSolver::project_opt`]
+    /// callers that pass no weights (uniform prices without a per-call
+    /// allocation).
+    ones: Vec<f32>,
+    /// λ* of the last infeasible projection (self-warm-start) and the
+    /// shape it was solved for — a reshaped matrix is a different problem,
+    /// so a stale λ is only self-fed when the shape still matches (it
+    /// would be *safe* anyway, but staying cold keeps `work` honest).
+    last_theta: Option<(f64, usize, usize)>,
+}
+
+impl WeightedSolver {
+    /// Empty workspace; nothing allocated until the first projection.
+    pub fn new() -> WeightedSolver {
+        WeightedSolver::default()
+    }
+
+    /// λ* of the most recent infeasible projection, if any.
+    pub fn last_theta(&self) -> Option<f64> {
+        self.last_theta.map(|(t, _, _)| t)
+    }
+
+    /// Water levels μ_g of the most recent infeasible projection.
+    pub fn water_levels(&self) -> &[f64] {
+        &self.mus
+    }
+
+    /// Forget the warm-start state while keeping buffer capacity (shared
+    /// pools call this so recycled workspaces never self-warm from an
+    /// unrelated request — warm starts then flow through the key-addressed
+    /// cache instead).
+    pub fn reset_warm_state(&mut self) {
+        self.last_theta = None;
+    }
+
+    /// Approximate resident workspace footprint in f32-equivalent
+    /// elements (mirrors `Solver::workspace_elems`).
+    pub fn workspace_elems(&self) -> usize {
+        self.abs.capacity()
+            + self.ones.capacity()
+            + 2 * (self.maxes.capacity() + self.sums.capacity() + self.mus.capacity())
+    }
+
+    /// [`WeightedSolver::project`] with optional prices: `None` means
+    /// uniform weights, served from a reusable all-ones workspace buffer
+    /// (no per-call allocation in steady state) — the result is then
+    /// bit-identical to the exact bisection projection.
+    pub fn project_opt(
+        &mut self,
+        view: &mut GroupedViewMut<'_>,
+        c: f64,
+        weights: Option<&[f32]>,
+        hint: Option<f64>,
+    ) -> ProjInfo {
+        match weights {
+            Some(w) => self.project(view, c, w, hint),
+            None => {
+                let n = view.n_groups();
+                if self.ones.len() != n {
+                    self.ones.clear();
+                    self.ones.resize(n, 1.0);
+                }
+                // Lend the buffer out for the call (project borrows self
+                // mutably), then restore it.
+                let ones = std::mem::take(&mut self.ones);
+                let info = self.project(view, c, &ones, hint);
+                self.ones = ones;
+                info
+            }
+        }
+    }
+
+    /// Project `view` onto the weighted ball `Σ_g w_g·max|X_g| ≤ c` in
+    /// place. `weights` holds one strictly positive finite price per
+    /// group. `hint` is an advisory λ warm start (any value is safe);
+    /// with `hint = None` the solver self-warm-starts from its own last
+    /// λ* when the shape matches.
+    ///
+    /// The returned [`ProjInfo`] mirrors the exact family's metadata:
+    /// `theta` carries λ*, `radius_before`/`radius_after` are the
+    /// *weighted* norms.
+    pub fn project(
+        &mut self,
+        view: &mut GroupedViewMut<'_>,
+        c: f64,
+        weights: &[f32],
+        hint: Option<f64>,
+    ) -> ProjInfo {
+        assert!(c >= 0.0, "radius must be nonnegative");
+        let n_groups = view.n_groups();
+        let group_len = view.group_len();
+        assert_eq!(weights.len(), n_groups, "one weight per group");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "weights must be strictly positive finite prices"
+        );
+
+        // 1. Fused pre-pass on the dispatched dense kernels (identical to
+        //    the unweighted `project_with` pre-pass), then the weighted
+        //    radius folded over groups in the same order — with w ≡ 1 the
+        //    adds are the very adds `group_stats_into` returned.
+        {
+            let ro = view.as_view();
+            crate::projection::dense::group_stats_into(&ro, &mut self.maxes, &mut self.sums);
+        }
+        let mut radius_before = 0.0f64;
+        for (g, &w) in weights.iter().enumerate() {
+            radius_before += w as f64 * self.maxes[g];
+        }
+
+        // 2a. Already inside the ball: identity.
+        if radius_before <= c {
+            let zero_groups = self.maxes.iter().filter(|&&m| m == 0.0).count();
+            self.mus.clear();
+            return ProjInfo {
+                radius_before,
+                radius_after: radius_before,
+                theta: 0.0,
+                zero_groups,
+                feasible: true,
+                stats: SolveStats::default(),
+            };
+        }
+        // 2b. Degenerate radius: the ball is {0}.
+        if c == 0.0 {
+            view.fill(0.0);
+            self.mus.clear();
+            self.mus.resize(n_groups, 0.0);
+            return ProjInfo {
+                radius_before,
+                radius_after: 0.0,
+                theta: radius_before, // limit interpretation
+                zero_groups: n_groups,
+                feasible: false,
+                stats: SolveStats::default(),
+            };
+        }
+
+        // 3. λ solve: |Y| gather (blocked for column views), upper
+        //    bracket end max_g S_g/w_g, then the mirrored bisection. The
+        //    self-warm λ* enters only when no explicit hint was given and
+        //    the shape matches.
+        view.as_view().gather_abs(&mut self.abs);
+        let mut hi = 0.0f64;
+        for (g, &w) in weights.iter().enumerate() {
+            hi = hi.max(self.sums[g] / w as f64);
+        }
+        let hint = hint.or_else(|| match self.last_theta {
+            Some((t, g, l)) if g == n_groups && l == group_len => Some(t),
+            _ => None,
+        });
+        let stats =
+            solve_bracketed_weighted(&self.abs, n_groups, group_len, weights, c, hint, hi);
+        self.last_theta = Some((stats.theta, n_groups, group_len));
+
+        // 4. Water levels + clip through the (possibly strided) view.
+        water_levels_weighted_into(
+            &self.abs, n_groups, group_len, weights, stats.theta, &mut self.mus,
+        );
+        apply_water_levels_view(view, &self.mus);
+
+        // 5. Weighted ‖X‖ and zero-group count folded from the pre-pass
+        //    maxima — no matrix rescan (mirrors `project_with` step 5 with
+        //    a w_g factor on each add).
+        let mut radius_after = 0.0f64;
+        let mut zero_groups = 0usize;
+        for g in 0..n_groups {
+            let mu = self.mus[g];
+            if mu <= 0.0 {
+                zero_groups += 1;
+            } else {
+                // Exactly the f32 value the clip wrote.
+                let mu32 = (mu as f32) as f64;
+                let group_max = if self.maxes[g] > mu32 { mu32 } else { self.maxes[g] };
+                radius_after += weights[g] as f64 * group_max;
+            }
+        }
+        ProjInfo { radius_before, radius_after, theta: stats.theta, zero_groups, feasible: false, stats }
+    }
+}
+
+/// One-shot weighted ℓ₁,∞ projection of a contiguous grouped matrix
+/// (fresh workspace per call; hot loops should hold a [`WeightedSolver`]).
+/// With all-ones `weights` the result is bit-identical to
+/// [`crate::projection::l1inf::project_l1inf`] with
+/// [`crate::projection::l1inf::Algorithm::Bisection`].
+pub fn project_l1inf_weighted(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    weights: &[f32],
+) -> ProjInfo {
+    project_l1inf_weighted_hinted(data, n_groups, group_len, c, weights, None)
+}
+
+/// [`project_l1inf_weighted`] with an advisory λ warm-start hint.
+pub fn project_l1inf_weighted_hinted(
+    data: &mut [f32],
+    n_groups: usize,
+    group_len: usize,
+    c: f64,
+    weights: &[f32],
+    hint: Option<f64>,
+) -> ProjInfo {
+    WeightedSolver::new().project(
+        &mut GroupedViewMut::new(data, n_groups, group_len),
+        c,
+        weights,
+        hint,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{project_l1inf, Algorithm};
+    use crate::projection::weighted::norm_l1inf_weighted;
+    use crate::util::rng::Rng;
+
+    fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        let mut y = vec![0.0f32; len];
+        for v in y.iter_mut() {
+            *v = (rng.f32() - 0.5) * scale;
+        }
+        y
+    }
+
+    fn random_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| 0.2 + rng.f32() * 4.0).collect()
+    }
+
+    #[test]
+    fn uniform_weights_bit_identical_to_bisection() {
+        let mut rng = Rng::new(0x3E1);
+        for (g, l) in [(13, 9), (1, 17), (25, 1), (8, 8)] {
+            let data = random_signed(&mut rng, g * l, 3.0);
+            let ones = vec![1.0f32; g];
+            for c in [0.0, 0.4, 2.0, 1e6] {
+                let mut exact = data.clone();
+                let ei = project_l1inf(&mut exact, g, l, c, Algorithm::Bisection);
+                let mut weighted = data.clone();
+                let wi = project_l1inf_weighted(&mut weighted, g, l, c, &ones);
+                assert_eq!(exact, weighted, "{g}x{l} c={c}: entries drifted");
+                assert_eq!(ei.theta.to_bits(), wi.theta.to_bits(), "{g}x{l} c={c}");
+                assert_eq!(ei.radius_before.to_bits(), wi.radius_before.to_bits());
+                assert_eq!(ei.radius_after.to_bits(), wi.radius_after.to_bits());
+                assert_eq!(ei.zero_groups, wi.zero_groups);
+                assert_eq!(ei.feasible, wi.feasible);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_result_is_feasible_and_on_the_boundary() {
+        let mut rng = Rng::new(0x3E2);
+        for (g, l) in [(12, 7), (30, 3), (4, 25)] {
+            let data = random_signed(&mut rng, g * l, 3.0);
+            let w = random_weights(&mut rng, g);
+            let norm = norm_l1inf_weighted(crate::projection::GroupedView::new(&data, g, l), &w);
+            for frac in [0.1, 0.5, 0.9] {
+                let c = frac * norm;
+                let mut x = data.clone();
+                let info = project_l1inf_weighted(&mut x, g, l, c, &w);
+                let after =
+                    norm_l1inf_weighted(crate::projection::GroupedView::new(&x, g, l), &w);
+                assert!(after <= c * (1.0 + 1e-6) + 1e-9, "{after} > {c}");
+                assert!(
+                    (after - c).abs() <= 1e-6 * c.max(1.0),
+                    "{g}x{l} frac={frac}: not on the boundary: {after} vs {c}"
+                );
+                assert!((after - info.radius_after).abs() <= 1e-9 * after.max(1.0));
+                // Certified optimal.
+                crate::projection::kkt::verify_l1inf_weighted(
+                    &data,
+                    &x,
+                    g,
+                    l,
+                    &w,
+                    c,
+                    crate::projection::kkt::Tolerance::default(),
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn expensive_groups_pay_more_mass() {
+        // Two identical groups, group 1 priced 4×: the optimum removes 4×
+        // the mass from it (θ_g = λ·w_g).
+        let data = vec![1.0f32, 0.8, 0.6, 1.0, 0.8, 0.6];
+        let w = [1.0f32, 4.0];
+        let mut x = data.clone();
+        project_l1inf_weighted(&mut x, 2, 3, 1.5, &w);
+        let removed: Vec<f64> = (0..2)
+            .map(|g| {
+                (0..3)
+                    .map(|i| (data[g * 3 + i] - x[g * 3 + i]) as f64)
+                    .sum()
+            })
+            .collect();
+        assert!(removed[1] > 0.0 && removed[0] > 0.0);
+        assert!(
+            (removed[1] / removed[0] - 4.0).abs() < 1e-3,
+            "mass ratio {} != price ratio 4",
+            removed[1] / removed[0]
+        );
+    }
+
+    #[test]
+    fn hostile_hints_are_safe_and_self_warm_matches_cold() {
+        let mut rng = Rng::new(0x3E3);
+        let (g, l) = (25, 6);
+        let data = random_signed(&mut rng, g * l, 2.0);
+        let w = random_weights(&mut rng, g);
+        let mut cold_m = data.clone();
+        let cold = project_l1inf_weighted(&mut cold_m, g, l, 0.7, &w);
+        for hint in [
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -1.0,
+            0.0,
+            1e-12,
+            cold.theta,
+            cold.theta * 1.05,
+            cold.theta * 100.0,
+        ] {
+            let mut m = data.clone();
+            let info = project_l1inf_weighted_hinted(&mut m, g, l, 0.7, &w, Some(hint));
+            assert!(
+                (info.theta - cold.theta).abs() <= 1e-9 * cold.theta.max(1.0),
+                "hint {hint}: λ {} vs {}",
+                info.theta,
+                cold.theta
+            );
+            for (a, b) in m.iter().zip(&cold_m) {
+                assert!((a - b).abs() <= 1e-6, "hint {hint}");
+            }
+        }
+        // Self-warm: a persistent workspace re-projecting drifted copies.
+        let mut solver = WeightedSolver::new();
+        assert_eq!(solver.last_theta(), None);
+        let mut drifting = data.clone();
+        for step in 0..4 {
+            for v in drifting.iter_mut() {
+                *v *= 1.0 + 0.001 * (rng.f32() - 0.5);
+            }
+            let mut fresh = drifting.clone();
+            let fi = project_l1inf_weighted(&mut fresh, g, l, 0.7, &w);
+            let mut reused = drifting.clone();
+            let ri = solver.project(
+                &mut GroupedViewMut::new(&mut reused, g, l),
+                0.7,
+                &w,
+                None,
+            );
+            assert!(
+                (ri.theta - fi.theta).abs() <= 1e-9 * fi.theta.max(1.0),
+                "step {step}"
+            );
+            for (a, b) in reused.iter().zip(&fresh) {
+                assert!((a - b).abs() <= 1e-6, "step {step}");
+            }
+            assert_eq!(solver.last_theta(), Some(ri.theta));
+        }
+        // Shape change discards the stale self-warm λ but stays correct.
+        let small = random_signed(&mut rng, 4 * 3, 2.0);
+        let ws = random_weights(&mut rng, 4);
+        let mut fresh = small.clone();
+        let fi = project_l1inf_weighted(&mut fresh, 4, 3, 0.3, &ws);
+        let mut reused = small.clone();
+        let ri = solver.project(&mut GroupedViewMut::new(&mut reused, 4, 3), 0.3, &ws, None);
+        assert!((ri.theta - fi.theta).abs() <= 1e-9 * fi.theta.max(1.0));
+        assert_eq!(fresh, reused, "shape change leaked stale state");
+    }
+
+    #[test]
+    fn feasible_and_degenerate_paths() {
+        let mut y = vec![0.1f32, -0.2, 0.05, 0.0, 0.1, 0.0];
+        let orig = y.clone();
+        let info = project_l1inf_weighted(&mut y, 2, 3, 10.0, &[1.0, 2.0]);
+        assert!(info.feasible);
+        assert_eq!(y, orig);
+        assert_eq!(info.theta, 0.0);
+        let mut z = vec![1.0f32, 2.0, 3.0, 4.0];
+        let zi = project_l1inf_weighted(&mut z, 2, 2, 0.0, &[1.0, 2.0]);
+        assert!(z.iter().all(|&v| v == 0.0));
+        assert_eq!(zi.zero_groups, 2);
+    }
+
+    #[test]
+    fn column_view_matches_transposed_reference() {
+        let mut rng = Rng::new(0x3E4);
+        let (rows, cols) = (11, 7);
+        let data = random_signed(&mut rng, rows * cols, 2.0);
+        let w = random_weights(&mut rng, cols);
+        let mut transposed = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                transposed[c * rows + r] = data[r * cols + c];
+            }
+        }
+        let ti = project_l1inf_weighted(&mut transposed, cols, rows, 0.9, &w);
+        let mut strided = data.clone();
+        let si = WeightedSolver::new().project(
+            &mut GroupedViewMut::columns(&mut strided, rows, cols),
+            0.9,
+            &w,
+            None,
+        );
+        assert_eq!(ti.theta.to_bits(), si.theta.to_bits());
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(
+                    strided[r * cols + c].to_bits(),
+                    transposed[c * rows + r].to_bits(),
+                    "column view must be bit-identical to the transposed run"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_norm_helper_consistency() {
+        // radius_before reported by the solver equals the standalone norm.
+        let mut rng = Rng::new(0x3E5);
+        let (g, l) = (9, 5);
+        let data = random_signed(&mut rng, g * l, 2.0);
+        let w = random_weights(&mut rng, g);
+        let norm = norm_l1inf_weighted(crate::projection::GroupedView::new(&data, g, l), &w);
+        let mut x = data.clone();
+        let info = project_l1inf_weighted(&mut x, g, l, 0.5 * norm, &w);
+        assert_eq!(info.radius_before.to_bits(), norm.to_bits());
+    }
+}

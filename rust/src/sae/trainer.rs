@@ -4,6 +4,7 @@
 //! and the double-descent (lottery-ticket rewind) schedule.
 
 use super::metrics::W1Metrics;
+use crate::projection::grouped::GroupedView;
 use crate::projection::l1inf::Algorithm;
 
 #[cfg(feature = "pjrt")]
@@ -21,11 +22,13 @@ use crate::projection::l1inf::{new_solver, project_with, Solver};
 #[cfg(feature = "pjrt")]
 use crate::projection::masked::project_masked;
 #[cfg(feature = "pjrt")]
+use crate::projection::weighted::WeightedSolver;
+#[cfg(feature = "pjrt")]
 use crate::projection::{l1, l12};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{ArtifactKind, Engine, ModelConfig, Tensor};
 #[cfg(feature = "pjrt")]
-use crate::serve::cache::ThetaCache;
+use crate::serve::cache::{CacheKey, Family, ThetaCache};
 #[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
 #[cfg(feature = "pjrt")]
@@ -61,6 +64,16 @@ pub enum ProjectionMode {
     BilevelCols { c: f64 },
     /// Masked ℓ₁,∞ (Eq. 20): keep the support, don't bound values.
     L1InfMasked { c: f64 },
+    /// **Weighted** ℓ₁,∞ ball of radius `c` over feature rows
+    /// ([`crate::projection::weighted`]): per-feature prices from
+    /// [`TrainConfig::weights`] scale each row's budget share, so
+    /// expensive (e.g. noisy biological) features pay more per unit of ℓ∞
+    /// radius. The logged θ is the price λ. Uniform prices reduce
+    /// bit-exactly to the exact bisection projection.
+    WeightedL1Inf { c: f64 },
+    /// [`ProjectionMode::WeightedL1Inf`] over encoder *columns* through
+    /// the strided view (one price per hidden unit).
+    WeightedL1InfCols { c: f64 },
 }
 
 impl ProjectionMode {
@@ -74,7 +87,42 @@ impl ProjectionMode {
             ProjectionMode::Bilevel { .. } => "bilevel",
             ProjectionMode::BilevelCols { .. } => "bilevel_cols",
             ProjectionMode::L1InfMasked { .. } => "l1inf_masked",
+            ProjectionMode::WeightedL1Inf { .. } => "weighted_l1inf",
+            ProjectionMode::WeightedL1InfCols { .. } => "weighted_l1inf_cols",
         }
+    }
+}
+
+/// Where the per-group prices of the weighted projection modes come from.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum WeightSource {
+    /// All groups priced `1.0` (the weighted operator then reduces
+    /// bit-exactly to the unweighted family).
+    #[default]
+    Uniform,
+    /// Explicit per-group prices from the config (`train.weights = [...]`,
+    /// one strictly positive finite value per group).
+    Explicit(Vec<f32>),
+    /// Prices derived from per-group variance of the weight matrix at the
+    /// first projection (`train.weight_source = "variance"`; see
+    /// [`crate::projection::weighted::weights_from_variance`]), then
+    /// frozen for the rest of the run so every epoch prices the same ball.
+    Variance,
+}
+
+/// Resolve a [`WeightSource`] into per-group prices for a matrix `view`.
+/// Errors (as a plain message) when explicit prices fail validation.
+pub fn resolve_weight_source(
+    src: &WeightSource,
+    view: GroupedView<'_>,
+) -> Result<Vec<f32>, String> {
+    match src {
+        WeightSource::Uniform => Ok(vec![1.0; view.n_groups()]),
+        WeightSource::Explicit(w) => {
+            crate::projection::weighted::validate_weights(w, view.n_groups())?;
+            Ok(w.clone())
+        }
+        WeightSource::Variance => Ok(crate::projection::weighted::weights_from_variance(view)),
     }
 }
 
@@ -98,6 +146,9 @@ pub struct TrainConfig {
     /// Reconstruction-loss weight λ.
     pub lambda: f32,
     pub projection: ProjectionMode,
+    /// Per-group price source for the weighted projection modes (ignored
+    /// by every other mode).
+    pub weights: WeightSource,
     /// Which ℓ₁,∞ solver the projection uses.
     pub algo: Algorithm,
     pub exec: ExecMode,
@@ -115,6 +166,7 @@ impl Default for TrainConfig {
             lr: 1e-3,
             lambda: 1.0,
             projection: ProjectionMode::L1Inf { c: 1.0 },
+            weights: WeightSource::Uniform,
             algo: Algorithm::InverseOrder,
             exec: ExecMode::Epoch,
             seed: 0,
@@ -169,6 +221,13 @@ pub struct Trainer<'e> {
     /// modes; its `last_radii` self-warm-start makes every epoch after the
     /// first skip the cold level-1 solve.
     bilevel: BilevelSolver,
+    /// Persistent weighted-projection workspace for the
+    /// `weighted_l1inf[_cols]` modes (self-warm λ across epochs).
+    weighted: WeightedSolver,
+    /// Per-group prices resolved at the first weighted projection
+    /// (variance-derived prices are frozen then — every epoch projects
+    /// onto the *same* weighted ball).
+    resolved_weights: Option<Vec<f32>>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -177,7 +236,16 @@ impl<'e> Trainer<'e> {
         let cfg = engine.config(&tc.model)?;
         let solver = new_solver(tc.algo);
         let bilevel = BilevelSolver::new();
-        Ok(Trainer { engine, cfg, tc, theta_cache: ThetaCache::new(), solver, bilevel })
+        Ok(Trainer {
+            engine,
+            cfg,
+            tc,
+            theta_cache: ThetaCache::new(),
+            solver,
+            bilevel,
+            weighted: WeightedSolver::new(),
+            resolved_weights: None,
+        })
     }
 
     /// Run the full schedule on `split`; returns the report.
@@ -339,18 +407,20 @@ impl<'e> Trainer<'e> {
                 // Epoch-over-epoch θ drifts slowly: feed last epoch's θ*
                 // back as a warm start (ISSUE: bi-level observation). The
                 // persistent solver keeps its scratch across epochs.
-                let hint = self.theta_cache.hint_for("w1", d, h);
+                let key = CacheKey::new(Family::Exact, "w1");
+                let hint = self.theta_cache.hint_for(&key, d, h);
                 let info =
                     project_with(&mut *self.solver, &mut GroupedViewMut::new(w1, d, h), c, hint);
                 if !info.feasible && info.theta > 0.0 {
-                    self.theta_cache.update("w1", d, h, c, info.theta);
+                    self.theta_cache.update(&key, d, h, c, info.theta);
                 }
                 info.theta
             }
             ProjectionMode::L1InfCols { c } => {
                 // Groups = the h encoder columns (length d), projected
                 // through the strided view — no transpose copy.
-                let hint = self.theta_cache.hint_for("w1.cols", h, d);
+                let key = CacheKey::new(Family::Exact, "w1.cols");
+                let hint = self.theta_cache.hint_for(&key, h, d);
                 let info = project_with(
                     &mut *self.solver,
                     &mut GroupedViewMut::columns(w1, d, h),
@@ -358,9 +428,40 @@ impl<'e> Trainer<'e> {
                     hint,
                 );
                 if !info.feasible && info.theta > 0.0 {
-                    self.theta_cache.update("w1.cols", h, d, c, info.theta);
+                    self.theta_cache.update(&key, h, d, c, info.theta);
                 }
                 info.theta
+            }
+            ProjectionMode::WeightedL1Inf { c } => {
+                // Per-feature prices, resolved once (variance prices come
+                // from the first projected matrix, then freeze) — the
+                // persistent workspace self-warms λ across epochs.
+                if self.resolved_weights.is_none() {
+                    self.resolved_weights = Some(
+                        resolve_weight_source(&self.tc.weights, GroupedView::new(w1, d, h))
+                            .map_err(anyhow::Error::msg)?,
+                    );
+                }
+                let weights = self.resolved_weights.as_ref().unwrap();
+                self.weighted
+                    .project(&mut GroupedViewMut::new(w1, d, h), c, weights, None)
+                    .theta
+            }
+            ProjectionMode::WeightedL1InfCols { c } => {
+                // One price per hidden unit, through the strided view.
+                if self.resolved_weights.is_none() {
+                    self.resolved_weights = Some(
+                        resolve_weight_source(
+                            &self.tc.weights,
+                            GroupedView::columns(w1, d, h),
+                        )
+                        .map_err(anyhow::Error::msg)?,
+                    );
+                }
+                let weights = self.resolved_weights.as_ref().unwrap();
+                self.weighted
+                    .project(&mut GroupedViewMut::columns(w1, d, h), c, weights, None)
+                    .theta
             }
             ProjectionMode::Bilevel { c } => {
                 // Linear-time bi-level operator over feature rows; the

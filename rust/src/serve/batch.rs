@@ -34,15 +34,17 @@
 //! fixed-point cost — and the default serving algorithm (inverse order)
 //! never materializes `|Y|` at all.
 
-use super::cache::ThetaCache;
+use super::cache::{CacheKey, Family, ThetaCache};
 use crate::projection::bilevel::{shard_ranges, BilevelInfo, BilevelPool, TreeBilevel};
 use crate::projection::grouped::{GroupedView, GroupedViewMut};
+use crate::projection::l1inf::solver::{POOL_BUDGET_ELEMS, POOL_CAP};
 use crate::projection::l1inf::{
     apply_water_levels, project_with, water_levels, Algorithm, ProjInfo, SolveStats, Solver,
     SolverPool,
 };
+use crate::projection::weighted::WeightedSolver;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Which operator family a projection request runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -54,6 +56,13 @@ pub enum ProjKind {
     /// ([`crate::projection::bilevel`]) — always ℓ₁,∞-feasible, not the
     /// exact projection, embarrassingly parallel.
     Bilevel,
+    /// The weighted ℓ₁,∞ projection
+    /// ([`crate::projection::weighted`]): per-group prices from the
+    /// request's `weights` scale each group's budget share; `"algo"` is
+    /// ignored (the weighted family has one gold solver). With uniform
+    /// weights the result is bit-identical to `Exact` under the bisection
+    /// solver.
+    Weighted,
 }
 
 impl ProjKind {
@@ -62,6 +71,16 @@ impl ProjKind {
         match self {
             ProjKind::Exact => "exact",
             ProjKind::Bilevel => "bilevel",
+            ProjKind::Weighted => "weighted",
+        }
+    }
+
+    /// The warm-start cache namespace this family's dual variable lives in.
+    pub fn family(&self) -> Family {
+        match self {
+            ProjKind::Exact => Family::Exact,
+            ProjKind::Bilevel => Family::Bilevel,
+            ProjKind::Weighted => Family::Weighted,
         }
     }
 }
@@ -72,8 +91,53 @@ impl std::str::FromStr for ProjKind {
         match s.to_ascii_lowercase().as_str() {
             "exact" | "l1inf" => Ok(ProjKind::Exact),
             "bilevel" | "bi-level" => Ok(ProjKind::Bilevel),
-            other => Err(format!("unknown projection mode '{other}' (valid: exact, bilevel)")),
+            "weighted" | "weighted_l1inf" | "l1inf_weighted" => Ok(ProjKind::Weighted),
+            other => Err(format!(
+                "unknown projection mode '{other}' (valid: exact, bilevel, weighted)"
+            )),
         }
+    }
+}
+
+/// A free-list of reusable weighted-projection workspaces — the
+/// `"weighted"` mode's analog of [`SolverPool`]/[`BilevelPool`], sharing
+/// their retention constants. Warm-start state is forgotten on release so
+/// cross-request history can never leak; pooled workspaces warm-start
+/// through the key-addressed cache instead.
+#[derive(Debug, Default)]
+pub struct WeightedPool {
+    slots: Mutex<Vec<WeightedSolver>>,
+}
+
+impl WeightedPool {
+    pub fn new() -> WeightedPool {
+        WeightedPool::default()
+    }
+
+    /// Check a workspace out (warm buffers when one is pooled).
+    pub fn acquire(&self) -> WeightedSolver {
+        let mut slots = self.slots.lock().expect("weighted pool poisoned");
+        slots.pop().unwrap_or_default()
+    }
+
+    /// Return a workspace; dropped past [`POOL_CAP`] solvers or once the
+    /// pooled scratch would exceed [`POOL_BUDGET_ELEMS`].
+    pub fn release(&self, mut solver: WeightedSolver) {
+        solver.reset_warm_state();
+        let mut slots = self.slots.lock().expect("weighted pool poisoned");
+        if slots.len() >= POOL_CAP {
+            return;
+        }
+        let pooled: usize = slots.iter().map(WeightedSolver::workspace_elems).sum();
+        if pooled + solver.workspace_elems() > POOL_BUDGET_ELEMS {
+            return;
+        }
+        slots.push(solver);
+    }
+
+    /// Number of idle workspaces currently pooled.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().expect("weighted pool poisoned").len()
     }
 }
 
@@ -89,9 +153,14 @@ pub struct ProjRequest {
     pub group_len: usize,
     pub radius: f64,
     pub algo: Algorithm,
-    /// Operator family: exact ℓ₁,∞ (via `algo`) or the bi-level operator
-    /// (which ignores `algo`).
+    /// Operator family: exact ℓ₁,∞ (via `algo`), the bi-level operator,
+    /// or the weighted ℓ₁,∞ projection (both ignore `algo`).
     pub mode: ProjKind,
+    /// Per-group prices for `mode = Weighted` (`None` = uniform weights);
+    /// ignored by the other families. Must hold `n_groups` strictly
+    /// positive finite values — the protocol layer validates this before a
+    /// request is built.
+    pub weights: Option<Vec<f32>>,
 }
 
 /// Outcome of one [`ProjRequest`].
@@ -119,6 +188,8 @@ pub struct BatchProjector {
     solvers: Arc<SolverPool>,
     /// Recycled bi-level workspaces for `mode = bilevel` requests.
     bilevels: Arc<BilevelPool>,
+    /// Recycled weighted-projection workspaces for `mode = weighted`.
+    weighteds: Arc<WeightedPool>,
 }
 
 impl BatchProjector {
@@ -141,6 +212,7 @@ impl BatchProjector {
             min_parallel_elems,
             solvers: Arc::new(SolverPool::new()),
             bilevels: Arc::new(BilevelPool::new()),
+            weighteds: Arc::new(WeightedPool::new()),
         }
     }
 
@@ -361,6 +433,39 @@ impl BatchProjector {
         &self.bilevels
     }
 
+    /// Project one matrix with the **weighted** ℓ₁,∞ operator
+    /// ([`crate::projection::weighted`]) on a pooled workspace.
+    /// `weights = None` means uniform prices (the result is then
+    /// bit-identical to the exact bisection projection). The weighted λ
+    /// solve runs serially — its dense passes ride the same dispatched
+    /// kernels as the exact path, and the bisection Φ evaluations dominate
+    /// only on matrices far below the sharding cutoff.
+    pub fn project_weighted(
+        &self,
+        data: &mut [f32],
+        n_groups: usize,
+        group_len: usize,
+        c: f64,
+        weights: Option<&[f32]>,
+        lambda_hint: Option<f64>,
+    ) -> ProjInfo {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        let mut solver = self.weighteds.acquire();
+        let info = solver.project_opt(
+            &mut GroupedViewMut::new(data, n_groups, group_len),
+            c,
+            weights,
+            lambda_hint,
+        );
+        self.weighteds.release(solver);
+        info
+    }
+
+    /// The shared weighted workspace pool (exposed for introspection/tests).
+    pub fn weighted_pool(&self) -> &WeightedPool {
+        &self.weighteds
+    }
+
     /// Drain a heterogeneous request queue across the pool. Requests are
     /// consumed (each response owns the projected matrix — no copies);
     /// responses come back in request order. `cache` (if any) supplies
@@ -376,7 +481,9 @@ impl BatchProjector {
         if workers <= 1 {
             return requests
                 .into_iter()
-                .map(|r| run_request(r, cache, (&*self.solvers, &*self.bilevels)))
+                .map(|r| {
+                    run_request(r, cache, (&*self.solvers, &*self.bilevels, &*self.weighteds))
+                })
                 .collect();
         }
         // Each slot is taken exactly once by whichever worker claims its
@@ -386,7 +493,8 @@ impl BatchProjector {
         let cursor = AtomicUsize::new(0);
         // Explicit derefs: &Arc<T> only coerces to &T at a coercion site,
         // and an un-annotated tuple binding is not one.
-        let pools: (&SolverPool, &BilevelPool) = (&*self.solvers, &*self.bilevels);
+        let pools: (&SolverPool, &BilevelPool, &WeightedPool) =
+            (&*self.solvers, &*self.bilevels, &*self.weighteds);
         let mut indexed: Vec<(usize, ProjResponse)> = std::thread::scope(|s| {
             let slots = &slots;
             let cursor = &cursor;
@@ -425,22 +533,22 @@ impl Default for BatchProjector {
     }
 }
 
-/// Cache keys are namespaced per operator family: the exact θ* and the
-/// bi-level τ are different dual variables, so one client key must not
-/// feed one family's value to the other as a hint. *Both* families get a
-/// prefix, so no client-chosen key can collide with the other family's
-/// namespace (an exact request keyed `"bilevel:w1"` lands under
-/// `"exact:bilevel:w1"`, never under a bi-level entry).
-pub(crate) fn cache_key(mode: ProjKind, key: &str) -> String {
-    format!("{}:{key}", mode.name())
+/// Typed cache address for a request: the mode's [`Family`] namespace ×
+/// the client-chosen key. The exact θ*, bi-level τ and weighted λ are
+/// different dual variables, so one client key must never feed one
+/// family's value to another as a hint — [`CacheKey`] equality requires
+/// both components to match, so no client string (colons included) can
+/// collide across families.
+pub(crate) fn cache_key(mode: ProjKind, key: &str) -> CacheKey {
+    CacheKey::new(mode.family(), key)
 }
 
 fn run_request(
     req: ProjRequest,
     cache: Option<&ThetaCache>,
-    (solvers, bilevels): (&SolverPool, &BilevelPool),
+    (solvers, bilevels, weighteds): (&SolverPool, &BilevelPool, &WeightedPool),
 ) -> ProjResponse {
-    let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode } = req;
+    let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode, weights } = req;
     let ns_key = key.as_deref().map(|k| cache_key(mode, k));
     let hint = match (&ns_key, cache) {
         (Some(key), Some(cache)) => cache.hint_for(key, n_groups, group_len),
@@ -477,6 +585,22 @@ fn run_request(
                 }
             }
             ProjResponse { data, info: info.to_proj_info(), warm: info.warm }
+        }
+        ProjKind::Weighted => {
+            let mut solver = weighteds.acquire();
+            let info = solver.project_opt(
+                &mut GroupedViewMut::new(&mut data, n_groups, group_len),
+                radius,
+                weights.as_deref(),
+                hint,
+            );
+            weighteds.release(solver);
+            if let (Some(key), Some(cache)) = (&ns_key, cache) {
+                if !info.feasible {
+                    cache.update(key, n_groups, group_len, radius, info.theta);
+                }
+            }
+            ProjResponse { data, info, warm: hint.is_some() }
         }
     }
 }
@@ -537,6 +661,7 @@ mod tests {
                 radius: c,
                 algo,
                 mode: ProjKind::Exact,
+                weights: None,
             });
         }
         let n_requests = requests.len();
@@ -565,6 +690,7 @@ mod tests {
             radius: 1.0,
             algo: Algorithm::InverseOrder,
             mode: ProjKind::Exact,
+            weights: None,
         };
         let first = &pool.project_batch(Some(&cache), vec![req(base.clone())])[0];
         assert!(!first.warm, "nothing cached yet");
@@ -603,17 +729,18 @@ mod tests {
             radius: 0.8,
             algo: Algorithm::InverseOrder,
             mode: ProjKind::Bilevel,
+            weights: None,
         };
         let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
         let mut reference = data.clone();
         let bi = project_bilevel(&mut reference, g, l, 0.8);
         assert_eq!(resp.data, reference, "batch bilevel == serial bilevel");
         assert_eq!(resp.info.theta.to_bits(), bi.tau.to_bits());
-        // The τ went into the namespaced cache slot; neither the raw client
-        // key nor the exact-mode namespace saw it.
+        // The τ went into the bi-level family's typed slot; no other
+        // family's namespace saw it.
         assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w")).is_some());
-        assert!(cache.entry("w").is_none());
         assert!(cache.entry(&cache_key(ProjKind::Exact, "w")).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w")).is_none());
         // Workspace recycled; a second request warm-starts through the
         // cache (τ may differ from the cold solve only in FP round-off).
         assert!(pool.bilevel_pool().idle() >= 1);
@@ -621,6 +748,60 @@ mod tests {
         for (a, b) in resp2.data.iter().zip(&reference) {
             assert!((a - b).abs() <= 1e-6);
         }
+    }
+
+    #[test]
+    fn weighted_requests_route_through_the_weighted_operator() {
+        use crate::projection::weighted::project_l1inf_weighted;
+        let mut rng = Rng::new(23);
+        let (g, l) = (30, 7);
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let w: Vec<f32> = (0..g).map(|_| 0.3 + rng.f32() * 3.0).collect();
+        let pool = BatchProjector::new(2);
+        let cache = ThetaCache::new();
+        let req = ProjRequest {
+            key: Some("w".into()),
+            data: data.clone(),
+            n_groups: g,
+            group_len: l,
+            radius: 0.9,
+            algo: Algorithm::InverseOrder, // ignored by the weighted family
+            mode: ProjKind::Weighted,
+            weights: Some(w.clone()),
+        };
+        let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
+        let mut reference = data.clone();
+        let ri = project_l1inf_weighted(&mut reference, g, l, 0.9, &w);
+        assert_eq!(resp.data, reference, "batch weighted == serial weighted");
+        assert_eq!(resp.info.theta.to_bits(), ri.theta.to_bits());
+        // λ landed in the weighted family's typed namespace only.
+        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w")).is_some());
+        assert!(cache.entry(&cache_key(ProjKind::Exact, "w")).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w")).is_none());
+        // Workspace recycled; second request warm-starts and agrees.
+        assert!(pool.weighted_pool().idle() >= 1);
+        let resp2 = &pool.project_batch(Some(&cache), vec![req])[0];
+        assert!(resp2.warm, "second weighted request must warm-start");
+        for (a, b) in resp2.data.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-6);
+        }
+        // Omitted weights = uniform prices = bit-identical to the exact
+        // bisection projection.
+        let req_uniform = ProjRequest {
+            key: None,
+            data: data.clone(),
+            n_groups: g,
+            group_len: l,
+            radius: 0.9,
+            algo: Algorithm::Bisection,
+            mode: ProjKind::Weighted,
+            weights: None,
+        };
+        let resp3 = &pool.project_batch(None, vec![req_uniform])[0];
+        let mut exact = data.clone();
+        let ei = project_l1inf(&mut exact, g, l, 0.9, Algorithm::Bisection);
+        assert_eq!(resp3.data, exact, "uniform weighted == exact bisection");
+        assert_eq!(resp3.info.theta.to_bits(), ei.theta.to_bits());
     }
 
     #[test]

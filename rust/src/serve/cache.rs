@@ -14,6 +14,18 @@
 //! full cold solve — so the margin buys hit rate cheaply. Bisection and
 //! Newton accept hints on either side.
 //!
+//! # Typed keys
+//!
+//! The exact θ*, the bi-level τ and the weighted λ are *different dual
+//! variables*: one client key must never feed one family's value to
+//! another as a hint. Entries are therefore addressed by a typed
+//! [`CacheKey`] — an operator [`Family`] plus the client-chosen string —
+//! instead of the old string-prefix scheme (`"exact:" + key`), which a
+//! client key containing `:` could spoof across namespaces (a client key
+//! `"bilevel:w1"` under the exact family used to concatenate to the same
+//! string as client key `"w1"` under the bi-level family; as distinct
+//! `CacheKey` values they can never collide).
+//!
 //! Hints flow into the [`Solver`](crate::projection::l1inf::Solver)
 //! structs through the `hint` argument of `solve`/`project_with`; the full
 //! per-algorithm contract (validation, rejection, bit-identical fallback)
@@ -36,6 +48,51 @@ pub const HINT_MARGIN: f64 = 1.05;
 /// nothing anyway — the matrix it described has long since drifted).
 pub const MAX_ENTRIES: usize = 4096;
 
+/// Which operator family a cached dual variable belongs to. Every family
+/// has its own namespace: the exact θ*, the bi-level τ and the weighted λ
+/// are different duals and must never cross-feed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Exact ℓ₁,∞ projection (θ* of Lemma 1).
+    Exact,
+    /// Bi-level operator (level-1 simplex threshold τ).
+    Bilevel,
+    /// Weighted ℓ₁,∞ projection (price λ).
+    Weighted,
+}
+
+impl Family {
+    /// Display name (diagnostics only — never used as a key prefix).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Exact => "exact",
+            Family::Bilevel => "bilevel",
+            Family::Weighted => "weighted",
+        }
+    }
+}
+
+/// Typed cache address: operator family × client-chosen matrix key. Two
+/// keys are equal iff *both* components are equal, so no client string —
+/// colons included — can collide across families.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub family: Family,
+    pub client_key: String,
+}
+
+impl CacheKey {
+    pub fn new(family: Family, client_key: impl Into<String>) -> CacheKey {
+        CacheKey { family, client_key: client_key.into() }
+    }
+}
+
+impl std::fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.family.name(), self.client_key)
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 struct Entry {
     theta: f64,
@@ -56,10 +113,11 @@ pub struct CacheStats {
     pub updates: u64,
 }
 
-/// θ* memo keyed by caller-chosen matrix identity (e.g. `"w1:synth"`).
+/// θ* memo keyed by [`CacheKey`] (operator family × caller-chosen matrix
+/// identity, e.g. `Exact`/`"w1:synth"`).
 #[derive(Debug, Default)]
 pub struct ThetaCache {
-    inner: Mutex<HashMap<String, Entry>>,
+    inner: Mutex<HashMap<CacheKey, Entry>>,
     hits: AtomicU64,
     misses: AtomicU64,
     updates: AtomicU64,
@@ -77,7 +135,7 @@ impl ThetaCache {
     /// different projection problem and its θ is meaningless here. A radius
     /// change keeps the hint: the solvers validate hints anyway, and θ
     /// moves continuously with C.
-    pub fn hint_for(&self, key: &str, n_groups: usize, group_len: usize) -> Option<f64> {
+    pub fn hint_for(&self, key: &CacheKey, n_groups: usize, group_len: usize) -> Option<f64> {
         let guard = self.inner.lock().expect("theta cache poisoned");
         match guard.get(key) {
             Some(e) if e.n_groups == n_groups && e.group_len == group_len && e.theta > 0.0 => {
@@ -92,7 +150,14 @@ impl ThetaCache {
     }
 
     /// Record the θ* a projection just solved for.
-    pub fn update(&self, key: &str, n_groups: usize, group_len: usize, radius: f64, theta: f64) {
+    pub fn update(
+        &self,
+        key: &CacheKey,
+        n_groups: usize,
+        group_len: usize,
+        radius: f64,
+        theta: f64,
+    ) {
         if !theta.is_finite() || theta <= 0.0 {
             return; // feasible / degenerate projections carry no information
         }
@@ -108,18 +173,18 @@ impl ThetaCache {
         }
         let updates = guard.get(key).map(|e| e.updates + 1).unwrap_or(1);
         guard.insert(
-            key.to_string(),
+            key.clone(),
             Entry { theta, n_groups, group_len, radius, updates, stamp },
         );
     }
 
     /// Drop one key (e.g. when a served model is unloaded).
-    pub fn invalidate(&self, key: &str) {
+    pub fn invalidate(&self, key: &CacheKey) {
         self.inner.lock().expect("theta cache poisoned").remove(key);
     }
 
     /// Introspection: `(θ*, radius, updates)` recorded under `key`.
-    pub fn entry(&self, key: &str) -> Option<(f64, f64, u64)> {
+    pub fn entry(&self, key: &CacheKey) -> Option<(f64, f64, u64)> {
         let guard = self.inner.lock().expect("theta cache poisoned");
         guard.get(key).map(|e| (e.theta, e.radius, e.updates))
     }
@@ -138,12 +203,16 @@ impl ThetaCache {
 mod tests {
     use super::*;
 
+    fn k(s: &str) -> CacheKey {
+        CacheKey::new(Family::Exact, s)
+    }
+
     #[test]
     fn miss_then_hit_with_margin() {
         let cache = ThetaCache::new();
-        assert_eq!(cache.hint_for("w1", 10, 4), None);
-        cache.update("w1", 10, 4, 1.0, 2.0);
-        let h = cache.hint_for("w1", 10, 4).unwrap();
+        assert_eq!(cache.hint_for(&k("w1"), 10, 4), None);
+        cache.update(&k("w1"), 10, 4, 1.0, 2.0);
+        let h = cache.hint_for(&k("w1"), 10, 4).unwrap();
         assert!((h - 2.0 * HINT_MARGIN).abs() < 1e-12);
         let st = cache.stats();
         assert_eq!((st.entries, st.hits, st.misses, st.updates), (1, 1, 1, 1));
@@ -152,48 +221,80 @@ mod tests {
     #[test]
     fn shape_mismatch_is_a_miss() {
         let cache = ThetaCache::new();
-        cache.update("w1", 10, 4, 1.0, 2.0);
-        assert_eq!(cache.hint_for("w1", 10, 5), None);
-        assert_eq!(cache.hint_for("w1", 11, 4), None);
-        assert!(cache.hint_for("w1", 10, 4).is_some());
+        cache.update(&k("w1"), 10, 4, 1.0, 2.0);
+        assert_eq!(cache.hint_for(&k("w1"), 10, 5), None);
+        assert_eq!(cache.hint_for(&k("w1"), 11, 4), None);
+        assert!(cache.hint_for(&k("w1"), 10, 4).is_some());
+    }
+
+    #[test]
+    fn families_are_disjoint_namespaces() {
+        let cache = ThetaCache::new();
+        cache.update(&CacheKey::new(Family::Exact, "w1"), 4, 4, 1.0, 1.0);
+        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 1.0, 2.0);
+        cache.update(&CacheKey::new(Family::Weighted, "w1"), 4, 4, 1.0, 3.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "w1")).unwrap().0, 1.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")).unwrap().0, 2.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Weighted, "w1")).unwrap().0, 3.0);
+        assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn colon_in_client_key_cannot_cross_families() {
+        // Regression: under the old string-prefix scheme ("exact:" + key),
+        // an exact request keyed "bilevel:w1" concatenated to
+        // "exact:bilevel:w1"… but a bi-level request keyed "w1" landed at
+        // "bilevel:w1" — and a *client key* "exact:bilevel:w1" under any
+        // flat addressing could spoof either. Typed keys make every
+        // (family, client_key) pair its own address.
+        let cache = ThetaCache::new();
+        cache.update(&CacheKey::new(Family::Exact, "bilevel:w1"), 4, 4, 1.0, 10.0);
+        // The bi-level family never sees the exact family's entry…
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")), None);
+        assert_eq!(cache.hint_for(&CacheKey::new(Family::Bilevel, "w1"), 4, 4), None);
+        // …and vice versa: a bi-level entry under "w1" stays invisible to
+        // an exact client key spelled "bilevel:w1".
+        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 1.0, 20.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "bilevel:w1")).unwrap().0, 10.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")).unwrap().0, 20.0);
     }
 
     #[test]
     fn degenerate_thetas_not_recorded() {
         let cache = ThetaCache::new();
-        cache.update("w1", 10, 4, 1.0, 0.0);
-        cache.update("w1", 10, 4, 1.0, -1.0);
-        cache.update("w1", 10, 4, 1.0, f64::NAN);
-        assert_eq!(cache.hint_for("w1", 10, 4), None);
+        cache.update(&k("w1"), 10, 4, 1.0, 0.0);
+        cache.update(&k("w1"), 10, 4, 1.0, -1.0);
+        cache.update(&k("w1"), 10, 4, 1.0, f64::NAN);
+        assert_eq!(cache.hint_for(&k("w1"), 10, 4), None);
         assert_eq!(cache.stats().entries, 0);
     }
 
     #[test]
     fn invalidate_removes() {
         let cache = ThetaCache::new();
-        cache.update("k", 2, 2, 1.0, 1.0);
-        cache.update("k", 2, 2, 1.5, 1.2);
-        assert_eq!(cache.entry("k"), Some((1.2, 1.5, 2)));
-        cache.invalidate("k");
-        assert_eq!(cache.hint_for("k", 2, 2), None);
-        assert_eq!(cache.entry("k"), None);
+        cache.update(&k("k"), 2, 2, 1.0, 1.0);
+        cache.update(&k("k"), 2, 2, 1.5, 1.2);
+        assert_eq!(cache.entry(&k("k")), Some((1.2, 1.5, 2)));
+        cache.invalidate(&k("k"));
+        assert_eq!(cache.hint_for(&k("k"), 2, 2), None);
+        assert_eq!(cache.entry(&k("k")), None);
     }
 
     #[test]
     fn capacity_evicts_least_recently_updated() {
         let cache = ThetaCache::new();
         for i in 0..MAX_ENTRIES {
-            cache.update(&format!("k{i}"), 2, 2, 1.0, 1.0);
+            cache.update(&k(&format!("k{i}")), 2, 2, 1.0, 1.0);
         }
         assert_eq!(cache.stats().entries, MAX_ENTRIES);
         // Refresh k0 so it is no longer the eviction victim, then overflow.
-        cache.update("k0", 2, 2, 1.0, 2.0);
-        cache.update("fresh", 2, 2, 1.0, 3.0);
+        cache.update(&k("k0"), 2, 2, 1.0, 2.0);
+        cache.update(&k("fresh"), 2, 2, 1.0, 3.0);
         let st = cache.stats();
         assert_eq!(st.entries, MAX_ENTRIES, "cap holds");
-        assert!(cache.entry("fresh").is_some());
-        assert!(cache.entry("k0").is_some(), "refreshed key survives");
-        assert!(cache.entry("k1").is_none(), "oldest key evicted");
+        assert!(cache.entry(&k("fresh")).is_some());
+        assert!(cache.entry(&k("k0")).is_some(), "refreshed key survives");
+        assert!(cache.entry(&k("k1")).is_none(), "oldest key evicted");
     }
 
     #[test]
@@ -204,7 +305,7 @@ mod tests {
                 let cache = cache.clone();
                 s.spawn(move || {
                     for i in 0..100 {
-                        let key = format!("k{}", (t + i) % 3);
+                        let key = k(&format!("k{}", (t + i) % 3));
                         cache.update(&key, 8, 8, 1.0, 1.0 + i as f64);
                         let _ = cache.hint_for(&key, 8, 8);
                     }

@@ -14,12 +14,16 @@
 //!   [`crate::projection::l1inf::project_l1inf`] — and (b) drains queues of
 //!   heterogeneous projection requests with request-level parallelism.
 //!   Requests pick their operator family via [`batch::ProjKind`]: the
-//!   exact ℓ₁,∞ projection or the linear-time **bi-level** operator
+//!   exact ℓ₁,∞ projection, the linear-time **bi-level** operator
 //!   ([`crate::projection::bilevel`]), whose two O(nm) passes shard
-//!   bit-compatibly with the serial bi-level operator;
+//!   bit-compatibly with the serial bi-level operator, or the **weighted**
+//!   ℓ₁,∞ projection ([`crate::projection::weighted`]) with per-group
+//!   prices from the request's `"weights"` field;
 //! - [`cache`] — a [`cache::ThetaCache`] that remembers θ* per
-//!   weight-matrix key and feeds the next projection of the same matrix a
-//!   warm start through the solvers' `theta_hint` plumbing;
+//!   weight-matrix key — addressed by typed [`cache::CacheKey`]s (operator
+//!   [`cache::Family`] × client key, collision-proof by construction) —
+//!   and feeds the next projection of the same matrix a warm start through
+//!   the solvers' `theta_hint` plumbing;
 //! - [`protocol`] + [`server`] — a line-delimited-JSON request/response
 //!   protocol over TCP (`l1inf serve --addr --threads`), one decoding
 //!   thread per connection, all connections sharing the projector pool and
@@ -34,4 +38,4 @@ pub mod protocol;
 pub mod server;
 
 pub use batch::{BatchProjector, ProjKind, ProjRequest, ProjResponse};
-pub use cache::ThetaCache;
+pub use cache::{CacheKey, Family, ThetaCache};

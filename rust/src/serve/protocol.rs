@@ -30,6 +30,12 @@
 //!   serial bi-level operator), but **not** the exact projection. `"algo"`
 //!   is ignored; the response's `"theta"` carries the level-1 simplex
 //!   threshold τ, and warm starts cache τ under a per-mode key namespace.
+//! - `"mode":"weighted"` — the **weighted** ℓ₁,∞ projection
+//!   ([`crate::projection::weighted`]): the ball is
+//!   `Σ_g w_g·max|X_g| ≤ C` with per-group prices from the request's
+//!   `"weights"` field. `"algo"` is ignored; the response's `"theta"`
+//!   carries the price λ (each surviving group loses ℓ₁ mass `λ·w_g`),
+//!   and warm starts cache λ under the weighted family's namespace.
 //!
 //! ```text
 //! → {"id":5,"op":"project","key":"w1","mode":"bilevel","groups":3,"len":4,
@@ -37,6 +43,22 @@
 //! ← {"id":5,"ok":true,"mode":"bilevel","theta":0.62,"radius_before":2.9,
 //!    "radius_after":1.5,"zero_groups":1,"work":3,"touched":2,"warm":false,
 //!    "ms":0.03,"data":[...]}
+//! ```
+//!
+//! # The `weights` request field
+//!
+//! Only valid with `"mode":"weighted"`: an array of exactly `groups`
+//! strictly positive finite prices, one per group. Omitting it means
+//! uniform prices — the result is then bit-identical to
+//! `"mode":"exact","algo":"bisect"`. `radius_before`/`radius_after` in
+//! the response are the *weighted* norms.
+//!
+//! ```text
+//! → {"id":6,"op":"project","key":"w1","mode":"weighted","groups":3,"len":4,
+//!    "radius":1.5,"weights":[1.0,2.5,0.5],"data":[...12 numbers...]}
+//! ← {"id":6,"ok":true,"mode":"weighted","theta":0.31,"radius_before":3.4,
+//!    "radius_after":1.5,"zero_groups":1,"work":52,"touched":3,"warm":false,
+//!    "ms":0.05,"data":[...]}
 //! ```
 //!
 //! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
@@ -57,8 +79,13 @@ pub struct ProjectRequest {
     pub group_len: usize,
     pub radius: f64,
     pub algo: Algorithm,
-    /// Operator family (`"mode"` field): exact ℓ₁,∞ or bi-level.
+    /// Operator family (`"mode"` field): exact ℓ₁,∞, bi-level, or
+    /// weighted ℓ₁,∞.
     pub mode: ProjKind,
+    /// Per-group prices (`"weights"` field; weighted mode only; `None` =
+    /// uniform). Validated at parse time: exactly `n_groups` strictly
+    /// positive finite f32s.
+    pub weights: Option<Vec<f32>>,
     /// `false` suppresses the projected matrix in the response (clients
     /// that only need θ/sparsity telemetry save the echo bandwidth).
     pub return_data: bool,
@@ -119,6 +146,44 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 None => ProjKind::Exact,
                 Some(s) => s.parse::<ProjKind>().map_err(|e| (id, e))?,
             };
+            let weights = match v.get("weights") {
+                None => None,
+                Some(_) if mode != ProjKind::Weighted => {
+                    return Err((
+                        id,
+                        "project: 'weights' requires \"mode\":\"weighted\"".to_string(),
+                    ));
+                }
+                Some(wv) => {
+                    let arr = wv
+                        .as_arr()
+                        .ok_or_else(|| (id, "project: 'weights' must be an array".to_string()))?;
+                    let mut ws = Vec::with_capacity(arr.len());
+                    for (i, x) in arr.iter().enumerate() {
+                        match x.as_f64().map(|f| f as f32) {
+                            Some(f) if f.is_finite() && f > 0.0 => ws.push(f),
+                            _ => {
+                                return Err((
+                                    id,
+                                    format!(
+                                        "project: weights[{i}] is not a positive finite f32"
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    if ws.len() != n_groups {
+                        return Err((
+                            id,
+                            format!(
+                                "project: weights has {} entries, expected groups = {n_groups}",
+                                ws.len()
+                            ),
+                        ));
+                    }
+                    Some(ws)
+                }
+            };
             let return_data = match v.get("return_data") {
                 Some(Json::Bool(b)) => *b,
                 _ => true,
@@ -162,6 +227,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 radius,
                 algo,
                 mode,
+                weights,
                 return_data,
                 data,
             }))
@@ -287,6 +353,41 @@ mod tests {
         .unwrap_err();
         assert_eq!(id, 8);
         assert!(msg.contains("bilevel") && msg.contains("exact"), "{msg}");
+    }
+
+    #[test]
+    fn parses_weighted_mode_and_validates_weights() {
+        let line = r#"{"id":11,"op":"project","mode":"weighted","groups":2,"len":2,"radius":1,"weights":[1.0,2.5],"data":[1.0,2.0,3.0,4.0]}"#;
+        let env = parse_request_d(line).unwrap();
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.mode, ProjKind::Weighted);
+        assert_eq!(p.weights, Some(vec![1.0, 2.5]));
+        // Weighted without weights = uniform prices.
+        let env = parse_request_d(
+            r#"{"id":12,"op":"project","mode":"weighted","groups":1,"len":2,"radius":1,"data":[1.0,2.0]}"#,
+        )
+        .unwrap();
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.weights, None);
+        // Weights on a non-weighted mode are rejected.
+        let (id, msg) = parse_request_d(
+            r#"{"id":13,"op":"project","groups":1,"len":1,"radius":1,"weights":[1.0],"data":[1.0]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(id, 13);
+        assert!(msg.contains("weighted"), "{msg}");
+        // Wrong length, non-positive, and non-finite weights are rejected.
+        for bad in [
+            r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0],"data":[1.0,2.0]}"#,
+            r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0,0.0],"data":[1.0,2.0]}"#,
+            r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0,-2.0],"data":[1.0,2.0]}"#,
+            r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0,1e39],"data":[1.0,2.0]}"#,
+            r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":"x","data":[1.0,2.0]}"#,
+        ] {
+            let (id, msg) = parse_request_d(bad).unwrap_err();
+            assert_eq!(id, 14);
+            assert!(msg.contains("weights"), "{msg}");
+        }
     }
 
     #[test]

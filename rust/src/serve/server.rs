@@ -150,13 +150,22 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
 }
 
 fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
-    let ProjectRequest { key, n_groups, group_len, radius, algo, mode, return_data, mut data } =
-        req;
-    // τ and θ* are different duals: warm starts live in per-mode key
-    // namespaces of the shared cache (see [`batch::cache_key`]).
+    let ProjectRequest {
+        key,
+        n_groups,
+        group_len,
+        radius,
+        algo,
+        mode,
+        weights,
+        return_data,
+        mut data,
+    } = req;
+    // θ*, τ and λ are different duals: warm starts live in per-family
+    // typed keys of the shared cache (see [`batch::cache_key`]).
     let ns_key = key.as_deref().map(|k| batch::cache_key(mode, k));
     let hint = ns_key
-        .as_deref()
+        .as_ref()
         .and_then(|k| shared.cache.hint_for(k, n_groups, group_len));
     let response = match mode {
         ProjKind::Exact => {
@@ -165,7 +174,7 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
                 .pool
                 .project_parallel(&mut data, n_groups, group_len, radius, algo, hint);
             let ms = t.millis();
-            if let Some(k) = ns_key.as_deref() {
+            if let Some(k) = ns_key.as_ref() {
                 if !info.feasible {
                     shared.cache.update(k, n_groups, group_len, radius, info.theta);
                 }
@@ -179,13 +188,32 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
                 .pool
                 .project_bilevel_parallel(&mut data, n_groups, group_len, radius, hint);
             let ms = t.millis();
-            if let Some(k) = ns_key.as_deref() {
+            if let Some(k) = ns_key.as_ref() {
                 if !info.feasible {
                     shared.cache.update(k, n_groups, group_len, radius, info.tau);
                 }
             }
             let payload = if return_data { Some(&data[..]) } else { None };
             protocol::project_response(id, &info.to_proj_info(), mode, info.warm, ms, payload)
+        }
+        ProjKind::Weighted => {
+            let t = Timer::start();
+            let info = shared.pool.project_weighted(
+                &mut data,
+                n_groups,
+                group_len,
+                radius,
+                weights.as_deref(),
+                hint,
+            );
+            let ms = t.millis();
+            if let Some(k) = ns_key.as_ref() {
+                if !info.feasible {
+                    shared.cache.update(k, n_groups, group_len, radius, info.theta);
+                }
+            }
+            let payload = if return_data { Some(&data[..]) } else { None };
+            protocol::project_response(id, &info, mode, hint.is_some(), ms, payload)
         }
     };
     shared.served.fetch_add(1, Ordering::Relaxed);

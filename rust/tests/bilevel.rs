@@ -3,6 +3,9 @@
 //! 2-level tree vs the serial operator, the `BatchProjector` routing, and
 //! the TCP protocol's `"mode":"bilevel"` round-trip.
 
+mod common;
+
+use common::random_signed;
 use l1inf::config::serve::ServeConfig;
 use l1inf::projection::bilevel::{
     project_bilevel, project_bilevel_hinted, project_bilevel_tree, BilevelSolver, TreeBilevel,
@@ -16,14 +19,6 @@ use l1inf::util::json;
 use l1inf::util::rng::Rng;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-
-fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
-    let mut y = vec![0.0f32; len];
-    for v in y.iter_mut() {
-        *v = (rng.f32() - 0.5) * scale;
-    }
-    y
-}
 
 /// Random and adversarial matrices in the style of the `Algorithm`
 /// equivalence tests: `(data, n_groups, group_len, radius)` cases.

@@ -1,0 +1,404 @@
+//! Shared test support for the integration suites: deterministic seeded
+//! matrix generators and a naive, self-contained reference oracle for the
+//! ℓ₁,∞ / weighted-ℓ₁,∞ / bi-level operator families.
+//!
+//! This module dedupes the per-file generator copies that used to live in
+//! `solver_workspace.rs`, `kernel_compat.rs`, `bilevel.rs` and
+//! `serve_parallel.rs`, and is the single oracle the property-based
+//! differential suite (`differential.rs`) checks every production solver
+//! against.
+//!
+//! # The oracle
+//!
+//! The oracle is deliberately **independent of the production code paths**:
+//! it never touches `projection::simplex`, the solver workspaces or the
+//! dense kernel layer. It materializes each group's sorted magnitudes with
+//! prefix sums (`O(nm log nm)`), enumerates *every* breakpoint of the
+//! piecewise-linear root function, bisects the breakpoint list to the
+//! piece containing the root, and solves that piece's linear equation
+//! exactly in f64. Slow, simple, and exact to f64 round-off — which is
+//! what a differential baseline should be.
+
+#![allow(dead_code)] // shared across several test crates; each uses a subset
+
+use l1inf::util::rng::Rng;
+
+// ───────────────────────── generators ─────────────────────────
+
+/// Uniform signed noise in `(-scale/2, scale/2)` (the shape every suite's
+/// old local `random_signed` had).
+pub fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    let mut y = vec![0.0f32; len];
+    for v in y.iter_mut() {
+        *v = (rng.f32() - 0.5) * scale;
+    }
+    y
+}
+
+/// Adversarial signed matrix: whole-zero groups, in-group zeros, heavy
+/// cross-group ties at ±0.5, f32 denormals, and ordinary signed noise
+/// (the `kernel_compat` generator, shared).
+pub fn adversarial_matrix(rng: &mut Rng, g: usize, l: usize) -> Vec<f32> {
+    let mut data = vec![0.0f32; g * l];
+    for grp in 0..g {
+        if rng.chance(0.15) {
+            continue; // whole-zero group
+        }
+        for i in 0..l {
+            data[grp * l + i] = match rng.below(10) {
+                0 => 0.0,
+                1 => 0.5,
+                2 => -0.5,
+                3 => 1.0e-41,  // subnormal
+                4 => -2.5e-42, // subnormal
+                _ => (rng.f32() - 0.5) * 3.0,
+            };
+        }
+    }
+    data
+}
+
+/// Structured matrix families the differential suite cycles through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatrixKind {
+    /// Dense uniform signed noise.
+    Dense,
+    /// Mostly zeros with a few heavy entries.
+    Sparse,
+    /// Entries drawn from a tiny value set ⇒ breakpoints tie constantly.
+    AdversarialTies,
+    /// Subnormal-dominated groups with one ordinary group.
+    Denormals,
+    /// Random whole-zero groups mixed into signed noise.
+    ZeroGroups,
+}
+
+pub const MATRIX_KINDS: [MatrixKind; 5] = [
+    MatrixKind::Dense,
+    MatrixKind::Sparse,
+    MatrixKind::AdversarialTies,
+    MatrixKind::Denormals,
+    MatrixKind::ZeroGroups,
+];
+
+/// Deterministic matrix of the given structure.
+pub fn matrix_of_kind(rng: &mut Rng, g: usize, l: usize, kind: MatrixKind) -> Vec<f32> {
+    let mut data = vec![0.0f32; g * l];
+    match kind {
+        MatrixKind::Dense => {
+            for v in data.iter_mut() {
+                *v = (rng.f32() - 0.5) * 3.0;
+            }
+        }
+        MatrixKind::Sparse => {
+            for v in data.iter_mut() {
+                if rng.chance(0.12) {
+                    *v = (rng.f32() - 0.5) * 6.0;
+                }
+            }
+        }
+        MatrixKind::AdversarialTies => {
+            let vals = [0.25f32, 0.5, 1.0];
+            for v in data.iter_mut() {
+                let x = vals[rng.below(3)];
+                *v = if rng.chance(0.5) { -x } else { x };
+            }
+        }
+        MatrixKind::Denormals => {
+            for v in data.iter_mut() {
+                *v = if rng.chance(0.5) { 1.0e-41 } else { -2.5e-42 };
+            }
+            // One ordinary group so the matrix has macroscopic mass.
+            for i in 0..l {
+                data[i] = (rng.f32() - 0.5) * 2.0;
+            }
+        }
+        MatrixKind::ZeroGroups => {
+            for grp in 0..g {
+                if rng.chance(0.4) {
+                    continue;
+                }
+                for i in 0..l {
+                    data[grp * l + i] = (rng.f32() - 0.5) * 2.0;
+                }
+            }
+        }
+    }
+    data
+}
+
+/// Random shape + structured content for one differential case.
+pub fn gen_matrix(rng: &mut Rng, max_groups: usize, max_len: usize) -> (Vec<f32>, usize, usize) {
+    let g = rng.range(1, max_groups + 1);
+    let l = rng.range(1, max_len + 1);
+    let kind = MATRIX_KINDS[rng.below(MATRIX_KINDS.len())];
+    (matrix_of_kind(rng, g, l, kind), g, l)
+}
+
+/// Strictly positive per-group prices in `[0.2, 4.2)`.
+pub fn positive_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| 0.2 + rng.f32() * 4.0).collect()
+}
+
+// ───────────────────────── the oracle ─────────────────────────
+
+/// One group's sorted-magnitude representation.
+struct OracleGroup {
+    /// |y| sorted descending, f64.
+    z: Vec<f64>,
+    /// prefix[k] = Σ of the k largest magnitudes (prefix[0] = 0).
+    prefix: Vec<f64>,
+}
+
+impl OracleGroup {
+    fn build(group: &[f32]) -> OracleGroup {
+        let mut z: Vec<f64> = group.iter().map(|&v| (v as f64).abs()).collect();
+        z.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut prefix = Vec::with_capacity(z.len() + 1);
+        prefix.push(0.0);
+        let mut acc = 0.0;
+        for &v in &z {
+            acc += v;
+            prefix.push(acc);
+        }
+        OracleGroup { z, prefix }
+    }
+
+    fn total(&self) -> f64 {
+        *self.prefix.last().unwrap()
+    }
+
+    fn max(&self) -> f64 {
+        self.z.first().copied().unwrap_or(0.0)
+    }
+
+    /// Water level μ removing exactly `theta` ℓ₁ mass (0 when the group
+    /// dies, i.e. `theta ≥ total`): the unique μ ≥ 0 with
+    /// `Σ max(z_i − μ, 0) = theta`.
+    fn water_level(&self, theta: f64) -> f64 {
+        if theta >= self.total() || self.z.is_empty() {
+            return 0.0;
+        }
+        if theta <= 0.0 {
+            return self.max();
+        }
+        for k in 1..=self.z.len() {
+            let mu = (self.prefix[k] - theta) / k as f64;
+            let next = if k < self.z.len() { self.z[k] } else { 0.0 };
+            if mu >= next {
+                return mu.max(0.0);
+            }
+        }
+        0.0
+    }
+
+    /// Active count k at removed mass `theta` (entries strictly above the
+    /// water level's piece; used for the exact piece solve).
+    fn active_k(&self, theta: f64) -> usize {
+        if theta >= self.total() {
+            return 0;
+        }
+        for k in 1..=self.z.len() {
+            let mu = (self.prefix[k] - theta) / k as f64;
+            let next = if k < self.z.len() { self.z[k] } else { 0.0 };
+            if mu >= next {
+                return k;
+            }
+        }
+        0
+    }
+}
+
+fn build_groups(data: &[f32], n_groups: usize, group_len: usize) -> Vec<OracleGroup> {
+    (0..n_groups)
+        .map(|g| OracleGroup::build(&data[g * group_len..(g + 1) * group_len]))
+        .collect()
+}
+
+/// Clip `data` at per-group levels `mu` (sign-preserving), f64 math.
+fn clip(data: &[f32], n_groups: usize, group_len: usize, mu: &[f64]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(data.len());
+    for g in 0..n_groups {
+        for i in 0..group_len {
+            let v = data[g * group_len + i] as f64;
+            let m = mu[g].max(0.0);
+            out.push((v.signum() * v.abs().min(m)) as f32);
+        }
+    }
+    out
+}
+
+/// `Φ_w(λ) = Σ_g w_g·μ_g(λ·w_g)` on the oracle representation.
+fn phi_w(groups: &[OracleGroup], weights: &[f64], lambda: f64) -> f64 {
+    groups
+        .iter()
+        .zip(weights)
+        .map(|(g, &w)| w * g.water_level(lambda * w))
+        .sum()
+}
+
+/// Naive exact **weighted ℓ₁,∞** projection oracle. Returns the projected
+/// matrix and the price λ (θ* when `weights ≡ 1`). `O(nm log nm)`:
+/// per-group sorts, full breakpoint enumeration, bisection over the
+/// breakpoint list, exact linear solve on the root's piece.
+pub fn oracle_l1inf_weighted(
+    data: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    c: f64,
+) -> (Vec<f32>, f64) {
+    assert_eq!(data.len(), n_groups * group_len);
+    assert_eq!(weights.len(), n_groups);
+    let w: Vec<f64> = weights.iter().map(|&x| x as f64).collect();
+    let groups = build_groups(data, n_groups, group_len);
+
+    let norm: f64 = groups.iter().zip(&w).map(|(g, &wg)| wg * g.max()).sum();
+    if norm <= c {
+        return (data.to_vec(), 0.0); // already feasible: identity
+    }
+    if c == 0.0 {
+        let lambda = groups
+            .iter()
+            .zip(&w)
+            .map(|(g, &wg)| g.total() / wg)
+            .fold(0.0f64, f64::max);
+        return (vec![0.0; data.len()], lambda);
+    }
+
+    // Every λ at which some group's active piece changes: λ_{g,k} =
+    // (S_k − k·z_{k+1}) / w_g for k = 1..n (z_{n+1} := 0 ⇒ the death
+    // point S_n / w_g).
+    let mut bps: Vec<f64> = vec![0.0];
+    for (g, wg) in groups.iter().zip(&w) {
+        for k in 1..=g.z.len() {
+            let next = if k < g.z.len() { g.z[k] } else { 0.0 };
+            let theta = g.prefix[k] - k as f64 * next;
+            if theta > 0.0 {
+                bps.push(theta / wg);
+            }
+        }
+    }
+    bps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bps.dedup();
+
+    // Φ_w is decreasing: bisect the breakpoint list for the first index
+    // with Φ_w ≤ C; the root's piece is [bps[i−1], bps[i]].
+    let (mut lo, mut hi) = (0usize, bps.len() - 1);
+    // Invariant: Φ(bps[lo]) > C ≥ Φ(bps[hi]). Φ(0) = norm > C, and the
+    // largest breakpoint is the last death point where Φ = 0 ≤ C.
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if phi_w(&groups, &w, bps[mid]) > c {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Exact linear solve on the piece, with per-group k read off at the
+    // piece's midpoint: Σ_A w_g(S_k − λw_g)/k = C.
+    let mid = 0.5 * (bps[lo] + bps[hi]);
+    let mut t1 = 0.0f64; // Σ w_g·S_k/k
+    let mut t2 = 0.0f64; // Σ w_g²/k
+    for (g, &wg) in groups.iter().zip(&w) {
+        let theta = mid * wg;
+        let k = g.active_k(theta);
+        if k == 0 {
+            continue;
+        }
+        t1 += wg * g.prefix[k] / k as f64;
+        t2 += wg * wg / k as f64;
+    }
+    let lambda = if t2 > 0.0 { (t1 - c) / t2 } else { mid };
+    let mu: Vec<f64> =
+        groups.iter().zip(&w).map(|(g, &wg)| g.water_level(lambda * wg)).collect();
+    (clip(data, n_groups, group_len, &mu), lambda)
+}
+
+/// Naive exact **ℓ₁,∞** projection oracle (uniform prices). Returns the
+/// projected matrix and θ*.
+pub fn oracle_l1inf(data: &[f32], n_groups: usize, group_len: usize, c: f64) -> (Vec<f32>, f64) {
+    let ones = vec![1.0f32; n_groups];
+    oracle_l1inf_weighted(data, n_groups, group_len, &ones, c)
+}
+
+/// Naive **weighted bi-level** oracle: per-group maxima → weighted-simplex
+/// projection of the maxima by sort-and-scan → clamp. Returns the clamped
+/// matrix and the level-1 threshold τ.
+pub fn oracle_bilevel_weighted(
+    data: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+    c: f64,
+) -> (Vec<f32>, f64) {
+    assert_eq!(data.len(), n_groups * group_len);
+    assert_eq!(weights.len(), n_groups);
+    let w: Vec<f64> = weights.iter().map(|&x| x as f64).collect();
+    let maxes: Vec<f64> = (0..n_groups)
+        .map(|g| {
+            data[g * group_len..(g + 1) * group_len]
+                .iter()
+                .fold(0.0f32, |a, &v| a.max(v.abs())) as f64
+        })
+        .collect();
+    let norm: f64 = maxes.iter().zip(&w).map(|(&v, &wg)| wg * v).sum();
+    if norm <= c {
+        return (data.to_vec(), 0.0);
+    }
+    if c == 0.0 {
+        let tau = maxes.iter().zip(&w).map(|(&v, &wg)| v / wg).fold(0.0f64, f64::max);
+        return (vec![0.0; data.len()], tau);
+    }
+    // Weighted simplex threshold by sorted scan over breakpoints v/w.
+    let mut order: Vec<usize> = (0..n_groups).collect();
+    order.sort_by(|&a, &b| (maxes[b] / w[b]).partial_cmp(&(maxes[a] / w[a])).unwrap());
+    let mut cum_wv = 0.0f64;
+    let mut cum_w2 = 0.0f64;
+    let mut tau = 0.0f64;
+    for &g in &order {
+        cum_wv += w[g] * maxes[g];
+        cum_w2 += w[g] * w[g];
+        let t = (cum_wv - c) / cum_w2;
+        if maxes[g] / w[g] > t {
+            tau = t;
+        } else {
+            break;
+        }
+    }
+    let tau = tau.max(0.0);
+    let radii: Vec<f64> =
+        maxes.iter().zip(&w).map(|(&v, &wg)| (v - tau * wg).max(0.0)).collect();
+    (clip(data, n_groups, group_len, &radii), tau)
+}
+
+/// Naive **bi-level** oracle (uniform prices).
+pub fn oracle_bilevel(data: &[f32], n_groups: usize, group_len: usize, c: f64) -> (Vec<f32>, f64) {
+    let ones = vec![1.0f32; n_groups];
+    oracle_bilevel_weighted(data, n_groups, group_len, &ones, c)
+}
+
+// ─────────────────── norms (oracle-side, f64) ───────────────────
+
+/// Unweighted ℓ₁,∞ norm computed independently of the production kernels.
+pub fn oracle_norm_l1inf(data: &[f32], n_groups: usize, group_len: usize) -> f64 {
+    let ones = vec![1.0f32; n_groups];
+    oracle_norm_l1inf_weighted(data, n_groups, group_len, &ones)
+}
+
+/// Weighted ℓ₁,∞ norm computed independently of the production kernels.
+pub fn oracle_norm_l1inf_weighted(
+    data: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    weights: &[f32],
+) -> f64 {
+    (0..n_groups)
+        .map(|g| {
+            let mx = data[g * group_len..(g + 1) * group_len]
+                .iter()
+                .fold(0.0f32, |a, &v| a.max(v.abs())) as f64;
+            weights[g] as f64 * mx
+        })
+        .sum()
+}

@@ -1,0 +1,274 @@
+//! Property-based **differential** suite: every production operator —
+//! the six exact ℓ₁,∞ solvers, the bi-level operator and its sharded
+//! tree (2/4 shards), and the weighted family — is checked against the
+//! naive, self-contained oracle in `common::` across ≥200 seeded random
+//! shapes per family, plus the structural invariants every projection
+//! must satisfy:
+//!
+//! - **oracle agreement**: θ/τ/λ within 1e-6·scale, entries within 1e-6;
+//! - **feasibility**: the result lies in the (weighted) ball;
+//! - **idempotence**: `P(P(X)) == P(X)` within 1e-6;
+//! - **KKT certificates** on the exact and weighted families;
+//! - **uniform-weights reduction**: the weighted operators with all-ones
+//!   prices are *bit-identical* to their unweighted counterparts.
+//!
+//! Failures print the property name, seed and case index (see
+//! `l1inf::util::prop`), so any counterexample is reproducible from the
+//! log line alone.
+
+mod common;
+
+use l1inf::projection::bilevel::{project_bilevel, project_bilevel_tree};
+use l1inf::projection::kkt::{self, Tolerance};
+use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::projection::weighted::{project_bilevel_weighted, project_l1inf_weighted};
+use l1inf::util::prop;
+use l1inf::util::rng::Rng;
+
+/// Cases per family (the ISSUE floor is 200).
+const CASES: usize = 210;
+
+/// Shared case generator: structured random matrix + a radius spanning
+/// deep-projection to near-feasible regimes (and occasionally infeasible
+/// = identity).
+fn gen_case(rng: &mut Rng) -> (Vec<f32>, usize, usize, f64) {
+    let (data, g, l) = common::gen_matrix(rng, 14, 14);
+    let norm = common::oracle_norm_l1inf(&data, g, l);
+    let frac = [0.05, 0.2, 0.5, 0.8, 0.95, 1.2][rng.below(6)];
+    let c = (frac * norm).max(1e-9);
+    (data, g, l, c)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+#[test]
+fn every_exact_solver_matches_the_oracle() {
+    prop::check(
+        "six exact solvers vs naive oracle (θ, entries, feasibility, idempotence, KKT)",
+        CASES,
+        0xD1FF01,
+        gen_case,
+        |(data, g, l, c)| {
+            let (g, l, c) = (*g, *l, *c);
+            let (oracle_x, oracle_theta) = common::oracle_l1inf(data, g, l, c);
+            let scale = oracle_theta.abs().max(1.0);
+            for algo in Algorithm::ALL {
+                let mut x = data.clone();
+                let info = project_l1inf(&mut x, g, l, c, algo);
+                if (info.theta - oracle_theta).abs() > 1e-6 * scale {
+                    return Err(format!(
+                        "{}: θ {} vs oracle {}",
+                        algo.name(),
+                        info.theta,
+                        oracle_theta
+                    ));
+                }
+                let diff = max_abs_diff(&x, &oracle_x);
+                if diff > 1e-6 {
+                    return Err(format!("{}: max |Δ| vs oracle = {diff:e}", algo.name()));
+                }
+                // Feasibility against the oracle's own norm.
+                let after = common::oracle_norm_l1inf(&x, g, l);
+                if after > c * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!("{}: infeasible result {after} > {c}", algo.name()));
+                }
+                // Idempotence: re-projecting is a no-op.
+                let mut twice = x.clone();
+                project_l1inf(&mut twice, g, l, c, algo);
+                let idem = max_abs_diff(&twice, &x);
+                if idem > 1e-6 {
+                    return Err(format!("{}: not idempotent, drift {idem:e}", algo.name()));
+                }
+            }
+            // One KKT certificate per case (algorithm-independent; all six
+            // just agreed with the oracle ≤1e-6).
+            let mut x = data.clone();
+            let info = project_l1inf(&mut x, g, l, c, Algorithm::Bisection);
+            if !info.feasible {
+                kkt::verify_l1inf(data, &x, g, l, c, Tolerance::default())
+                    .map_err(|e| format!("KKT: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn weighted_family_matches_the_oracle_and_reduces_bitwise() {
+    prop::check(
+        "weighted ℓ₁,∞ vs oracle + bit-exact uniform reduction + weighted KKT",
+        CASES,
+        0xD1FF02,
+        |rng: &mut Rng| {
+            let (data, g, l) = common::gen_matrix(rng, 14, 14);
+            let w = common::positive_weights(rng, g);
+            let norm = common::oracle_norm_l1inf_weighted(&data, g, l, &w);
+            let frac = [0.05, 0.3, 0.6, 0.9, 1.2][rng.below(5)];
+            let c = (frac * norm).max(1e-9);
+            (data, g, l, w, c)
+        },
+        |(data, g, l, w, c)| {
+            let (g, l, c) = (*g, *l, *c);
+            // 1. Oracle agreement under random prices.
+            let (oracle_x, oracle_lambda) = common::oracle_l1inf_weighted(data, g, l, w, c);
+            let mut x = data.clone();
+            let info = project_l1inf_weighted(&mut x, g, l, c, w);
+            let scale = oracle_lambda.abs().max(1.0);
+            if (info.theta - oracle_lambda).abs() > 1e-6 * scale {
+                return Err(format!("λ {} vs oracle {}", info.theta, oracle_lambda));
+            }
+            let diff = max_abs_diff(&x, &oracle_x);
+            if diff > 1e-6 {
+                return Err(format!("max |Δ| vs oracle = {diff:e}"));
+            }
+            // 2. Feasibility + weighted KKT certificate.
+            let after = common::oracle_norm_l1inf_weighted(&x, g, l, w);
+            if after > c * (1.0 + 1e-6) + 1e-9 {
+                return Err(format!("infeasible: {after} > {c}"));
+            }
+            if !info.feasible {
+                kkt::verify_l1inf_weighted(data, &x, g, l, w, c, Tolerance::default())
+                    .map_err(|e| format!("weighted KKT: {e}"))?;
+            }
+            // 3. Idempotence.
+            let mut twice = x.clone();
+            project_l1inf_weighted(&mut twice, g, l, c, w);
+            let idem = max_abs_diff(&twice, &x);
+            if idem > 1e-6 {
+                return Err(format!("not idempotent, drift {idem:e}"));
+            }
+            // 4. Uniform prices reduce *bit-exactly* to the exact
+            // bisection projection — the ISSUE acceptance criterion.
+            let ones = vec![1.0f32; g];
+            let mut weighted = data.clone();
+            let wi = project_l1inf_weighted(&mut weighted, g, l, c, &ones);
+            let mut exact = data.clone();
+            let ei = project_l1inf(&mut exact, g, l, c, Algorithm::Bisection);
+            if wi.theta.to_bits() != ei.theta.to_bits() {
+                return Err(format!(
+                    "uniform reduction: λ bits {} != θ bits {}",
+                    wi.theta, ei.theta
+                ));
+            }
+            for (i, (a, b)) in weighted.iter().zip(&exact).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("uniform reduction: entry {i}: {a} vs {b} (bits)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bilevel_and_tree_match_the_oracle() {
+    prop::check(
+        "bi-level + 2/4-shard tree vs naive oracle (τ, entries, feasibility, idempotence)",
+        CASES,
+        0xD1FF03,
+        gen_case,
+        |(data, g, l, c)| {
+            let (g, l, c) = (*g, *l, *c);
+            let (oracle_x, oracle_tau) = common::oracle_bilevel(data, g, l, c);
+            let scale = oracle_tau.abs().max(1.0);
+            let mut x = data.clone();
+            let info = project_bilevel(&mut x, g, l, c);
+            if (info.tau - oracle_tau).abs() > 1e-6 * scale {
+                return Err(format!("τ {} vs oracle {}", info.tau, oracle_tau));
+            }
+            let diff = max_abs_diff(&x, &oracle_x);
+            if diff > 1e-6 {
+                return Err(format!("serial max |Δ| vs oracle = {diff:e}"));
+            }
+            let after = common::oracle_norm_l1inf(&x, g, l);
+            if after > c * (1.0 + 1e-6) + 1e-9 {
+                return Err(format!("infeasible: {after} > {c}"));
+            }
+            // Tree with 2 and 4 shards against the same oracle.
+            for shards in [2usize, 4] {
+                let mut t = data.clone();
+                let ti = project_bilevel_tree(&mut t, g, l, c, shards);
+                if (ti.tau - oracle_tau).abs() > 1e-6 * scale {
+                    return Err(format!(
+                        "tree x{shards}: τ {} vs oracle {}",
+                        ti.tau, oracle_tau
+                    ));
+                }
+                let tdiff = max_abs_diff(&t, &oracle_x);
+                if tdiff > 1e-6 {
+                    return Err(format!("tree x{shards}: max |Δ| vs oracle = {tdiff:e}"));
+                }
+            }
+            // Idempotence of the serial operator.
+            let mut twice = x.clone();
+            project_bilevel(&mut twice, g, l, c);
+            let idem = max_abs_diff(&twice, &x);
+            if idem > 1e-6 {
+                return Err(format!("not idempotent, drift {idem:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn weighted_bilevel_matches_the_oracle_and_reduces_bitwise() {
+    prop::check(
+        "weighted bi-level vs oracle + bit-exact uniform reduction",
+        CASES,
+        0xD1FF04,
+        |rng: &mut Rng| {
+            let (data, g, l) = common::gen_matrix(rng, 14, 14);
+            let w = common::positive_weights(rng, g);
+            let norm = common::oracle_norm_l1inf_weighted(&data, g, l, &w);
+            let frac = [0.05, 0.3, 0.6, 0.9, 1.2][rng.below(5)];
+            let c = (frac * norm).max(1e-9);
+            (data, g, l, w, c)
+        },
+        |(data, g, l, w, c)| {
+            let (g, l, c) = (*g, *l, *c);
+            let (oracle_x, oracle_tau) = common::oracle_bilevel_weighted(data, g, l, w, c);
+            let scale = oracle_tau.abs().max(1.0);
+            let mut x = data.clone();
+            let info = project_bilevel_weighted(&mut x, g, l, c, w);
+            if (info.tau - oracle_tau).abs() > 1e-6 * scale {
+                return Err(format!("τ {} vs oracle {}", info.tau, oracle_tau));
+            }
+            let diff = max_abs_diff(&x, &oracle_x);
+            if diff > 1e-6 {
+                return Err(format!("max |Δ| vs oracle = {diff:e}"));
+            }
+            let after = common::oracle_norm_l1inf_weighted(&x, g, l, w);
+            if after > c * (1.0 + 1e-6) + 1e-9 {
+                return Err(format!("infeasible: {after} > {c}"));
+            }
+            // Idempotence.
+            let mut twice = x.clone();
+            project_bilevel_weighted(&mut twice, g, l, c, w);
+            let idem = max_abs_diff(&twice, &x);
+            if idem > 1e-6 {
+                return Err(format!("not idempotent, drift {idem:e}"));
+            }
+            // Bit-exact uniform reduction to the unweighted operator.
+            let ones = vec![1.0f32; g];
+            let mut weighted = data.clone();
+            let wi = project_bilevel_weighted(&mut weighted, g, l, c, &ones);
+            let mut plain = data.clone();
+            let pi = project_bilevel(&mut plain, g, l, c);
+            if wi.tau.to_bits() != pi.tau.to_bits() {
+                return Err(format!(
+                    "uniform reduction: τ bits {} != {}",
+                    wi.tau, pi.tau
+                ));
+            }
+            for (i, (a, b)) in weighted.iter().zip(&plain).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("uniform reduction: entry {i}: {a} vs {b} (bits)"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -15,6 +15,9 @@
 //!    projections under *each* dispatch, because the lane-8 contract
 //!    assigns accumulator lanes by element index, not by memory layout.
 
+mod common;
+
+use common::adversarial_matrix;
 use l1inf::projection::bilevel::project_bilevel;
 use l1inf::projection::dense::{self, Dispatch};
 use l1inf::projection::grouped::{GroupedView, GroupedViewMut};
@@ -48,28 +51,6 @@ fn runnable_dispatches() -> Vec<Dispatch> {
 /// Lane-hostile shapes: group lengths straddling the 8-lane width,
 /// single-element groups, single-group matrices.
 const SHAPES: [(usize, usize); 6] = [(5, 9), (13, 1), (1, 17), (40, 7), (8, 33), (20, 16)];
-
-/// Adversarial signed matrix: whole-zero groups, in-group zeros, heavy
-/// cross-group ties at ±0.5, f32 denormals, and ordinary signed noise.
-fn adversarial_matrix(rng: &mut Rng, g: usize, l: usize) -> Vec<f32> {
-    let mut data = vec![0.0f32; g * l];
-    for grp in 0..g {
-        if rng.chance(0.15) {
-            continue; // whole-zero group
-        }
-        for i in 0..l {
-            data[grp * l + i] = match rng.below(10) {
-                0 => 0.0,
-                1 => 0.5,
-                2 => -0.5,
-                3 => 1.0e-41,  // subnormal
-                4 => -2.5e-42, // subnormal
-                _ => (rng.f32() - 0.5) * 3.0,
-            };
-        }
-    }
-    data
-}
 
 #[test]
 fn force_scalar_env_contract() {

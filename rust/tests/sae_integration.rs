@@ -6,7 +6,7 @@
 use l1inf::coordinator::sweep::split_for;
 use l1inf::projection::l1inf::Algorithm;
 use l1inf::runtime::{Engine, Manifest};
-use l1inf::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, Trainer};
+use l1inf::sae::trainer::{ExecMode, ProjectionMode, TrainConfig, Trainer, WeightSource};
 
 fn engine_or_skip() -> Option<Engine> {
     match Manifest::load(Manifest::default_dir()) {
@@ -25,6 +25,7 @@ fn base_tc() -> TrainConfig {
         lr: 1e-2,
         lambda: 0.1,
         projection: ProjectionMode::None,
+        weights: WeightSource::Uniform,
         algo: Algorithm::InverseOrder,
         exec: ExecMode::Epoch,
         seed: 0,

@@ -3,6 +3,9 @@
 //! every solver on random and adversarial inputs; warm-started solves must
 //! return the cold θ*; and the TCP protocol must round-trip projections.
 
+mod common;
+
+use common::random_signed;
 use l1inf::config::serve::ServeConfig;
 use l1inf::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
 use l1inf::projection::{norm_l1inf, GroupedView};
@@ -13,14 +16,6 @@ use l1inf::util::json;
 use l1inf::util::rng::Rng;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-
-fn random_signed(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
-    let mut y = vec![0.0f32; len];
-    for v in y.iter_mut() {
-        *v = (rng.f32() - 0.5) * scale;
-    }
-    y
-}
 
 /// Parallel vs serial on one input, all thread counts worth exercising.
 fn assert_parallel_matches_serial(data: &[f32], g: usize, l: usize, c: f64, algo: Algorithm) {
@@ -159,6 +154,7 @@ fn theta_cache_feeds_batch_queue() {
         radius: 0.7,
         algo: Algorithm::InverseOrder,
         mode: ProjKind::Exact,
+        weights: None,
     };
     // A queue re-projecting near-identical matrices: first cold, rest warm.
     let queue: Vec<ProjRequest> = (0..6)
@@ -254,6 +250,69 @@ fn server_projects_over_tcp_with_warm_cache() {
 
     // Shutdown stops the accept loop and run() returns cleanly.
     let bye = client.roundtrip(r#"{"id": 6, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&json::Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn server_round_trips_weighted_mode() {
+    use l1inf::projection::weighted::project_l1inf_weighted;
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+
+    let (g, l, c) = (3usize, 4usize, 1.2f64);
+    let y = vec![1.0f32, -0.5, 0.25, 0.0, 0.9, 0.8, -0.7, 0.1, 1.1, 0.2, 0.3, -0.4];
+    let w = [1.0f32, 2.0, 0.5];
+    let payload: Vec<String> = y.iter().map(|v| format!("{v}")).collect();
+    let req = format!(
+        r#"{{"id": 2, "op": "project", "key": "w1", "mode": "weighted", "groups": {g}, "len": {l}, "radius": {c}, "weights": [1.0, 2.0, 0.5], "data": [{}]}}"#,
+        payload.join(",")
+    );
+    let resp = client.roundtrip(&req);
+    assert_eq!(resp.get("ok"), Some(&json::Json::Bool(true)), "{resp}");
+    assert_eq!(resp.get("mode").unwrap().as_str(), Some("weighted"));
+    assert_eq!(resp.get("warm"), Some(&json::Json::Bool(false)));
+
+    // The echoed matrix matches the in-process weighted operator.
+    let mut reference = y.clone();
+    let ri = project_l1inf_weighted(&mut reference, g, l, c, &w);
+    let lambda = resp.get("theta").unwrap().as_f64().unwrap();
+    assert!((lambda - ri.theta).abs() < 1e-9, "{lambda} vs {}", ri.theta);
+    let echoed = resp.get("data").unwrap().as_arr().unwrap();
+    assert_eq!(echoed.len(), reference.len());
+    for (a, b) in echoed.iter().zip(&reference) {
+        assert!((a.as_f64().unwrap() - *b as f64).abs() < 1e-6);
+    }
+
+    // Same key again: λ warm-starts from the weighted namespace without
+    // changing the result.
+    let req2 = req.replace(r#""id": 2"#, r#""id": 3"#);
+    let resp2 = client.roundtrip(&req2);
+    assert_eq!(resp2.get("warm"), Some(&json::Json::Bool(true)), "{resp2}");
+    let lambda2 = resp2.get("theta").unwrap().as_f64().unwrap();
+    assert!((lambda2 - ri.theta).abs() <= 1e-9 * ri.theta.max(1.0));
+
+    // An exact-mode request under the same key stays cold: λ must not
+    // leak into the exact θ namespace.
+    let req3 = req
+        .replace(r#""id": 2"#, r#""id": 4"#)
+        .replace(r#""mode": "weighted", "#, "")
+        .replace(r#""weights": [1.0, 2.0, 0.5], "#, "");
+    let resp3 = client.roundtrip(&req3);
+    assert_eq!(resp3.get("mode").unwrap().as_str(), Some("exact"));
+    assert_eq!(resp3.get("warm"), Some(&json::Json::Bool(false)), "{resp3}");
+
+    // Weights on a non-weighted mode are rejected but keep the
+    // connection open.
+    let bad = req.replace(r#""mode": "weighted", "#, "").replace(r#""id": 2"#, r#""id": 5"#);
+    let err = client.roundtrip(&bad);
+    assert_eq!(err.get("ok"), Some(&json::Json::Bool(false)));
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("weighted"), "{err}");
+
+    let bye = client.roundtrip(r#"{"id": 9, "op": "shutdown"}"#);
     assert_eq!(bye.get("shutting_down"), Some(&json::Json::Bool(true)));
     handle.join().expect("server thread").expect("server run");
 }

@@ -12,6 +12,8 @@
 //!    matrix through `GroupedViewMut::columns` equals the transpose →
 //!    project → transpose-back reference, with no transpose copy.
 
+mod common;
+
 use l1inf::projection::grouped::{GroupedView, GroupedViewMut};
 use l1inf::projection::l1inf::{
     new_solver, project_l1inf, project_with, solve_theta, Algorithm, Solver,
@@ -20,25 +22,24 @@ use l1inf::projection::norm_l1inf;
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
 
-/// All six solvers agree with the bisection oracle on θ and entries.
+/// All six solvers agree with the shared naive oracle (`common::`) on θ
+/// and entries.
 fn all_solvers_agree(data: &[f32], g: usize, l: usize, c: f64) -> Result<(), String> {
     let norm = norm_l1inf(GroupedView::new(data, g, l));
     if norm <= c || c <= 0.0 {
         return Ok(());
     }
     let abs: Vec<f32> = data.iter().map(|v| v.abs()).collect();
-    let gold = solve_theta(&abs, g, l, c, Algorithm::Bisection);
-    let scale = gold.theta.abs().max(1.0);
-    let mut reference = data.to_vec();
-    project_l1inf(&mut reference, g, l, c, Algorithm::Bisection);
+    let (reference, gold_theta) = common::oracle_l1inf(data, g, l, c);
+    let scale = gold_theta.abs().max(1.0);
     for algo in Algorithm::ALL {
         let st = solve_theta(&abs, g, l, c, algo);
-        if (st.theta - gold.theta).abs() > 1e-6 * scale {
+        if (st.theta - gold_theta).abs() > 1e-6 * scale {
             return Err(format!(
-                "{}: theta {} != gold {} (g={g} l={l} c={c})",
+                "{}: theta {} != oracle {} (g={g} l={l} c={c})",
                 algo.name(),
                 st.theta,
-                gold.theta
+                gold_theta
             ));
         }
         let mut out = data.to_vec();
