@@ -13,17 +13,31 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Default solver for requests that don't name one.
     pub algo: Algorithm,
+    /// Metrics snapshot file the server writes on an interval and at
+    /// shutdown (`None` = no snapshot file). Read back by
+    /// `l1inf stats --metrics-snapshot FILE`.
+    pub metrics_snapshot: Option<String>,
+    /// Seconds between snapshot-file rewrites (only with
+    /// `metrics_snapshot`; the shutdown write always happens).
+    pub metrics_interval_secs: f64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { addr: "127.0.0.1:7878".into(), threads: 0, algo: Algorithm::InverseOrder }
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            threads: 0,
+            algo: Algorithm::InverseOrder,
+            metrics_snapshot: None,
+            metrics_interval_secs: 30.0,
+        }
     }
 }
 
 /// Build a [`ServeConfig`] from the `[serve]` section (all keys optional).
 pub fn serve_config(cfg: &Config) -> Result<ServeConfig> {
     let default = ServeConfig::default();
+    let snapshot = cfg.str_or("serve.metrics_snapshot", "");
     Ok(ServeConfig {
         addr: cfg.str_or("serve.addr", &default.addr),
         threads: cfg.usize_or("serve.threads", default.threads),
@@ -31,6 +45,8 @@ pub fn serve_config(cfg: &Config) -> Result<ServeConfig> {
             .str_or("serve.algo", default.algo.name())
             .parse()
             .map_err(anyhow::Error::msg)?,
+        metrics_snapshot: if snapshot.is_empty() { None } else { Some(snapshot) },
+        metrics_interval_secs: cfg.f64_or("serve.metrics_interval_secs", default.metrics_interval_secs),
     })
 }
 
@@ -44,18 +60,22 @@ mod tests {
         assert_eq!(sc.addr, "127.0.0.1:7878");
         assert_eq!(sc.threads, 0);
         assert_eq!(sc.algo, Algorithm::InverseOrder);
+        assert_eq!(sc.metrics_snapshot, None);
+        assert_eq!(sc.metrics_interval_secs, 30.0);
     }
 
     #[test]
     fn section_roundtrip() {
         let cfg = Config::parse(
-            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\n",
+            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\nmetrics_snapshot = \"/tmp/snap.json\"\nmetrics_interval_secs = 5.0\n",
         )
         .unwrap();
         let sc = serve_config(&cfg).unwrap();
         assert_eq!(sc.addr, "0.0.0.0:9000");
         assert_eq!(sc.threads, 8);
         assert_eq!(sc.algo, Algorithm::Newton);
+        assert_eq!(sc.metrics_snapshot.as_deref(), Some("/tmp/snap.json"));
+        assert_eq!(sc.metrics_interval_secs, 5.0);
     }
 
     #[test]

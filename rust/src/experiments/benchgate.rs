@@ -7,6 +7,9 @@
 //! `<out>/bench_gate.md` (the CI step appends that file to
 //! `$GITHUB_STEP_SUMMARY`), and the run fails if any metric breaks its
 //! bound — *after* the table is written, so the summary always renders.
+//! The gate also requires the `metrics_snapshot.json` that `serve_bench`
+//! leaves in `--out` to parse and to carry `cache.exact.hit_rate` (the
+//! warm-start telemetry field the CI artifact consumers key on).
 //! One exception: the kernel-speedup floor is waived (reported as "below
 //! floor (waived)") when the producing process was pinned to the scalar
 //! dispatch — it timed scalar against scalar, which measures nothing.
@@ -158,6 +161,24 @@ fn baselines_path(opts: &ExpOpts) -> PathBuf {
     PathBuf::from("ci/bench_baselines.json")
 }
 
+/// Structural gate on the serve observability surface: the
+/// `metrics_snapshot.json` that `exp serve_bench` leaves behind must parse
+/// and carry the exact-family warm-start hit rate (`cache.exact.hit_rate`)
+/// — the field dashboards and the CI artifact consumers key on. Returns
+/// the hit rate for the summary table.
+fn check_metrics_snapshot(opts: &ExpOpts) -> Result<f64> {
+    let path = opts.outdir.join("metrics_snapshot.json");
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("reading {} (run `exp serve_bench` first)", path.display())
+    })?;
+    let v = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    v.get("cache")
+        .and_then(|c| c.get("exact"))
+        .and_then(|e| e.get("hit_rate"))
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{}: missing cache.exact.hit_rate", path.display()))
+}
+
 fn fmt_val(v: f64) -> String {
     if v != 0.0 && v.abs() < 1e-3 {
         format!("{v:.2e}")
@@ -211,10 +232,15 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         rows.push(Row { name: name.clone(), kind, bound, baseline, current, pass, waived: is_waived });
     }
     ensure!(!rows.is_empty(), "baselines file gates no metrics");
+    let warm_hit_rate = check_metrics_snapshot(opts)?;
 
     // Render: markdown for $GITHUB_STEP_SUMMARY, the same table to stdout.
     let mut md = String::new();
     md.push_str("## Bench regression gate\n\n");
+    md.push_str(&format!(
+        "Metrics snapshot: parsed, `cache.exact.hit_rate` = {}\n\n",
+        fmt_val(warm_hit_rate)
+    ));
     md.push_str(&format!(
         "Baselines: `{}` · kernel dispatch: {}\n\n",
         bpath.display(),
@@ -266,6 +292,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             },
         );
     }
+    println!("metrics snapshot: parsed, cache.exact.hit_rate = {}", fmt_val(warm_hit_rate));
     println!("wrote {}", md_path.display());
 
     let failing: Vec<&Row> = rows.iter().filter(|r| !r.pass && !r.waived).collect();
@@ -327,6 +354,13 @@ mod tests {
             &format!(
                 r#"{{{meta}, "agreement": {{"max": 0.0, "theta_diff": 0.0}}, "gate": {{"value": 0.0, "pass": true}}}}"#
             ),
+        );
+        write(
+            &dir.join("metrics_snapshot.json"),
+            r#"{"served": 6, "uptime_secs": 0.5,
+                "cache": {"exact": {"entries": 1, "hits": 5, "misses": 1, "updates": 6, "hit_rate": 0.8333},
+                          "total": {"entries": 1, "hits": 5, "misses": 1, "updates": 6, "hit_rate": 0.8333}},
+                "metrics": {"counters": {}, "gauges": {}, "histograms": {}}}"#,
         );
     }
 
@@ -392,6 +426,21 @@ mod tests {
         let md = std::fs::read_to_string(dir.join("bench_gate.md")).unwrap();
         assert!(md.contains("waived"), "{md}");
         assert!(!md.contains("❌"), "{md}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_without_hit_rate_fails_the_gate() {
+        let dir = std::env::temp_dir().join(format!("l1inf_gate_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_reports(&dir, 2.4, "portable");
+        // Well-formed JSON but missing the warm-hit-rate field the
+        // observability consumers key on.
+        write(&dir.join("metrics_snapshot.json"), r#"{"cache": {"exact": {"hits": 1}}}"#);
+        let bl = dir.join("baselines.json");
+        write(&bl, baselines_json());
+        let err = run(&opts_for(&dir, &bl)).unwrap_err().to_string();
+        assert!(err.contains("cache.exact.hit_rate"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

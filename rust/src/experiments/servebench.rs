@@ -16,17 +16,88 @@
 //!    1 worker vs the full pool, in requests/second.
 
 use super::ExpOpts;
+use crate::config::serve::ServeConfig;
 use crate::projection::l1inf::{project_l1inf, project_l1inf_with_hint, Algorithm};
 use crate::serve::batch::{BatchProjector, ProjKind, ProjRequest};
 use crate::serve::cache::{CacheKey, Family, ThetaCache};
+use crate::serve::server::Server;
 use crate::util::bench::{self, BenchOpts, Sample};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Drive one short TCP session (cold + warm projections with the same key,
+/// a stats op, shutdown) against a server that writes `snapshot_path` at
+/// shutdown; returns the exact-family warm-start hit rate read back from
+/// the snapshot file.
+fn run_serve_session(snapshot_path: &std::path::Path, algo: Algorithm) -> Result<f64> {
+    let sc = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        algo,
+        metrics_snapshot: Some(snapshot_path.to_string_lossy().into_owned()),
+        // The interval writer is exercised by the integration tests; here
+        // only the shutdown write matters, so keep the interval out of the
+        // way of the bench wall clock.
+        metrics_interval_secs: 3600.0,
+    };
+    let server = Server::bind(&sc).context("binding serve_bench session server")?;
+    let addr = server.local_addr()?;
+    let handle = std::thread::spawn(move || server.run());
+
+    let stream = TcpStream::connect(addr).context("connecting serve_bench session")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut roundtrip = |line: &str| -> Result<Json> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        crate::util::json::parse(&resp).map_err(anyhow::Error::msg)
+    };
+
+    let (groups, len) = (16usize, 8usize);
+    let mut rng = Rng::new(0xF00D);
+    for i in 0..6 {
+        let mut y = vec![0.0f32; groups * len];
+        rng.fill_uniform_f32(&mut y);
+        let data = y.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+        let line = format!(
+            r#"{{"id":{i},"op":"project","key":"bench","groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+        );
+        let resp = roundtrip(&line)?;
+        ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "serve session project request {i} failed: {resp}"
+        );
+    }
+    let stats = roundtrip(r#"{"id":100,"op":"stats"}"#)?;
+    ensure!(
+        stats.get("metrics").and_then(|m| m.get("histograms")).is_some(),
+        "stats op must return the metrics snapshot: {stats}"
+    );
+    roundtrip(r#"{"id":101,"op":"shutdown"}"#)?;
+    handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("serve_bench session server thread panicked"))?
+        .context("serve_bench session server")?;
+
+    let text = std::fs::read_to_string(snapshot_path)
+        .with_context(|| format!("reading {}", snapshot_path.display()))?;
+    let snap = crate::util::json::parse(&text).map_err(anyhow::Error::msg)?;
+    snap.get("cache")
+        .and_then(|c| c.get("exact"))
+        .and_then(|e| e.get("hit_rate"))
+        .and_then(Json::as_f64)
+        .context("snapshot file missing cache.exact.hit_rate")
 }
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
@@ -201,6 +272,15 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         pool_full.threads()
     );
 
+    // ── 5. end-to-end serve session → metrics snapshot ───────────────────
+    // Exercise the real TCP surface (cold + warm projections, a stats op)
+    // against a server configured with `metrics_snapshot`, so the shutdown
+    // write leaves `<outdir>/metrics_snapshot.json` behind for `bench_gate`
+    // and the CI artifact upload.
+    let snapshot_path = opts.outdir.join("metrics_snapshot.json");
+    let warm_hit_rate = run_serve_session(&snapshot_path, algo)?;
+    println!("serve session warm hit rate: {warm_hit_rate:.3} (snapshot {})", snapshot_path.display());
+
     // ── report ───────────────────────────────────────────────────────────
     let report = obj(vec![
         ("meta", bench::bench_meta(&[(n, m)])),
@@ -242,6 +322,16 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
                         ("workers", Json::Num(pool_full.threads() as f64)),
                         ("reqs_per_sec", Json::Num(rps_full)),
                     ]),
+                ),
+            ]),
+        ),
+        (
+            "serve_session",
+            obj(vec![
+                ("warm_hit_rate", Json::Num(warm_hit_rate)),
+                (
+                    "metrics_snapshot",
+                    Json::Str(snapshot_path.to_string_lossy().into_owned()),
                 ),
             ]),
         ),

@@ -6,6 +6,8 @@
 //! l1inf project   --groups M --len N --radius C [--algo inv_order] [--seed S]
 //! l1inf train     [--config configs/synth.toml] [--set train.key=value;...]
 //! l1inf serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config F]
+//!                 [--metrics-snapshot FILE] [--metrics-interval SECS]
+//! l1inf stats     --metrics-snapshot FILE [--format prom|json]
 //! l1inf exp NAME  [--quick] [--out results] [--config F] [--set ...]
 //! l1inf artifacts [--dir artifacts]
 //! l1inf help
@@ -35,10 +37,12 @@ use l1inf::runtime::Engine;
 #[cfg(feature = "pjrt")]
 use l1inf::sae::trainer::Trainer;
 
-const USAGE: &str = "usage: l1inf <project|train|serve|exp|artifacts|help> [options]
+const USAGE: &str = "usage: l1inf <project|train|serve|stats|exp|artifacts|help> [options]
   project   --groups M --len N --radius C [--algo A] [--seed S]
   train     [--config FILE] [--set section.key=value;...]
   serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config FILE]
+            [--metrics-snapshot FILE] [--metrics-interval SECS]
+  stats     --metrics-snapshot FILE [--format prom|json]
   exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
   artifacts [--dir DIR]
 experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj serve_bench proj_bench bilevel_bench kernel_bench weighted_bench bench_gate";
@@ -74,6 +78,7 @@ fn run() -> Result<()> {
         "project" => cmd_project(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
@@ -160,6 +165,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(a) = args.get("algo") {
         sc.algo = a.parse().map_err(anyhow::Error::msg)?;
     }
+    if let Some(path) = args.get("metrics-snapshot") {
+        sc.metrics_snapshot = Some(path.to_string());
+    }
+    if let Some(s) = args.get("metrics-interval") {
+        sc.metrics_interval_secs =
+            s.parse().map_err(|_| anyhow::anyhow!("--metrics-interval: bad number '{s}'"))?;
+    }
     let server = Server::bind(&sc).context("binding projection service")?;
     println!(
         "l1inf serve: listening on {} ({} worker threads, algo {})",
@@ -169,6 +181,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("protocol: one JSON object per line; see README.md §serve");
     server.run()
+}
+
+/// Render a metrics snapshot file written by `l1inf serve
+/// --metrics-snapshot FILE` (or by `exp serve_bench`) as JSON or as a
+/// Prometheus text exposition — the offline scrape surface.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let path = args
+        .get("metrics-snapshot")
+        .context("stats requires --metrics-snapshot FILE (written by `l1inf serve`)")?;
+    let raw = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = l1inf::util::json::parse(&raw)
+        .map_err(anyhow::Error::msg)
+        .with_context(|| format!("parsing {path}"))?;
+    match args.get_or("format", "json") {
+        "json" => println!("{doc}"),
+        "prom" => print!("{}", l1inf::util::metrics::prometheus_text(&doc)),
+        other => bail!("--format: expected 'prom' or 'json', got '{other}'"),
+    }
+    Ok(())
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {

@@ -377,6 +377,7 @@ impl BilevelSolver {
         hint: Option<f64>,
     ) -> BilevelInfo {
         assert!(c >= 0.0, "radius must be nonnegative");
+        let t = std::time::Instant::now();
 
         // Level 2 → 1: per-group |max| into the reusable gather, on the
         // dispatched dense kernels (blocked tile traversal for column
@@ -389,7 +390,7 @@ impl BilevelSolver {
         }
 
         // Root stage (shared with the tree), then the level-1→2 finish.
-        match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+        let info = match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
             RootSolve::Feasible(info) => {
                 self.last_tau = None;
                 info
@@ -404,8 +405,31 @@ impl BilevelSolver {
                 self.last_tau = Some(info.tau);
                 info
             }
-        }
+        };
+        record_bilevel_solve(&info, t, hint);
+        info
     }
+}
+
+/// Record one completed bi-level solve into the global metrics plane
+/// (shared by the serial solver and the sharded tree; atomics only).
+/// `survivors` stands in for touched groups — the level-1 simplex solve
+/// actively processes exactly the surviving group maxima. A hinted call
+/// counts as accepted when the solver reports `warm`; feasible
+/// projections never consult the hint, so they count toward neither.
+pub(crate) fn record_bilevel_solve(
+    info: &BilevelInfo,
+    start: std::time::Instant,
+    hint: Option<f64>,
+) {
+    crate::util::metrics::record_solve(
+        crate::serve::cache::Family::Bilevel,
+        start.elapsed().as_micros() as u64,
+        info.work,
+        info.survivors,
+        !info.feasible && hint.is_some(),
+        info.warm,
+    );
 }
 
 /// One-shot bi-level projection of a contiguous grouped matrix (fresh

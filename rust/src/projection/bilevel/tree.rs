@@ -89,6 +89,7 @@ impl TreeBilevel {
     ) -> BilevelInfo {
         assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
         assert!(c >= 0.0, "radius must be nonnegative");
+        let t = std::time::Instant::now();
         let ranges = shard_ranges(n_groups, self.shards);
         let parallel = self.shards > 1 && ranges.len() > 1 && group_len > 0;
 
@@ -126,7 +127,7 @@ impl TreeBilevel {
         // paths, warm-candidate selection, τ solve, radii fold), so the
         // tree can never drift from [`bilevel::BilevelSolver`]: identical
         // maxima bits in give identical radii bits out.
-        match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+        let info = match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
             RootSolve::Feasible(info) => info,
             RootSolve::Zero(info) => {
                 data.fill(0.0);
@@ -153,7 +154,12 @@ impl TreeBilevel {
                 }
                 info
             }
+        };
+        if parallel {
+            crate::metric_histogram!("serve.shard.fanout").record(ranges.len() as u64);
         }
+        bilevel::record_bilevel_solve(&info, t, hint);
+        info
     }
 }
 

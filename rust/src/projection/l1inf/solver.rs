@@ -196,7 +196,35 @@ pub fn new_solver(algo: Algorithm) -> Box<dyn Solver> {
 ///    `min(max_g, μ_g)` per surviving group is *exactly* the post-clip
 ///    group max, so the seed's second O(nm) `norm_l1inf` pass is gone
 ///    while the reported value stays bit-identical.
+///
+/// Every call records into the global metrics plane
+/// ([`crate::util::metrics`]) under the exact family: solve count, latency,
+/// the work term, touched groups, and — when a real θ solve ran on a
+/// hinted call — whether the solver accepted or rejected the hint
+/// (atomics only; no locks on this path).
 pub fn project_with(
+    solver: &mut dyn Solver,
+    view: &mut GroupedViewMut<'_>,
+    c: f64,
+    theta_hint: Option<f64>,
+) -> ProjInfo {
+    let t = std::time::Instant::now();
+    let info = project_with_untimed(solver, view, c, theta_hint);
+    // Feasible / degenerate projections never consult the hint, so they
+    // count toward neither accept nor reject.
+    let solved = !info.feasible && c > 0.0;
+    crate::util::metrics::record_solve(
+        crate::serve::cache::Family::Exact,
+        t.elapsed().as_micros() as u64,
+        info.stats.work,
+        info.stats.touched_groups,
+        solved && theta_hint.is_some(),
+        info.stats.theta_hint.is_some(),
+    );
+    info
+}
+
+fn project_with_untimed(
     solver: &mut dyn Solver,
     view: &mut GroupedViewMut<'_>,
     c: f64,

@@ -278,6 +278,28 @@ impl WeightedSolver {
         weights: &[f32],
         hint: Option<f64>,
     ) -> ProjInfo {
+        let t = std::time::Instant::now();
+        let info = self.project_untimed(view, c, weights, hint);
+        // Feasible / degenerate projections never consult the hint.
+        let solved = !info.feasible && c > 0.0;
+        crate::util::metrics::record_solve(
+            crate::serve::cache::Family::Weighted,
+            t.elapsed().as_micros() as u64,
+            info.stats.work,
+            info.stats.touched_groups,
+            solved && hint.is_some(),
+            info.stats.theta_hint.is_some(),
+        );
+        info
+    }
+
+    fn project_untimed(
+        &mut self,
+        view: &mut GroupedViewMut<'_>,
+        c: f64,
+        weights: &[f32],
+        hint: Option<f64>,
+    ) -> ProjInfo {
         assert!(c >= 0.0, "radius must be nonnegative");
         let n_groups = view.n_groups();
         let group_len = view.group_len();

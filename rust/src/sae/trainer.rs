@@ -188,6 +188,22 @@ pub struct EpochLog {
     pub exec_ms: f64,
 }
 
+/// Record one epoch's telemetry into the global metrics plane
+/// ([`crate::util::metrics`]): epoch count, projection/execution latency
+/// histograms, and loss / θ / column-sparsity / warm-start-reuse gauges.
+/// `cache_hit_rate` is the trainer's θ-cache hit rate so far (how often
+/// an epoch's projection reused the previous epoch's θ as a warm start).
+/// Not `pjrt`-gated: the train loop calls it, tests drive it directly.
+pub fn record_epoch_metrics(log: &EpochLog, cache_hit_rate: f64) {
+    crate::metric_counter!("train.epochs").inc();
+    crate::metric_histogram!("train.proj_latency_us").record((log.proj_ms * 1e3) as u64);
+    crate::metric_histogram!("train.exec_latency_us").record((log.exec_ms * 1e3) as u64);
+    crate::metric_gauge!("train.loss").set(log.mean_loss);
+    crate::metric_gauge!("train.theta").set(log.theta);
+    crate::metric_gauge!("train.col_sparsity_pct").set(log.col_sparsity_pct);
+    crate::metric_gauge!("train.cache.hit_rate").set(cache_hit_rate);
+}
+
 /// Result of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -301,6 +317,7 @@ impl<'e> Trainer<'e> {
                 proj_ms,
                 exec_ms,
             });
+            record_epoch_metrics(logs.last().unwrap(), self.theta_cache.stats().hit_rate());
             crate::debug!(
                 "epoch {epoch}: loss={mean_loss:.4} colsp={:.2}% theta={theta:.4}",
                 logs.last().unwrap().col_sparsity_pct
@@ -518,5 +535,33 @@ impl<'e> Trainer<'e> {
             self.run_epoch_steps(split, &mut state, &mut rng, Some(&mask_t))?;
         }
         self.evaluate(split, &state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_metrics_feed_the_registry() {
+        let log = EpochLog {
+            epoch: 0,
+            mean_loss: 0.25,
+            train_acc_pct: 90.0,
+            theta: 0.125,
+            col_sparsity_pct: 40.0,
+            proj_ms: 2.0,
+            exec_ms: 8.0,
+        };
+        let before = crate::metric_counter!("train.epochs").get();
+        let proj_before = crate::metric_histogram!("train.proj_latency_us").count();
+        record_epoch_metrics(&log, 0.5);
+        record_epoch_metrics(&log, 0.75);
+        assert_eq!(crate::metric_counter!("train.epochs").get(), before + 2);
+        assert_eq!(crate::metric_histogram!("train.proj_latency_us").count(), proj_before + 2);
+        // Gauges are last-write-wins: the final epoch's values stand.
+        assert!((crate::metric_gauge!("train.cache.hit_rate").get() - 0.75).abs() < 1e-12);
+        assert!((crate::metric_gauge!("train.theta").get() - 0.125).abs() < 1e-12);
+        assert!((crate::metric_gauge!("train.col_sparsity_pct").get() - 40.0).abs() < 1e-12);
     }
 }

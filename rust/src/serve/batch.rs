@@ -250,7 +250,12 @@ impl BatchProjector {
             self.solvers.release(solver);
             return info;
         }
+        // The sharded path bypasses `project_with`, so it records its own
+        // exact-family solve telemetry (the serial fallback above already
+        // records inside `project_with`).
+        let t = std::time::Instant::now();
         let ranges = shard_ranges(n_groups, self.threads);
+        crate::metric_histogram!("serve.shard.fanout").record(ranges.len() as u64);
 
         // Pass 1 (parallel): per-group max (for ‖Y‖₁,∞) and per-group ℓ₁
         // mass (solver seed), fused in one scan per shard.
@@ -290,7 +295,7 @@ impl BatchProjector {
         // entry point).
         if radius_before <= c {
             let zero_groups = maxes.iter().filter(|&&m| m == 0.0).count();
-            return ProjInfo {
+            let info = ProjInfo {
                 radius_before,
                 radius_after: radius_before,
                 theta: 0.0,
@@ -298,10 +303,12 @@ impl BatchProjector {
                 feasible: true,
                 stats: SolveStats::default(),
             };
+            record_sharded_exact(&info, t, None);
+            return info;
         }
         if c == 0.0 {
             data.fill(0.0);
-            return ProjInfo {
+            let info = ProjInfo {
                 radius_before,
                 radius_after: 0.0,
                 theta: radius_before,
@@ -309,6 +316,8 @@ impl BatchProjector {
                 feasible: false,
                 stats: SolveStats::default(),
             };
+            record_sharded_exact(&info, t, None);
+            return info;
         }
 
         // θ solve (serial, exact) on a pooled workspace: the solver consumes
@@ -392,6 +401,7 @@ impl BatchProjector {
             stats,
         };
         self.solvers.release(solver);
+        record_sharded_exact(&info, t, theta_hint);
         info
     }
 
@@ -477,6 +487,7 @@ impl BatchProjector {
         cache: Option<&ThetaCache>,
         requests: Vec<ProjRequest>,
     ) -> Vec<ProjResponse> {
+        crate::metric_histogram!("serve.batch.queue_depth").record(requests.len() as u64);
         let workers = self.threads.min(requests.len()).max(1);
         if workers <= 1 {
             return requests
@@ -543,11 +554,29 @@ pub(crate) fn cache_key(mode: ProjKind, key: &str) -> CacheKey {
     CacheKey::new(mode.family(), key)
 }
 
+/// Sharded-path analog of `project_with`'s metrics recording (the sharded
+/// `project_parallel` never reaches `project_with`). Early-out paths pass
+/// `hint = None`: no solve ran, so the hint was never consulted.
+fn record_sharded_exact(info: &ProjInfo, start: std::time::Instant, hint: Option<f64>) {
+    crate::util::metrics::record_solve(
+        Family::Exact,
+        start.elapsed().as_micros() as u64,
+        info.stats.work,
+        info.stats.touched_groups,
+        hint.is_some() && !info.feasible,
+        info.stats.theta_hint.is_some(),
+    );
+}
+
 fn run_request(
     req: ProjRequest,
     cache: Option<&ThetaCache>,
     (solvers, bilevels, weighteds): (&SolverPool, &BilevelPool, &WeightedPool),
 ) -> ProjResponse {
+    let _span = crate::util::metrics::span(
+        "serve.batch.request_latency_us",
+        crate::metric_histogram!("serve.batch.request_latency_us"),
+    );
     let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode, weights } = req;
     let ns_key = key.as_deref().map(|k| cache_key(mode, k));
     let hint = match (&ns_key, cache) {

@@ -62,12 +62,24 @@ pub enum Family {
 }
 
 impl Family {
+    /// Every family, in [`Family::index`] order.
+    pub const ALL: [Family; 3] = [Family::Exact, Family::Bilevel, Family::Weighted];
+
     /// Display name (diagnostics only — never used as a key prefix).
     pub fn name(&self) -> &'static str {
         match self {
             Family::Exact => "exact",
             Family::Bilevel => "bilevel",
             Family::Weighted => "weighted",
+        }
+    }
+
+    /// Dense index into per-family counter arrays (matches [`Family::ALL`]).
+    pub fn index(&self) -> usize {
+        match self {
+            Family::Exact => 0,
+            Family::Bilevel => 1,
+            Family::Weighted => 2,
         }
     }
 }
@@ -104,7 +116,8 @@ struct Entry {
     stamp: u64,
 }
 
-/// Aggregate cache statistics (exposed over the serve protocol's `stats` op).
+/// Cache statistics — aggregate or per-family, depending on which
+/// accessor produced them (exposed over the serve protocol's `stats` op).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
     pub entries: usize,
@@ -113,14 +126,63 @@ pub struct CacheStats {
     pub updates: u64,
 }
 
+impl CacheStats {
+    /// Warm-hit rate: `hits / (hits + misses)`, 0.0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-[`Family`] hit/miss/update counters (indexed by [`Family::index`]).
+/// The registry mirrors them (`cache.<family>.hits` …) so the global
+/// metrics plane sees cache behavior without holding a cache reference.
+#[derive(Debug, Default)]
+struct FamilyCounters {
+    hits: [AtomicU64; 3],
+    misses: [AtomicU64; 3],
+    updates: [AtomicU64; 3],
+}
+
 /// θ* memo keyed by [`CacheKey`] (operator family × caller-chosen matrix
 /// identity, e.g. `Exact`/`"w1:synth"`).
 #[derive(Debug, Default)]
 pub struct ThetaCache {
     inner: Mutex<HashMap<CacheKey, Entry>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    by_family: FamilyCounters,
+    /// Global update stamp source (also the aggregate `updates` count).
     updates: AtomicU64,
+}
+
+/// Registry mirror of one family's cache counters (static names so the
+/// handles are `&'static`; resolved once, then pure atomics).
+struct Mirror {
+    hits: &'static crate::util::metrics::Counter,
+    misses: &'static crate::util::metrics::Counter,
+    updates: &'static crate::util::metrics::Counter,
+}
+
+fn mirror(family: Family) -> &'static Mirror {
+    use crate::util::metrics::global;
+    use std::sync::OnceLock;
+    static MIRRORS: OnceLock<[Mirror; 3]> = OnceLock::new();
+    let all = MIRRORS.get_or_init(|| {
+        let make = |names: [&'static str; 3]| Mirror {
+            hits: global().counter(names[0]),
+            misses: global().counter(names[1]),
+            updates: global().counter(names[2]),
+        };
+        [
+            make(["cache.exact.hits", "cache.exact.misses", "cache.exact.updates"]),
+            make(["cache.bilevel.hits", "cache.bilevel.misses", "cache.bilevel.updates"]),
+            make(["cache.weighted.hits", "cache.weighted.misses", "cache.weighted.updates"]),
+        ]
+    });
+    &all[family.index()]
 }
 
 impl ThetaCache {
@@ -136,14 +198,17 @@ impl ThetaCache {
     /// change keeps the hint: the solvers validate hints anyway, and θ
     /// moves continuously with C.
     pub fn hint_for(&self, key: &CacheKey, n_groups: usize, group_len: usize) -> Option<f64> {
+        let fi = key.family.index();
         let guard = self.inner.lock().expect("theta cache poisoned");
         match guard.get(key) {
             Some(e) if e.n_groups == n_groups && e.group_len == group_len && e.theta > 0.0 => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.by_family.hits[fi].fetch_add(1, Ordering::Relaxed);
+                mirror(key.family).hits.inc();
                 Some(e.theta * HINT_MARGIN)
             }
             _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.by_family.misses[fi].fetch_add(1, Ordering::Relaxed);
+                mirror(key.family).misses.inc();
                 None
             }
         }
@@ -161,6 +226,8 @@ impl ThetaCache {
         if !theta.is_finite() || theta <= 0.0 {
             return; // feasible / degenerate projections carry no information
         }
+        self.by_family.updates[key.family.index()].fetch_add(1, Ordering::Relaxed);
+        mirror(key.family).updates.inc();
         let stamp = self.updates.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.inner.lock().expect("theta cache poisoned");
         if guard.len() >= MAX_ENTRIES && !guard.contains_key(key) {
@@ -189,13 +256,39 @@ impl ThetaCache {
         guard.get(key).map(|e| (e.theta, e.radius, e.updates))
     }
 
+    /// Aggregate statistics across every family.
     pub fn stats(&self) -> CacheStats {
+        let sum = |xs: &[AtomicU64; 3]| xs.iter().map(|x| x.load(Ordering::Relaxed)).sum();
         CacheStats {
             entries: self.inner.lock().expect("theta cache poisoned").len(),
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            hits: sum(&self.by_family.hits),
+            misses: sum(&self.by_family.misses),
             updates: self.updates.load(Ordering::Relaxed),
         }
+    }
+
+    /// Statistics of one family's namespace. Entries are counted under the
+    /// map lock (cold path — reporting only, never a solve).
+    pub fn family_stats(&self, family: Family) -> CacheStats {
+        let fi = family.index();
+        CacheStats {
+            entries: self
+                .inner
+                .lock()
+                .expect("theta cache poisoned")
+                .keys()
+                .filter(|k| k.family == family)
+                .count(),
+            hits: self.by_family.hits[fi].load(Ordering::Relaxed),
+            misses: self.by_family.misses[fi].load(Ordering::Relaxed),
+            updates: self.by_family.updates[fi].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Per-family statistics in [`Family::ALL`] order (the shape the serve
+    /// `stats` op serializes).
+    pub fn stats_by_family(&self) -> [(Family, CacheStats); 3] {
+        Family::ALL.map(|f| (f, self.family_stats(f)))
     }
 }
 
@@ -257,6 +350,42 @@ mod tests {
         cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 1.0, 20.0);
         assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "bilevel:w1")).unwrap().0, 10.0);
         assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")).unwrap().0, 20.0);
+    }
+
+    #[test]
+    fn per_family_stats_are_separate() {
+        let cache = ThetaCache::new();
+        let ek = CacheKey::new(Family::Exact, "w1");
+        let bk = CacheKey::new(Family::Bilevel, "w1");
+        // Exact: one miss, one update, one hit. Bilevel: two misses.
+        assert_eq!(cache.hint_for(&ek, 4, 4), None);
+        cache.update(&ek, 4, 4, 1.0, 2.0);
+        assert!(cache.hint_for(&ek, 4, 4).is_some());
+        assert_eq!(cache.hint_for(&bk, 4, 4), None);
+        assert_eq!(cache.hint_for(&bk, 4, 4), None);
+        let ex = cache.family_stats(Family::Exact);
+        assert_eq!((ex.entries, ex.hits, ex.misses, ex.updates), (1, 1, 1, 1));
+        assert!((ex.hit_rate() - 0.5).abs() < 1e-12);
+        let bi = cache.family_stats(Family::Bilevel);
+        assert_eq!((bi.entries, bi.hits, bi.misses, bi.updates), (0, 0, 2, 0));
+        assert_eq!(bi.hit_rate(), 0.0);
+        let we = cache.family_stats(Family::Weighted);
+        assert_eq!((we.hits, we.misses, we.updates), (0, 0, 0));
+        // The aggregate view is the per-family sum.
+        let all = cache.stats();
+        assert_eq!((all.entries, all.hits, all.misses, all.updates), (1, 1, 3, 1));
+        assert!((all.hit_rate() - 0.25).abs() < 1e-12);
+        // stats_by_family reports in Family::ALL order.
+        let by = cache.stats_by_family();
+        assert_eq!(by[0].0, Family::Exact);
+        assert_eq!(by[1].0, Family::Bilevel);
+        assert_eq!(by[2].0, Family::Weighted);
+        assert_eq!(by[0].1, ex);
+    }
+
+    #[test]
+    fn hit_rate_is_zero_before_any_lookup() {
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
     }
 
     #[test]

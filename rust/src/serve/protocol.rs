@@ -62,11 +62,23 @@
 //! ```
 //!
 //! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
-//! connection open.
+//! connection open; when the bad request's `"mode"` field was parseable
+//! the error echoes it (`"mode":"bilevel"`), so clients can attribute
+//! failures per operator family.
+//!
+//! # The `stats` op
+//!
+//! `{"op":"stats"}` returns the full observability surface: `threads`,
+//! `served`, `uptime_secs`, flat aggregate `cache_*` fields (legacy),
+//! a per-family `"cache"` object (entries/hits/misses/updates/hit_rate
+//! for `exact`/`bilevel`/`weighted`/`total`), and `"metrics"` — the
+//! process-global registry snapshot ([`crate::util::metrics`]) with every
+//! counter, gauge and histogram (count/sum/max/mean/p50/p90/p99 +
+//! cumulative log₂ buckets).
 
 use crate::projection::l1inf::{Algorithm, ProjInfo};
 use crate::serve::batch::ProjKind;
-use crate::serve::cache::CacheStats;
+use crate::serve::cache::{CacheStats, Family};
 use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 
@@ -108,78 +120,95 @@ pub struct Envelope {
     pub req: Request,
 }
 
+/// A request line the server could not turn into an [`Envelope`]. Carries
+/// the request `id` (0 when the line was not even JSON) and — when the
+/// request's `"mode"` field was present and parseable — the operator
+/// family, so clients can attribute failures per family.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub id: i64,
+    pub mode: Option<ProjKind>,
+    pub msg: String,
+}
+
+impl ParseError {
+    fn new(id: i64, mode: Option<ProjKind>, msg: impl Into<String>) -> ParseError {
+        ParseError { id, mode, msg: msg.into() }
+    }
+}
+
 /// Parse one request line; `default_algo` fills requests that don't name a
-/// solver (the server passes its `[serve] algo` config). `Err` carries
-/// `(id, message)` so the server can still address its error response.
-pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i64, String)> {
-    let v = json::parse(line).map_err(|e| (0, format!("bad json: {e}")))?;
+/// solver (the server passes its `[serve] algo` config). `Err` carries a
+/// [`ParseError`] so the server can still address (and mode-attribute) its
+/// error response.
+pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, ParseError> {
+    let v = json::parse(line)
+        .map_err(|e| ParseError::new(0, None, format!("bad json: {e}")))?;
     let id = v.get("id").and_then(Json::as_f64).unwrap_or(0.0) as i64;
     let op = v
         .get("op")
         .and_then(Json::as_str)
-        .ok_or_else(|| (id, "missing 'op'".to_string()))?;
+        .ok_or_else(|| ParseError::new(id, None, "missing 'op'"))?;
     let req = match op {
         "stats" => Request::Stats,
         "ping" => Request::Ping,
         "shutdown" => Request::Shutdown,
         "project" => {
+            // Mode first: every later failure echoes the family it was
+            // bound for. An unparseable mode itself reports `mode: None`.
+            let mode = match v.get("mode").and_then(Json::as_str) {
+                None => ProjKind::Exact,
+                Some(s) => {
+                    s.parse::<ProjKind>().map_err(|e| ParseError::new(id, None, e))?
+                }
+            };
+            let err = |msg: String| ParseError::new(id, Some(mode), msg);
             let n_groups = v
                 .get("groups")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| (id, "project: missing 'groups'".to_string()))?;
+                .ok_or_else(|| err("project: missing 'groups'".to_string()))?;
             let group_len = v
                 .get("len")
                 .and_then(Json::as_usize)
-                .ok_or_else(|| (id, "project: missing 'len'".to_string()))?;
+                .ok_or_else(|| err("project: missing 'len'".to_string()))?;
             let radius = v
                 .get("radius")
                 .and_then(Json::as_f64)
-                .ok_or_else(|| (id, "project: missing 'radius'".to_string()))?;
+                .ok_or_else(|| err("project: missing 'radius'".to_string()))?;
             if !radius.is_finite() || radius < 0.0 {
-                return Err((id, format!("project: bad radius {radius}")));
+                return Err(err(format!("project: bad radius {radius}")));
             }
             let algo = match v.get("algo").and_then(Json::as_str) {
                 None => default_algo,
-                Some(s) => s.parse::<Algorithm>().map_err(|e| (id, e))?,
-            };
-            let mode = match v.get("mode").and_then(Json::as_str) {
-                None => ProjKind::Exact,
-                Some(s) => s.parse::<ProjKind>().map_err(|e| (id, e))?,
+                Some(s) => s.parse::<Algorithm>().map_err(err)?,
             };
             let weights = match v.get("weights") {
                 None => None,
                 Some(_) if mode != ProjKind::Weighted => {
-                    return Err((
-                        id,
+                    return Err(err(
                         "project: 'weights' requires \"mode\":\"weighted\"".to_string(),
                     ));
                 }
                 Some(wv) => {
                     let arr = wv
                         .as_arr()
-                        .ok_or_else(|| (id, "project: 'weights' must be an array".to_string()))?;
+                        .ok_or_else(|| err("project: 'weights' must be an array".to_string()))?;
                     let mut ws = Vec::with_capacity(arr.len());
                     for (i, x) in arr.iter().enumerate() {
                         match x.as_f64().map(|f| f as f32) {
                             Some(f) if f.is_finite() && f > 0.0 => ws.push(f),
                             _ => {
-                                return Err((
-                                    id,
-                                    format!(
-                                        "project: weights[{i}] is not a positive finite f32"
-                                    ),
-                                ));
+                                return Err(err(format!(
+                                    "project: weights[{i}] is not a positive finite f32"
+                                )));
                             }
                         }
                     }
                     if ws.len() != n_groups {
-                        return Err((
-                            id,
-                            format!(
-                                "project: weights has {} entries, expected groups = {n_groups}",
-                                ws.len()
-                            ),
-                        ));
+                        return Err(err(format!(
+                            "project: weights has {} entries, expected groups = {n_groups}",
+                            ws.len()
+                        )));
                     }
                     Some(ws)
                 }
@@ -192,23 +221,20 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
             let arr = v
                 .get("data")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| (id, "project: missing 'data'".to_string()))?;
+                .ok_or_else(|| err("project: missing 'data'".to_string()))?;
             // checked_mul: `groups`/`len` are client-controlled — a wrapping
             // product could collide with data.len() and panic deep in the
             // projector instead of producing an error response.
             let expected = n_groups
                 .checked_mul(group_len)
-                .ok_or_else(|| (id, "project: groups*len overflows".to_string()))?;
+                .ok_or_else(|| err("project: groups*len overflows".to_string()))?;
             if n_groups == 0 || group_len == 0 || arr.len() != expected {
-                return Err((
-                    id,
-                    format!(
-                        "project: data has {} entries, expected groups*len = {}x{}",
-                        arr.len(),
-                        n_groups,
-                        group_len
-                    ),
-                ));
+                return Err(err(format!(
+                    "project: data has {} entries, expected groups*len = {}x{}",
+                    arr.len(),
+                    n_groups,
+                    group_len
+                )));
             }
             let mut data = Vec::with_capacity(arr.len());
             for (i, x) in arr.iter().enumerate() {
@@ -217,7 +243,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 // back as `inf` in the response — which is not JSON.
                 match x.as_f64().map(|f| f as f32) {
                     Some(f) if f.is_finite() => data.push(f),
-                    _ => return Err((id, format!("project: data[{i}] is not a finite f32"))),
+                    _ => return Err(err(format!("project: data[{i}] is not a finite f32"))),
                 }
             }
             Request::Project(Box::new(ProjectRequest {
@@ -232,7 +258,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, (i
                 data,
             }))
         }
-        other => return Err((id, format!("unknown op '{other}'"))),
+        other => return Err(ParseError::new(id, None, format!("unknown op '{other}'"))),
     };
     Ok(Envelope { id, req })
 }
@@ -244,9 +270,14 @@ fn base(id: i64, ok: bool) -> BTreeMap<String, Json> {
     m
 }
 
-/// `{"id":…,"ok":false,"error":…}`
-pub fn error_response(id: i64, msg: &str) -> String {
+/// `{"id":…,"ok":false,"error":…}` — plus `"mode"` when the failed
+/// request's operator family was parseable, so clients can attribute
+/// failures per family.
+pub fn error_response(id: i64, mode: Option<ProjKind>, msg: &str) -> String {
     let mut m = base(id, false);
+    if let Some(mode) = mode {
+        m.insert("mode".to_string(), Json::Str(mode.name().to_string()));
+    }
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(m).to_string()
 }
@@ -281,15 +312,52 @@ pub fn project_response(
     Json::Obj(m).to_string()
 }
 
-/// `stats` op response.
-pub fn stats_response(id: i64, threads: usize, served: u64, cache: CacheStats) -> String {
-    let mut m = base(id, true);
+/// One family's cache stats as a JSON object (with the derived hit rate).
+fn cache_stats_json(st: &CacheStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("entries".to_string(), Json::Num(st.entries as f64));
+    m.insert("hits".to_string(), Json::Num(st.hits as f64));
+    m.insert("misses".to_string(), Json::Num(st.misses as f64));
+    m.insert("updates".to_string(), Json::Num(st.updates as f64));
+    m.insert("hit_rate".to_string(), Json::Num(st.hit_rate()));
+    Json::Obj(m)
+}
+
+/// The `stats` op / snapshot-file payload **without** the envelope fields:
+/// threads, served, uptime, per-family + aggregate cache stats, and the
+/// metrics-registry snapshot. Shared by the TCP response and the
+/// `--metrics-snapshot` file the server writes.
+pub fn stats_body(
+    threads: usize,
+    served: u64,
+    uptime_secs: f64,
+    cache_by_family: &[(Family, CacheStats)],
+    cache_total: CacheStats,
+    metrics: Json,
+) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
     m.insert("threads".to_string(), Json::Num(threads as f64));
     m.insert("served".to_string(), Json::Num(served as f64));
-    m.insert("cache_entries".to_string(), Json::Num(cache.entries as f64));
-    m.insert("cache_hits".to_string(), Json::Num(cache.hits as f64));
-    m.insert("cache_misses".to_string(), Json::Num(cache.misses as f64));
-    m.insert("cache_updates".to_string(), Json::Num(cache.updates as f64));
+    m.insert("uptime_secs".to_string(), Json::Num(uptime_secs));
+    // Flat aggregate fields keep pre-existing clients working.
+    m.insert("cache_entries".to_string(), Json::Num(cache_total.entries as f64));
+    m.insert("cache_hits".to_string(), Json::Num(cache_total.hits as f64));
+    m.insert("cache_misses".to_string(), Json::Num(cache_total.misses as f64));
+    m.insert("cache_updates".to_string(), Json::Num(cache_total.updates as f64));
+    let mut fam = BTreeMap::new();
+    for (family, st) in cache_by_family {
+        fam.insert(family.name().to_string(), cache_stats_json(st));
+    }
+    fam.insert("total".to_string(), cache_stats_json(&cache_total));
+    m.insert("cache".to_string(), Json::Obj(fam));
+    m.insert("metrics".to_string(), metrics);
+    m
+}
+
+/// `stats` op response: a [`stats_body`] under the usual envelope.
+pub fn stats_response(id: i64, body: &BTreeMap<String, Json>) -> String {
+    let mut m = base(id, true);
+    m.extend(body.iter().map(|(k, v)| (k.clone(), v.clone())));
     Json::Obj(m).to_string()
 }
 
@@ -311,7 +379,7 @@ pub fn shutdown_response(id: i64) -> String {
 mod tests {
     use super::*;
 
-    fn parse_request_d(line: &str) -> Result<Envelope, (i64, String)> {
+    fn parse_request_d(line: &str) -> Result<Envelope, ParseError> {
         parse_request(line, Algorithm::InverseOrder)
     }
 
@@ -346,13 +414,15 @@ mod tests {
             let Request::Project(p) = env.req else { panic!("not a project request") };
             assert_eq!(p.mode, ProjKind::Exact);
         }
-        // Unknown modes error with the valid list, carrying the id.
-        let (id, msg) = parse_request_d(
+        // Unknown modes error with the valid list, carrying the id (and no
+        // mode echo — the mode itself was the unparseable part).
+        let e = parse_request_d(
             r#"{"id":8,"op":"project","mode":"warp","groups":1,"len":1,"radius":1,"data":[1.0]}"#,
         )
         .unwrap_err();
-        assert_eq!(id, 8);
-        assert!(msg.contains("bilevel") && msg.contains("exact"), "{msg}");
+        assert_eq!(e.id, 8);
+        assert_eq!(e.mode, None);
+        assert!(e.msg.contains("bilevel") && e.msg.contains("exact"), "{}", e.msg);
     }
 
     #[test]
@@ -369,13 +439,15 @@ mod tests {
         .unwrap();
         let Request::Project(p) = env.req else { panic!("not a project request") };
         assert_eq!(p.weights, None);
-        // Weights on a non-weighted mode are rejected.
-        let (id, msg) = parse_request_d(
+        // Weights on a non-weighted mode are rejected (default mode echoes
+        // as exact).
+        let e = parse_request_d(
             r#"{"id":13,"op":"project","groups":1,"len":1,"radius":1,"weights":[1.0],"data":[1.0]}"#,
         )
         .unwrap_err();
-        assert_eq!(id, 13);
-        assert!(msg.contains("weighted"), "{msg}");
+        assert_eq!(e.id, 13);
+        assert_eq!(e.mode, Some(ProjKind::Exact));
+        assert!(e.msg.contains("weighted"), "{}", e.msg);
         // Wrong length, non-positive, and non-finite weights are rejected.
         for bad in [
             r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0],"data":[1.0,2.0]}"#,
@@ -384,10 +456,33 @@ mod tests {
             r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":[1.0,1e39],"data":[1.0,2.0]}"#,
             r#"{"id":14,"op":"project","mode":"weighted","groups":2,"len":1,"radius":1,"weights":"x","data":[1.0,2.0]}"#,
         ] {
-            let (id, msg) = parse_request_d(bad).unwrap_err();
-            assert_eq!(id, 14);
-            assert!(msg.contains("weights"), "{msg}");
+            let e = parse_request_d(bad).unwrap_err();
+            assert_eq!(e.id, 14);
+            assert_eq!(e.mode, Some(ProjKind::Weighted));
+            assert!(e.msg.contains("weights"), "{}", e.msg);
         }
+    }
+
+    #[test]
+    fn parse_errors_echo_the_parseable_mode() {
+        // A malformed bilevel request still attributes to the bi-level
+        // family in both the ParseError and the rendered error response.
+        let e = parse_request_d(
+            r#"{"id":21,"op":"project","mode":"bilevel","groups":2,"len":2,"radius":1,"data":[1.0]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.id, 21);
+        assert_eq!(e.mode, Some(ProjKind::Bilevel));
+        let line = error_response(e.id, e.mode, &e.msg);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("bilevel"));
+        // Unparseable requests (bad json / unknown op) carry no mode.
+        let e = parse_request_d("not json at all").unwrap_err();
+        assert_eq!(e.mode, None);
+        let line = error_response(e.id, e.mode, &e.msg);
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("mode").is_none(), "no mode echo when unparseable");
     }
 
     #[test]
@@ -408,19 +503,19 @@ mod tests {
 
     #[test]
     fn errors_carry_the_request_id() {
-        let (id, msg) =
+        let e =
             parse_request_d(r#"{"id": 9, "op": "project", "groups": 2, "len": 3, "radius": 1, "data": [1]}"#)
                 .unwrap_err();
-        assert_eq!(id, 9);
-        assert!(msg.contains("expected groups*len"), "{msg}");
-        let (id, _) = parse_request_d(r#"{"id": 4, "op": "frobnicate"}"#).unwrap_err();
-        assert_eq!(id, 4);
-        let (id, _) = parse_request_d("not json at all").unwrap_err();
-        assert_eq!(id, 0);
-        let (id, msg) = parse_request_d(r#"{"id":2,"op":"project","groups":1,"len":1,"radius":1,"data":["x"]}"#)
+        assert_eq!(e.id, 9);
+        assert!(e.msg.contains("expected groups*len"), "{}", e.msg);
+        let e = parse_request_d(r#"{"id": 4, "op": "frobnicate"}"#).unwrap_err();
+        assert_eq!(e.id, 4);
+        let e = parse_request_d("not json at all").unwrap_err();
+        assert_eq!(e.id, 0);
+        let e = parse_request_d(r#"{"id":2,"op":"project","groups":1,"len":1,"radius":1,"data":["x"]}"#)
             .unwrap_err();
-        assert_eq!(id, 2);
-        assert!(msg.contains("data[0]"), "{msg}");
+        assert_eq!(e.id, 2);
+        assert!(e.msg.contains("data[0]"), "{}", e.msg);
     }
 
     #[test]
@@ -430,18 +525,18 @@ mod tests {
         let line = format!(
             r#"{{"id":7,"op":"project","groups":{big},"len":{big},"radius":1,"data":[]}}"#
         );
-        let (id, msg) = parse_request_d(&line).unwrap_err();
-        assert_eq!(id, 7);
-        assert!(msg.contains("overflow") || msg.contains("expected"), "{msg}");
-        let (_, msg) =
+        let e = parse_request_d(&line).unwrap_err();
+        assert_eq!(e.id, 7);
+        assert!(e.msg.contains("overflow") || e.msg.contains("expected"), "{}", e.msg);
+        let e =
             parse_request_d(r#"{"id":8,"op":"project","groups":0,"len":3,"radius":1,"data":[]}"#)
                 .unwrap_err();
-        assert!(msg.contains("expected"), "{msg}");
+        assert!(e.msg.contains("expected"), "{}", e.msg);
         // Finite f64 that overflows f32 must be rejected, not become inf.
-        let (_, msg) =
+        let e =
             parse_request_d(r#"{"id":9,"op":"project","groups":1,"len":1,"radius":1,"data":[1e39]}"#)
                 .unwrap_err();
-        assert!(msg.contains("data[0]"), "{msg}");
+        assert!(e.msg.contains("data[0]"), "{}", e.msg);
     }
 
     #[test]
@@ -455,11 +550,26 @@ mod tests {
             feasible: false,
             stats: SolveStats { theta: 0.75, work: 9, touched_groups: 4, theta_hint: None },
         };
+        let families = [
+            (Family::Exact, CacheStats { entries: 1, hits: 3, misses: 1, updates: 2 }),
+            (Family::Bilevel, CacheStats::default()),
+            (Family::Weighted, CacheStats::default()),
+        ];
+        let body = stats_body(
+            8,
+            100,
+            1.25,
+            &families,
+            CacheStats { entries: 1, hits: 3, misses: 1, updates: 2 },
+            crate::util::metrics::global().snapshot(),
+        );
+        let stats_line = stats_response(4, &body);
         for line in [
             project_response(1, &info, ProjKind::Exact, true, 0.5, Some(&[0.5, -0.5])),
             project_response(2, &info, ProjKind::Bilevel, false, 0.5, None),
-            error_response(3, "nope"),
-            stats_response(4, 8, 100, CacheStats::default()),
+            error_response(3, None, "nope"),
+            error_response(7, Some(ProjKind::Weighted), "bad weights"),
+            stats_line.clone(),
             pong_response(5),
             shutdown_response(6),
         ] {
@@ -468,6 +578,17 @@ mod tests {
             assert!(v.get("id").is_some());
             assert!(v.get("ok").is_some());
         }
+        // The stats response carries the observability surface: uptime,
+        // per-family cache stats with hit rates, and the metrics snapshot.
+        let v = crate::util::json::parse(&stats_line).unwrap();
+        assert_eq!(v.get("served").unwrap().as_f64(), Some(100.0));
+        assert_eq!(v.get("uptime_secs").unwrap().as_f64(), Some(1.25));
+        assert_eq!(v.get("cache_hits").unwrap().as_f64(), Some(3.0));
+        let exact = v.get("cache").unwrap().get("exact").unwrap();
+        assert_eq!(exact.get("hit_rate").unwrap().as_f64(), Some(0.75));
+        assert!(v.get("cache").unwrap().get("total").is_some());
+        assert!(v.get("metrics").unwrap().get("counters").is_some());
+        assert!(v.get("metrics").unwrap().get("histograms").is_some());
         let v = crate::util::json::parse(&project_response(
             1,
             &info,

@@ -6,18 +6,32 @@
 //! [`ThetaCache`] (cross-request warm starts keyed by the client-supplied
 //! matrix key). A `shutdown` op from any client stops the accept loop —
 //! that is also how the integration tests tear the server down.
+//!
+//! # Observability
+//!
+//! Every request records into the global metrics plane
+//! ([`crate::util::metrics`]): per-op counters (`serve.op.*`), an
+//! in-flight gauge, and the end-to-end `serve.request.latency_us`
+//! histogram. `{"op":"stats"}` returns the full snapshot; with
+//! `metrics_snapshot` configured the server also rewrites a snapshot file
+//! on an interval and at shutdown (the vendored crate set has no `libc`,
+//! so there is no SIGTERM hook — the interval + shutdown writes cover
+//! orderly teardown, and `l1inf stats` reads the file back offline).
 
 use super::batch::{self, BatchProjector, ProjKind};
 use super::cache::ThetaCache;
 use super::protocol::{self, ProjectRequest, Request};
 use crate::config::serve::ServeConfig;
+use crate::metric_counter;
 use crate::projection::l1inf::Algorithm;
+use crate::util::json::Json;
 use crate::util::Timer;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Shared per-connection context.
 #[derive(Clone)]
@@ -28,6 +42,35 @@ struct Shared {
     shutdown: Arc<AtomicBool>,
     default_algo: Algorithm,
     addr: SocketAddr,
+    /// Server start (the `uptime_secs` origin of stats responses).
+    start: Instant,
+    /// Snapshot file rewritten on an interval and at shutdown.
+    metrics_snapshot: Option<Arc<str>>,
+    metrics_interval_secs: f64,
+}
+
+impl Shared {
+    /// The stats payload served over TCP and written to the snapshot file.
+    fn stats_json(&self) -> std::collections::BTreeMap<String, Json> {
+        protocol::stats_body(
+            self.pool.threads(),
+            self.served.load(Ordering::Relaxed),
+            self.start.elapsed().as_secs_f64(),
+            &self.cache.stats_by_family(),
+            self.cache.stats(),
+            crate::util::metrics::global().snapshot(),
+        )
+    }
+
+    /// Write the snapshot file (no-op without `metrics_snapshot`).
+    fn write_snapshot(&self) {
+        if let Some(path) = self.metrics_snapshot.as_deref() {
+            let doc = Json::Obj(self.stats_json()).to_string();
+            if let Err(e) = std::fs::write(path, doc + "\n") {
+                crate::warn!("serve: writing metrics snapshot {path}: {e}");
+            }
+        }
+    }
 }
 
 /// A bound (but not yet running) projection service.
@@ -49,6 +92,9 @@ impl Server {
             shutdown: Arc::new(AtomicBool::new(false)),
             default_algo: cfg.algo,
             addr,
+            start: Instant::now(),
+            metrics_snapshot: cfg.metrics_snapshot.as_deref().map(Arc::from),
+            metrics_interval_secs: cfg.metrics_interval_secs,
         };
         Ok(Server { listener, shared })
     }
@@ -66,6 +112,24 @@ impl Server {
     /// Accept-and-serve until a client sends `shutdown`. Each connection
     /// gets its own decoding thread; projections run on the shared pool.
     pub fn run(self) -> Result<()> {
+        let snapshot_writer = self.shared.metrics_snapshot.is_some().then(|| {
+            let shared = self.shared.clone();
+            std::thread::spawn(move || {
+                let interval =
+                    std::time::Duration::from_secs_f64(shared.metrics_interval_secs.max(0.05));
+                // Poll the shutdown flag between short sleeps so teardown
+                // never waits a full interval.
+                let tick = interval.min(std::time::Duration::from_millis(200));
+                let mut next = Instant::now() + interval;
+                while !shared.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    if Instant::now() >= next {
+                        shared.write_snapshot();
+                        next = Instant::now() + interval;
+                    }
+                }
+            })
+        });
         for stream in self.listener.incoming() {
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 break;
@@ -86,6 +150,11 @@ impl Server {
                 Err(e) => crate::warn!("serve: accept failed: {e}"),
             }
         }
+        if let Some(handle) = snapshot_writer {
+            let _ = handle.join();
+        }
+        // Final write so post-mortem `l1inf stats` sees the full session.
+        self.shared.write_snapshot();
         crate::info!("serve: shutdown requested, accept loop stopped");
         Ok(())
     }
@@ -119,19 +188,22 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
             continue;
         }
         match protocol::parse_request(&line, shared.default_algo) {
-            Err((id, msg)) => write_line(&mut writer, &protocol::error_response(id, &msg))?,
+            Err(e) => {
+                metric_counter!("serve.op.error").inc();
+                write_line(&mut writer, &protocol::error_response(e.id, e.mode, &e.msg))?
+            }
             Ok(env) => match env.req {
-                Request::Ping => write_line(&mut writer, &protocol::pong_response(env.id))?,
+                Request::Ping => {
+                    metric_counter!("serve.op.ping").inc();
+                    write_line(&mut writer, &protocol::pong_response(env.id))?
+                }
                 Request::Stats => {
-                    let resp = protocol::stats_response(
-                        env.id,
-                        shared.pool.threads(),
-                        shared.served.load(Ordering::Relaxed),
-                        shared.cache.stats(),
-                    );
+                    metric_counter!("serve.op.stats").inc();
+                    let resp = protocol::stats_response(env.id, &shared.stats_json());
                     write_line(&mut writer, &resp)?;
                 }
                 Request::Shutdown => {
+                    metric_counter!("serve.op.shutdown").inc();
                     write_line(&mut writer, &protocol::shutdown_response(env.id))?;
                     shared.shutdown.store(true, Ordering::SeqCst);
                     // Unblock the (blocking) accept loop with a no-op
@@ -140,6 +212,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
                     return Ok(());
                 }
                 Request::Project(p) => {
+                    metric_counter!("serve.op.project").inc();
                     let resp = run_project(env.id, *p, shared);
                     write_line(&mut writer, &resp)?;
                 }
@@ -150,6 +223,10 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
 }
 
 fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
+    let _span = crate::util::metrics::span(
+        "serve.request.latency_us",
+        crate::metric_histogram!("serve.request.latency_us"),
+    );
     let ProjectRequest {
         key,
         n_groups,

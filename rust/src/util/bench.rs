@@ -87,8 +87,10 @@ fn git_rev() -> String {
 /// trajectory stays comparable across PRs: git revision, logical thread
 /// count, whether `L1INF_BENCH_FAST` shrank the measurement, the active
 /// kernel dispatch (`"avx2" | "portable" | "scalar"` — so every number is
-/// attributable to the code path that produced it), and the matrix shapes
-/// measured (as `[n, m]` pairs).
+/// attributable to the code path that produced it), the matrix shapes
+/// measured (as `[n, m]` pairs), and a `metrics` object summarizing every
+/// histogram the run populated (count/mean/p50/p99/max per name — the
+/// solver work-term telemetry rides along with the timing numbers).
 pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let fast = std::env::var("L1INF_BENCH_FAST").ok().as_deref() == Some("1");
@@ -109,6 +111,7 @@ pub fn bench_meta(shapes: &[(usize, usize)]) -> Json {
                 .collect(),
         ),
     );
+    m.insert("metrics".to_string(), crate::util::metrics::histogram_summaries());
     Json::Obj(m)
 }
 
@@ -193,6 +196,9 @@ mod tests {
 
     #[test]
     fn meta_has_every_stamp_field() {
+        // Populate at least one histogram so the metrics stamp is not
+        // trivially empty in this test binary.
+        crate::metric_histogram!("bench.test.stamp").record(7);
         let meta = bench_meta(&[(1000, 4000), (200, 800)]);
         assert!(meta.get("git_rev").unwrap().as_str().is_some());
         assert!(meta.get("threads").unwrap().as_f64().unwrap() >= 1.0);
@@ -201,6 +207,9 @@ mod tests {
         let shapes = meta.get("shapes").unwrap().as_arr().unwrap();
         assert_eq!(shapes.len(), 2);
         assert_eq!(shapes[0].as_usize_vec(), Some(vec![1000, 4000]));
+        let summaries = meta.get("metrics").unwrap().get("bench.test.stamp").unwrap();
+        assert!(summaries.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(summaries.get("max").unwrap().as_f64(), Some(7.0));
     }
 
     #[test]

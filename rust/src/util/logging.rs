@@ -5,8 +5,19 @@
 //! [`log`]; the maximum level is a process-global atomic initialized from
 //! `L1INF_LOG` (`warn`/`info`/`debug`/`trace`, default `info`) by
 //! [`init_from_env`].
+//!
+//! Every emitted line carries a **monotonic elapsed timestamp** (seconds
+//! since the logger first fired, from `Instant` — immune to wall-clock
+//! steps) and the **short target** (the last segment of the emitting
+//! module's path), e.g.:
+//!
+//! ```text
+//! [12.034s info serve] shutdown requested, accept loop stopped
+//! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Log severity, most severe first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -32,6 +43,14 @@ impl Level {
 
 static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
 
+/// Process start reference for the elapsed stamp (first use wins).
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds since the logger first ran (monotonic).
+pub fn elapsed_secs() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
 /// Set the maximum level that will be emitted.
 pub fn set_max_level(level: Level) {
     MAX_LEVEL.store(level as usize, Ordering::Relaxed);
@@ -47,6 +66,7 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_max_level(level);
+    let _ = elapsed_secs(); // pin the elapsed-stamp origin to startup
 }
 
 /// Whether a record at `level` would currently be emitted.
@@ -54,45 +74,56 @@ pub fn enabled(level: Level) -> bool {
     (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
-/// Emit one record to stderr (used by the crate-root macros).
-pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+/// Last segment of a `module_path!()` (`l1inf::serve::server` → `server`).
+fn short_target(target: &str) -> &str {
+    target.rsplit("::").next().unwrap_or(target)
+}
+
+/// The `[12.034s info serve]` prefix (pure; unit-testable).
+pub fn format_label(level: Level, target: &str, elapsed_secs: f64) -> String {
+    format!("[{elapsed_secs:.3}s {} {}]", level.label(), short_target(target))
+}
+
+/// Emit one record to stderr (used by the crate-root macros). `target` is
+/// the emitting module's path (the macros pass `module_path!()`).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        eprintln!("[{}] {}", level.label(), args);
+        eprintln!("{} {}", format_label(level, target, elapsed_secs()), args);
     }
 }
 
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*))
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
     };
 }
 
 #[macro_export]
 macro_rules! warn {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*))
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
     };
 }
 
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*))
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
     };
 }
 
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*))
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
     };
 }
 
 #[macro_export]
 macro_rules! trace {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($arg)*))
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
     };
 }
 
@@ -109,5 +140,20 @@ mod tests {
         set_max_level(Level::Trace);
         assert!(enabled(Level::Debug));
         set_max_level(Level::Info); // restore the default for other tests
+    }
+
+    #[test]
+    fn label_formatting() {
+        assert_eq!(format_label(Level::Info, "l1inf::serve::server", 12.0341), "[12.034s info server]");
+        assert_eq!(format_label(Level::Warn, "serve", 0.0), "[0.000s warn serve]");
+        assert_eq!(format_label(Level::Trace, "a::b::c", 1.5), "[1.500s trace c]");
+    }
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let a = elapsed_secs();
+        let b = elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
     }
 }

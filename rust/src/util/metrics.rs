@@ -1,0 +1,686 @@
+//! Process-global, lock-free metrics plane: named counters, gauges and
+//! log₂-bucket histograms on plain `AtomicU64`s, plus span timers that
+//! feed histograms and (optionally) emit `trace!`-level lines through
+//! [`crate::util::logging`].
+//!
+//! # Design
+//!
+//! The vendored crate set has no `prometheus`/`metrics` crate, and the
+//! solver hot paths must not take a lock per solve, so this module mirrors
+//! the [`ThetaCache`](crate::serve::cache::ThetaCache) idiom: every
+//! *recording* operation is a handful of relaxed atomic ops on
+//! `&'static` metric handles. The only mutex in the module guards
+//! **registration** (first use of a name), which call sites amortize away
+//! with a per-call-site `OnceLock` (see the [`metric_counter!`],
+//! [`metric_gauge!`] and [`metric_histogram!`] macros) — the steady-state
+//! cost of `metric_counter!("x").inc()` is one atomic load plus one
+//! atomic add.
+//!
+//! Histograms use fixed log₂ buckets (bucket *i* holds values in
+//! `[2^(i-1), 2^i)`, bucket 0 holds exactly 0), so `record` is a shift, a
+//! clamp and three `fetch_add`s — no per-histogram configuration, no
+//! floating point, no allocation. Quantiles are estimated from the bucket
+//! upper edges, which is the right fidelity for latency/work telemetry
+//! (within 2× of the true value, monotone by construction).
+//!
+//! # Exposure
+//!
+//! [`Registry::snapshot`] renders everything into the crate's own
+//! [`Json`] value; the serve plane returns it from `{"op":"stats"}`
+//! requests and writes it to the `--metrics-snapshot` file, benches stamp
+//! [`histogram_summaries`] into `BENCH_*.json` meta, and
+//! [`prometheus_text`] converts a snapshot (or a full stats response
+//! embedding one under `"metrics"`) into Prometheus text exposition for
+//! `l1inf stats --format prom`.
+
+use crate::serve::cache::Family;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Number of log₂ buckets per histogram. Bucket 39 holds everything at or
+/// above `2^38` (≈ 76 hours in microseconds — effectively "+Inf").
+pub const NUM_BUCKETS: usize = 40;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits so one type
+/// serves queue depths and percentages alike). `add` is a CAS loop —
+/// still lock-free, and gauge updates are orders of magnitude rarer than
+/// counter bumps.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn add(&self, delta: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + delta).to_bits())
+        });
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed log₂-bucket histogram with total/count/max side counters.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index of a value: 0 → 0, otherwise `⌊log₂ v⌋ + 1`, clamped.
+fn bucket_index(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Inclusive upper edge of bucket `i` (`2^i - 1`; bucket 0 edge is 0).
+fn bucket_edge(i: usize) -> u64 {
+    (1u64 << i) - 1
+}
+
+impl Histogram {
+    /// Record one observation (atomics only; no locks, no allocation).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy for reporting. (Individual
+    /// loads are relaxed; a snapshot racing a `record` may be off by one
+    /// observation, which is fine for telemetry.)
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one [`Histogram`].
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): the upper edge of the bucket
+    /// containing the q-th observation. Monotone in `q` by construction.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_edge(i) as f64;
+            }
+        }
+        bucket_edge(self.buckets.len() - 1) as f64
+    }
+
+    /// Cumulative bucket counts trimmed at the highest nonempty bucket
+    /// (nondecreasing; the last entry equals `count`).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let hi = self.buckets.iter().rposition(|&c| c > 0).map(|i| i + 1).unwrap_or(0);
+        let mut cum = Vec::with_capacity(hi);
+        let mut acc = 0u64;
+        for &c in &self.buckets[..hi] {
+            acc += c;
+            cum.push(acc);
+        }
+        cum
+    }
+
+    /// JSON summary of this histogram (the shape the stats op serves).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum as f64));
+        m.insert("max".to_string(), Json::Num(self.max as f64));
+        m.insert("mean".to_string(), Json::Num(self.mean()));
+        m.insert("p50".to_string(), Json::Num(self.quantile(0.50)));
+        m.insert("p90".to_string(), Json::Num(self.quantile(0.90)));
+        m.insert("p99".to_string(), Json::Num(self.quantile(0.99)));
+        m.insert(
+            "cumulative".to_string(),
+            Json::Arr(self.cumulative().into_iter().map(|c| Json::Num(c as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// The process-global registry: name → leaked `&'static` metric. The maps
+/// are only locked to **register** a name (or to snapshot); recording goes
+/// straight through the returned handles.
+pub struct Registry {
+    start: Instant,
+    counters: Mutex<BTreeMap<&'static str, &'static Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, &'static Gauge>>,
+    hists: Mutex<BTreeMap<&'static str, &'static Histogram>>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            start: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Seconds since the registry (≈ the process) came up.
+    pub fn uptime_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Handle for the counter `name`, registering it on first use. The
+    /// same name always returns the same handle; metrics are never
+    /// unregistered (they are leaked once, by design, so handles can be
+    /// `&'static` and recording needs no reference counting).
+    pub fn counter(&self, name: &'static str) -> &'static Counter {
+        let mut m = self.counters.lock().expect("metrics registry poisoned");
+        *m.entry(name).or_insert_with(|| Box::leak(Box::default()))
+    }
+
+    pub fn gauge(&self, name: &'static str) -> &'static Gauge {
+        let mut m = self.gauges.lock().expect("metrics registry poisoned");
+        *m.entry(name).or_insert_with(|| Box::leak(Box::default()))
+    }
+
+    pub fn histogram(&self, name: &'static str) -> &'static Histogram {
+        let mut m = self.hists.lock().expect("metrics registry poisoned");
+        *m.entry(name).or_insert_with(|| Box::leak(Box::default()))
+    }
+
+    /// Render every registered metric into one JSON object:
+    /// `{"uptime_secs":…,"counters":{…},"gauges":{…},"histograms":{…}}`.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.lock().expect("metrics registry poisoned").iter() {
+            counters.insert(name.to_string(), Json::Num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, g) in self.gauges.lock().expect("metrics registry poisoned").iter() {
+            gauges.insert(name.to_string(), Json::Num(g.get()));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in self.hists.lock().expect("metrics registry poisoned").iter() {
+            hists.insert(name.to_string(), h.snapshot().to_json());
+        }
+        let mut m = BTreeMap::new();
+        m.insert("uptime_secs".to_string(), Json::Num(self.uptime_secs()));
+        m.insert("counters".to_string(), Json::Obj(counters));
+        m.insert("gauges".to_string(), Json::Obj(gauges));
+        m.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(m)
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry (created on first use).
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// `&'static Counter` for a **constant** name, cached per call site so the
+/// registration mutex is hit at most once per site.
+#[macro_export]
+macro_rules! metric_counter {
+    ($name:expr) => {{
+        static SLOT: std::sync::OnceLock<&'static $crate::util::metrics::Counter> =
+            std::sync::OnceLock::new();
+        *SLOT.get_or_init(|| $crate::util::metrics::global().counter($name))
+    }};
+}
+
+/// `&'static Gauge` for a constant name (see [`metric_counter!`]).
+#[macro_export]
+macro_rules! metric_gauge {
+    ($name:expr) => {{
+        static SLOT: std::sync::OnceLock<&'static $crate::util::metrics::Gauge> =
+            std::sync::OnceLock::new();
+        *SLOT.get_or_init(|| $crate::util::metrics::global().gauge($name))
+    }};
+}
+
+/// `&'static Histogram` for a constant name (see [`metric_counter!`]).
+#[macro_export]
+macro_rules! metric_histogram {
+    ($name:expr) => {{
+        static SLOT: std::sync::OnceLock<&'static $crate::util::metrics::Histogram> =
+            std::sync::OnceLock::new();
+        *SLOT.get_or_init(|| $crate::util::metrics::global().histogram($name))
+    }};
+}
+
+/// The per-family solve telemetry bundle every projection entry point
+/// records into: solve count, latency, the paper's work term `J`, touched
+/// groups, and warm-start hint accept/reject.
+pub struct SolveMetrics {
+    pub count: &'static Counter,
+    pub latency_us: &'static Histogram,
+    pub work: &'static Histogram,
+    pub touched_groups: &'static Histogram,
+    pub hint_accept: &'static Counter,
+    pub hint_reject: &'static Counter,
+}
+
+impl SolveMetrics {
+    fn register(family: Family) -> SolveMetrics {
+        let r = global();
+        // Names must be 'static: one match arm per family instead of a
+        // leaked format!() so repeated registration can't leak new strings.
+        let names: [&'static str; 6] = match family {
+            Family::Exact => [
+                "solve.exact.count",
+                "solve.exact.latency_us",
+                "solve.exact.work",
+                "solve.exact.touched_groups",
+                "solve.exact.hint_accept",
+                "solve.exact.hint_reject",
+            ],
+            Family::Bilevel => [
+                "solve.bilevel.count",
+                "solve.bilevel.latency_us",
+                "solve.bilevel.work",
+                "solve.bilevel.touched_groups",
+                "solve.bilevel.hint_accept",
+                "solve.bilevel.hint_reject",
+            ],
+            Family::Weighted => [
+                "solve.weighted.count",
+                "solve.weighted.latency_us",
+                "solve.weighted.work",
+                "solve.weighted.touched_groups",
+                "solve.weighted.hint_accept",
+                "solve.weighted.hint_reject",
+            ],
+        };
+        SolveMetrics {
+            count: r.counter(names[0]),
+            latency_us: r.histogram(names[1]),
+            work: r.histogram(names[2]),
+            touched_groups: r.histogram(names[3]),
+            hint_accept: r.counter(names[4]),
+            hint_reject: r.counter(names[5]),
+        }
+    }
+}
+
+static SOLVE_METRICS: OnceLock<[SolveMetrics; 3]> = OnceLock::new();
+
+/// The solve-metric bundle of one operator family (one atomic load on the
+/// steady path).
+pub fn solve_metrics(family: Family) -> &'static SolveMetrics {
+    let all = SOLVE_METRICS.get_or_init(|| {
+        [
+            SolveMetrics::register(Family::Exact),
+            SolveMetrics::register(Family::Bilevel),
+            SolveMetrics::register(Family::Weighted),
+        ]
+    });
+    &all[family.index()]
+}
+
+/// Record one completed solve. `hinted` says a warm-start hint was fed in;
+/// `accepted` says the solver committed to it (`SolveStats::theta_hint`
+/// stays `Some` only on acceptance).
+pub fn record_solve(
+    family: Family,
+    elapsed_us: u64,
+    work: usize,
+    touched_groups: usize,
+    hinted: bool,
+    accepted: bool,
+) {
+    let m = solve_metrics(family);
+    m.count.inc();
+    m.latency_us.record(elapsed_us);
+    m.work.record(work as u64);
+    m.touched_groups.record(touched_groups as u64);
+    if hinted {
+        if accepted {
+            m.hint_accept.inc();
+        } else {
+            m.hint_reject.inc();
+        }
+    }
+}
+
+/// A span timer: holds a histogram handle and records the elapsed
+/// microseconds on drop, optionally tracing the line through the logger.
+///
+/// ```ignore
+/// let _span = metrics::span("serve.request.latency_us",
+///                           metric_histogram!("serve.request.latency_us"));
+/// ```
+pub struct Span {
+    name: &'static str,
+    hist: &'static Histogram,
+    start: Instant,
+}
+
+/// Start a span that feeds `hist` (named `name` in trace output).
+pub fn span(name: &'static str, hist: &'static Histogram) -> Span {
+    Span { name, hist, start: Instant::now() }
+}
+
+impl Span {
+    /// Elapsed microseconds so far (the drop will record the final value).
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let us = self.elapsed_us();
+        self.hist.record(us);
+        crate::trace!("span {} {}us", self.name, us);
+    }
+}
+
+/// Compact per-histogram summaries (count/mean/p50/p99/max) — the shape
+/// [`crate::util::bench::bench_meta`] stamps into every `BENCH_*.json`.
+pub fn histogram_summaries() -> Json {
+    let mut out = BTreeMap::new();
+    let snap = global().snapshot();
+    if let Some(hists) = snap.get("histograms").and_then(Json::as_obj) {
+        for (name, h) in hists {
+            let mut m = BTreeMap::new();
+            for k in ["count", "mean", "p50", "p99", "max"] {
+                if let Some(v) = h.get(k) {
+                    m.insert(k.to_string(), v.clone());
+                }
+            }
+            out.insert(name.clone(), Json::Obj(m));
+        }
+    }
+    Json::Obj(out)
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 6);
+    s.push_str("l1inf_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+fn prom_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Prometheus text exposition of a metrics snapshot. Accepts either the
+/// bare [`Registry::snapshot`] object or a full stats response / snapshot
+/// file that embeds one under `"metrics"` (in which case per-family
+/// `"cache"` stats and scalar top-level fields are exposed too).
+pub fn prometheus_text(snapshot: &Json) -> String {
+    let mut out = String::new();
+    let metrics = snapshot.get("metrics").unwrap_or(snapshot);
+
+    if let Some(cs) = metrics.get("counters").and_then(Json::as_obj) {
+        for (name, v) in cs {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n"));
+            out.push_str(&format!("{n} {}\n", prom_num(v.as_f64().unwrap_or(0.0))));
+        }
+    }
+    if let Some(gs) = metrics.get("gauges").and_then(Json::as_obj) {
+        for (name, v) in gs {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n"));
+            out.push_str(&format!("{n} {}\n", prom_num(v.as_f64().unwrap_or(0.0))));
+        }
+    }
+    if let Some(hs) = metrics.get("histograms").and_then(Json::as_obj) {
+        for (name, h) in hs {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            let count = h.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+            if let Some(cum) = h.get("cumulative").and_then(Json::as_arr) {
+                for (i, c) in cum.iter().enumerate() {
+                    out.push_str(&format!(
+                        "{n}_bucket{{le=\"{}\"}} {}\n",
+                        bucket_edge(i),
+                        prom_num(c.as_f64().unwrap_or(0.0))
+                    ));
+                }
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", prom_num(count)));
+            out.push_str(&format!(
+                "{n}_sum {}\n",
+                prom_num(h.get("sum").and_then(Json::as_f64).unwrap_or(0.0))
+            ));
+            out.push_str(&format!("{n}_count {}\n", prom_num(count)));
+        }
+    }
+    // Per-family cache stats of a stats response / snapshot file.
+    if let Some(cache) = snapshot.get("cache").and_then(Json::as_obj) {
+        for (family, st) in cache {
+            if let Some(fields) = st.as_obj() {
+                for (field, v) in fields {
+                    if let Some(x) = v.as_f64() {
+                        out.push_str(&format!(
+                            "l1inf_cache_{field}{{family=\"{family}\"}} {}\n",
+                            prom_num(x)
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    // Scalar top-level fields of a stats response (served, uptime, …).
+    if !std::ptr::eq(metrics, snapshot) {
+        if let Some(top) = snapshot.as_obj() {
+            for (name, v) in top {
+                if let Some(x) = v.as_f64() {
+                    out.push_str(&format!("{} {}\n", prom_name(name), prom_num(x)));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // Every value lands in the bucket whose edge bounds it.
+        for v in [0u64, 1, 5, 100, 1 << 20, (1 << 38) + 7] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_edge(i) || i == NUM_BUCKETS - 1, "v={v} i={i}");
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_quantiles_are_monotone() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 10, 100, 1000, 1000, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 9);
+        assert_eq!(s.sum, 7116);
+        assert_eq!(s.max, 5000);
+        assert!(s.mean() > 0.0);
+        let cum = s.cumulative();
+        assert_eq!(*cum.last().unwrap(), s.count, "cumulative ends at count");
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be nondecreasing");
+        }
+        let mut prev = -1.0;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let x = s.quantile(q);
+            assert!(x >= prev, "quantiles must be monotone in q");
+            prev = x;
+        }
+        assert!(s.quantile(1.0) >= 5000.0, "top quantile covers the max's bucket");
+    }
+
+    #[test]
+    fn registry_returns_stable_handles() {
+        let c1 = global().counter("test.registry.stable");
+        let c2 = global().counter("test.registry.stable");
+        assert!(std::ptr::eq(c1, c2), "same name, same handle");
+        c1.add(3);
+        assert!(c2.get() >= 3);
+        let g = global().gauge("test.registry.gauge");
+        g.set(2.5);
+        g.add(-0.5);
+        assert!((g.get() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macros_cache_per_site() {
+        let c = metric_counter!("test.macro.counter");
+        c.inc();
+        assert!(std::ptr::eq(c, metric_counter!("test.macro.counter")));
+        metric_gauge!("test.macro.gauge").set(7.0);
+        metric_histogram!("test.macro.hist").record(42);
+        assert!(metric_histogram!("test.macro.hist").count() >= 1);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        global().counter("test.snapshot.ctr").add(5);
+        global().histogram("test.snapshot.hist").record(9);
+        let snap = global().snapshot();
+        assert!(snap.get("uptime_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(
+            snap.get("counters").unwrap().get("test.snapshot.ctr").unwrap().as_f64().unwrap()
+                >= 5.0
+        );
+        let h = snap.get("histograms").unwrap().get("test.snapshot.hist").unwrap();
+        for k in ["count", "sum", "max", "mean", "p50", "p90", "p99", "cumulative"] {
+            assert!(h.get(k).is_some(), "histogram snapshot missing {k}");
+        }
+        // Snapshot → summaries keeps the same names.
+        let sums = histogram_summaries();
+        assert!(sums.get("test.snapshot.hist").unwrap().get("p99").is_some());
+    }
+
+    #[test]
+    fn solve_metrics_per_family() {
+        let before = solve_metrics(Family::Weighted).count.get();
+        record_solve(Family::Weighted, 120, 34, 7, true, true);
+        record_solve(Family::Weighted, 80, 0, 0, true, false);
+        let m = solve_metrics(Family::Weighted);
+        assert_eq!(m.count.get(), before + 2);
+        assert!(m.hint_accept.get() >= 1);
+        assert!(m.hint_reject.get() >= 1);
+        assert!(m.work.sum() >= 34);
+        // Families have distinct handles.
+        assert!(!std::ptr::eq(m, solve_metrics(Family::Exact)));
+    }
+
+    #[test]
+    fn span_feeds_its_histogram() {
+        let h = global().histogram("test.span.hist");
+        let before = h.count();
+        {
+            let _s = span("test.span.hist", h);
+            std::hint::black_box(0u64);
+        }
+        assert_eq!(h.count(), before + 1);
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        global().counter("test.prom.requests").add(2);
+        global().histogram("test.prom.lat").record(100);
+        let text = prometheus_text(&global().snapshot());
+        assert!(text.contains("# TYPE l1inf_test_prom_requests counter"), "{text}");
+        assert!(text.contains("l1inf_test_prom_lat_bucket{le=\"+Inf\"}"), "{text}");
+        assert!(text.contains("l1inf_test_prom_lat_sum"), "{text}");
+        // A full stats document exposes cache + scalar fields too.
+        let doc = crate::util::json::parse(
+            r#"{"served": 3, "uptime_secs": 1.5,
+                "cache": {"exact": {"hits": 2, "hit_rate": 0.5}},
+                "metrics": {"counters": {"a.b": 1}, "gauges": {}, "histograms": {}}}"#,
+        )
+        .unwrap();
+        let text = prometheus_text(&doc);
+        assert!(text.contains("l1inf_a_b 1"), "{text}");
+        assert!(text.contains("l1inf_cache_hit_rate{family=\"exact\"} 0.5"), "{text}");
+        assert!(text.contains("l1inf_served 3"), "{text}");
+    }
+}

@@ -6,6 +6,8 @@
 //!
 //! - [`logging`] — leveled stderr logger behind the crate-root `info!`-style
 //!   macros (the vendored crate set has no `log`)
+//! - [`metrics`] — process-global lock-free counters/gauges/histograms +
+//!   span timers (the observability plane; no `prometheus` crate either)
 //! - [`rng`]    — SplitMix64 + xoshiro256** PRNG with normal/uniform helpers
 //! - [`stats`]  — mean / std / percentiles / linear fits
 //! - [`csv`]    — tiny CSV writer used by the experiment drivers
@@ -20,6 +22,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod logging;
+pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,273 @@
+//! The metrics plane end to end: a mixed exact/bilevel/weighted TCP
+//! session whose stats counters reconcile *exactly* with the traffic sent,
+//! histogram snapshots that stay monotone, work terms that are nonzero
+//! only when a real (infeasible) solve ran, error responses that echo the
+//! request's parseable mode, and the `--metrics-snapshot` file written on
+//! an interval and at shutdown.
+//!
+//! The registry is process-global, so only
+//! [`stats_reconcile_exactly_with_traffic`] issues `project` ops — the
+//! snapshot-file test sticks to `ping`/`stats`/`shutdown` to keep the
+//! per-family solve counters attributable to one test.
+
+use l1inf::config::serve::ServeConfig;
+use l1inf::serve::server::Server;
+use l1inf::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response '{resp}': {e}"))
+    }
+
+    fn stats(&mut self, id: u32) -> Json {
+        let resp = self.roundtrip(&format!(r#"{{"id": {id}, "op": "stats"}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        resp
+    }
+}
+
+/// A 3×4 matrix with ‖·‖₁,∞ = 3.0 (group maxes 1.0, 0.9, 1.1).
+const DATA: &str = "1.0,-0.5,0.25,0.0,0.9,0.8,-0.7,0.1,1.1,0.2,0.3,-0.4";
+
+fn project_line(id: u32, mode_field: &str, key: Option<&str>, radius: f64) -> String {
+    let key_field = key.map(|k| format!(r#""key": "{k}", "#)).unwrap_or_default();
+    format!(
+        r#"{{"id": {id}, "op": "project", {mode_field}{key_field}"groups": 3, "len": 4, "radius": {radius}, "data": [{DATA}]}}"#
+    )
+}
+
+fn counter(stats: &Json, name: &str) -> f64 {
+    stats
+        .get("metrics")
+        .and_then(|m| m.get("counters"))
+        .and_then(|c| c.get(name))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+fn hist_field(stats: &Json, hist: &str, field: &str) -> f64 {
+    stats
+        .get("metrics")
+        .and_then(|m| m.get("histograms"))
+        .and_then(|h| h.get(hist))
+        .and_then(|h| h.get(field))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+fn cache_field(stats: &Json, family: &str, field: &str) -> f64 {
+    stats
+        .get("cache")
+        .and_then(|c| c.get(family))
+        .and_then(|f| f.get(field))
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing cache.{family}.{field}: {stats}"))
+}
+
+#[test]
+fn stats_reconcile_exactly_with_traffic() {
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+
+    let before = client.stats(1);
+
+    // ── traffic ─────────────────────────────────────────────────────────
+    // 3 infeasible exact solves under one key: 1 cold, then 2 warm.
+    for id in [10, 11, 12] {
+        let resp = client.roundtrip(&project_line(id, "", Some("obs"), 1.5));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("feasible"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("warm"), Some(&Json::Bool(id != 10)), "{resp}");
+    }
+    // 2 infeasible bilevel solves under the same client key (own family
+    // namespace): cold, then warm.
+    for id in [20, 21] {
+        let resp = client.roundtrip(&project_line(id, r#""mode": "bilevel", "#, Some("obs"), 1.5));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("mode").unwrap().as_str(), Some("bilevel"));
+        assert_eq!(resp.get("warm"), Some(&Json::Bool(id != 20)), "{resp}");
+    }
+    // 2 infeasible weighted solves: cold, then warm.
+    for id in [30, 31] {
+        let line = project_line(id, r#""mode": "weighted", "#, Some("obs"), 1.5)
+            .replace(r#""data""#, r#""weights": [1.0, 2.0, 0.5], "data""#);
+        let resp = client.roundtrip(&line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(resp.get("mode").unwrap().as_str(), Some("weighted"));
+        assert_eq!(resp.get("warm"), Some(&Json::Bool(id != 30)), "{resp}");
+    }
+
+    let mid = client.stats(2);
+
+    // 2 feasible exact requests (radius far above the norm, no key): they
+    // count as solves but no θ search runs — the work term must stay 0.
+    for id in [40, 41] {
+        let resp = client.roundtrip(&project_line(id, "", None, 100.0));
+        assert_eq!(resp.get("feasible"), Some(&Json::Bool(true)), "{resp}");
+    }
+
+    // One malformed project whose mode parses: the error must echo it.
+    let err = client.roundtrip(r#"{"id": 50, "op": "project", "mode": "bilevel", "groups": 2}"#);
+    assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(err.get("mode").unwrap().as_str(), Some("bilevel"), "{err}");
+    // ...and one whose mode is unparseable: no mode field at all.
+    let err2 = client.roundtrip(r#"{"id": 51, "op": "project", "mode": "warp", "groups": 2}"#);
+    assert_eq!(err2.get("ok"), Some(&Json::Bool(false)));
+    assert!(err2.get("mode").is_none(), "{err2}");
+
+    let after = client.stats(3);
+
+    // ── exact reconciliation against the traffic above ──────────────────
+    let d = |name: &str| counter(&after, name) - counter(&before, name);
+    assert_eq!(d("solve.exact.count"), 5.0, "3 infeasible + 2 feasible exact solves");
+    assert_eq!(d("solve.bilevel.count"), 2.0);
+    assert_eq!(d("solve.weighted.count"), 2.0);
+    assert_eq!(d("serve.op.project"), 9.0);
+    assert_eq!(d("serve.op.error"), 2.0);
+    // Per family: one cold miss, the rest of the keyed lookups hit; every
+    // infeasible solve updates its namespace.
+    let cd = |family: &str, field: &str| {
+        cache_field(&after, family, field) - cache_field(&before, family, field)
+    };
+    assert_eq!(cd("exact", "misses"), 1.0);
+    assert_eq!(cd("exact", "hits"), 2.0);
+    assert_eq!(cd("exact", "updates"), 3.0);
+    assert_eq!(cd("bilevel", "misses"), 1.0);
+    assert_eq!(cd("bilevel", "hits"), 1.0);
+    assert_eq!(cd("bilevel", "updates"), 2.0);
+    assert_eq!(cd("weighted", "misses"), 1.0);
+    assert_eq!(cd("weighted", "hits"), 1.0);
+    assert_eq!(cd("weighted", "updates"), 2.0);
+    assert_eq!(cd("total", "hits"), 4.0);
+    // Served = successful project responses; uptime moves forward.
+    let served_of = |s: &Json| s.get("served").unwrap().as_f64().unwrap();
+    assert_eq!(served_of(&after) - served_of(&before), 9.0);
+    assert!(
+        after.get("uptime_secs").unwrap().as_f64().unwrap()
+            >= before.get("uptime_secs").unwrap().as_f64().unwrap()
+    );
+    // Hinted-solve accounting: exactly the 2 warm exact solves were hinted
+    // (feasible solves never consult the hint), split between accept and
+    // reject by the solver's own verdict.
+    let hinted = d("solve.exact.hint_accept") + d("solve.exact.hint_reject");
+    assert_eq!(hinted, 2.0);
+    assert!(d("solve.exact.hint_accept") >= 1.0, "same-matrix hints should be accepted");
+
+    // ── work term: nonzero only when a real solve ran ───────────────────
+    let wd = |a: &Json, b: &Json, name: &str| {
+        hist_field(a, name, "sum") - hist_field(b, name, "sum")
+    };
+    assert!(wd(&mid, &before, "solve.exact.work") > 0.0, "cold infeasible solves do work");
+    assert_eq!(
+        wd(&after, &mid, "solve.exact.work"),
+        0.0,
+        "feasible projections must record zero work"
+    );
+    let work = "solve.exact.work";
+    assert_eq!(hist_field(&after, work, "count") - hist_field(&mid, work, "count"), 2.0);
+
+    // ── histogram snapshots are monotone ────────────────────────────────
+    let hists = after.get("metrics").unwrap().get("histograms").unwrap().as_obj().unwrap();
+    assert!(hists.contains_key("serve.request.latency_us"));
+    assert!(hists.contains_key("solve.exact.latency_us"));
+    for (name, h) in hists {
+        let count = h.get("count").and_then(Json::as_f64).unwrap();
+        let cum = h.get("cumulative").and_then(Json::as_arr).unwrap();
+        let mut prev = 0.0;
+        for c in cum {
+            let c = c.as_f64().unwrap();
+            assert!(c >= prev, "{name}: cumulative buckets must be nondecreasing");
+            prev = c;
+        }
+        if count > 0.0 {
+            assert_eq!(prev, count, "{name}: cumulative must end at count");
+        }
+        let (p50, p90, p99) = (
+            h.get("p50").and_then(Json::as_f64).unwrap(),
+            h.get("p90").and_then(Json::as_f64).unwrap(),
+            h.get("p99").and_then(Json::as_f64).unwrap(),
+        );
+        assert!(p50 <= p90 && p90 <= p99, "{name}: quantiles must be ordered");
+    }
+
+    let bye = client.roundtrip(r#"{"id": 99, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn snapshot_file_is_written_on_interval_and_at_shutdown() {
+    let path = std::env::temp_dir()
+        .join(format!("l1inf_obs_snapshot_{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 1,
+        metrics_snapshot: Some(path.to_string_lossy().into_owned()),
+        metrics_interval_secs: 0.25,
+        ..Default::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+    let pong = client.roundtrip(r#"{"id": 1, "op": "ping"}"#);
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+
+    // The interval writer must produce the file without any shutdown.
+    // `fs::write` truncates before writing, so a poll can catch a half
+    // rewrite — keep polling until a complete document parses.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let snap = loop {
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(snap) = json::parse(&text) {
+                break snap;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "interval writer never produced a parseable snapshot"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    };
+    for key in ["threads", "served", "uptime_secs", "cache", "metrics"] {
+        assert!(snap.get(key).is_some(), "snapshot missing {key}");
+    }
+
+    // Shutdown rewrites it (fresh uptime ≥ the interval write's).
+    let t1 = snap.get("uptime_secs").unwrap().as_f64().unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let bye = client.roundtrip(r#"{"id": 2, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+    let text = std::fs::read_to_string(&path).expect("shutdown snapshot written");
+    let snap = json::parse(&text).expect("shutdown snapshot parses");
+    assert!(snap.get("uptime_secs").unwrap().as_f64().unwrap() >= t1);
+    // The warm-start field the bench gate keys on is always present.
+    for family in ["exact", "bilevel", "weighted", "total"] {
+        assert!(
+            snap.get("cache").unwrap().get(family).unwrap().get("hit_rate").is_some(),
+            "snapshot cache.{family}.hit_rate missing"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
