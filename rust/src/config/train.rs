@@ -64,6 +64,8 @@ pub const PROJECTION_MODE_NAMES: &[&str] = &[
     "l1inf",
     "l1inf_cols",
     "cols",
+    "l1inf_delta",
+    "delta",
     "bilevel",
     "bilevel_cols",
     "l1inf_masked",
@@ -82,6 +84,7 @@ pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
         "l21" | "l12" => ProjectionMode::L12 { eta: radius },
         "l1inf" => ProjectionMode::L1Inf { c: radius },
         "l1inf_cols" | "cols" => ProjectionMode::L1InfCols { c: radius },
+        "l1inf_delta" | "delta" => ProjectionMode::L1InfDelta { c: radius },
         "bilevel" => ProjectionMode::Bilevel { c: radius },
         "bilevel_cols" => ProjectionMode::BilevelCols { c: radius },
         "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
@@ -194,6 +197,7 @@ mod tests {
             ProjectionMode::L12 { eta: 1.0 },
             ProjectionMode::L1Inf { c: 1.0 },
             ProjectionMode::L1InfCols { c: 1.0 },
+            ProjectionMode::L1InfDelta { c: 1.0 },
             ProjectionMode::Bilevel { c: 1.0 },
             ProjectionMode::BilevelCols { c: 1.0 },
             ProjectionMode::L1InfMasked { c: 1.0 },

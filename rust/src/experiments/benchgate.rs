@@ -1,7 +1,8 @@
 //! `l1inf exp bench_gate` — the CI bench-regression gate.
 //!
-//! Reads the five fresh bench reports (`BENCH_proj.json`, `BENCH_serve.json`,
-//! `BENCH_bilevel.json`, `BENCH_kernels.json`, `BENCH_weighted.json`) from
+//! Reads the six fresh bench reports (`BENCH_proj.json`, `BENCH_serve.json`,
+//! `BENCH_bilevel.json`, `BENCH_kernels.json`, `BENCH_weighted.json`,
+//! `BENCH_incremental.json`) from
 //! `--out` and diffs their key metrics against the committed floors/ceilings in
 //! `ci/bench_baselines.json`. The comparison table is printed, written to
 //! `<out>/bench_gate.md` (the CI step appends that file to
@@ -36,13 +37,14 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-/// The five reports the gate consumes.
-const REPORTS: [&str; 5] = [
+/// The six reports the gate consumes.
+const REPORTS: [&str; 6] = [
     "BENCH_proj.json",
     "BENCH_serve.json",
     "BENCH_bilevel.json",
     "BENCH_kernels.json",
     "BENCH_weighted.json",
+    "BENCH_incremental.json",
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -125,6 +127,23 @@ fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
         "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
         "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
         "weighted.uniform_agreement_max" => get("BENCH_weighted.json", &["agreement", "max"]),
+        "incremental.speedup_vs_cold_2pct" => get("BENCH_incremental.json", &["gate", "speedup"]),
+        "incremental.max_abs_diff" => {
+            let cases = reports
+                .get("BENCH_incremental.json")
+                .and_then(|v| v.get("cases"))
+                .and_then(Json::as_arr)
+                .context("BENCH_incremental.json: missing cases[]")?;
+            let mut worst = 0.0f64;
+            for c in cases {
+                worst = worst.max(
+                    c.get("max_abs_diff")
+                        .and_then(Json::as_f64)
+                        .context("BENCH_incremental.json: case without max_abs_diff")?,
+                );
+            }
+            Ok(worst)
+        }
         other => bail!("no extractor for baseline metric '{other}' (typo in ci/bench_baselines.json?)"),
     }
 }
@@ -202,7 +221,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     for file in REPORTS {
         let path = opts.outdir.join(file);
         let text = std::fs::read_to_string(&path).with_context(|| {
-            format!("reading {} (run the four bench experiments first)", path.display())
+            format!("reading {} (run the bench experiments first)", path.display())
         })?;
         let v = json::parse(&text).map_err(|e| anyhow!("{file}: {e}"))?;
         let kernel = v
@@ -356,6 +375,14 @@ mod tests {
             ),
         );
         write(
+            &dir.join("BENCH_incremental.json"),
+            &format!(
+                r#"{{{meta}, "gate": {{"speedup": 8.0, "threshold": 3.0, "pass": true}},
+                   "cases": [{{"label": "0.5pct", "max_abs_diff": 0.0}}, {{"label": "2pct", "max_abs_diff": 3e-8}},
+                             {{"label": "10pct", "max_abs_diff": 1e-8}}]}}"#
+            ),
+        );
+        write(
             &dir.join("metrics_snapshot.json"),
             r#"{"served": 6, "uptime_secs": 0.5,
                 "cache": {"exact": {"entries": 1, "hits": 5, "misses": 1, "updates": 6, "hit_rate": 0.8333},
@@ -374,7 +401,9 @@ mod tests {
             "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
             "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
             "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},
-            "weighted.uniform_agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0}
+            "weighted.uniform_agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},
+            "incremental.speedup_vs_cold_2pct": {"kind": "min", "value": 3.0, "baseline": 8.0},
+            "incremental.max_abs_diff": {"kind": "max", "value": 1e-6, "baseline": 0.0}
         }}"#
     }
 

@@ -6,6 +6,7 @@
 
 pub mod benchgate;
 pub mod bilevelbench;
+pub mod incrementalbench;
 pub mod kernelbench;
 pub mod projbench;
 pub mod servebench;
@@ -45,7 +46,7 @@ impl Default for ExpOpts {
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
     "trainproj", "serve_bench", "proj_bench", "bilevel_bench", "kernel_bench", "weighted_bench",
-    "bench_gate",
+    "incremental_bench", "bench_gate",
 ];
 
 /// Dispatch by experiment id.
@@ -56,6 +57,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "bilevel_bench" => bilevelbench::run(opts),
         "kernel_bench" => kernelbench::run(opts),
         "weighted_bench" => weightedbench::run(opts),
+        "incremental_bench" => incrementalbench::run(opts),
         "bench_gate" => benchgate::run(opts),
         "fig1" => fig1(opts),
         "fig2" => fig2(opts),

@@ -1,0 +1,953 @@
+//! Incremental delta-projection: support-tracking solver state that makes
+//! the per-step ℓ₁,∞ projection cost proportional to the *change* instead
+//! of the matrix size.
+//!
+//! Across adjacent SGD steps (and across slowly-drifting matrices in
+//! repeated serve traffic) only a small fraction of rows changes, yet a
+//! cold [`super::solver::project_with`] call re-runs the full `O(nm)`
+//! pre-pass, the θ solve, and an `O(nm)` clip — warm-starting recovers
+//! only a scalar θ. [`DeltaSolver`] instead persists per-group sorted
+//! structures between calls and repairs only what moved:
+//!
+//! * **per-group state** — `|y|` sorted descending, the sort permutation,
+//!   prefix sums, abs-max, ℓ₁ mass, and the group's water level μ (μ = 0
+//!   encodes "out of support");
+//! * **persistent output** — the solver owns the projected matrix `X`; on
+//!   an incremental step it rewrites only changed rows, rows whose support
+//!   membership flipped, and the clipped prefix of rows whose water level
+//!   moved (entries with `|y| ≤ min(μ_old, μ_new)` are unclipped under
+//!   both levels, so they are provably already correct);
+//! * **θ re-solve over the touched breakpoints** — Φ(θ) = Σ_g μ_g(θ) is
+//!   evaluated in `O(n log m)` from the persisted prefix sums (binary
+//!   search per group instead of a heap sweep), and a safeguarded Newton
+//!   iteration seeded with the previous θ* converges in a handful of
+//!   evaluations because adjacent steps move θ only slightly.
+//!
+//! # Persisted-state lifecycle
+//!
+//! ```text
+//! new(c) ──begin(y)──▶ ready ──solve_delta(y', Δ)──▶ ready (repaired)
+//!                        │             │
+//!                        │             └─ trust bound exceeded ─▶ cold
+//!                        │                 rebuild + KKT certificate
+//!                        └──invalidate()──▶ stale (begin required)
+//! ```
+//!
+//! [`DeltaSolver::begin`] seeds the state with a full (cold) solve.
+//! Subsequent [`DeltaSolver::solve_delta`] calls take the *entire current
+//! matrix* plus a [`Delta`] naming the changed groups, and cost
+//! `O(|Δ|·m log m + nm + n log m · iters + clipped)` — the `nm` term is a
+//! single sort-free audit scan (see below), which on real matrices is a
+//! small fraction of the per-group sorts and full rewrite a cold solve
+//! pays.
+//! [`DeltaSolver::invalidate`] marks the state stale (the next call must
+//! be [`DeltaSolver::begin`]); use it whenever the tracked matrix was
+//! replaced wholesale.
+//!
+//! # Hint-safety contract
+//!
+//! The delta is a *claim*: every group not listed in it must be bit-equal
+//! to the data of the previous call. The solver does not re-sort
+//! undeclared groups to verify the claim (that is the work it exists to
+//! avoid); it defends it with two cheaper mechanisms instead:
+//!
+//! 1. **Audit scan** — every undeclared group's abs-max and row-order ℓ₁
+//!    mass are recomputed (one sort-free `O(m)` pass per group) and
+//!    compared exactly against the persisted values. Any change to a
+//!    group's magnitude profile is caught deterministically. (A
+//!    profile-preserving lie — e.g. permuting a row's entries — can
+//!    escape the audit; bit-equality is still the contract.)
+//! 2. **Trust bound** — if the incrementally re-solved θ* drifts more
+//!    than [`TRUST_REL`] relative to the previous θ*, or the delta names
+//!    more than [`MAX_DELTA_FRACTION`] of the groups, the repair is not
+//!    attempted.
+//!
+//! Either trigger discards the persisted state and runs a full cold
+//! solve on the data actually passed — and the cold result is verified
+//! against the KKT certificate
+//! ([`crate::projection::kkt::verify_l1inf`]) before it is returned. A
+//! caller that violates the contract therefore gets a correct, certified
+//! answer or an error — never a silently wrong projection of a
+//! magnitude-profile-visible change.
+
+use super::{ProjInfo, SolveStats};
+use crate::projection::kkt::{self, Tolerance};
+use crate::serve::cache::Family;
+use crate::util::metrics::record_delta;
+
+/// Maximum relative drift |θ_new − θ_old| / θ_old the incremental path
+/// will accept before falling back to a KKT-verified cold solve.
+pub const TRUST_REL: f64 = 0.25;
+
+/// Deltas naming more than this fraction of all groups skip the repair
+/// path entirely: a cold rebuild is cheaper and strictly safer.
+pub const MAX_DELTA_FRACTION: f64 = 0.5;
+
+/// Newton/bisection iteration cap for the θ re-solve (piecewise-linear Φ
+/// converges in far fewer; the cap only guards pathological float cases).
+const MAX_THETA_ITERS: usize = 128;
+
+/// A set of changed groups (rows of the grouped matrix), sorted and
+/// deduplicated. The unit of change is a whole group: the trainer knows
+/// which feature rows its gradient touched, serve clients resend whole
+/// rows.
+#[derive(Debug, Clone, Default)]
+pub struct Delta {
+    rows: Vec<u32>,
+}
+
+impl Delta {
+    /// Build a delta from group indices (any order, duplicates welcome).
+    pub fn from_rows<I: IntoIterator<Item = u32>>(rows: I) -> Delta {
+        let mut rows: Vec<u32> = rows.into_iter().collect();
+        rows.sort_unstable();
+        rows.dedup();
+        Delta { rows }
+    }
+
+    /// Derive a delta from a gradient matrix: every group with at least
+    /// one nonzero gradient entry is marked changed. This is the trainer
+    /// hook — an SGD step can only have moved rows the gradient touched.
+    pub fn from_grad_rows(grad: &[f32], n_groups: usize, group_len: usize) -> Delta {
+        debug_assert_eq!(grad.len(), n_groups * group_len);
+        let rows = (0..n_groups)
+            .filter(|&g| {
+                grad[g * group_len..(g + 1) * group_len].iter().any(|&v| v != 0.0)
+            })
+            .map(|g| g as u32)
+            .collect();
+        Delta { rows }
+    }
+
+    /// The changed group indices, ascending and unique.
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// What one [`DeltaSolver`] call produced.
+#[derive(Debug, Clone)]
+pub struct DeltaOutcome {
+    /// The same projection summary a cold [`super::solver::project_with`]
+    /// returns (radius before/after, θ*, zero groups, feasibility).
+    pub info: ProjInfo,
+    /// Groups whose persisted output rows were actually rewritten this
+    /// call (changed groups + support flips + clip-level moves). On a
+    /// fallback or [`DeltaSolver::begin`] this is every group.
+    pub repaired_groups: usize,
+    /// True when the trust bound (or delta size) forced a cold rebuild.
+    pub fallback: bool,
+    /// KKT certificate residual when this call was cold-verified (always
+    /// on fallback; `None` on the trusted incremental path).
+    pub certified: Option<f64>,
+}
+
+/// Support-tracking incremental ℓ₁,∞ projection state for one matrix
+/// (contiguous row-major groups only). See the [module docs](self) for
+/// the lifecycle and the hint-safety contract.
+///
+/// The caller owns the *unprojected* matrix `y` and passes it on every
+/// call; the solver owns the projected output [`DeltaSolver::x`]. Memory:
+/// ≈ `nm · (4·2 + 8) + n·…` bytes — about 80 MB for 1000×4000 — so serve
+/// keeps only a small LRU of these (see [`crate::serve::cache`]).
+pub struct DeltaSolver {
+    c: f64,
+    n_groups: usize,
+    group_len: usize,
+    /// Per group: `|y|` sorted descending (`n·m`, group-major).
+    sorted: Vec<f32>,
+    /// Per group: within-group index of each sorted entry (`n·m`).
+    order: Vec<u32>,
+    /// Per group: prefix sums of `sorted` in f64 (`n·m`).
+    prefix: Vec<f64>,
+    /// Per group abs-max (exact f32 value widened to f64).
+    maxes: Vec<f64>,
+    /// Per group ℓ₁ mass.
+    mass: Vec<f64>,
+    /// Per group ℓ₁ mass summed in *row order* (a reproducible checksum:
+    /// re-scanning the same bits yields the same f64, so the audit pass
+    /// can compare exactly without re-sorting).
+    audit_mass: Vec<f64>,
+    /// Per group water level μ (0 = out of support / dead).
+    mus: Vec<f64>,
+    /// Previous call's water levels (scratch for the repair pass).
+    mus_old: Vec<f64>,
+    /// The projected matrix, maintained incrementally.
+    x: Vec<f32>,
+    /// Scratch: `changed[g]` marks groups named by the current delta.
+    changed: Vec<bool>,
+    /// Scratch for the per-group sort.
+    sort_buf: Vec<(f32, u32)>,
+    theta: f64,
+    radius_before: f64,
+    ready: bool,
+}
+
+impl DeltaSolver {
+    /// A solver for the ball of radius `c` (fixed for the lifetime of the
+    /// persisted state). Call [`DeltaSolver::begin`] before anything else.
+    pub fn new(c: f64) -> DeltaSolver {
+        DeltaSolver {
+            c,
+            n_groups: 0,
+            group_len: 0,
+            sorted: Vec::new(),
+            order: Vec::new(),
+            prefix: Vec::new(),
+            maxes: Vec::new(),
+            mass: Vec::new(),
+            audit_mass: Vec::new(),
+            mus: Vec::new(),
+            mus_old: Vec::new(),
+            x: Vec::new(),
+            changed: Vec::new(),
+            sort_buf: Vec::new(),
+            theta: 0.0,
+            radius_before: 0.0,
+            ready: false,
+        }
+    }
+
+    /// The ball radius this state was built for.
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+
+    /// True when persisted state exists and [`DeltaSolver::solve_delta`]
+    /// may be called.
+    pub fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    /// `(n_groups, group_len)` of the tracked matrix (zeros before
+    /// [`DeltaSolver::begin`]).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n_groups, self.group_len)
+    }
+
+    /// θ* of the last solve.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// The projected matrix from the last call (row-major groups).
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Per-group water levels of the last solve (0 = group zeroed).
+    pub fn water_levels(&self) -> &[f64] {
+        &self.mus
+    }
+
+    /// Mark the persisted state stale: the next call must be
+    /// [`DeltaSolver::begin`]. Use when the tracked matrix was replaced
+    /// wholesale (new run, weights reloaded, …).
+    pub fn invalidate(&mut self) {
+        self.ready = false;
+    }
+
+    /// Seed (or re-seed) the persisted state with a full cold solve of
+    /// `data`. Explicit initialisation — not counted as a fallback.
+    pub fn begin(
+        &mut self,
+        data: &[f32],
+        n_groups: usize,
+        group_len: usize,
+    ) -> Result<DeltaOutcome, String> {
+        if n_groups == 0 || group_len == 0 {
+            return Err("delta: empty shape".into());
+        }
+        let elems = n_groups
+            .checked_mul(group_len)
+            .ok_or_else(|| "delta: shape overflows".to_string())?;
+        if data.len() != elems {
+            return Err(format!(
+                "delta: data has {} elems, shape {}x{} needs {}",
+                data.len(),
+                n_groups,
+                group_len,
+                elems
+            ));
+        }
+        if !self.c.is_finite() || self.c < 0.0 {
+            return Err(format!("delta: radius c={} must be finite and >= 0", self.c));
+        }
+        if data.iter().any(|v| !v.is_finite()) {
+            return Err("delta: non-finite input data".into());
+        }
+        self.n_groups = n_groups;
+        self.group_len = group_len;
+        self.sorted.resize(elems, 0.0);
+        self.order.resize(elems, 0);
+        self.prefix.resize(elems, 0.0);
+        self.maxes.resize(n_groups, 0.0);
+        self.mass.resize(n_groups, 0.0);
+        self.audit_mass.resize(n_groups, 0.0);
+        self.mus.resize(n_groups, 0.0);
+        self.mus_old.resize(n_groups, 0.0);
+        self.x.resize(elems, 0.0);
+        self.changed.resize(n_groups, false);
+        let (info, evals) = self.solve_cold_full(data);
+        self.ready = true;
+        Ok(DeltaOutcome {
+            info: self.finish_info(info, evals, None),
+            repaired_groups: n_groups,
+            fallback: false,
+            certified: None,
+        })
+    }
+
+    /// Incrementally re-project after `delta` changed some groups of
+    /// `data` (the **entire current matrix** — unlisted groups must be
+    /// bit-equal to the previous call; see the hint-safety contract in
+    /// the [module docs](self)).
+    ///
+    /// Errors when no persisted state exists, the shape mismatches, the
+    /// delta is out of range, or the changed rows contain non-finite
+    /// values. Falls back to a KKT-verified cold solve when the delta is
+    /// too large or θ* drifts beyond the trust bound.
+    ///
+    /// Records `solve.<family>.delta_repaired_groups` /
+    /// `solve.<family>.delta_fallback` into the global metrics plane.
+    pub fn solve_delta(&mut self, data: &[f32], delta: &Delta) -> Result<DeltaOutcome, String> {
+        if !self.ready {
+            return Err("delta: no persisted state (call begin first, or after invalidate)".into());
+        }
+        let (n, m) = (self.n_groups, self.group_len);
+        if data.len() != n * m {
+            return Err(format!(
+                "delta: data has {} elems, persisted shape {}x{} needs {}",
+                data.len(),
+                n,
+                m,
+                n * m
+            ));
+        }
+        if let Some(&g) = delta.rows().last() {
+            if g as usize >= n {
+                return Err(format!("delta: group {} out of range (n_groups={})", g, n));
+            }
+        }
+        for &g in delta.rows() {
+            let g = g as usize;
+            if data[g * m..(g + 1) * m].iter().any(|v| !v.is_finite()) {
+                return Err(format!("delta: non-finite data in changed group {}", g));
+            }
+        }
+
+        // Oversized delta: repairing most of the matrix costs more than a
+        // rebuild and erodes the trust heuristic — go cold immediately.
+        if delta.len() as f64 > MAX_DELTA_FRACTION * n as f64 {
+            return self.fallback_cold(data);
+        }
+
+        let theta_old = self.theta;
+        self.mus_old.copy_from_slice(&self.mus);
+        self.changed.iter_mut().for_each(|c| *c = false);
+        for &g in delta.rows() {
+            self.changed[g as usize] = true;
+            self.rebuild_group(g as usize, data);
+        }
+
+        // Audit the hint-safety contract (see the module docs): every
+        // undeclared group must still match its persisted abs-max and
+        // row-order ℓ₁ mass. One sort-free O(m) pass per group; a
+        // mismatch means rows changed without being declared — rebuild
+        // from the data actually passed and certify it. NaN in an
+        // undeclared row also lands here (NaN breaks the sum equality)
+        // and becomes the fallback's typed non-finite error.
+        for g in 0..n {
+            if self.changed[g] {
+                continue;
+            }
+            let row = &data[g * m..(g + 1) * m];
+            let mut mx = 0.0f32;
+            let mut sum = 0.0f64;
+            for &v in row {
+                mx = mx.max(v.abs());
+                sum += (v as f64).abs();
+            }
+            if mx as f64 != self.maxes[g] || sum != self.audit_mass[g] {
+                return self.fallback_cold(data);
+            }
+        }
+        self.radius_before = self.maxes.iter().sum();
+
+        // Feasible / degenerate radii take the same fast exits as a cold
+        // `project_with` (identity, or the {0} ball).
+        if self.radius_before <= self.c {
+            let zero_groups = self.maxes.iter().filter(|&&mx| mx == 0.0).count();
+            self.theta = 0.0;
+            self.mus.copy_from_slice(&self.maxes);
+            self.x.copy_from_slice(data);
+            record_delta(Family::Exact, delta.len() as u64, false);
+            return Ok(DeltaOutcome {
+                info: ProjInfo {
+                    radius_before: self.radius_before,
+                    radius_after: self.radius_before,
+                    theta: 0.0,
+                    zero_groups,
+                    feasible: true,
+                    stats: SolveStats::default(),
+                },
+                repaired_groups: delta.len(),
+                fallback: false,
+                certified: None,
+            });
+        }
+        if self.c == 0.0 {
+            self.theta = self.radius_before;
+            self.mus.iter_mut().for_each(|mu| *mu = 0.0);
+            self.x.iter_mut().for_each(|v| *v = 0.0);
+            record_delta(Family::Exact, n as u64, false);
+            return Ok(DeltaOutcome {
+                info: ProjInfo {
+                    radius_before: self.radius_before,
+                    radius_after: 0.0,
+                    theta: self.radius_before,
+                    zero_groups: n,
+                    feasible: false,
+                    stats: SolveStats::default(),
+                },
+                repaired_groups: n,
+                fallback: false,
+                certified: None,
+            });
+        }
+
+        // θ re-solve over the persisted breakpoints, seeded with the
+        // previous θ* (adjacent steps move θ only slightly).
+        let seed = if theta_old > 0.0 { Some(theta_old) } else { None };
+        let evals = self.solve_theta(seed);
+
+        // Trust bound: a θ* this far from the seed means either a huge
+        // (undeclared?) change or a violated hint contract — re-derive
+        // everything from the data actually passed and certify it.
+        if theta_old > 0.0 && (self.theta - theta_old).abs() > TRUST_REL * theta_old {
+            return self.fallback_cold(data);
+        }
+
+        // Incremental X repair: changed rows fully, support flips fully,
+        // level moves only over the clipped prefix. (`changed` was marked
+        // before the audit pass above.)
+        let mut repaired = 0usize;
+        {
+            let DeltaSolver { sorted, order, mus, mus_old, x, changed, .. } = self;
+            for g in 0..n {
+                let row = &data[g * m..(g + 1) * m];
+                let x_row = &mut x[g * m..(g + 1) * m];
+                let mu_new = mus[g];
+                if changed[g] {
+                    write_row(x_row, row, mu_new);
+                    repaired += 1;
+                    continue;
+                }
+                let mu_old = mus_old[g];
+                let dead_old = mu_old <= 0.0;
+                let dead_new = mu_new <= 0.0;
+                if dead_old && dead_new {
+                    continue; // row is already all-zero
+                }
+                if dead_new {
+                    x_row.iter_mut().for_each(|v| *v = 0.0);
+                    repaired += 1;
+                    continue;
+                }
+                if dead_old {
+                    write_row(x_row, row, mu_new);
+                    repaired += 1;
+                    continue;
+                }
+                let mu32_old = mu_old as f32;
+                let mu32_new = mu_new as f32;
+                if mu32_old == mu32_new {
+                    continue; // identical clip level: every entry already correct
+                }
+                // Entries with |y| <= min(μ_old, μ_new) are unclipped under
+                // both levels, so only the sorted prefix above that needs a
+                // rewrite at the new level.
+                let min_mu = if mu32_old < mu32_new { mu32_old } else { mu32_new };
+                let zs = &sorted[g * m..(g + 1) * m];
+                let k_max = zs.partition_point(|&z| z > min_mu);
+                for &idx in &order[g * m..g * m + k_max] {
+                    let v = row[idx as usize];
+                    x_row[idx as usize] =
+                        if v.abs() > mu32_new { mu32_new.copysign(v) } else { v };
+                }
+                if k_max > 0 {
+                    repaired += 1;
+                }
+            }
+        }
+
+        let (radius_after, zero_groups) = self.fold_radius_after();
+        record_delta(Family::Exact, repaired as u64, false);
+        Ok(DeltaOutcome {
+            info: ProjInfo {
+                radius_before: self.radius_before,
+                radius_after,
+                theta: self.theta,
+                zero_groups,
+                feasible: false,
+                stats: SolveStats {
+                    theta: self.theta,
+                    work: evals,
+                    touched_groups: repaired,
+                    theta_hint: seed,
+                },
+            },
+            repaired_groups: repaired,
+            fallback: false,
+            certified: None,
+        })
+    }
+
+    /// Trust-bound / oversized-delta escape hatch: rebuild every group
+    /// from `data`, cold-solve θ, rewrite X fully, and verify the result
+    /// against the KKT certificate before trusting it again.
+    fn fallback_cold(&mut self, data: &[f32]) -> Result<DeltaOutcome, String> {
+        if data.iter().any(|v| !v.is_finite()) {
+            self.ready = false;
+            record_delta(Family::Exact, 0, true);
+            return Err("delta: non-finite input data (fallback rebuild)".into());
+        }
+        let (info, evals) = self.solve_cold_full(data);
+        let certified = if self.c > 0.0 && !info.feasible {
+            match kkt::verify_l1inf(
+                data,
+                &self.x,
+                self.n_groups,
+                self.group_len,
+                self.c,
+                Tolerance::default(),
+            ) {
+                Ok(resid) => Some(resid),
+                Err(e) => {
+                    self.ready = false;
+                    record_delta(Family::Exact, 0, true);
+                    return Err(format!("delta: fallback failed KKT certification: {e}"));
+                }
+            }
+        } else {
+            Some(0.0)
+        };
+        record_delta(Family::Exact, self.n_groups as u64, true);
+        Ok(DeltaOutcome {
+            info: self.finish_info(info, evals, None),
+            repaired_groups: self.n_groups,
+            fallback: true,
+            certified,
+        })
+    }
+
+    /// Full rebuild + cold solve + full X rewrite. Returns the info core
+    /// and the Φ-evaluation count. Callers fill in stats via
+    /// [`DeltaSolver::finish_info`].
+    fn solve_cold_full(&mut self, data: &[f32]) -> (ProjInfo, usize) {
+        let (n, m) = (self.n_groups, self.group_len);
+        for g in 0..n {
+            self.rebuild_group(g, data);
+        }
+        self.radius_before = self.maxes.iter().sum();
+
+        if self.radius_before <= self.c {
+            let zero_groups = self.maxes.iter().filter(|&&mx| mx == 0.0).count();
+            self.theta = 0.0;
+            self.mus.copy_from_slice(&self.maxes);
+            self.x.copy_from_slice(data);
+            return (
+                ProjInfo {
+                    radius_before: self.radius_before,
+                    radius_after: self.radius_before,
+                    theta: 0.0,
+                    zero_groups,
+                    feasible: true,
+                    stats: SolveStats::default(),
+                },
+                0,
+            );
+        }
+        if self.c == 0.0 {
+            self.theta = self.radius_before;
+            self.mus.iter_mut().for_each(|mu| *mu = 0.0);
+            self.x.iter_mut().for_each(|v| *v = 0.0);
+            return (
+                ProjInfo {
+                    radius_before: self.radius_before,
+                    radius_after: 0.0,
+                    theta: self.radius_before,
+                    zero_groups: n,
+                    feasible: false,
+                    stats: SolveStats::default(),
+                },
+                0,
+            );
+        }
+
+        let evals = self.solve_theta(None);
+        {
+            let DeltaSolver { mus, x, .. } = self;
+            for g in 0..n {
+                write_row(&mut x[g * m..(g + 1) * m], &data[g * m..(g + 1) * m], mus[g]);
+            }
+        }
+        let (radius_after, zero_groups) = self.fold_radius_after();
+        (
+            ProjInfo {
+                radius_before: self.radius_before,
+                radius_after,
+                theta: self.theta,
+                zero_groups,
+                feasible: false,
+                stats: SolveStats::default(),
+            },
+            evals,
+        )
+    }
+
+    /// Stamp solver stats onto a cold-path info core.
+    fn finish_info(&self, mut info: ProjInfo, evals: usize, hint: Option<f64>) -> ProjInfo {
+        if !info.feasible && self.c > 0.0 {
+            info.stats = SolveStats {
+                theta: self.theta,
+                work: evals,
+                touched_groups: self.n_groups,
+                theta_hint: hint,
+            };
+        }
+        info
+    }
+
+    /// Re-sort one group of `data` and refresh its persisted structures.
+    fn rebuild_group(&mut self, g: usize, data: &[f32]) {
+        let m = self.group_len;
+        let base = g * m;
+        let row = &data[base..base + m];
+        self.sort_buf.clear();
+        self.sort_buf.extend(row.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
+        self.sort_buf.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
+        let mut acc = 0.0f64;
+        for (j, &(z, idx)) in self.sort_buf.iter().enumerate() {
+            self.sorted[base + j] = z;
+            self.order[base + j] = idx;
+            acc += z as f64;
+            self.prefix[base + j] = acc;
+        }
+        self.maxes[g] = self.sorted[base] as f64;
+        self.mass[g] = acc;
+        self.audit_mass[g] = row.iter().map(|&v| (v as f64).abs()).sum();
+    }
+
+    /// For an active group at removal level `theta`, the selected-entry
+    /// count k and water level μ = (S_k − θ)/k, via binary search over
+    /// the persisted breakpoints (`O(log m)`).
+    fn mu_k_at(&self, g: usize, theta: f64) -> (usize, f64) {
+        let m = self.group_len;
+        let base = g * m;
+        let z = &self.sorted[base..base + m];
+        let p = &self.prefix[base..base + m];
+        // Smallest k in 1..=m with θ ≤ S_k − k·z[k] (z 0-indexed; the
+        // predicate is forced true at k = m because mass > θ here).
+        let (mut lo, mut hi) = (1usize, m);
+        while lo < hi {
+            let mid = (lo + hi) / 2; // mid < m, so z[mid] is in bounds
+            if theta <= p[mid - 1] - mid as f64 * z[mid] as f64 {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let k = lo;
+        let mu = (p[k - 1] - theta) / k as f64;
+        (k, if mu > 0.0 { mu } else { 0.0 })
+    }
+
+    /// Φ(θ) = Σ_g μ_g(θ) and its (negated) slope Σ_active 1/k_g.
+    fn phi_and_slope(&self, theta: f64) -> (f64, f64) {
+        let mut phi = 0.0f64;
+        let mut slope = 0.0f64;
+        for g in 0..self.n_groups {
+            if self.mass[g] <= theta {
+                continue;
+            }
+            let (k, mu) = self.mu_k_at(g, theta);
+            phi += mu;
+            slope += 1.0 / k as f64;
+        }
+        (phi, slope)
+    }
+
+    /// Safeguarded Newton on the piecewise-linear Φ(θ) = c, bracketed in
+    /// [0, max mass]. Fills `mus` at the final θ; returns the number of Φ
+    /// evaluations (the work counter). Call only when infeasible & c > 0.
+    fn solve_theta(&mut self, seed: Option<f64>) -> usize {
+        let mut lo = 0.0f64;
+        let mut hi = self.mass.iter().cloned().fold(0.0f64, f64::max);
+        let mut theta = match seed {
+            Some(t) if t > 0.0 && t < hi => t,
+            _ => 0.0,
+        };
+        let mut evals = 0usize;
+        for _ in 0..MAX_THETA_ITERS {
+            let (phi, slope) = self.phi_and_slope(theta);
+            evals += 1;
+            if phi > self.c {
+                lo = theta;
+            } else {
+                hi = theta;
+            }
+            if (phi - self.c).abs() <= 1e-12 * self.c.max(1.0) {
+                break;
+            }
+            let mut next =
+                if slope > 0.0 { theta + (phi - self.c) / slope } else { 0.5 * (lo + hi) };
+            if !(next > lo && next < hi) {
+                next = 0.5 * (lo + hi);
+            }
+            if next == theta || hi - lo <= f64::EPSILON * hi.max(1.0) {
+                theta = next;
+                break;
+            }
+            theta = next;
+        }
+        self.theta = theta;
+        for g in 0..self.n_groups {
+            self.mus[g] = if self.mass[g] <= theta { 0.0 } else { self.mu_k_at(g, theta).1 };
+        }
+        evals
+    }
+
+    /// ‖X‖₁,∞ and the zero-group count from the persisted per-group state
+    /// (no matrix rescan) — the same `min(max_g, μ_g)` fold as the cold
+    /// pipeline, on the exact f32 value the clip wrote.
+    fn fold_radius_after(&self) -> (f64, usize) {
+        let mut radius_after = 0.0f64;
+        let mut zero_groups = 0usize;
+        for g in 0..self.n_groups {
+            let mu = self.mus[g];
+            if mu <= 0.0 {
+                zero_groups += 1;
+            } else {
+                let mu32 = (mu as f32) as f64;
+                radius_after += if self.maxes[g] > mu32 { mu32 } else { self.maxes[g] };
+            }
+        }
+        (radius_after, zero_groups)
+    }
+}
+
+/// Clip one row at level μ: `x_i = sign(y_i) · min(|y_i|, μ)` in f32,
+/// bit-identical to [`super::apply_water_levels`].
+fn write_row(x_row: &mut [f32], row: &[f32], mu: f64) {
+    let mu32 = mu as f32;
+    if mu32 <= 0.0 {
+        x_row.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    for (xi, &v) in x_row.iter_mut().zip(row) {
+        *xi = if v.abs() > mu32 { mu32.copysign(v) } else { v };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::l1inf::{project_l1inf, Algorithm};
+    use crate::util::rng::Rng;
+
+    fn uniform(n: usize, m: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0xDE17A);
+        let mut v = vec![0.0f32; n * m];
+        rng.fill_uniform_f32(&mut v);
+        v
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+    }
+
+    fn oracle(data: &[f32], n: usize, m: usize, c: f64) -> (Vec<f32>, f64) {
+        let mut d = data.to_vec();
+        let info = project_l1inf(&mut d, n, m, c, Algorithm::Bisection);
+        (d, info.theta)
+    }
+
+    #[test]
+    fn begin_matches_cold_projection() {
+        let (n, m) = (17, 29);
+        let data = uniform(n, m, 1);
+        let c = 0.1 * n as f64;
+        let mut ds = DeltaSolver::new(c);
+        let out = ds.begin(&data, n, m).unwrap();
+        let (gold, theta) = oracle(&data, n, m, c);
+        assert!(!out.fallback);
+        assert!(max_abs_diff(ds.x(), &gold) <= 1e-6, "begin mismatch");
+        assert!((out.info.theta - theta).abs() <= 1e-6 * theta.max(1.0));
+        assert!((out.info.radius_after - c).abs() <= 1e-4 * c);
+    }
+
+    #[test]
+    fn incremental_steps_match_cold_solves() {
+        let (n, m) = (23, 31);
+        let c = 0.07 * n as f64;
+        let mut data = uniform(n, m, 2);
+        let mut ds = DeltaSolver::new(c);
+        ds.begin(&data, n, m).unwrap();
+        let mut rng = Rng::new(99);
+        for step in 0..12 {
+            let k = 1 + rng.below(3);
+            let rows: Vec<u32> = rng.sample_indices(n, k).iter().map(|&g| g as u32).collect();
+            for &g in &rows {
+                let g = g as usize;
+                for v in &mut data[g * m..(g + 1) * m] {
+                    *v += 0.05 * (rng.f32() - 0.5);
+                }
+            }
+            let out = ds.solve_delta(&data, &Delta::from_rows(rows)).unwrap();
+            let (gold, theta) = oracle(&data, n, m, c);
+            assert!(!out.fallback, "step {step} unexpectedly fell back");
+            assert!(
+                max_abs_diff(ds.x(), &gold) <= 1e-6,
+                "step {step}: diff {}",
+                max_abs_diff(ds.x(), &gold)
+            );
+            assert!((out.info.theta - theta).abs() <= 1e-6 * theta.max(1.0));
+        }
+    }
+
+    #[test]
+    fn support_flips_are_repaired() {
+        let (n, m) = (12, 16);
+        let c = 0.6;
+        let mut data = uniform(n, m, 3);
+        // Push one group near the dead/alive boundary, then toggle it.
+        for v in &mut data[0..m] {
+            *v *= 0.02;
+        }
+        let mut ds = DeltaSolver::new(c);
+        ds.begin(&data, n, m).unwrap();
+        for scale in [24.0f32, 1.0 / 24.0, 24.0] {
+            for v in &mut data[0..m] {
+                *v *= scale;
+            }
+            let out = ds.solve_delta(&data, &Delta::from_rows([0u32])).unwrap();
+            let (gold, _) = oracle(&data, n, m, c);
+            assert!(max_abs_diff(ds.x(), &gold) <= 1e-6);
+            assert!(out.repaired_groups >= 1);
+        }
+    }
+
+    #[test]
+    fn hostile_undeclared_rewrite_triggers_certified_fallback() {
+        let (n, m) = (16, 24);
+        let c = 0.05 * n as f64;
+        let mut data = uniform(n, m, 4);
+        let mut ds = DeltaSolver::new(c);
+        ds.begin(&data, n, m).unwrap();
+        // Violate the hint contract: rescale most of the matrix but claim
+        // only group 0 changed. The audit scan sees every undeclared
+        // group's magnitude profile move and forces the certified rebuild.
+        for v in &mut data[m..] {
+            *v *= 50.0;
+        }
+        let out = ds.solve_delta(&data, &Delta::from_rows([0u32])).unwrap();
+        assert!(out.fallback, "trust bound should have tripped");
+        assert!(out.certified.is_some(), "fallback must carry a KKT certificate");
+        let (gold, _) = oracle(&data, n, m, c);
+        assert!(max_abs_diff(ds.x(), &gold) <= 1e-6);
+    }
+
+    #[test]
+    fn oversized_delta_goes_cold() {
+        let (n, m) = (10, 8);
+        let mut data = uniform(n, m, 5);
+        let mut ds = DeltaSolver::new(0.3);
+        ds.begin(&data, n, m).unwrap();
+        for v in data.iter_mut() {
+            *v *= 1.5;
+        }
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let out = ds.solve_delta(&data, &Delta::from_rows(rows)).unwrap();
+        assert!(out.fallback);
+        let (gold, _) = oracle(&data, n, m, 0.3);
+        assert!(max_abs_diff(ds.x(), &gold) <= 1e-6);
+    }
+
+    #[test]
+    fn lifecycle_errors_are_typed() {
+        let (n, m) = (4, 6);
+        let data = uniform(n, m, 6);
+        let mut ds = DeltaSolver::new(1.0);
+        // solve_delta before begin
+        assert!(ds.solve_delta(&data, &Delta::default()).unwrap_err().contains("begin"));
+        ds.begin(&data, n, m).unwrap();
+        // shape mismatch
+        assert!(ds.solve_delta(&data[..n * m - 1], &Delta::default()).is_err());
+        // out-of-range group
+        assert!(ds
+            .solve_delta(&data, &Delta::from_rows([n as u32]))
+            .unwrap_err()
+            .contains("out of range"));
+        // non-finite changed row
+        let mut bad = data.clone();
+        bad[0] = f32::NAN;
+        assert!(ds
+            .solve_delta(&bad, &Delta::from_rows([0u32]))
+            .unwrap_err()
+            .contains("non-finite"));
+        // invalidate → begin required again
+        ds.invalidate();
+        assert!(!ds.is_ready());
+        assert!(ds.solve_delta(&data, &Delta::default()).is_err());
+        ds.begin(&data, n, m).unwrap();
+        assert!(ds.is_ready());
+    }
+
+    #[test]
+    fn feasible_transitions_stay_exact() {
+        let (n, m) = (6, 5);
+        let mut data = uniform(n, m, 7);
+        for v in data.iter_mut() {
+            *v *= 0.01; // well inside the ball
+        }
+        let mut ds = DeltaSolver::new(1.0);
+        let out = ds.begin(&data, n, m).unwrap();
+        assert!(out.info.feasible);
+        assert_eq!(ds.x(), &data[..]);
+        // Blow one group up so the matrix leaves the ball…
+        for v in &mut data[0..m] {
+            *v *= 400.0;
+        }
+        let out = ds.solve_delta(&data, &Delta::from_rows([0u32])).unwrap();
+        assert!(!out.info.feasible);
+        let (gold, _) = oracle(&data, n, m, 1.0);
+        assert!(max_abs_diff(ds.x(), &gold) <= 1e-6);
+        // …and shrink it back inside.
+        for v in &mut data[0..m] {
+            *v /= 400.0;
+        }
+        let out = ds.solve_delta(&data, &Delta::from_rows([0u32])).unwrap();
+        assert!(out.info.feasible);
+        assert_eq!(ds.x(), &data[..]);
+    }
+
+    #[test]
+    fn grad_rows_derivation() {
+        let mut grad = vec![0.0f32; 4 * 3];
+        grad[1 * 3 + 2] = 0.5;
+        grad[3 * 3] = -1.0;
+        let d = Delta::from_grad_rows(&grad, 4, 3);
+        assert_eq!(d.rows(), &[1, 3]);
+        assert_eq!(d.len(), 2);
+        assert!(!d.is_empty());
+    }
+}

@@ -35,9 +35,14 @@
 //!   [`solve_theta_hinted`]): thin wrappers that build a fresh solver per
 //!   call. One-shot convenience with exactly the workspace layer's
 //!   numerics.
+//! - **Incremental layer** ([`delta`]): a [`DeltaSolver`] persists
+//!   per-group sorted structures and the projected output between calls
+//!   and repairs only the groups a [`Delta`] names (plus support flips),
+//!   making per-step projection cost proportional to the change.
 
 pub mod bejar;
 pub mod bisect;
+pub mod delta;
 pub mod inverse_order;
 pub mod kernels;
 pub mod naive;
@@ -45,6 +50,7 @@ pub mod newton;
 pub mod quattoni;
 pub mod solver;
 
+pub use delta::{Delta, DeltaOutcome, DeltaSolver};
 pub use solver::{new_solver, project_with, Solver, SolverPool, SolverScratch};
 
 use super::grouped::{GroupedView, GroupedViewMut};

@@ -5,7 +5,7 @@
 
 use super::metrics::W1Metrics;
 use crate::projection::grouped::GroupedView;
-use crate::projection::l1inf::Algorithm;
+use crate::projection::l1inf::{Algorithm, Delta};
 
 #[cfg(feature = "pjrt")]
 use super::metrics;
@@ -18,7 +18,7 @@ use crate::projection::bilevel::BilevelSolver;
 #[cfg(feature = "pjrt")]
 use crate::projection::grouped::GroupedViewMut;
 #[cfg(feature = "pjrt")]
-use crate::projection::l1inf::{new_solver, project_with, Solver};
+use crate::projection::l1inf::{new_solver, project_with, DeltaSolver, Solver};
 #[cfg(feature = "pjrt")]
 use crate::projection::masked::project_masked;
 #[cfg(feature = "pjrt")]
@@ -47,6 +47,15 @@ pub enum ProjectionMode {
     L12 { eta: f64 },
     /// ℓ₁,∞ ball of radius `c` over feature rows (the paper's method).
     L1Inf { c: f64 },
+    /// [`ProjectionMode::L1Inf`] through the incremental
+    /// [`crate::projection::l1inf::DeltaSolver`]: the trainer diffs each
+    /// epoch's pre-projection weights against the previous epoch's copy
+    /// (see [`delta_from_rows_changed`]) and repairs only the rows the
+    /// optimizer actually moved, plus any support flips — per-epoch
+    /// projection cost proportional to the change. Numerically matches
+    /// `L1Inf` to ≤1e-6 elementwise; trust-bound fallbacks cold-solve
+    /// with a KKT certificate.
+    L1InfDelta { c: f64 },
     /// ℓ₁,∞ ball of radius `c` over encoder *columns* (hidden units),
     /// projected in place through a strided
     /// [`crate::projection::grouped::GroupedViewMut::columns`] view — no
@@ -83,6 +92,7 @@ impl ProjectionMode {
             ProjectionMode::L1 { .. } => "l1",
             ProjectionMode::L12 { .. } => "l21",
             ProjectionMode::L1Inf { .. } => "l1inf",
+            ProjectionMode::L1InfDelta { .. } => "l1inf_delta",
             ProjectionMode::L1InfCols { .. } => "l1inf_cols",
             ProjectionMode::Bilevel { .. } => "bilevel",
             ProjectionMode::BilevelCols { .. } => "bilevel_cols",
@@ -124,6 +134,28 @@ pub fn resolve_weight_source(
         }
         WeightSource::Variance => Ok(crate::projection::weighted::weights_from_variance(view)),
     }
+}
+
+/// Derive the incremental-projection [`Delta`] for one optimizer step by
+/// diffing the new pre-projection weights against the previous step's
+/// copy: a group changed iff any entry differs — exactly the rows the
+/// step's cumulative gradient touched (plus rows the previous projection
+/// clipped, whose pre-projection values moved for the same reason). The
+/// diff is a cheap `O(nm)` scan; the win is skipping the per-group sort,
+/// θ solve and clip work for unchanged rows. Not `pjrt`-gated: the train
+/// loop uses it, tests drive it directly.
+pub fn delta_from_rows_changed(
+    prev: &[f32],
+    curr: &[f32],
+    n_groups: usize,
+    group_len: usize,
+) -> Delta {
+    debug_assert_eq!(prev.len(), curr.len());
+    debug_assert_eq!(curr.len(), n_groups * group_len);
+    Delta::from_rows((0..n_groups).filter_map(|g| {
+        let r = g * group_len..(g + 1) * group_len;
+        (prev[r.clone()] != curr[r]).then_some(g as u32)
+    }))
 }
 
 /// How train steps are executed (see EXPERIMENTS.md §Perf).
@@ -244,6 +276,14 @@ pub struct Trainer<'e> {
     /// (variance-derived prices are frozen then — every epoch projects
     /// onto the *same* weighted ball).
     resolved_weights: Option<Vec<f32>>,
+    /// Persistent incremental-projection state for the `l1inf_delta`
+    /// mode; lives across epochs so each projection repairs only the
+    /// rows the epoch's gradient updates actually changed.
+    delta_solver: Option<DeltaSolver>,
+    /// Previous epoch's *pre-projection* decoder weights: diffed against
+    /// the current ones to derive the per-epoch [`Delta`] (see
+    /// [`delta_from_rows_changed`]).
+    last_y: Vec<f32>,
 }
 
 #[cfg(feature = "pjrt")]
@@ -261,6 +301,8 @@ impl<'e> Trainer<'e> {
             bilevel,
             weighted: WeightedSolver::new(),
             resolved_weights: None,
+            delta_solver: None,
+            last_y: Vec::new(),
         })
     }
 
@@ -433,6 +475,24 @@ impl<'e> Trainer<'e> {
                 }
                 info.theta
             }
+            ProjectionMode::L1InfDelta { c } => {
+                // Incremental path: persist the sorted/prefix structures
+                // across epochs and repair only the rows this epoch's
+                // gradient step changed (diff vs the saved pre-projection
+                // copy). First epoch — or a shape change — cold-starts
+                // via begin().
+                let ds = self.delta_solver.get_or_insert_with(|| DeltaSolver::new(c));
+                let info = if !ds.is_ready() || self.last_y.len() != w1.len() {
+                    self.last_y = w1.to_vec();
+                    ds.begin(w1, d, h).map_err(anyhow::Error::msg)?.info
+                } else {
+                    let delta = delta_from_rows_changed(&self.last_y, w1, d, h);
+                    self.last_y.copy_from_slice(w1);
+                    ds.solve_delta(w1, &delta).map_err(anyhow::Error::msg)?.info
+                };
+                w1.copy_from_slice(ds.x());
+                info.theta
+            }
             ProjectionMode::L1InfCols { c } => {
                 // Groups = the h encoder columns (length d), projected
                 // through the strided view — no transpose copy.
@@ -563,5 +623,23 @@ mod tests {
         assert!((crate::metric_gauge!("train.cache.hit_rate").get() - 0.75).abs() < 1e-12);
         assert!((crate::metric_gauge!("train.theta").get() - 0.125).abs() < 1e-12);
         assert!((crate::metric_gauge!("train.col_sparsity_pct").get() - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_from_rows_changed_marks_exactly_the_edited_groups() {
+        let prev: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let mut curr = prev.clone();
+        assert!(delta_from_rows_changed(&prev, &curr, 4, 3).is_empty());
+
+        curr[0] += 1.0; // group 0
+        curr[7] = -9.0; // group 2
+        curr[11] *= 2.0; // group 3
+        let d = delta_from_rows_changed(&prev, &curr, 4, 3);
+        assert_eq!(d.rows(), &[0, 2, 3]);
+
+        // A sign-preserving rewrite to the same bits is NOT a change.
+        curr.copy_from_slice(&prev);
+        curr[4] = prev[4] + 0.0;
+        assert!(delta_from_rows_changed(&prev, &curr, 4, 3).is_empty());
     }
 }

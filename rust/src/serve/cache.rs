@@ -292,6 +292,106 @@ impl ThetaCache {
     }
 }
 
+/// Hard cap on persisted incremental-projection states. Unlike a θ entry
+/// (a few scalars), one [`DeltaEntry`] holds the matrix copy plus the
+/// solver's sorted structures — ~20 bytes per element, ≈80 MB at
+/// 1000×4000 — so the store keeps only a small LRU set.
+pub const DELTA_MAX_STATES: usize = 8;
+
+/// One persisted incremental-projection state (see
+/// [`crate::projection::l1inf::delta`]): the server-side copy of the
+/// client's *unprojected* matrix (clients send only changed rows) plus
+/// the [`DeltaSolver`] tracking it.
+pub struct DeltaEntry {
+    /// The tracked unprojected matrix, patched in place by delta requests.
+    pub y: Vec<f32>,
+    pub solver: DeltaSolver,
+    /// Monotonic touch stamp; the smallest is evicted at capacity.
+    stamp: u64,
+}
+
+use crate::projection::l1inf::DeltaSolver;
+
+/// Keyed store of incremental-projection states, addressed by the same
+/// typed [`CacheKey`] namespaces as the θ cache (delta states exist only
+/// under [`Family::Exact`] — the protocol rejects other families).
+///
+/// Entries are accessed through closures run **under the store lock**:
+/// delta traffic for one key is inherently stateful (the solve mutates
+/// the persisted structures), so per-key serialization is required
+/// anyway, and with at most [`DELTA_MAX_STATES`] cheap incremental
+/// solves in flight a single mutex is the simplest correct design.
+#[derive(Default)]
+pub struct DeltaStore {
+    inner: Mutex<HashMap<CacheKey, DeltaEntry>>,
+    stamp: AtomicU64,
+}
+
+impl DeltaStore {
+    pub fn new() -> DeltaStore {
+        DeltaStore::default()
+    }
+
+    /// Create (or replace) the state under `key` from a full matrix and a
+    /// fresh solver for ball radius `c`, evicting the least-recently-used
+    /// entry past [`DELTA_MAX_STATES`]. Runs `f` on the new entry under
+    /// the lock and returns its result.
+    pub fn init<R>(
+        &self,
+        key: &CacheKey,
+        y: Vec<f32>,
+        c: f64,
+        f: impl FnOnce(&mut DeltaEntry) -> R,
+    ) -> R {
+        let stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.lock().expect("delta store poisoned");
+        if guard.len() >= DELTA_MAX_STATES && !guard.contains_key(key) {
+            if let Some(victim) =
+                guard.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            {
+                guard.remove(&victim);
+            }
+        }
+        guard.insert(key.clone(), DeltaEntry { y, solver: DeltaSolver::new(c), stamp });
+        let entry = guard.get_mut(key).expect("entry just inserted");
+        f(entry)
+    }
+
+    /// Run `f` on the persisted state under `key`; `None` when no state
+    /// exists (the caller turns that into a typed error, never a silent
+    /// cold solve).
+    pub fn with_entry<R>(
+        &self,
+        key: &CacheKey,
+        f: impl FnOnce(&mut DeltaEntry) -> R,
+    ) -> Option<R> {
+        let stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.lock().expect("delta store poisoned");
+        let entry = guard.get_mut(key)?;
+        entry.stamp = stamp;
+        Some(f(entry))
+    }
+
+    /// True when persisted state exists under `key`.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.inner.lock().expect("delta store poisoned").contains_key(key)
+    }
+
+    /// Number of persisted states.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("delta store poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop one key's persisted state.
+    pub fn remove(&self, key: &CacheKey) {
+        self.inner.lock().expect("delta store poisoned").remove(key);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -424,6 +524,36 @@ mod tests {
         assert!(cache.entry(&k("fresh")).is_some());
         assert!(cache.entry(&k("k0")).is_some(), "refreshed key survives");
         assert!(cache.entry(&k("k1")).is_none(), "oldest key evicted");
+    }
+
+    #[test]
+    fn delta_store_lifecycle_and_lru() {
+        let store = DeltaStore::new();
+        assert!(store.is_empty());
+        assert!(store.with_entry(&k("w1"), |_| ()).is_none(), "missing key is None");
+        // init seeds usable state.
+        let theta = store.init(&k("w1"), vec![1.0, -2.0, 3.0, -4.0], 1.0, |e| {
+            let out = e.solver.begin(&e.y, 2, 2).unwrap();
+            out.info.theta
+        });
+        assert!(theta > 0.0);
+        assert!(store.contains(&k("w1")));
+        assert!(store.with_entry(&k("w1"), |e| e.solver.is_ready()).unwrap());
+        // Fill to the cap; w1 stays warm through access, the LRU key goes.
+        for i in 0..DELTA_MAX_STATES {
+            store.init(&k(&format!("m{i}")), vec![1.0; 4], 1.0, |_| ());
+            assert!(store.with_entry(&k("w1"), |_| ()).is_some(), "touch keeps w1 warm");
+        }
+        assert_eq!(store.len(), DELTA_MAX_STATES);
+        assert!(store.contains(&k("w1")), "recently-touched key survives eviction");
+        assert!(!store.contains(&k("m0")), "least-recently-used key evicted");
+        // remove drops state.
+        store.remove(&k("w1"));
+        assert!(!store.contains(&k("w1")));
+        // Re-init over an existing key replaces the solver state.
+        store.init(&k("m1"), vec![9.0; 4], 2.0, |e| {
+            assert!(!e.solver.is_ready(), "re-init starts from a fresh solver");
+        });
     }
 
     #[test]

@@ -61,6 +61,36 @@
 //!    "ms":0.05,"data":[...]}
 //! ```
 //!
+//! # The `delta` op (incremental projection)
+//!
+//! Repeated-matrix traffic can avoid resending (and re-projecting) the
+//! whole matrix: `"op":"delta"` drives a server-side
+//! [`crate::projection::l1inf::DeltaSolver`] keyed by the **required**
+//! `"key"` field (the same typed per-family namespace the warm-start
+//! cache uses). An `"init":true` request seeds the state with the full
+//! matrix; subsequent requests send only the changed groups (`"rows"`,
+//! ascending group indices) plus their new data (`rows.len()·len`
+//! numbers, concatenated in `rows` order):
+//!
+//! ```text
+//! → {"id":8,"op":"delta","key":"w1","init":true,"groups":3,"len":4,
+//!    "radius":1.5,"data":[...12 numbers...]}
+//! ← {"id":8,"ok":true,"mode":"exact","theta":0.41,...,"repaired":3,
+//!    "fallback":false,"warm":false,"ms":0.08}
+//! → {"id":9,"op":"delta","key":"w1","groups":3,"len":4,"radius":1.5,
+//!    "rows":[1],"data":[...4 numbers...]}
+//! ← {"id":9,"ok":true,"mode":"exact","theta":0.43,...,"repaired":2,
+//!    "fallback":false,"warm":true,"ms":0.01}
+//! ```
+//!
+//! Referencing a key with no persisted state (or a mismatched shape /
+//! radius) is a **typed error**, never a silent cold solve — the client
+//! learns it must re-`init`. Only the exact family keeps incremental
+//! state: `"mode"` values other than `"exact"` are rejected at parse
+//! time with the family echoed. Trust-bound fallbacks (see the
+//! [`crate::projection::l1inf::delta`] docs) surface as
+//! `"fallback":true` in the response.
+//!
 //! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
 //! connection open; when the bad request's `"mode"` field was parseable
 //! the error echoes it (`"mode":"bilevel"`), so clients can attribute
@@ -104,10 +134,32 @@ pub struct ProjectRequest {
     pub data: Vec<f32>,
 }
 
+/// A parsed `op: "delta"` request (incremental projection; see the
+/// [module docs](self)).
+#[derive(Debug, Clone)]
+pub struct DeltaRequest {
+    /// Persisted-state key (required — the delta state lives server-side
+    /// under the exact family's typed namespace).
+    pub key: String,
+    pub n_groups: usize,
+    pub group_len: usize,
+    pub radius: f64,
+    /// True seeds the state with a full matrix (`groups·len` numbers).
+    pub init: bool,
+    /// Changed group indices, strictly ascending (empty on init).
+    pub rows: Vec<u32>,
+    /// Changed-row data: `groups·len` numbers on init, `rows.len()·len`
+    /// numbers (concatenated in `rows` order) otherwise.
+    pub data: Vec<f32>,
+    /// `false` suppresses the projected matrix in the response.
+    pub return_data: bool,
+}
+
 /// Any request the service understands.
 #[derive(Debug, Clone)]
 pub enum Request {
     Project(Box<ProjectRequest>),
+    Delta(Box<DeltaRequest>),
     Stats,
     Ping,
     Shutdown,
@@ -258,6 +310,126 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, Pa
                 data,
             }))
         }
+        "delta" => {
+            // Mode first (same discipline as `project`): only the exact
+            // family keeps incremental state, so any other parseable
+            // family is rejected here — with the family echoed — instead
+            // of silently cold-solving under the wrong namespace.
+            let mode = match v.get("mode").and_then(Json::as_str) {
+                None => ProjKind::Exact,
+                Some(s) => {
+                    s.parse::<ProjKind>().map_err(|e| ParseError::new(id, None, e))?
+                }
+            };
+            let err = |msg: String| ParseError::new(id, Some(mode), msg);
+            if mode != ProjKind::Exact {
+                return Err(err(format!(
+                    "delta: family namespace '{}' keeps no incremental state; \
+                     only \"mode\":\"exact\" supports the delta op",
+                    mode.name()
+                )));
+            }
+            let key = v
+                .get("key")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| err("delta: missing 'key' (state is keyed)".to_string()))?;
+            let n_groups = v
+                .get("groups")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err("delta: missing 'groups'".to_string()))?;
+            let group_len = v
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| err("delta: missing 'len'".to_string()))?;
+            let radius = v
+                .get("radius")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err("delta: missing 'radius'".to_string()))?;
+            if !radius.is_finite() || radius < 0.0 {
+                return Err(err(format!("delta: bad radius {radius}")));
+            }
+            let init = matches!(v.get("init"), Some(Json::Bool(true)));
+            let rows: Vec<u32> = match v.get("rows") {
+                None => Vec::new(),
+                Some(_) if init => {
+                    return Err(err("delta: 'rows' is invalid with \"init\":true".to_string()));
+                }
+                Some(rv) => {
+                    let arr = rv
+                        .as_arr()
+                        .ok_or_else(|| err("delta: 'rows' must be an array".to_string()))?;
+                    let mut rows = Vec::with_capacity(arr.len());
+                    for (i, x) in arr.iter().enumerate() {
+                        let g = x
+                            .as_usize()
+                            .filter(|&g| g < n_groups)
+                            .ok_or_else(|| {
+                                err(format!(
+                                    "delta: rows[{i}] is not a group index < {n_groups}"
+                                ))
+                            })?;
+                        if let Some(&prev) = rows.last() {
+                            if g as u32 <= prev {
+                                return Err(err(format!(
+                                    "delta: rows must be strictly ascending (rows[{i}])"
+                                )));
+                            }
+                        }
+                        rows.push(g as u32);
+                    }
+                    rows
+                }
+            };
+            if !init && rows.is_empty() {
+                return Err(err(
+                    "delta: non-init request needs non-empty 'rows' (or \"init\":true)"
+                        .to_string(),
+                ));
+            }
+            let return_data = match v.get("return_data") {
+                Some(Json::Bool(b)) => *b,
+                _ => true,
+            };
+            let arr = v
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err("delta: missing 'data'".to_string()))?;
+            let expected = if init {
+                n_groups
+                    .checked_mul(group_len)
+                    .ok_or_else(|| err("delta: groups*len overflows".to_string()))?
+            } else {
+                rows.len()
+                    .checked_mul(group_len)
+                    .ok_or_else(|| err("delta: rows*len overflows".to_string()))?
+            };
+            if n_groups == 0 || group_len == 0 || arr.len() != expected {
+                return Err(err(format!(
+                    "delta: data has {} entries, expected {} ({})",
+                    arr.len(),
+                    expected,
+                    if init { "groups*len" } else { "rows*len" }
+                )));
+            }
+            let mut data = Vec::with_capacity(arr.len());
+            for (i, x) in arr.iter().enumerate() {
+                match x.as_f64().map(|f| f as f32) {
+                    Some(f) if f.is_finite() => data.push(f),
+                    _ => return Err(err(format!("delta: data[{i}] is not a finite f32"))),
+                }
+            }
+            Request::Delta(Box::new(DeltaRequest {
+                key,
+                n_groups,
+                group_len,
+                radius,
+                init,
+                rows,
+                data,
+                return_data,
+            }))
+        }
         other => return Err(ParseError::new(id, None, format!("unknown op '{other}'"))),
     };
     Ok(Envelope { id, req })
@@ -301,6 +473,40 @@ pub fn project_response(
     m.insert("feasible".to_string(), Json::Bool(info.feasible));
     m.insert("work".to_string(), Json::Num(info.stats.work as f64));
     m.insert("touched".to_string(), Json::Num(info.stats.touched_groups as f64));
+    m.insert("warm".to_string(), Json::Bool(warm));
+    m.insert("ms".to_string(), Json::Num(ms));
+    if let Some(d) = data {
+        m.insert(
+            "data".to_string(),
+            Json::Arr(d.iter().map(|&v| Json::Num(v as f64)).collect()),
+        );
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Successful `delta` response: the usual projection summary plus how
+/// many groups the incremental repair actually rewrote and whether the
+/// trust bound forced a (KKT-verified) cold fallback.
+pub fn delta_response(
+    id: i64,
+    info: &ProjInfo,
+    repaired: usize,
+    fallback: bool,
+    warm: bool,
+    ms: f64,
+    data: Option<&[f32]>,
+) -> String {
+    let mut m = base(id, true);
+    m.insert("mode".to_string(), Json::Str(ProjKind::Exact.name().to_string()));
+    m.insert("theta".to_string(), Json::Num(info.theta));
+    m.insert("radius_before".to_string(), Json::Num(info.radius_before));
+    m.insert("radius_after".to_string(), Json::Num(info.radius_after));
+    m.insert("zero_groups".to_string(), Json::Num(info.zero_groups as f64));
+    m.insert("feasible".to_string(), Json::Bool(info.feasible));
+    m.insert("work".to_string(), Json::Num(info.stats.work as f64));
+    m.insert("touched".to_string(), Json::Num(info.stats.touched_groups as f64));
+    m.insert("repaired".to_string(), Json::Num(repaired as f64));
+    m.insert("fallback".to_string(), Json::Bool(fallback));
     m.insert("warm".to_string(), Json::Bool(warm));
     m.insert("ms".to_string(), Json::Num(ms));
     if let Some(d) = data {
@@ -461,6 +667,92 @@ mod tests {
             assert_eq!(e.mode, Some(ProjKind::Weighted));
             assert!(e.msg.contains("weights"), "{}", e.msg);
         }
+    }
+
+    #[test]
+    fn parses_delta_init_and_rows() {
+        // init: full matrix, no rows.
+        let env = parse_request_d(
+            r#"{"id":30,"op":"delta","key":"w1","init":true,"groups":2,"len":2,"radius":1.5,"data":[1.0,2.0,3.0,4.0]}"#,
+        )
+        .unwrap();
+        let Request::Delta(d) = env.req else { panic!("not a delta request") };
+        assert!(d.init);
+        assert_eq!(d.key, "w1");
+        assert_eq!((d.n_groups, d.group_len), (2, 2));
+        assert!(d.rows.is_empty());
+        assert_eq!(d.data.len(), 4);
+        // increment: rows × len data.
+        let env = parse_request_d(
+            r#"{"id":31,"op":"delta","key":"w1","groups":3,"len":2,"radius":1.5,"rows":[0,2],"data":[1.0,2.0,3.0,4.0],"return_data":false}"#,
+        )
+        .unwrap();
+        let Request::Delta(d) = env.req else { panic!("not a delta request") };
+        assert!(!d.init);
+        assert_eq!(d.rows, vec![0, 2]);
+        assert_eq!(d.data.len(), 4);
+        assert!(!d.return_data);
+    }
+
+    #[test]
+    fn delta_rejects_bad_shapes_and_namespaces() {
+        // Non-exact family namespaces are rejected at parse, echoing the
+        // family — incremental state only exists for the exact family.
+        for mode in ["bilevel", "weighted"] {
+            let e = parse_request_d(&format!(
+                r#"{{"id":40,"op":"delta","key":"w1","mode":"{mode}","init":true,"groups":1,"len":1,"radius":1,"data":[1.0]}}"#
+            ))
+            .unwrap_err();
+            assert_eq!(e.id, 40);
+            assert_eq!(e.mode.map(|m| m.name()), Some(mode));
+            assert!(e.msg.contains("family namespace"), "{}", e.msg);
+        }
+        // Missing key is typed.
+        let e = parse_request_d(
+            r#"{"id":41,"op":"delta","init":true,"groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("key"), "{}", e.msg);
+        // rows + init conflict; rows out of range / unordered; wrong data len.
+        for bad in [
+            r#"{"id":42,"op":"delta","key":"k","init":true,"groups":2,"len":1,"radius":1,"rows":[0],"data":[1.0,2.0]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":2,"len":1,"radius":1,"rows":[2],"data":[1.0]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":3,"len":1,"radius":1,"rows":[1,1],"data":[1.0,2.0]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":3,"len":1,"radius":1,"rows":[2,0],"data":[1.0,2.0]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":3,"len":2,"radius":1,"rows":[0],"data":[1.0]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":3,"len":2,"radius":1,"data":[]}"#,
+            r#"{"id":42,"op":"delta","key":"k","groups":1,"len":1,"radius":1,"rows":[0],"data":[1e39]}"#,
+        ] {
+            let e = parse_request_d(bad).unwrap_err();
+            assert_eq!(e.id, 42, "{bad}");
+            assert_eq!(e.mode, Some(ProjKind::Exact), "{bad}");
+        }
+    }
+
+    #[test]
+    fn delta_responses_carry_repair_telemetry() {
+        use crate::projection::l1inf::SolveStats;
+        let info = ProjInfo {
+            radius_before: 2.5,
+            radius_after: 1.0,
+            theta: 0.75,
+            zero_groups: 0,
+            feasible: false,
+            stats: SolveStats { theta: 0.75, work: 4, touched_groups: 2, theta_hint: Some(0.7) },
+        };
+        let line = delta_response(9, &info, 2, false, true, 0.01, Some(&[0.5, -0.5]));
+        assert!(!line.contains('\n'));
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("exact"));
+        assert_eq!(v.get("repaired").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("fallback"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("warm"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("data").unwrap().as_arr().unwrap().len(), 2);
+        let line = delta_response(10, &info, 16, true, false, 0.5, None);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("fallback"), Some(&Json::Bool(true)));
+        assert!(v.get("data").is_none());
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //! orderly teardown, and `l1inf stats` reads the file back offline).
 
 use super::batch::{self, BatchProjector, ProjKind};
-use super::cache::ThetaCache;
-use super::protocol::{self, ProjectRequest, Request};
+use super::cache::{CacheKey, DeltaStore, Family, ThetaCache};
+use super::protocol::{self, DeltaRequest, ProjectRequest, Request};
+use crate::projection::l1inf::Delta;
 use crate::config::serve::ServeConfig;
 use crate::metric_counter;
 use crate::projection::l1inf::Algorithm;
@@ -38,6 +39,9 @@ use std::time::Instant;
 struct Shared {
     pool: Arc<BatchProjector>,
     cache: Arc<ThetaCache>,
+    /// Incremental-projection states for the `delta` op (keyed by the
+    /// same typed namespaces as the θ cache; exact family only).
+    deltas: Arc<DeltaStore>,
     served: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
     default_algo: Algorithm,
@@ -88,6 +92,7 @@ impl Server {
         let shared = Shared {
             pool: Arc::new(BatchProjector::new(cfg.threads)),
             cache: Arc::new(ThetaCache::new()),
+            deltas: Arc::new(DeltaStore::new()),
             served: Arc::new(AtomicU64::new(0)),
             shutdown: Arc::new(AtomicBool::new(false)),
             default_algo: cfg.algo,
@@ -216,6 +221,11 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
                     let resp = run_project(env.id, *p, shared);
                     write_line(&mut writer, &resp)?;
                 }
+                Request::Delta(d) => {
+                    metric_counter!("serve.op.delta").inc();
+                    let resp = run_delta(env.id, *d, shared);
+                    write_line(&mut writer, &resp)?;
+                }
             },
         }
     }
@@ -294,5 +304,120 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
         }
     };
     shared.served.fetch_add(1, Ordering::Relaxed);
+    response
+}
+
+/// One `delta` op: init seeds a keyed [`crate::projection::l1inf::DeltaSolver`]
+/// with a full cold solve; increments patch the changed rows into the
+/// server-side matrix copy and repair only what moved. A key with no
+/// persisted state (or a mismatched shape/radius) is a **typed error** —
+/// never a silent cold solve — so clients always learn they must re-init.
+/// Typed errors count under `serve.op.error` (like parse errors) and do
+/// not bump `served`, so the stats surface reconciles uniformly.
+fn run_delta(id: i64, req: DeltaRequest, shared: &Shared) -> String {
+    let _span = crate::util::metrics::span(
+        "serve.request.latency_us",
+        crate::metric_histogram!("serve.request.latency_us"),
+    );
+    let DeltaRequest { key, n_groups, group_len, radius, init, rows, data, return_data } = req;
+    let ck = CacheKey::new(Family::Exact, key.as_str());
+    let mut ok = true;
+    let response = if init {
+        shared.deltas.init(&ck, data, radius, |e| {
+            let t = Timer::start();
+            match e.solver.begin(&e.y, n_groups, group_len) {
+                Err(msg) => {
+                    ok = false;
+                    protocol::error_response(id, Some(ProjKind::Exact), &msg)
+                }
+                Ok(out) => {
+                    if !out.info.feasible && out.info.theta > 0.0 {
+                        shared.cache.update(&ck, n_groups, group_len, radius, out.info.theta);
+                    }
+                    let payload = return_data.then(|| e.solver.x());
+                    protocol::delta_response(
+                        id,
+                        &out.info,
+                        out.repaired_groups,
+                        out.fallback,
+                        false,
+                        t.millis(),
+                        payload,
+                    )
+                }
+            }
+        })
+    } else {
+        let served = shared.deltas.with_entry(&ck, |e| {
+            let (pn, pm) = e.solver.shape();
+            if (pn, pm) != (n_groups, group_len) {
+                ok = false;
+                return protocol::error_response(
+                    id,
+                    Some(ProjKind::Exact),
+                    &format!(
+                        "delta: persisted state under '{ck}' has shape {pn}x{pm}, \
+                         request says {n_groups}x{group_len}; re-send with \"init\":true"
+                    ),
+                );
+            }
+            if e.solver.c() != radius {
+                ok = false;
+                return protocol::error_response(
+                    id,
+                    Some(ProjKind::Exact),
+                    &format!(
+                        "delta: persisted state under '{ck}' tracks radius {}, \
+                         request says {radius}; re-send with \"init\":true",
+                        e.solver.c()
+                    ),
+                );
+            }
+            let t = Timer::start();
+            for (i, &g) in rows.iter().enumerate() {
+                let g = g as usize;
+                e.y[g * group_len..(g + 1) * group_len]
+                    .copy_from_slice(&data[i * group_len..(i + 1) * group_len]);
+            }
+            let delta = Delta::from_rows(rows.iter().copied());
+            match e.solver.solve_delta(&e.y, &delta) {
+                Err(msg) => {
+                    ok = false;
+                    protocol::error_response(id, Some(ProjKind::Exact), &msg)
+                }
+                Ok(out) => {
+                    if !out.info.feasible && out.info.theta > 0.0 {
+                        shared.cache.update(&ck, n_groups, group_len, radius, out.info.theta);
+                    }
+                    let payload = return_data.then(|| e.solver.x());
+                    protocol::delta_response(
+                        id,
+                        &out.info,
+                        out.repaired_groups,
+                        out.fallback,
+                        true,
+                        t.millis(),
+                        payload,
+                    )
+                }
+            }
+        });
+        served.unwrap_or_else(|| {
+            ok = false;
+            protocol::error_response(
+                id,
+                Some(ProjKind::Exact),
+                &format!(
+                    "delta: no persisted state under key '{ck}' \
+                     (exact family namespace); send \"init\":true first"
+                ),
+            )
+        })
+    };
+    if ok {
+        shared.served.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metric_counter!("serve.op.error").inc();
+    }
     response
 }

@@ -323,6 +323,12 @@ pub struct SolveMetrics {
     pub touched_groups: &'static Histogram,
     pub hint_accept: &'static Counter,
     pub hint_reject: &'static Counter,
+    /// Total groups repaired by incremental delta solves
+    /// ([`crate::projection::l1inf::DeltaSolver`]); compare against
+    /// `touched_groups`-per-solve to read the incremental hit rate.
+    pub delta_repaired_groups: &'static Counter,
+    /// Delta solves that fell back to a KKT-verified cold rebuild.
+    pub delta_fallback: &'static Counter,
 }
 
 impl SolveMetrics {
@@ -330,7 +336,7 @@ impl SolveMetrics {
         let r = global();
         // Names must be 'static: one match arm per family instead of a
         // leaked format!() so repeated registration can't leak new strings.
-        let names: [&'static str; 6] = match family {
+        let names: [&'static str; 8] = match family {
             Family::Exact => [
                 "solve.exact.count",
                 "solve.exact.latency_us",
@@ -338,6 +344,8 @@ impl SolveMetrics {
                 "solve.exact.touched_groups",
                 "solve.exact.hint_accept",
                 "solve.exact.hint_reject",
+                "solve.exact.delta_repaired_groups",
+                "solve.exact.delta_fallback",
             ],
             Family::Bilevel => [
                 "solve.bilevel.count",
@@ -346,6 +354,8 @@ impl SolveMetrics {
                 "solve.bilevel.touched_groups",
                 "solve.bilevel.hint_accept",
                 "solve.bilevel.hint_reject",
+                "solve.bilevel.delta_repaired_groups",
+                "solve.bilevel.delta_fallback",
             ],
             Family::Weighted => [
                 "solve.weighted.count",
@@ -354,6 +364,8 @@ impl SolveMetrics {
                 "solve.weighted.touched_groups",
                 "solve.weighted.hint_accept",
                 "solve.weighted.hint_reject",
+                "solve.weighted.delta_repaired_groups",
+                "solve.weighted.delta_fallback",
             ],
         };
         SolveMetrics {
@@ -363,6 +375,8 @@ impl SolveMetrics {
             touched_groups: r.histogram(names[3]),
             hint_accept: r.counter(names[4]),
             hint_reject: r.counter(names[5]),
+            delta_repaired_groups: r.counter(names[6]),
+            delta_fallback: r.counter(names[7]),
         }
     }
 }
@@ -404,6 +418,19 @@ pub fn record_solve(
         } else {
             m.hint_reject.inc();
         }
+    }
+}
+
+/// Record one incremental delta solve
+/// ([`crate::projection::l1inf::DeltaSolver`]): how many groups it
+/// actually repaired and whether it fell back to a cold rebuild. Kept
+/// separate from [`record_solve`] so `solve.<family>.count` still means
+/// "full solves" and reconciles exactly against non-delta traffic.
+pub fn record_delta(family: Family, repaired_groups: u64, fallback: bool) {
+    let m = solve_metrics(family);
+    m.delta_repaired_groups.add(repaired_groups);
+    if fallback {
+        m.delta_fallback.inc();
     }
 }
 

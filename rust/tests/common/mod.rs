@@ -140,6 +140,50 @@ pub fn positive_weights(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| 0.2 + rng.f32() * 4.0).collect()
 }
 
+// ─────────────── sparse-perturbation trajectories ───────────────
+
+/// One step of a seeded sparse-perturbation trajectory: the rows changed
+/// this step (ascending, unique) and the full pre-projection matrix after
+/// the change.
+pub struct TrajectoryStep {
+    pub rows: Vec<u32>,
+    pub y: Vec<f32>,
+}
+
+/// Simulated-SGD trajectory for the incremental delta solver: each step
+/// rewrites a small random row subset with one of four moves — a small
+/// nudge, a large rescale (support flips up), a zero-out (the group
+/// dies), or a fresh-noise overwrite. The flip moves are the adversarial
+/// part: they force the solver's support-tracking repair, not just the
+/// water-level touch-up.
+pub fn sparse_perturbation_trajectory(
+    rng: &mut Rng,
+    y0: &[f32],
+    n_groups: usize,
+    group_len: usize,
+    steps: usize,
+) -> Vec<TrajectoryStep> {
+    let mut y = y0.to_vec();
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let k = rng.range(1, n_groups.min(4) + 1);
+        let mut rows: Vec<u32> =
+            rng.sample_indices(n_groups, k).into_iter().map(|g| g as u32).collect();
+        rows.sort_unstable();
+        for &g in &rows {
+            let row = &mut y[g as usize * group_len..(g as usize + 1) * group_len];
+            match rng.below(4) {
+                0 => row.iter_mut().for_each(|v| *v += (rng.f32() - 0.5) * 0.1),
+                1 => row.iter_mut().for_each(|v| *v *= 8.0),
+                2 => row.iter_mut().for_each(|v| *v = 0.0),
+                _ => row.iter_mut().for_each(|v| *v = (rng.f32() - 0.5) * 3.0),
+            }
+        }
+        out.push(TrajectoryStep { rows, y: y.clone() });
+    }
+    out
+}
+
 // ───────────────────────── the oracle ─────────────────────────
 
 /// One group's sorted-magnitude representation.

@@ -20,7 +20,7 @@ mod common;
 
 use l1inf::projection::bilevel::{project_bilevel, project_bilevel_tree};
 use l1inf::projection::kkt::{self, Tolerance};
-use l1inf::projection::l1inf::{project_l1inf, Algorithm};
+use l1inf::projection::l1inf::{project_l1inf, Algorithm, Delta, DeltaSolver};
 use l1inf::projection::weighted::{project_bilevel_weighted, project_l1inf_weighted};
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
@@ -93,6 +93,106 @@ fn every_exact_solver_matches_the_oracle() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn incremental_delta_solver_tracks_the_oracle_over_trajectories() {
+    prop::check(
+        "incremental delta-projection vs oracle + cold re-solve over sparse-perturbation trajectories",
+        CASES,
+        0xD1FF05,
+        |rng: &mut Rng| {
+            let (y0, g, l) = common::gen_matrix(rng, 12, 12);
+            let norm = common::oracle_norm_l1inf(&y0, g, l);
+            let frac = [0.1, 0.3, 0.6, 0.9][rng.below(4)];
+            let c = (frac * norm).max(1e-9);
+            let steps = rng.range(2, 7);
+            let traj = common::sparse_perturbation_trajectory(rng, &y0, g, l, steps);
+            (y0, g, l, c, traj)
+        },
+        |(y0, g, l, c, traj)| {
+            let (g, l, c) = (*g, *l, *c);
+            let mut ds = DeltaSolver::new(c);
+            let out0 = ds.begin(y0, g, l).map_err(|e| format!("begin: {e}"))?;
+            let (oracle_x0, oracle_theta0) = common::oracle_l1inf(y0, g, l, c);
+            if max_abs_diff(ds.x(), &oracle_x0) > 1e-6 {
+                return Err(format!("begin: max |Δ| vs oracle {:e}", max_abs_diff(ds.x(), &oracle_x0)));
+            }
+            if (out0.info.theta - oracle_theta0).abs() > 1e-6 * oracle_theta0.abs().max(1.0) {
+                return Err(format!("begin: θ {} vs oracle {}", out0.info.theta, oracle_theta0));
+            }
+            for (step, ts) in traj.iter().enumerate() {
+                let out = ds
+                    .solve_delta(&ts.y, &Delta::from_rows(ts.rows.iter().copied()))
+                    .map_err(|e| format!("step {step}: {e}"))?;
+                // Agreement with the naive oracle on the full new matrix…
+                let (oracle_x, oracle_theta) = common::oracle_l1inf(&ts.y, g, l, c);
+                let scale = oracle_theta.abs().max(1.0);
+                if (out.info.theta - oracle_theta).abs() > 1e-6 * scale {
+                    return Err(format!(
+                        "step {step}: θ {} vs oracle {} (fallback: {})",
+                        out.info.theta, oracle_theta, out.fallback
+                    ));
+                }
+                let diff = max_abs_diff(ds.x(), &oracle_x);
+                if diff > 1e-6 {
+                    return Err(format!(
+                        "step {step}: max |Δ| vs oracle {diff:e} (fallback: {})",
+                        out.fallback
+                    ));
+                }
+                // …and with a production cold re-solve of the same matrix.
+                let mut cold = ts.y.clone();
+                project_l1inf(&mut cold, g, l, c, Algorithm::Bisection);
+                let cdiff = max_abs_diff(ds.x(), &cold);
+                if cdiff > 1e-6 {
+                    return Err(format!("step {step}: max |Δ| vs cold solve {cdiff:e}"));
+                }
+                // Feasibility of the maintained X.
+                let after = common::oracle_norm_l1inf(ds.x(), g, l);
+                if after > c * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!("step {step}: infeasible result {after} > {c}"));
+                }
+                // A fallback must always carry its KKT certificate.
+                if out.fallback && out.certified.is_none() {
+                    return Err(format!("step {step}: uncertified fallback"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hostile_or_stale_incremental_state_falls_back_certified() {
+    let mut rng = Rng::new(0xD1FF06);
+    let (g, l) = (12, 10);
+    let y0 = common::random_signed(&mut rng, g * l, 3.0);
+    let norm = common::oracle_norm_l1inf(&y0, g, l);
+    let c = 0.25 * norm;
+    let mut ds = DeltaSolver::new(c);
+    ds.begin(&y0, g, l).unwrap();
+    assert!(ds.theta() > 0.0, "case must start infeasible");
+
+    // Hostile persisted state: rewrite EVERY row but declare only row 0 —
+    // the audit/trust machinery must catch the lie and take the certified
+    // cold fallback instead of trusting the stale structures.
+    let y1: Vec<f32> = y0.iter().map(|v| v * 40.0).collect();
+    let out = ds.solve_delta(&y1, &Delta::from_rows([0u32])).unwrap();
+    assert!(out.fallback, "undeclared full rewrite must force the cold fallback");
+    assert!(out.certified.is_some(), "fallback must be KKT-certified");
+    let (oracle_x, _) = common::oracle_l1inf(&y1, g, l, c);
+    assert!(max_abs_diff(ds.x(), &oracle_x) <= 1e-6);
+
+    // Stale state across a shape change is a typed error, never a silent
+    // cold solve of mismatched data.
+    let err = ds.solve_delta(&y1[..(g - 1) * l], &Delta::from_rows([0u32])).unwrap_err();
+    assert!(err.contains("shape"), "unexpected error: {err}");
+    // The failed call must not have poisoned the persisted state.
+    assert!(ds.is_ready());
+    let out = ds.solve_delta(&y1, &Delta::from_rows([0u32])).unwrap();
+    assert!(max_abs_diff(ds.x(), &oracle_x) <= 1e-6);
+    assert!(!out.fallback, "an honest no-op delta needs no fallback");
 }
 
 #[test]

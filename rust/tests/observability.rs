@@ -6,9 +6,9 @@
 //! an interval and at shutdown.
 //!
 //! The registry is process-global, so only
-//! [`stats_reconcile_exactly_with_traffic`] issues `project` ops — the
-//! snapshot-file test sticks to `ping`/`stats`/`shutdown` to keep the
-//! per-family solve counters attributable to one test.
+//! [`stats_reconcile_exactly_with_traffic`] issues `project` and `delta`
+//! ops — the snapshot-file test sticks to `ping`/`stats`/`shutdown` to
+//! keep the per-family solve counters attributable to one test.
 
 use l1inf::config::serve::ServeConfig;
 use l1inf::serve::server::Server;
@@ -134,23 +134,102 @@ fn stats_reconcile_exactly_with_traffic() {
     assert_eq!(err2.get("ok"), Some(&Json::Bool(false)));
     assert!(err2.get("mode").is_none(), "{err2}");
 
+    // ── delta traffic (incremental projection, exact namespace) ─────────
+    // Init seeds the keyed state with the full matrix. `begin` is setup,
+    // not an incremental solve, so no delta_* counters move here.
+    let row0 = "1.0,-0.5,0.25,0.0";
+    let init = client.roundtrip(&format!(
+        r#"{{"id": 60, "op": "delta", "key": "dobs", "init": true, "groups": 3, "len": 4, "radius": 1.5, "data": [{DATA}]}}"#
+    ));
+    assert_eq!(init.get("ok"), Some(&Json::Bool(true)), "{init}");
+    assert_eq!(init.get("warm"), Some(&Json::Bool(false)), "{init}");
+    assert_eq!(init.get("fallback"), Some(&Json::Bool(false)), "{init}");
+    // Re-sending group 0 unchanged repairs exactly that one declared
+    // group: every undeclared clip level is bit-identical, so nothing
+    // else is rewritten — the counter increment is deterministic.
+    let inc = client.roundtrip(&format!(
+        r#"{{"id": 61, "op": "delta", "key": "dobs", "groups": 3, "len": 4, "radius": 1.5, "rows": [0], "data": [{row0}]}}"#
+    ));
+    assert_eq!(inc.get("ok"), Some(&Json::Bool(true)), "{inc}");
+    assert_eq!(inc.get("warm"), Some(&Json::Bool(true)), "{inc}");
+    assert_eq!(inc.get("fallback"), Some(&Json::Bool(false)), "{inc}");
+    assert_eq!(inc.get("repaired"), Some(&Json::Num(1.0)), "{inc}");
+    // Declaring 2 of 3 groups crosses the oversized-delta fraction:
+    // deterministic certified cold fallback repairing all 3 groups.
+    let fb = client.roundtrip(&format!(
+        r#"{{"id": 62, "op": "delta", "key": "dobs", "groups": 3, "len": 4, "radius": 1.5, "rows": [0, 1], "data": [{row0}, 0.9, 0.8, -0.7, 0.1]}}"#
+    ));
+    assert_eq!(fb.get("ok"), Some(&Json::Bool(true)), "{fb}");
+    assert_eq!(fb.get("fallback"), Some(&Json::Bool(true)), "{fb}");
+    assert_eq!(fb.get("repaired"), Some(&Json::Num(3.0)), "{fb}");
+
+    // Typed delta errors — never a silent cold solve. A key with no
+    // persisted state:
+    let ghost = client.roundtrip(&format!(
+        r#"{{"id": 63, "op": "delta", "key": "ghost", "groups": 3, "len": 4, "radius": 1.5, "rows": [0], "data": [{row0}]}}"#
+    ));
+    assert_eq!(ghost.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(ghost.get("mode").unwrap().as_str(), Some("exact"), "{ghost}");
+    assert!(
+        ghost.get("error").unwrap().as_str().unwrap().contains("no persisted state"),
+        "{ghost}"
+    );
+    // A shape that disagrees with the persisted 3×4 state:
+    let shape = client.roundtrip(&format!(
+        r#"{{"id": 64, "op": "delta", "key": "dobs", "groups": 2, "len": 4, "radius": 1.5, "rows": [0], "data": [{row0}]}}"#
+    ));
+    assert_eq!(shape.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        shape.get("error").unwrap().as_str().unwrap().contains("re-send with \"init\":true"),
+        "{shape}"
+    );
+    // A radius the persisted solver is not tracking:
+    let rad = client.roundtrip(&format!(
+        r#"{{"id": 65, "op": "delta", "key": "dobs", "groups": 3, "len": 4, "radius": 2.0, "rows": [0], "data": [{row0}]}}"#
+    ));
+    assert_eq!(rad.get("ok"), Some(&Json::Bool(false)));
+    assert!(rad.get("error").unwrap().as_str().unwrap().contains("radius"), "{rad}");
+    // A non-exact family namespace is rejected at parse time with the
+    // family echoed (only the exact family keeps incremental state).
+    let ns = client.roundtrip(&format!(
+        r#"{{"id": 66, "op": "delta", "key": "dobs", "mode": "bilevel", "groups": 3, "len": 4, "radius": 1.5, "rows": [0], "data": [{row0}]}}"#
+    ));
+    assert_eq!(ns.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(ns.get("mode").unwrap().as_str(), Some("bilevel"), "{ns}");
+    assert!(
+        ns.get("error").unwrap().as_str().unwrap().contains("keeps no incremental state"),
+        "{ns}"
+    );
+
     let after = client.stats(3);
 
     // ── exact reconciliation against the traffic above ──────────────────
     let d = |name: &str| counter(&after, name) - counter(&before, name);
-    assert_eq!(d("solve.exact.count"), 5.0, "3 infeasible + 2 feasible exact solves");
+    assert_eq!(
+        d("solve.exact.count"),
+        5.0,
+        "3 infeasible + 2 feasible exact solves; delta ops must not inflate it"
+    );
     assert_eq!(d("solve.bilevel.count"), 2.0);
     assert_eq!(d("solve.weighted.count"), 2.0);
     assert_eq!(d("serve.op.project"), 9.0);
-    assert_eq!(d("serve.op.error"), 2.0);
+    assert_eq!(d("serve.op.delta"), 6.0, "3 served + 3 typed-error delta requests");
+    assert_eq!(d("serve.op.error"), 6.0, "2 project parse + 3 typed delta + 1 delta parse");
+    // Delta counters reconcile against the responses above: the identical
+    // re-send repaired 1 group, the oversized fallback repaired all 3 (and
+    // is the only fallback); init records nothing.
+    assert_eq!(d("solve.exact.delta_repaired_groups"), 4.0);
+    assert_eq!(d("solve.exact.delta_fallback"), 1.0);
     // Per family: one cold miss, the rest of the keyed lookups hit; every
-    // infeasible solve updates its namespace.
+    // infeasible solve updates its namespace. The 3 successful delta ops
+    // publish θ into the exact namespace too, but never read the hint
+    // cache — no extra hits or misses.
     let cd = |family: &str, field: &str| {
         cache_field(&after, family, field) - cache_field(&before, family, field)
     };
     assert_eq!(cd("exact", "misses"), 1.0);
     assert_eq!(cd("exact", "hits"), 2.0);
-    assert_eq!(cd("exact", "updates"), 3.0);
+    assert_eq!(cd("exact", "updates"), 6.0);
     assert_eq!(cd("bilevel", "misses"), 1.0);
     assert_eq!(cd("bilevel", "hits"), 1.0);
     assert_eq!(cd("bilevel", "updates"), 2.0);
@@ -158,9 +237,10 @@ fn stats_reconcile_exactly_with_traffic() {
     assert_eq!(cd("weighted", "hits"), 1.0);
     assert_eq!(cd("weighted", "updates"), 2.0);
     assert_eq!(cd("total", "hits"), 4.0);
-    // Served = successful project responses; uptime moves forward.
+    // Served = successful project + delta responses (typed delta errors
+    // count under serve.op.error instead); uptime moves forward.
     let served_of = |s: &Json| s.get("served").unwrap().as_f64().unwrap();
-    assert_eq!(served_of(&after) - served_of(&before), 9.0);
+    assert_eq!(served_of(&after) - served_of(&before), 12.0);
     assert!(
         after.get("uptime_secs").unwrap().as_f64().unwrap()
             >= before.get("uptime_secs").unwrap().as_f64().unwrap()
