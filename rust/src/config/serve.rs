@@ -20,6 +20,12 @@ pub struct ServeConfig {
     /// Seconds between snapshot-file rewrites (only with
     /// `metrics_snapshot`; the shutdown write always happens).
     pub metrics_interval_secs: f64,
+    /// Record per-request span trees into the flight recorder (drained by
+    /// the `{"op":"trace"}` request and `l1inf trace`).
+    pub trace: bool,
+    /// Log a phase breakdown of any request slower than this many
+    /// milliseconds (0 = off). Implies tracing.
+    pub slow_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -30,6 +36,8 @@ impl Default for ServeConfig {
             algo: Algorithm::InverseOrder,
             metrics_snapshot: None,
             metrics_interval_secs: 30.0,
+            trace: false,
+            slow_ms: 0.0,
         }
     }
 }
@@ -47,6 +55,8 @@ pub fn serve_config(cfg: &Config) -> Result<ServeConfig> {
             .map_err(anyhow::Error::msg)?,
         metrics_snapshot: if snapshot.is_empty() { None } else { Some(snapshot) },
         metrics_interval_secs: cfg.f64_or("serve.metrics_interval_secs", default.metrics_interval_secs),
+        trace: cfg.bool_or("serve.trace", default.trace),
+        slow_ms: cfg.f64_or("serve.slow_ms", default.slow_ms),
     })
 }
 
@@ -62,12 +72,14 @@ mod tests {
         assert_eq!(sc.algo, Algorithm::InverseOrder);
         assert_eq!(sc.metrics_snapshot, None);
         assert_eq!(sc.metrics_interval_secs, 30.0);
+        assert!(!sc.trace);
+        assert_eq!(sc.slow_ms, 0.0);
     }
 
     #[test]
     fn section_roundtrip() {
         let cfg = Config::parse(
-            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\nmetrics_snapshot = \"/tmp/snap.json\"\nmetrics_interval_secs = 5.0\n",
+            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\nmetrics_snapshot = \"/tmp/snap.json\"\nmetrics_interval_secs = 5.0\ntrace = true\nslow_ms = 250.0\n",
         )
         .unwrap();
         let sc = serve_config(&cfg).unwrap();
@@ -76,6 +88,8 @@ mod tests {
         assert_eq!(sc.algo, Algorithm::Newton);
         assert_eq!(sc.metrics_snapshot.as_deref(), Some("/tmp/snap.json"));
         assert_eq!(sc.metrics_interval_secs, 5.0);
+        assert!(sc.trace);
+        assert_eq!(sc.slow_ms, 250.0);
     }
 
     #[test]

@@ -123,6 +123,9 @@ fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
         "serve.warm_reduction_inv_order" => {
             get("BENCH_serve.json", &["warm_start", "inv_order", "work_reduction"])
         }
+        "serve.trace_overhead_ratio" => {
+            get("BENCH_serve.json", &["tracing", "overhead_ratio"])
+        }
         "bilevel.speedup_dense" => get("BENCH_bilevel.json", &["gate", "speedup"]),
         "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
         "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
@@ -355,7 +358,8 @@ mod tests {
             &dir.join("BENCH_serve.json"),
             &format!(
                 r#"{{{meta}, "single_matrix": {{"speedup_at_4_threads": 2.2, "max_abs_diff_vs_serial": 0.0}},
-                   "warm_start": {{"inv_order": {{"work_reduction": 40.0}}}}}}"#
+                   "warm_start": {{"inv_order": {{"work_reduction": 40.0}}}},
+                   "tracing": {{"overhead_ratio": 1.01, "trace_coverage": 0.97, "chrome_trace": "trace.json"}}}}"#
             ),
         );
         write(
@@ -398,6 +402,7 @@ mod tests {
             "serve.speedup_at_4_threads": {"kind": "min", "value": 1.15, "baseline": 2.4},
             "serve.max_abs_diff": {"kind": "max", "value": 1e-6, "baseline": 0.0},
             "serve.warm_reduction_inv_order": {"kind": "min", "value": 1.0, "baseline": 20.0},
+            "serve.trace_overhead_ratio": {"kind": "max", "value": 1.05, "baseline": 1.0},
             "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
             "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
             "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},

@@ -13,7 +13,12 @@
 //!    little each step, each step re-projects; `SolveStats::work` cold vs
 //!    warm-started through a [`ThetaCache`];
 //! 4. **Batch throughput** — a queue of heterogeneous requests drained at
-//!    1 worker vs the full pool, in requests/second.
+//!    1 worker vs the full pool, in requests/second;
+//! 5. **Tracing** — the flight-recorder overhead ratio (identical sharded
+//!    projections, recorder off vs on; the bench gate pins it ≤ 1.05) and
+//!    a traced serve session whose drain is written to `<outdir>/trace.json`
+//!    as Chrome trace-event JSON (the CI artifact), with the root-span
+//!    coverage of the last request reported as `trace_coverage`.
 
 use super::ExpOpts;
 use crate::config::serve::ServeConfig;
@@ -47,6 +52,7 @@ fn run_serve_session(snapshot_path: &std::path::Path, algo: Algorithm) -> Result
         // only the shutdown write matters, so keep the interval out of the
         // way of the bench wall clock.
         metrics_interval_secs: 3600.0,
+        ..ServeConfig::default()
     };
     let server = Server::bind(&sc).context("binding serve_bench session server")?;
     let addr = server.local_addr()?;
@@ -98,6 +104,80 @@ fn run_serve_session(snapshot_path: &std::path::Path, algo: Algorithm) -> Result
         .and_then(|e| e.get("hit_rate"))
         .and_then(Json::as_f64)
         .context("snapshot file missing cache.exact.hit_rate")
+}
+
+/// Drive a trace-enabled TCP session, drain the flight recorder through
+/// `{"op":"trace"}`, and write the drain as Chrome trace-event JSON to
+/// `trace_path`. Returns the fraction of the last request's root-span
+/// wall time covered by its phase spans ([`crate::util::trace::coverage`]).
+fn run_traced_session(trace_path: &std::path::Path, algo: Algorithm) -> Result<f64> {
+    let sc = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        algo,
+        trace: true,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&sc).context("binding traced serve_bench session server")?;
+    let addr = server.local_addr()?;
+    let handle = std::thread::spawn(move || server.run());
+    // Keep the artifact to this session: forget whatever the overhead
+    // bench (or an earlier run in this process) left in the ring.
+    crate::util::trace::clear();
+
+    let stream = TcpStream::connect(addr).context("connecting traced serve_bench session")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut roundtrip = |line: &str| -> Result<Json> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        crate::util::json::parse(&resp).map_err(anyhow::Error::msg)
+    };
+
+    // Big enough groups that the solve dominates the envelope (small
+    // requests are all parse + respond, which says nothing about the
+    // solver phase spans the coverage metric is for).
+    let (groups, len) = (64usize, 128usize);
+    let mut rng = Rng::new(0x7AACE);
+    let mut last_tid = 0u64;
+    for i in 0..4 {
+        let mut y = vec![0.0f32; groups * len];
+        rng.fill_uniform_f32(&mut y);
+        let data = y.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+        let line = format!(
+            r#"{{"id":{i},"op":"project","key":"trace","groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+        );
+        let resp = roundtrip(&line)?;
+        ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "traced session project request {i} failed: {resp}"
+        );
+        last_tid = resp
+            .get("trace")
+            .and_then(Json::as_f64)
+            .context("traced session response missing its trace id")? as u64;
+    }
+    let drain = roundtrip(r#"{"id":200,"op":"trace","clear":true}"#)?;
+    ensure!(
+        drain.get("ok").and_then(Json::as_bool) == Some(true),
+        "trace drain failed: {drain}"
+    );
+    roundtrip(r#"{"id":201,"op":"shutdown"}"#)?;
+    handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("traced serve_bench session server thread panicked"))?
+        .context("traced serve_bench session server")?;
+    crate::util::trace::set_enabled(false);
+
+    let snap = crate::util::trace::snapshot_from_json(&drain).map_err(anyhow::Error::msg)?;
+    ensure!(!snap.events.is_empty(), "traced session drained no events");
+    std::fs::write(trace_path, format!("{}\n", crate::util::trace::chrome_trace_json(&snap)))
+        .with_context(|| format!("writing {}", trace_path.display()))?;
+    crate::util::trace::coverage(&snap, last_tid)
+        .context("traced session has no root span for its last request")
 }
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
@@ -281,6 +361,45 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     let warm_hit_rate = run_serve_session(&snapshot_path, algo)?;
     println!("serve session warm hit rate: {warm_hit_rate:.3} (snapshot {})", snapshot_path.display());
 
+    // ── 6. tracing: recorder overhead + a Chrome-trace artifact ──────────
+    // Identical sharded projections with the recorder off vs on; each
+    // traced iteration runs under its own root span so every phase span
+    // actually records (a disabled recorder measures nothing). The bench
+    // gate pins the min-latency ratio at ≤ 1.05.
+    let pool_traced = BatchProjector::new(4);
+    crate::util::trace::set_enabled(false);
+    let untraced = bench::run_case(
+        "untraced x4",
+        &bopts,
+        || data.clone(),
+        |mut y| {
+            pool_traced.project_parallel(&mut y, m, n, radius, algo, None);
+        },
+    );
+    crate::util::trace::set_enabled(true);
+    let traced = bench::run_case(
+        "traced x4",
+        &bopts,
+        || data.clone(),
+        |mut y| {
+            let _root = crate::util::trace::begin(
+                crate::util::trace::next_trace_id(),
+                "bench.request",
+            );
+            pool_traced.project_parallel(&mut y, m, n, radius, algo, None);
+        },
+    );
+    let trace_overhead_ratio = traced.min_ms() / untraced.min_ms();
+    bench::print_table("serve_bench: tracing overhead", &[untraced, traced]);
+    println!("tracing overhead: {trace_overhead_ratio:.3}x (gate ≤ 1.05)");
+    let trace_path = opts.outdir.join("trace.json");
+    let trace_coverage = run_traced_session(&trace_path, algo)?;
+    println!(
+        "traced serve session: root-span coverage {:.1}% ({})",
+        100.0 * trace_coverage,
+        trace_path.display()
+    );
+
     // ── report ───────────────────────────────────────────────────────────
     let report = obj(vec![
         ("meta", bench::bench_meta(&[(n, m)])),
@@ -335,6 +454,14 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
                 ),
             ]),
         ),
+        (
+            "tracing",
+            obj(vec![
+                ("overhead_ratio", Json::Num(trace_overhead_ratio)),
+                ("trace_coverage", Json::Num(trace_coverage)),
+                ("chrome_trace", Json::Str(trace_path.to_string_lossy().into_owned())),
+            ]),
+        ),
         ("quick", Json::Bool(opts.quick)),
     ]);
     let path = opts.outdir.join("BENCH_serve.json");
@@ -349,6 +476,8 @@ mod tests {
 
     #[test]
     fn quick_run_writes_report() {
+        // `run` toggles the process-global trace recorder.
+        let _guard = crate::util::trace::test_guard();
         let outdir = std::env::temp_dir().join("l1inf_serve_bench_test");
         std::fs::create_dir_all(&outdir).unwrap();
         std::env::set_var("L1INF_BENCH_FAST", "1");
@@ -368,6 +497,23 @@ mod tests {
             .as_f64()
             .unwrap();
         assert!(diff <= 1e-6, "bit-compat recorded: {diff}");
+        // The tracing cell is present and the Chrome-trace artifact is a
+        // loadable trace-event document.
+        let tracing = v.get("tracing").expect("report carries the tracing cell");
+        assert!(tracing.get("overhead_ratio").and_then(Json::as_f64).unwrap() > 0.0);
+        let cov = tracing.get("trace_coverage").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&cov), "coverage is a fraction: {cov}");
+        let chrome = std::fs::read_to_string(outdir.join("trace.json")).unwrap();
+        let chrome = crate::util::json::parse(&chrome).unwrap();
+        let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!events.is_empty(), "trace.json must hold events");
+        assert!(
+            events.iter().any(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("X")
+                    && e.get("name").and_then(Json::as_str) == Some("serve.request")
+            }),
+            "trace.json must carry complete serve.request spans"
+        );
         std::fs::remove_dir_all(&outdir).ok();
     }
 }

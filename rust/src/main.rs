@@ -7,7 +7,9 @@
 //! l1inf train     [--config configs/synth.toml] [--set train.key=value;...]
 //! l1inf serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config F]
 //!                 [--metrics-snapshot FILE] [--metrics-interval SECS]
+//!                 [--trace] [--slow-ms MS]
 //! l1inf stats     --metrics-snapshot FILE [--format prom|json]
+//! l1inf trace     (--addr HOST:PORT | --in FILE) [--out trace.json]
 //! l1inf exp NAME  [--quick] [--out results] [--config F] [--set ...]
 //! l1inf artifacts [--dir artifacts]
 //! l1inf help
@@ -37,18 +39,21 @@ use l1inf::runtime::Engine;
 #[cfg(feature = "pjrt")]
 use l1inf::sae::trainer::Trainer;
 
-const USAGE: &str = "usage: l1inf <project|train|serve|stats|exp|artifacts|help> [options]
+const USAGE: &str = "usage: l1inf <project|train|serve|stats|trace|exp|artifacts|help> [options]
   project   --groups M --len N --radius C [--algo A] [--seed S]
   train     [--config FILE] [--set section.key=value;...]
   serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config FILE]
             [--metrics-snapshot FILE] [--metrics-interval SECS]
+            [--trace] [--slow-ms MS]
   stats     --metrics-snapshot FILE [--format prom|json]
+  trace     (--addr HOST:PORT | --in FILE) [--out trace.json]
   exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
   artifacts [--dir DIR]
 experiments: fig1 fig2 fig3 fig5 fig6 fig7 fig8 fig9 table1 table2 trainproj serve_bench proj_bench bilevel_bench kernel_bench weighted_bench bench_gate";
 
 fn main() {
     l1inf::util::logging::init_from_env();
+    l1inf::util::trace::init_from_env();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -69,7 +74,7 @@ fn load_config(args: &Args) -> Result<Config> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["quick", "verbose"]).map_err(anyhow::Error::msg)?;
+    let args = Args::from_env(&["quick", "verbose", "trace"]).map_err(anyhow::Error::msg)?;
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(());
@@ -79,6 +84,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
+        "trace" => cmd_trace(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
@@ -172,6 +178,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.metrics_interval_secs =
             s.parse().map_err(|_| anyhow::anyhow!("--metrics-interval: bad number '{s}'"))?;
     }
+    if args.has_flag("trace") {
+        sc.trace = true;
+    }
+    if let Some(s) = args.get("slow-ms") {
+        sc.slow_ms = s.parse().map_err(|_| anyhow::anyhow!("--slow-ms: bad number '{s}'"))?;
+    }
     let server = Server::bind(&sc).context("binding projection service")?;
     println!(
         "l1inf serve: listening on {} ({} worker threads, algo {})",
@@ -199,6 +211,45 @@ fn cmd_stats(args: &Args) -> Result<()> {
         "prom" => print!("{}", l1inf::util::metrics::prometheus_text(&doc)),
         other => bail!("--format: expected 'prom' or 'json', got '{other}'"),
     }
+    Ok(())
+}
+
+/// Render a trace drain as Chrome trace-event JSON (loadable in
+/// Perfetto or `chrome://tracing`). The input is either a live server
+/// (`--addr`: sends `{"op":"trace"}` and drains the flight recorder) or
+/// a saved `{"op":"trace"}` response / snapshot document (`--in FILE`).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let doc = if let Some(path) = args.get("in") {
+        let raw = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        l1inf::util::json::parse(&raw)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("parsing {path}"))?
+    } else {
+        let addr = args
+            .get("addr")
+            .context("trace requires --addr HOST:PORT (live drain) or --in FILE (saved drain)")?;
+        let mut stream = std::net::TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        stream.write_all(b"{\"id\":0,\"op\":\"trace\"}\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        l1inf::util::json::parse(&line)
+            .map_err(anyhow::Error::msg)
+            .context("parsing trace response")?
+    };
+    let snap = l1inf::util::trace::snapshot_from_json(&doc).map_err(anyhow::Error::msg)?;
+    let out = args.get_or("out", "trace.json");
+    std::fs::write(out, format!("{}\n", l1inf::util::trace::chrome_trace_json(&snap)))
+        .with_context(|| format!("writing {out}"))?;
+    println!(
+        "l1inf trace: {} events ({} dropped) on {} thread lanes -> {out}",
+        snap.events.len(),
+        snap.dropped,
+        snap.threads.len()
+    );
+    println!("open in https://ui.perfetto.dev or chrome://tracing");
     Ok(())
 }
 

@@ -385,12 +385,17 @@ impl BilevelSolver {
         // stays bit-identical to `norm_l1inf` of the input under every
         // dispatch.
         {
+            let _t = crate::trace_span!("bilevel.gather");
             let ro = view.as_view();
             crate::projection::dense::group_maxes_into(&ro, &mut self.maxes);
         }
 
         // Root stage (shared with the tree), then the level-1→2 finish.
-        let info = match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+        let root = {
+            let _t = crate::trace_span!("bilevel.simplex");
+            solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active)
+        };
+        let info = match root {
             RootSolve::Feasible(info) => {
                 self.last_tau = None;
                 info
@@ -401,6 +406,7 @@ impl BilevelSolver {
                 info
             }
             RootSolve::Clamp(info) => {
+                let _t = crate::trace_span!("bilevel.clamp");
                 apply_radii_view(view, &self.radii);
                 self.last_tau = Some(info.tau);
                 info

@@ -99,54 +99,72 @@ impl TreeBilevel {
         // serial gather.
         self.maxes.clear();
         self.maxes.resize(n_groups, 0.0);
+        let gather_span = crate::trace_span!("bilevel.gather");
+        let ctx = crate::util::trace::current();
         if parallel {
             let data_ro: &[f32] = &*data;
             let mut maxes_rem: &mut [f32] = &mut self.maxes;
             std::thread::scope(|s| {
-                for &(lo, hi) in &ranges {
+                for (i, &(lo, hi)) in ranges.iter().enumerate() {
                     let (max_chunk, rest) = std::mem::take(&mut maxes_rem).split_at_mut(hi - lo);
                     maxes_rem = rest;
-                    s.spawn(move || {
-                        // The shard is itself a contiguous grouped matrix:
-                        // reuse the one canonical abs-max kernel so the bit
-                        // contract has a single source of truth.
-                        let shard = crate::projection::GroupedView::new(
-                            &data_ro[lo * group_len..hi * group_len],
-                            hi - lo,
-                            group_len,
-                        );
-                        crate::projection::dense::group_maxes_into_slice(&shard, max_chunk);
-                    });
+                    std::thread::Builder::new()
+                        .name(format!("proj-shard-{i}"))
+                        .spawn_scoped(s, move || {
+                            let _ctx = crate::util::trace::attach(ctx);
+                            let _t = crate::trace_span!("shard.gather");
+                            // The shard is itself a contiguous grouped matrix:
+                            // reuse the one canonical abs-max kernel so the bit
+                            // contract has a single source of truth.
+                            let shard = crate::projection::GroupedView::new(
+                                &data_ro[lo * group_len..hi * group_len],
+                                hi - lo,
+                                group_len,
+                            );
+                            crate::projection::dense::group_maxes_into_slice(&shard, max_chunk);
+                        })
+                        .expect("spawn bilevel shard worker");
                 }
             });
         } else {
             let ro = crate::projection::GroupedView::new(&*data, n_groups, group_len);
             crate::projection::dense::group_maxes_into_slice(&ro, &mut self.maxes);
         }
+        drop(gather_span);
         // Root stage — the exact code the serial operator runs (fast
         // paths, warm-candidate selection, τ solve, radii fold), so the
         // tree can never drift from [`bilevel::BilevelSolver`]: identical
         // maxima bits in give identical radii bits out.
-        let info = match solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active) {
+        let root = {
+            let _t = crate::trace_span!("bilevel.simplex");
+            solve_root(&self.maxes, c, hint, &mut self.radii, &mut self.active)
+        };
+        let info = match root {
             RootSolve::Feasible(info) => info,
             RootSolve::Zero(info) => {
                 data.fill(0.0);
                 info
             }
             RootSolve::Clamp(info) => {
+                let _t = crate::trace_span!("bilevel.clamp");
                 // Shard level, pass 2: clamp every shard at its radii with
                 // the serial operator's kernel.
                 if parallel {
                     let radii_ro: &[f64] = &self.radii;
                     let mut data_rem: &mut [f32] = data;
                     std::thread::scope(|s| {
-                        for &(lo, hi) in &ranges {
+                        for (i, &(lo, hi)) in ranges.iter().enumerate() {
                             let (chunk, rest) =
                                 std::mem::take(&mut data_rem).split_at_mut((hi - lo) * group_len);
                             data_rem = rest;
-                            s.spawn(move || {
-                                bilevel::apply_radii(chunk, group_len, &radii_ro[lo..hi]);
-                            });
+                            std::thread::Builder::new()
+                                .name(format!("proj-shard-{i}"))
+                                .spawn_scoped(s, move || {
+                                    let _ctx = crate::util::trace::attach(ctx);
+                                    let _t = crate::trace_span!("shard.clamp");
+                                    bilevel::apply_radii(chunk, group_len, &radii_ro[lo..hi]);
+                                })
+                                .expect("spawn bilevel shard worker");
                         }
                     });
                 } else {

@@ -61,6 +61,7 @@ impl Solver for BisectSolver {
             Some(s) => s.iter().cloned().fold(0.0f64, f64::max),
             None => (0..n_groups).map(|g| view.group_abs_sum(g)).fold(0.0f64, f64::max),
         };
+        let _t = crate::trace_span!("exact.bisect");
         solve_bracketed(&self.ws.abs, n_groups, group_len, c, hint, hi)
     }
 

@@ -365,6 +365,7 @@ impl DeltaSolver {
         // from the data actually passed and certify it. NaN in an
         // undeclared row also lands here (NaN breaks the sum equality)
         // and becomes the fallback's typed non-finite error.
+        let audit_span = crate::trace_span!("delta.audit");
         for g in 0..n {
             if self.changed[g] {
                 continue;
@@ -377,9 +378,11 @@ impl DeltaSolver {
                 sum += (v as f64).abs();
             }
             if mx as f64 != self.maxes[g] || sum != self.audit_mass[g] {
+                drop(audit_span);
                 return self.fallback_cold(data);
             }
         }
+        drop(audit_span);
         self.radius_before = self.maxes.iter().sum();
 
         // Feasible / degenerate radii take the same fast exits as a cold
@@ -427,7 +430,10 @@ impl DeltaSolver {
         // θ re-solve over the persisted breakpoints, seeded with the
         // previous θ* (adjacent steps move θ only slightly).
         let seed = if theta_old > 0.0 { Some(theta_old) } else { None };
-        let evals = self.solve_theta(seed);
+        let evals = {
+            let _t = crate::trace_span!("delta.solve_theta");
+            self.solve_theta(seed)
+        };
 
         // Trust bound: a θ* this far from the seed means either a huge
         // (undeclared?) change or a violated hint contract — re-derive
@@ -441,6 +447,7 @@ impl DeltaSolver {
         // before the audit pass above.)
         let mut repaired = 0usize;
         {
+            let _t = crate::trace_span!("delta.repair");
             let DeltaSolver { sorted, order, mus, mus_old, x, changed, .. } = self;
             for g in 0..n {
                 let row = &data[g * m..(g + 1) * m];
@@ -515,6 +522,7 @@ impl DeltaSolver {
     /// from `data`, cold-solve θ, rewrite X fully, and verify the result
     /// against the KKT certificate before trusting it again.
     fn fallback_cold(&mut self, data: &[f32]) -> Result<DeltaOutcome, String> {
+        let _t = crate::trace_span!("delta.cold");
         if data.iter().any(|v| !v.is_finite()) {
             self.ready = false;
             record_delta(Family::Exact, 0, true);

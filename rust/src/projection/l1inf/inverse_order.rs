@@ -205,6 +205,7 @@ impl Solver for InverseOrderSolver {
         let mut t2 = 0.0f64; // Σ_A 1/k_g         (incremental)
         let mut used_hint: Option<f64> = None;
 
+        let heapify_span = crate::trace_span!("exact.heapify");
         if let Some(h) = hint.filter(|h| h.is_finite() && *h > 0.0) {
             // Build the sweep state at θ = h directly into the slots;
             // commit only if the hint is at or above θ* (Φ(h) ≤ C), else
@@ -278,7 +279,9 @@ impl Solver for InverseOrderSolver {
             }
             debug_assert!(!self.global.is_empty(), "‖Y‖₁,∞ > C > 0 requires a nonzero group");
         }
+        drop(heapify_span);
 
+        let _sweep_span = crate::trace_span!("exact.sweep");
         let mut consumed = 0usize;
         loop {
             let (b, g) = match self.global.peek() {

@@ -60,7 +60,11 @@ impl Solver for NewtonSolver {
     ) -> SolveStats {
         let (n_groups, group_len) = (view.n_groups(), view.group_len());
         view.gather_abs(&mut self.ws.abs);
-        self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        {
+            let _t = crate::trace_span!("exact.sort");
+            self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        }
+        let _t = crate::trace_span!("exact.sweep");
         solve_presorted_hinted(&self.sg, c, hint)
     }
 

@@ -68,7 +68,11 @@ impl Solver for QuattoniSolver {
     ) -> SolveStats {
         let (n_groups, group_len) = (view.n_groups(), view.group_len());
         view.gather_abs(&mut self.ws.abs);
-        self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        {
+            let _t = crate::trace_span!("exact.sort");
+            self.sg.recompute(&self.ws.abs, n_groups, group_len);
+        }
+        let _t = crate::trace_span!("exact.sweep");
         solve_sorted(&self.sg, c, &mut self.events, &mut self.kcur)
     }
 

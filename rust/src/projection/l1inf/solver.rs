@@ -122,6 +122,9 @@ pub trait Solver: Send {
 
     /// [`Solver::solve_theta_seeded`] + [`Solver::fill_water_levels`]: the
     /// full solve whose water-level handoff [`project_with`] consumes.
+    /// Both halves carry trace spans, so every implementation's θ solve
+    /// shows up as `exact.solve_theta` / `exact.water_levels` in a
+    /// request's span tree ([`crate::util::trace`]).
     fn solve_seeded(
         &mut self,
         view: &GroupedView<'_>,
@@ -129,7 +132,11 @@ pub trait Solver: Send {
         hint: Option<f64>,
         group_sums: Option<&[f64]>,
     ) -> SolveStats {
-        let stats = self.solve_theta_seeded(view, c, hint, group_sums);
+        let stats = {
+            let _t = crate::trace_span!("exact.solve_theta");
+            self.solve_theta_seeded(view, c, hint, group_sums)
+        };
+        let _t = crate::trace_span!("exact.water_levels");
         self.fill_water_levels(view, stats.theta);
         stats
     }
@@ -238,6 +245,7 @@ fn project_with_untimed(
     //    tile traversal on column views (no more one-cache-line-per-element
     //    strided walks on the `l1inf_cols` path).
     let radius_before = {
+        let _t = crate::trace_span!("exact.pre_pass");
         let ro = view.as_view();
         let ws = solver.scratch_mut();
         crate::projection::dense::group_stats_into(&ro, &mut ws.maxes, &mut ws.sums)
@@ -282,7 +290,10 @@ fn project_with_untimed(
     solver.scratch_mut().last_theta = Some(stats.theta);
 
     // 4. Clip at the water levels through the view.
-    apply_water_levels_view(view, solver.water_levels());
+    {
+        let _t = crate::trace_span!("exact.clamp");
+        apply_water_levels_view(view, solver.water_levels());
+    }
 
     // 5. ‖X‖₁,∞ and zero-group count without rescanning the matrix.
     let ws = solver.scratch();

@@ -314,6 +314,7 @@ impl WeightedSolver {
         //    radius folded over groups in the same order — with w ≡ 1 the
         //    adds are the very adds `group_stats_into` returned.
         {
+            let _t = crate::trace_span!("weighted.pre_pass");
             let ro = view.as_view();
             crate::projection::dense::group_stats_into(&ro, &mut self.maxes, &mut self.sums);
         }
@@ -363,15 +364,23 @@ impl WeightedSolver {
             Some((t, g, l)) if g == n_groups && l == group_len => Some(t),
             _ => None,
         });
-        let stats =
-            solve_bracketed_weighted(&self.abs, n_groups, group_len, weights, c, hint, hi);
+        let stats = {
+            let _t = crate::trace_span!("weighted.bisect");
+            solve_bracketed_weighted(&self.abs, n_groups, group_len, weights, c, hint, hi)
+        };
         self.last_theta = Some((stats.theta, n_groups, group_len));
 
         // 4. Water levels + clip through the (possibly strided) view.
-        water_levels_weighted_into(
-            &self.abs, n_groups, group_len, weights, stats.theta, &mut self.mus,
-        );
-        apply_water_levels_view(view, &self.mus);
+        {
+            let _t = crate::trace_span!("weighted.water_levels");
+            water_levels_weighted_into(
+                &self.abs, n_groups, group_len, weights, stats.theta, &mut self.mus,
+            );
+        }
+        {
+            let _t = crate::trace_span!("weighted.clamp");
+            apply_water_levels_view(view, &self.mus);
+        }
 
         // 5. Weighted ‖X‖ and zero-group count folded from the pre-pass
         //    maxima — no matrix rescan (mirrors `project_with` step 5 with

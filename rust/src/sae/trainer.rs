@@ -333,18 +333,30 @@ impl<'e> Trainer<'e> {
         };
 
         for epoch in 0..self.tc.epochs {
+            let _epoch_span = crate::util::trace::begin(
+                crate::util::trace::next_trace_id(),
+                "train.epoch",
+            );
             let exec_t = Timer::start();
-            let (mean_loss, correct) = match self.tc.exec {
-                ExecMode::Step => self.run_epoch_steps(split, &mut state, &mut data_rng, None)?,
-                ExecMode::Epoch => {
-                    let (xb, yb) = epoch_buffers.as_ref().unwrap();
-                    self.run_epoch_scan(&mut state, &mut data_rng, xb, yb)?
+            let (mean_loss, correct) = {
+                let _t = crate::trace_span!("train.exec");
+                match self.tc.exec {
+                    ExecMode::Step => {
+                        self.run_epoch_steps(split, &mut state, &mut data_rng, None)?
+                    }
+                    ExecMode::Epoch => {
+                        let (xb, yb) = epoch_buffers.as_ref().unwrap();
+                        self.run_epoch_scan(&mut state, &mut data_rng, xb, yb)?
+                    }
                 }
             };
             let exec_ms = exec_t.millis();
 
             let pt = Timer::start();
-            let theta = self.project(&mut state)?;
+            let theta = {
+                let _t = crate::trace_span!("train.proj");
+                self.project(&mut state)?
+            };
             let proj_ms = pt.millis();
             proj_secs += proj_ms / 1e3;
 

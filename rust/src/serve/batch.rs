@@ -259,33 +259,40 @@ impl BatchProjector {
 
         // Pass 1 (parallel): per-group max (for ‖Y‖₁,∞) and per-group ℓ₁
         // mass (solver seed), fused in one scan per shard.
+        let ctx = crate::util::trace::current();
         let mut maxes = vec![0.0f64; n_groups];
         let mut sums = vec![0.0f64; n_groups];
         {
+            let _t = crate::trace_span!("batch.pre_pass");
             let data_ro: &[f32] = &*data;
             let mut maxes_rem: &mut [f64] = &mut maxes;
             let mut sums_rem: &mut [f64] = &mut sums;
             std::thread::scope(|s| {
-                for &(lo, hi) in &ranges {
+                for (i, &(lo, hi)) in ranges.iter().enumerate() {
                     let (max_chunk, rest) =
                         std::mem::take(&mut maxes_rem).split_at_mut(hi - lo);
                     maxes_rem = rest;
                     let (sum_chunk, rest) =
                         std::mem::take(&mut sums_rem).split_at_mut(hi - lo);
                     sums_rem = rest;
-                    s.spawn(move || {
-                        // Per-group fused scan on the dispatched dense
-                        // kernel — the exact accumulation `project_with`'s
-                        // serial pre-pass uses, so the sharded path stays
-                        // bit-identical to it.
-                        let src = &data_ro[lo * group_len..hi * group_len];
-                        for gi in 0..(hi - lo) {
-                            let grp = &src[gi * group_len..(gi + 1) * group_len];
-                            let (mx, sum) = crate::projection::dense::abs_max_and_mass(grp);
-                            max_chunk[gi] = mx as f64;
-                            sum_chunk[gi] = sum;
-                        }
-                    });
+                    std::thread::Builder::new()
+                        .name(format!("proj-shard-{i}"))
+                        .spawn_scoped(s, move || {
+                            let _ctx = crate::util::trace::attach(ctx);
+                            let _t = crate::trace_span!("shard.pre_pass");
+                            // Per-group fused scan on the dispatched dense
+                            // kernel — the exact accumulation `project_with`'s
+                            // serial pre-pass uses, so the sharded path stays
+                            // bit-identical to it.
+                            let src = &data_ro[lo * group_len..hi * group_len];
+                            for gi in 0..(hi - lo) {
+                                let grp = &src[gi * group_len..(gi + 1) * group_len];
+                                let (mx, sum) = crate::projection::dense::abs_max_and_mass(grp);
+                                max_chunk[gi] = mx as f64;
+                                sum_chunk[gi] = sum;
+                            }
+                        })
+                        .expect("spawn projection shard worker");
                 }
             });
         }
@@ -324,6 +331,7 @@ impl BatchProjector {
         // the precomputed group masses so it never rescans the signed data.
         let mut solver = self.solvers.acquire(algo);
         let stats = {
+            let _t = crate::trace_span!("exact.solve_theta");
             let view = GroupedView::new(&*data, n_groups, group_len);
             solver.solve_theta_seeded(&view, c, theta_hint, Some(&sums))
         };
@@ -331,6 +339,7 @@ impl BatchProjector {
         // state in O(touched); every other solver would pay an O(nm) Condat
         // pass, so that pass is sharded across the pool instead — over the
         // |Y| gather the θ solve left in the solver scratch.
+        let wl_span = crate::trace_span!("exact.water_levels");
         let mut local_mus: Vec<f64> = Vec::new();
         if algo == Algorithm::InverseOrder {
             let view = GroupedView::new(&*data, n_groups, group_len);
@@ -341,16 +350,23 @@ impl BatchProjector {
             let theta = stats.theta;
             let mut mus_rem: &mut [f64] = &mut local_mus;
             std::thread::scope(|s| {
-                for &(lo, hi) in &ranges {
+                for (i, &(lo, hi)) in ranges.iter().enumerate() {
                     let (mu_chunk, rest) = std::mem::take(&mut mus_rem).split_at_mut(hi - lo);
                     mus_rem = rest;
-                    s.spawn(move || {
-                        let chunk = &abs_ro[lo * group_len..hi * group_len];
-                        mu_chunk.copy_from_slice(&water_levels(chunk, hi - lo, group_len, theta));
-                    });
+                    std::thread::Builder::new()
+                        .name(format!("proj-shard-{i}"))
+                        .spawn_scoped(s, move || {
+                            let _ctx = crate::util::trace::attach(ctx);
+                            let _t = crate::trace_span!("shard.water_levels");
+                            let chunk = &abs_ro[lo * group_len..hi * group_len];
+                            mu_chunk
+                                .copy_from_slice(&water_levels(chunk, hi - lo, group_len, theta));
+                        })
+                        .expect("spawn projection shard worker");
                 }
             });
         }
+        drop(wl_span);
         let mus: &[f64] =
             if algo == Algorithm::InverseOrder { solver.water_levels() } else { &local_mus };
 
@@ -359,27 +375,34 @@ impl BatchProjector {
         // clipped max of a group is min(old max, μ), so no rescan needed.
         let mut radius_after = 0.0f64;
         {
+            let _t = crate::trace_span!("batch.apply");
             let maxes_ref: &[f64] = &maxes;
             let mut data_rem: &mut [f32] = data;
             let shard_norms = std::thread::scope(|s| {
                 let mut handles = Vec::with_capacity(ranges.len());
-                for &(lo, hi) in &ranges {
+                for (i, &(lo, hi)) in ranges.iter().enumerate() {
                     let (chunk, rest) =
                         std::mem::take(&mut data_rem).split_at_mut((hi - lo) * group_len);
                     data_rem = rest;
-                    handles.push(s.spawn(move || {
-                        apply_water_levels(chunk, hi - lo, group_len, &mus[lo..hi]);
-                        let mut norm = 0.0f64;
-                        for g in lo..hi {
-                            let mu = mus[g];
-                            if mu > 0.0 {
-                                // Exactly the f32 value the clip wrote.
-                                let mu32 = (mu as f32) as f64;
-                                norm += if maxes_ref[g] > mu32 { mu32 } else { maxes_ref[g] };
+                    let h = std::thread::Builder::new()
+                        .name(format!("proj-shard-{i}"))
+                        .spawn_scoped(s, move || {
+                            let _ctx = crate::util::trace::attach(ctx);
+                            let _t = crate::trace_span!("shard.apply");
+                            apply_water_levels(chunk, hi - lo, group_len, &mus[lo..hi]);
+                            let mut norm = 0.0f64;
+                            for g in lo..hi {
+                                let mu = mus[g];
+                                if mu > 0.0 {
+                                    // Exactly the f32 value the clip wrote.
+                                    let mu32 = (mu as f32) as f64;
+                                    norm += if maxes_ref[g] > mu32 { mu32 } else { maxes_ref[g] };
+                                }
                             }
-                        }
-                        norm
-                    }));
+                            norm
+                        })
+                        .expect("spawn projection shard worker");
+                    handles.push(h);
                 }
                 handles
                     .into_iter()
@@ -506,27 +529,34 @@ impl BatchProjector {
         // and an un-annotated tuple binding is not one.
         let pools: (&SolverPool, &BilevelPool, &WeightedPool) =
             (&*self.solvers, &*self.bilevels, &*self.weighteds);
+        let ctx = crate::util::trace::current();
         let mut indexed: Vec<(usize, ProjResponse)> = std::thread::scope(|s| {
             let slots = &slots;
             let cursor = &cursor;
             let mut handles = Vec::with_capacity(workers);
-            for _ in 0..workers {
-                handles.push(s.spawn(move || {
-                    let mut local = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= slots.len() {
-                            break;
+            for w in 0..workers {
+                let h = std::thread::Builder::new()
+                    .name(format!("batch-worker-{w}"))
+                    .spawn_scoped(s, move || {
+                        let _ctx = crate::util::trace::attach(ctx);
+                        let mut local = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= slots.len() {
+                                break;
+                            }
+                            let req = slots[i]
+                                .lock()
+                                .expect("batch slot poisoned")
+                                .take()
+                                .expect("slot claimed twice");
+                            let _t = crate::trace_span!("batch.request");
+                            local.push((i, run_request(req, cache, pools)));
                         }
-                        let req = slots[i]
-                            .lock()
-                            .expect("batch slot poisoned")
-                            .take()
-                            .expect("slot claimed twice");
-                        local.push((i, run_request(req, cache, pools)));
-                    }
-                    local
-                }));
+                        local
+                    })
+                    .expect("spawn batch worker");
+                handles.push(h);
             }
             handles
                 .into_iter()

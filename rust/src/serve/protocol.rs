@@ -161,6 +161,9 @@ pub enum Request {
     Project(Box<ProjectRequest>),
     Delta(Box<DeltaRequest>),
     Stats,
+    /// Drain the flight recorder (`{"op":"trace"}`; `"clear":true` also
+    /// resets it so the next drain starts fresh).
+    Trace { clear: bool },
     Ping,
     Shutdown,
 }
@@ -203,6 +206,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, Pa
         .ok_or_else(|| ParseError::new(id, None, "missing 'op'"))?;
     let req = match op {
         "stats" => Request::Stats,
+        "trace" => Request::Trace { clear: matches!(v.get("clear"), Some(Json::Bool(true))) },
         "ping" => Request::Ping,
         "shutdown" => Request::Shutdown,
         "project" => {
@@ -557,6 +561,9 @@ pub fn stats_body(
     fam.insert("total".to_string(), cache_stats_json(&cache_total));
     m.insert("cache".to_string(), Json::Obj(fam));
     m.insert("metrics".to_string(), metrics);
+    // Binary provenance so a scraped snapshot is attributable to the
+    // exact build that produced it.
+    m.insert("build".to_string(), crate::util::bench::build_info());
     m
 }
 
@@ -565,6 +572,29 @@ pub fn stats_response(id: i64, body: &BTreeMap<String, Json>) -> String {
     let mut m = base(id, true);
     m.extend(body.iter().map(|(k, v)| (k.clone(), v.clone())));
     Json::Obj(m).to_string()
+}
+
+/// `trace` op response: the flight-recorder snapshot (events, dropped
+/// count, thread-lane labels, whether recording is enabled) under the
+/// usual envelope. The snapshot JSON is the same document `l1inf trace
+/// --in FILE` re-reads offline.
+pub fn trace_response(id: i64, snapshot: &crate::util::trace::Snapshot) -> String {
+    let mut m = base(id, true);
+    if let Json::Obj(body) = crate::util::trace::snapshot_json(snapshot) {
+        m.extend(body);
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Splice `"trace":id` into an already-serialized response line so every
+/// response of a traced request echoes the server-assigned trace id.
+/// Every response builder emits a single non-empty JSON object, so the
+/// final byte is always `}`.
+pub fn with_trace_id(mut resp: String, trace: u64) -> String {
+    debug_assert!(resp.ends_with('}') && resp.len() > 2);
+    resp.truncate(resp.len() - 1);
+    resp.push_str(&format!(",\"trace\":{trace}}}"));
+    resp
 }
 
 /// `ping` op response.
@@ -791,6 +821,55 @@ mod tests {
             parse_request_d(r#"{"id":1,"op":"shutdown"}"#).unwrap().req,
             Request::Shutdown
         ));
+        assert!(matches!(
+            parse_request_d(r#"{"id":1,"op":"trace"}"#).unwrap().req,
+            Request::Trace { clear: false }
+        ));
+        assert!(matches!(
+            parse_request_d(r#"{"id":1,"op":"trace","clear":true}"#).unwrap().req,
+            Request::Trace { clear: true }
+        ));
+    }
+
+    #[test]
+    fn trace_id_splices_into_any_response() {
+        for line in [pong_response(5), error_response(3, None, "nope")] {
+            let spliced = with_trace_id(line, 42);
+            assert!(!spliced.contains('\n'));
+            let v = json::parse(&spliced).unwrap();
+            assert_eq!(v.get("trace").unwrap().as_f64(), Some(42.0));
+            assert!(v.get("id").is_some() && v.get("ok").is_some());
+        }
+    }
+
+    #[test]
+    fn trace_response_carries_the_snapshot_surface() {
+        let snap = crate::util::trace::snapshot();
+        let line = trace_response(11, &snap);
+        assert!(!line.contains('\n'));
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(11.0));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        for key in ["enabled", "events", "dropped", "threads"] {
+            assert!(v.get(key).is_some(), "trace response missing {key}");
+        }
+    }
+
+    #[test]
+    fn stats_body_is_build_attributable() {
+        let body = stats_body(
+            1,
+            0,
+            0.0,
+            &[],
+            CacheStats::default(),
+            crate::util::metrics::global().snapshot(),
+        );
+        let build = body.get("build").expect("stats body carries a build block");
+        assert!(build.get("version").and_then(Json::as_str).is_some());
+        assert!(build.get("git_rev").and_then(Json::as_str).is_some());
+        let kernel = build.get("kernel").and_then(Json::as_str).unwrap();
+        assert!(matches!(kernel, "avx2" | "portable" | "scalar"), "{kernel}");
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! on an interval and at shutdown (the vendored crate set has no `libc`,
 //! so there is no SIGTERM hook — the interval + shutdown writes cover
 //! orderly teardown, and `l1inf stats` reads the file back offline).
+//!
+//! With tracing on (`[serve] trace = true` / `--trace`, or implied by a
+//! `slow_ms` budget) every request line gets a trace id (echoed as
+//! `"trace"` in its response) and records a span tree into the
+//! [`crate::util::trace`] flight recorder: `serve.request` →
+//! `serve.parse` / solver phases / `serve.respond`. `{"op":"trace"}`
+//! drains the recorder as JSON (`"clear":true` also resets it) and
+//! `l1inf trace` renders the drain as Chrome trace-event JSON; requests
+//! over the `slow_ms` budget log their phase breakdown at `warn` level.
 
 use super::batch::{self, BatchProjector, ProjKind};
 use super::cache::{CacheKey, DeltaStore, Family, ThetaCache};
@@ -51,6 +60,8 @@ struct Shared {
     /// Snapshot file rewritten on an interval and at shutdown.
     metrics_snapshot: Option<Arc<str>>,
     metrics_interval_secs: f64,
+    /// Log a phase breakdown of requests slower than this (ms; 0 = off).
+    slow_ms: f64,
 }
 
 impl Shared {
@@ -89,6 +100,11 @@ impl Server {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr().context("reading bound address")?;
+        // A slow-request budget needs the span trees to print, so it
+        // implies recording.
+        if cfg.trace || cfg.slow_ms > 0.0 {
+            crate::util::trace::set_enabled(true);
+        }
         let shared = Shared {
             pool: Arc::new(BatchProjector::new(cfg.threads)),
             cache: Arc::new(ThetaCache::new()),
@@ -100,6 +116,7 @@ impl Server {
             start: Instant::now(),
             metrics_snapshot: cfg.metrics_snapshot.as_deref().map(Arc::from),
             metrics_interval_secs: cfg.metrics_interval_secs,
+            slow_ms: cfg.slow_ms,
         };
         Ok(Server { listener, shared })
     }
@@ -119,22 +136,26 @@ impl Server {
     pub fn run(self) -> Result<()> {
         let snapshot_writer = self.shared.metrics_snapshot.is_some().then(|| {
             let shared = self.shared.clone();
-            std::thread::spawn(move || {
-                let interval =
-                    std::time::Duration::from_secs_f64(shared.metrics_interval_secs.max(0.05));
-                // Poll the shutdown flag between short sleeps so teardown
-                // never waits a full interval.
-                let tick = interval.min(std::time::Duration::from_millis(200));
-                let mut next = Instant::now() + interval;
-                while !shared.shutdown.load(Ordering::SeqCst) {
-                    std::thread::sleep(tick);
-                    if Instant::now() >= next {
-                        shared.write_snapshot();
-                        next = Instant::now() + interval;
+            std::thread::Builder::new()
+                .name("serve-snapshot".to_string())
+                .spawn(move || {
+                    let interval =
+                        std::time::Duration::from_secs_f64(shared.metrics_interval_secs.max(0.05));
+                    // Poll the shutdown flag between short sleeps so teardown
+                    // never waits a full interval.
+                    let tick = interval.min(std::time::Duration::from_millis(200));
+                    let mut next = Instant::now() + interval;
+                    while !shared.shutdown.load(Ordering::SeqCst) {
+                        std::thread::sleep(tick);
+                        if Instant::now() >= next {
+                            shared.write_snapshot();
+                            next = Instant::now() + interval;
+                        }
                     }
-                }
-            })
+                })
+                .expect("spawn snapshot writer")
         });
+        let mut conn_seq = 0u64;
         for stream in self.listener.incoming() {
             if self.shared.shutdown.load(Ordering::SeqCst) {
                 break;
@@ -142,15 +163,19 @@ impl Server {
             match stream {
                 Ok(stream) => {
                     let shared = self.shared.clone();
-                    std::thread::spawn(move || {
-                        let peer = stream
-                            .peer_addr()
-                            .map(|a| a.to_string())
-                            .unwrap_or_else(|_| "?".into());
-                        if let Err(e) = handle_connection(stream, &shared) {
-                            crate::debug!("serve: connection {peer} closed: {e}");
-                        }
-                    });
+                    conn_seq += 1;
+                    std::thread::Builder::new()
+                        .name(format!("serve-conn-{conn_seq}"))
+                        .spawn(move || {
+                            let peer = stream
+                                .peer_addr()
+                                .map(|a| a.to_string())
+                                .unwrap_or_else(|_| "?".into());
+                            if let Err(e) = handle_connection(stream, &shared) {
+                                crate::debug!("serve: connection {peer} closed: {e}");
+                            }
+                        })
+                        .expect("spawn connection handler");
                 }
                 Err(e) => crate::warn!("serve: accept failed: {e}"),
             }
@@ -192,41 +217,82 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
         if line.trim().is_empty() {
             continue;
         }
-        match protocol::parse_request(&line, shared.default_algo) {
-            Err(e) => {
-                metric_counter!("serve.op.error").inc();
-                write_line(&mut writer, &protocol::error_response(e.id, e.mode, &e.msg))?
+        // One trace id per request line; the root span scopes the whole
+        // decode → solve → respond path so every solver phase lands as a
+        // descendant in the span tree. Events publish when spans drop, so
+        // the root closes (and the trace id is fully drainable) right
+        // before the slow-budget check below.
+        let t = Timer::start();
+        let trace_id =
+            crate::util::trace::enabled().then(crate::util::trace::next_trace_id);
+        let mut is_shutdown = false;
+        {
+            let _root = trace_id.map(|tid| crate::util::trace::begin(tid, "serve.request"));
+            let parsed = {
+                let _p = crate::trace_span!("serve.parse");
+                protocol::parse_request(&line, shared.default_algo)
+            };
+            let resp = match parsed {
+                Err(e) => {
+                    metric_counter!("serve.op.error").inc();
+                    protocol::error_response(e.id, e.mode, &e.msg)
+                }
+                Ok(env) => match env.req {
+                    Request::Ping => {
+                        metric_counter!("serve.op.ping").inc();
+                        protocol::pong_response(env.id)
+                    }
+                    Request::Stats => {
+                        metric_counter!("serve.op.stats").inc();
+                        protocol::stats_response(env.id, &shared.stats_json())
+                    }
+                    Request::Trace { clear } => {
+                        metric_counter!("serve.op.trace").inc();
+                        // Snapshot first, then clear: the drain never loses
+                        // the events it is reporting.
+                        let snap = crate::util::trace::snapshot();
+                        if clear {
+                            crate::util::trace::clear();
+                        }
+                        protocol::trace_response(env.id, &snap)
+                    }
+                    Request::Shutdown => {
+                        metric_counter!("serve.op.shutdown").inc();
+                        is_shutdown = true;
+                        protocol::shutdown_response(env.id)
+                    }
+                    Request::Project(p) => {
+                        metric_counter!("serve.op.project").inc();
+                        run_project(env.id, *p, shared)
+                    }
+                    Request::Delta(d) => {
+                        metric_counter!("serve.op.delta").inc();
+                        run_delta(env.id, *d, shared)
+                    }
+                },
+            };
+            let resp = match trace_id {
+                Some(tid) => protocol::with_trace_id(resp, tid),
+                None => resp,
+            };
+            let _w = crate::trace_span!("serve.respond");
+            write_line(&mut writer, &resp)?;
+        }
+        if shared.slow_ms > 0.0 && t.millis() > shared.slow_ms {
+            if let Some(tree) = trace_id.and_then(crate::util::trace::render_trace) {
+                crate::warn!(
+                    "serve: slow request {:.3}ms (budget {:.1}ms):\n{tree}",
+                    t.millis(),
+                    shared.slow_ms
+                );
             }
-            Ok(env) => match env.req {
-                Request::Ping => {
-                    metric_counter!("serve.op.ping").inc();
-                    write_line(&mut writer, &protocol::pong_response(env.id))?
-                }
-                Request::Stats => {
-                    metric_counter!("serve.op.stats").inc();
-                    let resp = protocol::stats_response(env.id, &shared.stats_json());
-                    write_line(&mut writer, &resp)?;
-                }
-                Request::Shutdown => {
-                    metric_counter!("serve.op.shutdown").inc();
-                    write_line(&mut writer, &protocol::shutdown_response(env.id))?;
-                    shared.shutdown.store(true, Ordering::SeqCst);
-                    // Unblock the (blocking) accept loop with a no-op
-                    // connection so it observes the flag and exits.
-                    let _ = TcpStream::connect(wake_addr(shared.addr));
-                    return Ok(());
-                }
-                Request::Project(p) => {
-                    metric_counter!("serve.op.project").inc();
-                    let resp = run_project(env.id, *p, shared);
-                    write_line(&mut writer, &resp)?;
-                }
-                Request::Delta(d) => {
-                    metric_counter!("serve.op.delta").inc();
-                    let resp = run_delta(env.id, *d, shared);
-                    write_line(&mut writer, &resp)?;
-                }
-            },
+        }
+        if is_shutdown {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            // Unblock the (blocking) accept loop with a no-op connection
+            // so it observes the flag and exits.
+            let _ = TcpStream::connect(wake_addr(shared.addr));
+            return Ok(());
         }
     }
     Ok(())

@@ -83,6 +83,27 @@ fn git_rev() -> String {
         .unwrap_or_else(|| "unknown".to_string())
 }
 
+/// Binary provenance: crate version, git revision and the active kernel
+/// dispatch tier. Embedded in the `stats` op response and the metrics
+/// snapshot file so a scraped snapshot is attributable to the build that
+/// wrote it. Cached — the `git rev-parse` subprocess runs at most once
+/// per process.
+pub fn build_info() -> Json {
+    static CACHE: std::sync::OnceLock<Json> = std::sync::OnceLock::new();
+    CACHE
+        .get_or_init(|| {
+            let mut m = BTreeMap::new();
+            m.insert("version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").to_string()));
+            m.insert("git_rev".to_string(), Json::Str(git_rev()));
+            m.insert(
+                "kernel".to_string(),
+                Json::Str(crate::projection::dense::kernel_name().to_string()),
+            );
+            Json::Obj(m)
+        })
+        .clone()
+}
+
 /// The `meta` object every `BENCH_*.json` report embeds so the bench
 /// trajectory stays comparable across PRs: git revision, logical thread
 /// count, whether `L1INF_BENCH_FAST` shrank the measurement, the active

@@ -79,16 +79,29 @@ fn short_target(target: &str) -> &str {
     target.rsplit("::").next().unwrap_or(target)
 }
 
-/// The `[12.034s info serve]` prefix (pure; unit-testable).
-pub fn format_label(level: Level, target: &str, elapsed_secs: f64) -> String {
-    format!("[{elapsed_secs:.3}s {} {}]", level.label(), short_target(target))
+/// The `[12.034s info serve]` prefix (pure; unit-testable). A named
+/// worker thread tags the target (`[12.034s info serve@serve-conn-3]`) so
+/// interleaved lines from different workers stay distinguishable; the
+/// unnamed main thread keeps the short form.
+pub fn format_label(level: Level, target: &str, elapsed_secs: f64, thread: Option<&str>) -> String {
+    match thread {
+        Some(name) if !name.is_empty() && name != "main" => {
+            format!("[{elapsed_secs:.3}s {} {}@{name}]", level.label(), short_target(target))
+        }
+        _ => format!("[{elapsed_secs:.3}s {} {}]", level.label(), short_target(target)),
+    }
 }
 
 /// Emit one record to stderr (used by the crate-root macros). `target` is
 /// the emitting module's path (the macros pass `module_path!()`).
 pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        eprintln!("{} {}", format_label(level, target, elapsed_secs()), args);
+        let thread = std::thread::current();
+        eprintln!(
+            "{} {}",
+            format_label(level, target, elapsed_secs(), thread.name()),
+            args
+        );
     }
 }
 
@@ -144,9 +157,31 @@ mod tests {
 
     #[test]
     fn label_formatting() {
-        assert_eq!(format_label(Level::Info, "l1inf::serve::server", 12.0341), "[12.034s info server]");
-        assert_eq!(format_label(Level::Warn, "serve", 0.0), "[0.000s warn serve]");
-        assert_eq!(format_label(Level::Trace, "a::b::c", 1.5), "[1.500s trace c]");
+        assert_eq!(
+            format_label(Level::Info, "l1inf::serve::server", 12.0341, None),
+            "[12.034s info server]"
+        );
+        assert_eq!(format_label(Level::Warn, "serve", 0.0, None), "[0.000s warn serve]");
+        assert_eq!(format_label(Level::Trace, "a::b::c", 1.5, None), "[1.500s trace c]");
+    }
+
+    #[test]
+    fn label_carries_worker_thread_names() {
+        // Named workers tag the target; the main thread (and Rust's
+        // default "main" name) keeps the unadorned historical form.
+        assert_eq!(
+            format_label(Level::Info, "l1inf::serve::server", 12.0341, Some("serve-conn-3")),
+            "[12.034s info server@serve-conn-3]"
+        );
+        assert_eq!(
+            format_label(Level::Warn, "l1inf::serve::server", 0.5, Some("serve-snapshot")),
+            "[0.500s warn server@serve-snapshot]"
+        );
+        assert_eq!(
+            format_label(Level::Info, "l1inf::serve::server", 1.0, Some("main")),
+            "[1.000s info server]"
+        );
+        assert_eq!(format_label(Level::Info, "serve", 1.0, Some("")), "[1.000s info serve]");
     }
 
     #[test]

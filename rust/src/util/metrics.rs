@@ -551,18 +551,27 @@ pub fn prometheus_text(snapshot: &Json) -> String {
             out.push_str(&format!("{n}_count {}\n", prom_num(count)));
         }
     }
-    // Per-family cache stats of a stats response / snapshot file.
+    // Per-family cache stats of a stats response / snapshot file. The
+    // families become a `family` label on one metric per field, so the
+    // `# TYPE` comment is grouped once per metric name (Prometheus
+    // requires all samples of a name to follow its single TYPE line).
     if let Some(cache) = snapshot.get("cache").and_then(Json::as_obj) {
+        let mut by_field: std::collections::BTreeMap<&str, Vec<(&str, f64)>> =
+            std::collections::BTreeMap::new();
         for (family, st) in cache {
             if let Some(fields) = st.as_obj() {
                 for (field, v) in fields {
                     if let Some(x) = v.as_f64() {
-                        out.push_str(&format!(
-                            "l1inf_cache_{field}{{family=\"{family}\"}} {}\n",
-                            prom_num(x)
-                        ));
+                        by_field.entry(field).or_default().push((family, x));
                     }
                 }
+            }
+        }
+        for (field, rows) in by_field {
+            let n = prom_name(&format!("cache.{field}"));
+            out.push_str(&format!("# TYPE {n} gauge\n"));
+            for (family, x) in rows {
+                out.push_str(&format!("{n}{{family=\"{family}\"}} {}\n", prom_num(x)));
             }
         }
     }
@@ -571,7 +580,9 @@ pub fn prometheus_text(snapshot: &Json) -> String {
         if let Some(top) = snapshot.as_obj() {
             for (name, v) in top {
                 if let Some(x) = v.as_f64() {
-                    out.push_str(&format!("{} {}\n", prom_name(name), prom_num(x)));
+                    let n = prom_name(name);
+                    out.push_str(&format!("# TYPE {n} gauge\n"));
+                    out.push_str(&format!("{n} {}\n", prom_num(x)));
                 }
             }
         }
@@ -709,5 +720,70 @@ mod tests {
         assert!(text.contains("l1inf_a_b 1"), "{text}");
         assert!(text.contains("l1inf_cache_hit_rate{family=\"exact\"} 0.5"), "{text}");
         assert!(text.contains("l1inf_served 3"), "{text}");
+    }
+
+    /// The Prometheus metric-name regex `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+    fn is_valid_prom_name(name: &str) -> bool {
+        let mut chars = name.chars();
+        match chars.next() {
+            Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+            _ => return false,
+        }
+        chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+
+    #[test]
+    fn exposition_conforms_to_prometheus_naming() {
+        // Dotted registry names plus a full stats document (cache families
+        // and top-level scalars) — every emitted sample and TYPE line must
+        // carry a regex-conformant name, and every sample name must be
+        // covered by a preceding # TYPE declaration.
+        global().counter("test.prom.naming.count").inc();
+        global().gauge("test.prom.naming.gauge").set(7.0);
+        global().histogram("test.prom.naming.lat").record(42);
+        let doc = crate::util::json::parse(&format!(
+            r#"{{"served": 3, "uptime_secs": 1.5,
+                "cache": {{"exact": {{"hits": 2, "hit_rate": 0.5}},
+                           "total": {{"hits": 2, "hit_rate": 0.5}}}},
+                "metrics": {}}}"#,
+            Json::Obj(match global().snapshot() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            })
+        ))
+        .unwrap();
+        let text = prometheus_text(&doc);
+        let mut declared = std::collections::BTreeSet::new();
+        for line in text.lines().filter(|l| !l.is_empty()) {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().expect("TYPE line carries a name");
+                assert!(is_valid_prom_name(name), "bad TYPE name {name:?}");
+                assert!(
+                    matches!(it.next(), Some("counter" | "gauge" | "histogram")),
+                    "bad TYPE kind in {line:?}"
+                );
+                declared.insert(name.to_string());
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment {line:?}");
+            let name: &str =
+                line.split(|c| c == '{' || c == ' ').next().expect("sample line has a name");
+            assert!(is_valid_prom_name(name), "bad sample name {name:?} in {line:?}");
+            let base = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| name.strip_suffix(suf).filter(|b| declared.contains(*b)))
+                .unwrap_or(name);
+            assert!(declared.contains(base), "sample {name:?} has no preceding # TYPE");
+        }
+        for needle in [
+            "# TYPE l1inf_test_prom_naming_count counter",
+            "# TYPE l1inf_test_prom_naming_gauge gauge",
+            "# TYPE l1inf_test_prom_naming_lat histogram",
+            "# TYPE l1inf_cache_hit_rate gauge",
+            "# TYPE l1inf_served gauge",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 }

@@ -16,6 +16,8 @@
 //! - [`bench`]  — timing harness used by `cargo bench` targets
 //! - [`prop`]   — property-test harness (randomized cases + shrinking-lite)
 //! - [`table`]  — fixed-width ASCII table rendering for reports
+//! - [`trace`]  — lock-free flight recorder of per-request span trees
+//!   (Chrome-trace exportable; the per-request half of observability)
 
 pub mod bench;
 pub mod cli;
@@ -27,6 +29,7 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod trace;
 
 /// Wall-clock timer with microsecond resolution.
 #[derive(Debug)]

@@ -1,0 +1,769 @@
+//! Per-request tracing: a fixed-capacity, lock-free **flight recorder**.
+//!
+//! The metrics plane ([`crate::util::metrics`]) answers "how many / how
+//! fast on average"; this module answers "where did *this* request spend
+//! its time". Completed spans are stamped into a process-global ring
+//! buffer of compact events — trace id, span id, parent span id, interned
+//! name, thread, start µs, duration µs — claimed with one relaxed
+//! `fetch_add` on the write cursor (no locks on the record path; each
+//! slot is published seqlock-style so a concurrent drain can detect and
+//! skip torn slots instead of blocking writers).
+//!
+//! # Spans and propagation
+//!
+//! A *trace* is one request (or one trainer epoch): the serve layer
+//! allocates an id per NDJSON line with [`next_trace_id`] and opens a
+//! root span with [`begin`]. Nested phases open child spans with
+//! [`span`] (or the call-site-cached [`crate::trace_span!`]); the active
+//! `(trace, parent)` context lives in a thread-local, so deeply nested
+//! solver code needs no plumbing. Crossing a thread boundary (the
+//! sharded passes of [`crate::serve::batch::BatchProjector`]) is
+//! explicit: capture [`current`] outside the spawn and [`attach`] it
+//! inside.
+//!
+//! Every guard is RAII: the event is recorded (and the parent context
+//! restored) when the guard drops. When tracing is disabled — or no
+//! trace is active on this thread — [`span`] returns an inert guard
+//! after one relaxed atomic load + one TLS read: cheap enough to leave
+//! the instrumentation compiled into the solver hot paths
+//! unconditionally (the `bench_gate` tracing-overhead cell holds the
+//! traced/untraced solve latency ratio under 1.05).
+//!
+//! # Draining
+//!
+//! [`snapshot`] copies out the (up to `capacity`) most recent events,
+//! oldest first, skipping torn slots; [`clear`] advances the drain
+//! floor. Exposures: the serve `{"op":"trace"}` request
+//! ([`snapshot_json`]), the Chrome trace-event renderer
+//! ([`chrome_trace_json`], loadable in Perfetto / `chrome://tracing`
+//! with one lane per worker thread), and the slow-request log
+//! ([`render_trace`], an indented phase breakdown keyed by trace id).
+//!
+//! Capacity defaults to [`DEFAULT_CAPACITY`] events and can be raised
+//! (before first use) with `L1INF_TRACE_CAP`; `L1INF_TRACE=1` enables
+//! recording at startup (see [`init_from_env`]).
+
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default ring capacity in events (a power of two; one event = 64 B).
+pub const DEFAULT_CAPACITY: usize = 8192;
+
+/// Distinct thread labels the recorder will register; later threads fold
+/// into one shared `"overflow"` lane so a thread-per-connection server
+/// can never grow the label table without bound. Worker threads reuse
+/// stable names (`proj-shard-0`, …), so real deployments sit far below
+/// this.
+const MAX_THREAD_LABELS: usize = 512;
+
+/// Master switch. Off (the default) makes every guard constructor a
+/// single relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Trace-id allocator (0 is reserved for "no trace").
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Span-id allocator (0 is reserved for "no parent" = root).
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// The active `(trace, parent span)` of this thread, if any.
+    static CTX: Cell<Option<TraceCtx>> = const { Cell::new(None) };
+    /// Cached index into the recorder's thread-label table
+    /// (`u64::MAX` = not yet registered).
+    static THREAD_SLOT: Cell<u64> = const { Cell::new(u64::MAX) };
+}
+
+/// The propagatable part of a trace: which trace this thread is inside
+/// and which span new children should hang off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub parent: u64,
+}
+
+/// One seqlock-published ring slot (see [`record`] for the protocol).
+struct Slot {
+    /// `ticket + 1` when the slot holds a fully written event for write
+    /// ticket `ticket`; 0 while a writer is mid-flight.
+    seq: AtomicU64,
+    trace: AtomicU64,
+    span: AtomicU64,
+    parent: AtomicU64,
+    name: AtomicU64,
+    thread: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            span: AtomicU64::new(0),
+            parent: AtomicU64::new(0),
+            name: AtomicU64::new(0),
+            thread: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Recorder {
+    slots: Box<[Slot]>,
+    mask: u64,
+    /// Total events ever claimed (monotonic write tickets).
+    cursor: AtomicU64,
+    /// Drain floor: tickets below it are invisible to [`snapshot`].
+    floor: AtomicU64,
+    /// Origin of every `start_us` stamp.
+    epoch: Instant,
+    /// Interned span names (index = the `name` field of a slot).
+    names: Mutex<Vec<&'static str>>,
+    /// Registered thread labels (index = the `thread` field of a slot).
+    threads: Mutex<Vec<String>>,
+}
+
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+fn recorder() -> &'static Recorder {
+    RECORDER.get_or_init(|| {
+        let cap = std::env::var("L1INF_TRACE_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAPACITY)
+            .clamp(256, 1 << 20)
+            .next_power_of_two();
+        Recorder {
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+            mask: cap as u64 - 1,
+            cursor: AtomicU64::new(0),
+            floor: AtomicU64::new(0),
+            epoch: Instant::now(),
+            names: Mutex::new(Vec::new()),
+            threads: Mutex::new(vec!["main".to_string()]),
+        }
+    })
+}
+
+/// Turn recording on/off (process-global).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans currently record events.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `L1INF_TRACE=1` (or `true`) enables recording at startup.
+pub fn init_from_env() {
+    if matches!(std::env::var("L1INF_TRACE").as_deref(), Ok("1") | Ok("true")) {
+        set_enabled(true);
+    }
+}
+
+/// Allocate a fresh trace id (the serve layer calls this once per
+/// request line and echoes the id in the response).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The calling thread's active trace context (capture this *outside* a
+/// `thread::scope` spawn, [`attach`] it inside).
+pub fn current() -> Option<TraceCtx> {
+    CTX.with(Cell::get)
+}
+
+/// Microseconds since the recorder epoch.
+fn now_us() -> u64 {
+    recorder().epoch.elapsed().as_micros() as u64
+}
+
+/// Intern a span name, returning its stable index. Call-site macros
+/// ([`crate::trace_span!`]) cache the result in a `OnceLock` so hot
+/// paths pay the lock once per process, not per span.
+pub fn intern(name: &'static str) -> u32 {
+    let mut names = recorder().names.lock().expect("trace name table poisoned");
+    if let Some(i) = names.iter().position(|&n| n == name) {
+        return i as u32;
+    }
+    names.push(name);
+    (names.len() - 1) as u32
+}
+
+/// Index of the calling thread in the recorder's label table,
+/// registering `std::thread::current().name()` on first use. Labels are
+/// keyed by name, so short-lived shard threads with stable names share
+/// one lane.
+fn thread_slot() -> u64 {
+    let cached = THREAD_SLOT.with(Cell::get);
+    if cached != u64::MAX {
+        return cached;
+    }
+    let label = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| "unnamed".to_string());
+    let mut threads = recorder().threads.lock().expect("trace thread table poisoned");
+    let idx = match threads.iter().position(|t| *t == label) {
+        Some(i) => i,
+        None if threads.len() < MAX_THREAD_LABELS => {
+            threads.push(label);
+            threads.len() - 1
+        }
+        None => {
+            // Table full: fold every further thread into one shared lane.
+            match threads.iter().position(|t| t == "overflow") {
+                Some(i) => i,
+                None => {
+                    threads.push("overflow".to_string());
+                    threads.len() - 1
+                }
+            }
+        }
+    };
+    THREAD_SLOT.with(|c| c.set(idx as u64));
+    idx as u64
+}
+
+/// Stamp one completed span into the ring (lock-free; seqlock publish).
+fn record(trace: u64, span: u64, parent: u64, name: u32, start_us: u64, dur_us: u64) {
+    let rec = recorder();
+    let ticket = rec.cursor.fetch_add(1, Ordering::Relaxed);
+    let slot = &rec.slots[(ticket & rec.mask) as usize];
+    // Invalidate, fill, publish: a drain that observes seq != ticket+1 at
+    // either fence skips the slot instead of reading a torn event.
+    slot.seq.store(0, Ordering::Release);
+    slot.trace.store(trace, Ordering::Relaxed);
+    slot.span.store(span, Ordering::Relaxed);
+    slot.parent.store(parent, Ordering::Relaxed);
+    slot.name.store(name as u64, Ordering::Relaxed);
+    slot.thread.store(thread_slot(), Ordering::Relaxed);
+    slot.start_us.store(start_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.seq.store(ticket + 1, Ordering::Release);
+}
+
+/// Restores the previous thread context and records the event on drop.
+struct SpanData {
+    name: u32,
+    trace: u64,
+    span: u64,
+    parent: u64,
+    prev: Option<TraceCtx>,
+    start_us: u64,
+}
+
+/// RAII span guard: an inert shell when tracing is off (or no trace is
+/// active), a recorded event when it drops otherwise.
+#[must_use = "a span guard measures until it drops"]
+pub struct Span {
+    data: Option<SpanData>,
+}
+
+impl Span {
+    /// The span id (0 for inert guards) — handy in tests.
+    pub fn id(&self) -> u64 {
+        self.data.as_ref().map_or(0, |d| d.span)
+    }
+
+    fn open(trace: u64, parent: u64, name_id: u32) -> Span {
+        let span = NEXT_SPAN.fetch_add(1, Ordering::Relaxed);
+        let prev = CTX.with(|c| c.replace(Some(TraceCtx { trace, parent: span })));
+        Span {
+            data: Some(SpanData { name: name_id, trace, span, parent, prev, start_us: now_us() }),
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(d) = self.data.take() {
+            let dur = now_us().saturating_sub(d.start_us);
+            CTX.with(|c| c.set(d.prev));
+            record(d.trace, d.span, d.parent, d.name, d.start_us, dur);
+        }
+    }
+}
+
+/// Open the **root** span of trace `trace_id` (parent 0) and make it the
+/// thread's active context. Inert when tracing is disabled.
+pub fn begin(trace_id: u64, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { data: None };
+    }
+    Span::open(trace_id, 0, intern(name))
+}
+
+/// Open a child span under the thread's active context. Inert when
+/// tracing is disabled or no trace is active here — a relaxed load plus
+/// a TLS read.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { data: None };
+    }
+    match CTX.with(Cell::get) {
+        None => Span { data: None },
+        Some(ctx) => Span::open(ctx.trace, ctx.parent, intern(name)),
+    }
+}
+
+/// [`span`] with a pre-interned name (what [`crate::trace_span!`]
+/// expands to — the hot-path entry point).
+pub fn span_interned(name_id: u32) -> Span {
+    if !enabled() {
+        return Span { data: None };
+    }
+    match CTX.with(Cell::get) {
+        None => Span { data: None },
+        Some(ctx) => Span::open(ctx.trace, ctx.parent, name_id),
+    }
+}
+
+/// Open a child span with the name interned once per call site.
+#[macro_export]
+macro_rules! trace_span {
+    ($name:expr) => {{
+        static NAME_ID: std::sync::OnceLock<u32> = std::sync::OnceLock::new();
+        $crate::util::trace::span_interned(
+            *NAME_ID.get_or_init(|| $crate::util::trace::intern($name)),
+        )
+    }};
+}
+
+/// Restores the previously attached context on drop (see [`attach`]).
+pub struct AttachGuard {
+    prev: Option<TraceCtx>,
+    installed: bool,
+}
+
+impl Drop for AttachGuard {
+    fn drop(&mut self) {
+        if self.installed {
+            let prev = self.prev;
+            CTX.with(|c| c.set(prev));
+        }
+    }
+}
+
+/// Install `ctx` as this thread's active trace context — the hand-off
+/// used by scoped worker threads: capture [`current`] before the spawn,
+/// `attach` inside the closure. `None` is a no-op guard, so the capture
+/// can be unconditional.
+pub fn attach(ctx: Option<TraceCtx>) -> AttachGuard {
+    match ctx {
+        None => AttachGuard { prev: None, installed: false },
+        Some(ctx) => {
+            let prev = CTX.with(|c| c.replace(Some(ctx)));
+            AttachGuard { prev, installed: true }
+        }
+    }
+}
+
+/// One drained trace event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    /// Index into [`Snapshot::threads`].
+    pub thread: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// A consistent copy of the flight recorder's recent contents.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Completed spans, oldest first (completion order).
+    pub events: Vec<Event>,
+    /// Events lost to ring overflow since the last [`clear`].
+    pub dropped: u64,
+    /// Thread labels referenced by [`Event::thread`].
+    pub threads: Vec<String>,
+}
+
+/// Drain the ring: every valid event recorded since the last [`clear`]
+/// that the ring still retains. Non-destructive (repeat snapshots see
+/// the same events until `clear` or overwrite).
+pub fn snapshot() -> Snapshot {
+    let rec = recorder();
+    let cur = rec.cursor.load(Ordering::Acquire);
+    let floor = rec.floor.load(Ordering::Acquire);
+    let cap = rec.slots.len() as u64;
+    let lo = floor.max(cur.saturating_sub(cap));
+    let names: Vec<&'static str> =
+        rec.names.lock().expect("trace name table poisoned").clone();
+    let threads: Vec<String> =
+        rec.threads.lock().expect("trace thread table poisoned").clone();
+    let mut events = Vec::with_capacity((cur - lo) as usize);
+    for ticket in lo..cur {
+        let slot = &rec.slots[(ticket & rec.mask) as usize];
+        if slot.seq.load(Ordering::Acquire) != ticket + 1 {
+            continue; // torn or already overwritten
+        }
+        let ev = Event {
+            trace: slot.trace.load(Ordering::Relaxed),
+            span: slot.span.load(Ordering::Relaxed),
+            parent: slot.parent.load(Ordering::Relaxed),
+            name: "",
+            thread: slot.thread.load(Ordering::Relaxed) as u32,
+            start_us: slot.start_us.load(Ordering::Relaxed),
+            dur_us: slot.dur_us.load(Ordering::Relaxed),
+        };
+        let name_idx = slot.name.load(Ordering::Relaxed) as usize;
+        if slot.seq.load(Ordering::Acquire) != ticket + 1 {
+            continue; // overwritten while reading
+        }
+        let Some(&name) = names.get(name_idx) else { continue };
+        events.push(Event { name, ..ev });
+    }
+    Snapshot { events, dropped: lo - floor, threads }
+}
+
+/// Forget everything recorded so far (the serve `trace` op's
+/// `"clear":true`; tests use it to isolate sessions).
+pub fn clear() {
+    let rec = recorder();
+    rec.floor.store(rec.cursor.load(Ordering::Acquire), Ordering::Release);
+}
+
+/// Total events recorded since the last [`clear`] (including any the
+/// ring has already overwritten).
+pub fn recorded_count() -> u64 {
+    let rec = recorder();
+    rec.cursor.load(Ordering::Acquire) - rec.floor.load(Ordering::Acquire)
+}
+
+/// One event as the serve `trace` op renders it.
+pub fn event_json(e: &Event) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("trace".to_string(), Json::Num(e.trace as f64));
+    m.insert("span".to_string(), Json::Num(e.span as f64));
+    m.insert("parent".to_string(), Json::Num(e.parent as f64));
+    m.insert("name".to_string(), Json::Str(e.name.to_string()));
+    m.insert("thread".to_string(), Json::Num(e.thread as f64));
+    m.insert("start_us".to_string(), Json::Num(e.start_us as f64));
+    m.insert("dur_us".to_string(), Json::Num(e.dur_us as f64));
+    Json::Obj(m)
+}
+
+/// The serve `{"op":"trace"}` payload: events + thread labels + overflow
+/// count.
+pub fn snapshot_json(s: &Snapshot) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("enabled".to_string(), Json::Bool(enabled()));
+    m.insert("dropped".to_string(), Json::Num(s.dropped as f64));
+    m.insert(
+        "threads".to_string(),
+        Json::Arr(s.threads.iter().map(|t| Json::Str(t.clone())).collect()),
+    );
+    m.insert("events".to_string(), Json::Arr(s.events.iter().map(event_json).collect()));
+    Json::Obj(m)
+}
+
+/// Parse a serve `trace` response (or [`snapshot_json`] document) back
+/// into a [`Snapshot`] — the offline half of `l1inf trace --in FILE`.
+/// Names are leaked (they become `&'static str`); this runs once per
+/// render, never on the serve path.
+pub fn snapshot_from_json(doc: &Json) -> Result<Snapshot, String> {
+    let events = doc
+        .get("events")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "trace document has no 'events' array".to_string())?;
+    let threads = doc
+        .get("threads")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|t| t.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+    let dropped = doc.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    let mut out = Vec::with_capacity(events.len());
+    for (i, e) in events.iter().enumerate() {
+        let num =
+            |k: &str| e.get(k).and_then(Json::as_f64).ok_or(format!("events[{i}] missing '{k}'"));
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or(format!("events[{i}] missing 'name'"))?;
+        out.push(Event {
+            trace: num("trace")? as u64,
+            span: num("span")? as u64,
+            parent: num("parent")? as u64,
+            name: Box::leak(name.to_string().into_boxed_str()),
+            thread: num("thread")? as u32,
+            start_us: num("start_us")? as u64,
+            dur_us: num("dur_us")? as u64,
+        });
+    }
+    Ok(Snapshot { events: out, dropped, threads })
+}
+
+/// Render a snapshot as Chrome trace-event JSON (the
+/// `{"traceEvents":[...]}` flavor Perfetto and `chrome://tracing` load).
+/// Each span becomes a complete (`"ph":"X"`) event on its worker
+/// thread's lane; thread labels ride metadata (`"ph":"M"`) events.
+pub fn chrome_trace_json(s: &Snapshot) -> Json {
+    let mut out = Vec::with_capacity(s.events.len() + s.threads.len());
+    for (tid, label) in s.threads.iter().enumerate() {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(label.clone()));
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("M".to_string()));
+        m.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        m.insert("pid".to_string(), Json::Num(1.0));
+        m.insert("tid".to_string(), Json::Num(tid as f64));
+        m.insert("args".to_string(), Json::Obj(args));
+        out.push(Json::Obj(m));
+    }
+    for e in &s.events {
+        let mut args = BTreeMap::new();
+        args.insert("trace".to_string(), Json::Num(e.trace as f64));
+        args.insert("span".to_string(), Json::Num(e.span as f64));
+        args.insert("parent".to_string(), Json::Num(e.parent as f64));
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("name".to_string(), Json::Str(e.name.to_string()));
+        m.insert("cat".to_string(), Json::Str("l1inf".to_string()));
+        m.insert("pid".to_string(), Json::Num(1.0));
+        m.insert("tid".to_string(), Json::Num(e.thread as f64));
+        m.insert("ts".to_string(), Json::Num(e.start_us as f64));
+        m.insert("dur".to_string(), Json::Num(e.dur_us as f64));
+        m.insert("args".to_string(), Json::Obj(args));
+        out.push(Json::Obj(m));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(out));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc)
+}
+
+/// Indented phase breakdown of one trace (the slow-request log body):
+/// every span on its own line, children under parents, durations in µs.
+/// `None` when the recorder holds no events for `trace_id`.
+pub fn render_trace(trace_id: u64) -> Option<String> {
+    render_trace_from(&snapshot(), trace_id)
+}
+
+/// [`render_trace`] over an explicit snapshot (unit-testable).
+pub fn render_trace_from(s: &Snapshot, trace_id: u64) -> Option<String> {
+    let events: Vec<&Event> = s.events.iter().filter(|e| e.trace == trace_id).collect();
+    if events.is_empty() {
+        return None;
+    }
+    let mut children: BTreeMap<u64, Vec<&Event>> = BTreeMap::new();
+    for e in &events {
+        children.entry(e.parent).or_default().push(e);
+    }
+    for v in children.values_mut() {
+        v.sort_by_key(|e| (e.start_us, e.span));
+    }
+    let mut out = String::new();
+    let mut stack: Vec<(&Event, usize)> = children
+        .get(&0)
+        .map(|roots| roots.iter().rev().map(|e| (*e, 0)).collect())
+        .unwrap_or_default();
+    // Orphans (parent span fell out of the ring) surface at the root
+    // level rather than vanishing.
+    if stack.is_empty() {
+        stack = events.iter().rev().map(|e| (*e, 0)).collect();
+    }
+    let mut seen = 0usize;
+    while let Some((e, depth)) = stack.pop() {
+        seen += 1;
+        let indent = "  ".repeat(depth);
+        let thread = s.threads.get(e.thread as usize).map(String::as_str).unwrap_or("?");
+        out.push_str(&format!("{indent}{} {}us [{}]\n", e.name, e.dur_us, thread));
+        if let Some(kids) = children.get(&e.span) {
+            for k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+        if seen > events.len() {
+            break; // corrupted parent links cannot loop forever
+        }
+    }
+    Some(out)
+}
+
+/// Fraction of the root span's wall time covered by its direct
+/// children, for the earliest root of `trace_id` (1.0 = the phase spans
+/// account for everything). `None` without a root or with a zero-length
+/// root. The serve-bench report carries this as `trace_coverage`.
+pub fn coverage(s: &Snapshot, trace_id: u64) -> Option<f64> {
+    let root = s
+        .events
+        .iter()
+        .filter(|e| e.trace == trace_id && e.parent == 0)
+        .min_by_key(|e| e.start_us)?;
+    if root.dur_us == 0 {
+        return None;
+    }
+    let covered: u64 = s
+        .events
+        .iter()
+        .filter(|e| e.trace == trace_id && e.parent == root.span)
+        .map(|e| e.dur_us)
+        .sum();
+    Some(covered as f64 / root.dur_us as f64)
+}
+
+/// Serializes in-process tests that toggle the process-global recorder
+/// (enable/disable/clear): this module's end-to-end test and the
+/// serve-bench overhead test would otherwise race each other's state.
+/// Poisoning is ignored so one failed test cannot mask another's verdict.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Enablement is process-global, so every scenario that toggles it
+    // runs inside this one test, serially; parallel-running tests in
+    // other modules never install a trace context and therefore never
+    // record (the serve-bench test, which does both, shares
+    // [`test_guard`]).
+    #[test]
+    fn flight_recorder_end_to_end() {
+        let _guard = test_guard();
+        // Disabled: guards are inert and record nothing.
+        set_enabled(false);
+        let before = recorded_count();
+        {
+            let _r = begin(next_trace_id(), "root");
+            let _c = span("child");
+            let _m = trace_span!("macro_child");
+        }
+        assert_eq!(recorded_count(), before, "disabled tracing must record zero events");
+        assert_eq!(current(), None);
+
+        // Enabled: a nested tree with a cross-thread hand-off.
+        set_enabled(true);
+        let tid = next_trace_id();
+        {
+            let root = begin(tid, "serve.request");
+            assert_eq!(current(), Some(TraceCtx { trace: tid, parent: root.id() }));
+            {
+                let _parse = span("serve.parse");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let solve = trace_span!("exact.solve_theta");
+            let ctx = current();
+            assert_eq!(ctx.map(|c| c.parent), Some(solve.id()));
+            std::thread::scope(|s| {
+                std::thread::Builder::new()
+                    .name("proj-shard-0".into())
+                    .spawn_scoped(s, move || {
+                        let _a = attach(ctx);
+                        let _shard = span("shard.pre_pass");
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    })
+                    .expect("spawning shard thread");
+            });
+            drop(solve);
+        }
+        assert_eq!(current(), None, "context restored after the root dropped");
+
+        let snap = snapshot();
+        let mine: Vec<&Event> = snap.events.iter().filter(|e| e.trace == tid).collect();
+        let names: Vec<&str> = mine.iter().map(|e| e.name).collect();
+        for want in ["serve.request", "serve.parse", "exact.solve_theta", "shard.pre_pass"] {
+            assert!(names.contains(&want), "missing span {want} in {names:?}");
+        }
+        // Well-formed tree: one root, every parent resolves, children
+        // nest inside their parents' intervals.
+        let roots: Vec<&&Event> = mine.iter().filter(|e| e.parent == 0).collect();
+        assert_eq!(roots.len(), 1);
+        let by_span: BTreeMap<u64, &&Event> = mine.iter().map(|e| (e.span, e)).collect();
+        for e in &mine {
+            if e.parent == 0 {
+                continue;
+            }
+            let p = by_span.get(&e.parent).expect("orphan parent id");
+            assert!(e.start_us >= p.start_us, "{} starts before its parent", e.name);
+            assert!(
+                e.start_us + e.dur_us <= p.start_us + p.dur_us,
+                "{} ends after its parent",
+                e.name
+            );
+        }
+        // The shard span landed on the named worker's lane.
+        let shard = mine.iter().find(|e| e.name == "shard.pre_pass").unwrap();
+        assert_eq!(snap.threads[shard.thread as usize], "proj-shard-0");
+        let parse = mine.iter().find(|e| e.name == "serve.parse").unwrap();
+        assert!(parse.dur_us >= 500, "timed spans measure real time");
+
+        // Coverage: children of the root cover the slept time.
+        let cov = coverage(&snap, tid).expect("root exists");
+        assert!(cov > 0.0 && cov <= 1.0, "coverage {cov} out of range");
+
+        // Breakdown rendering: indented, parents before children.
+        let text = render_trace_from(&snap, tid).expect("trace renders");
+        let req_at = text.find("serve.request").unwrap();
+        let shard_at = text.find("shard.pre_pass").unwrap();
+        assert!(req_at < shard_at);
+        assert!(text.contains("  serve.parse"), "children are indented:\n{text}");
+        assert!(render_trace_from(&snap, u64::MAX - 7).is_none());
+
+        // JSON round-trip: serve payload → Snapshot → Chrome trace.
+        let doc = snapshot_json(&snap);
+        let back = snapshot_from_json(&doc).expect("snapshot_json round-trips");
+        assert_eq!(back.events.len(), snap.events.len());
+        let chrome = chrome_trace_json(&back);
+        let parsed = crate::util::json::parse(&chrome.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= snap.events.len());
+        let x = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("complete events present");
+        for field in ["name", "ts", "dur", "tid", "pid"] {
+            assert!(x.get(field).is_some(), "chrome event missing {field}");
+        }
+        assert!(
+            evs.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("M")),
+            "thread metadata events present"
+        );
+
+        // clear() hides history from the next snapshot.
+        clear();
+        assert_eq!(recorded_count(), 0);
+        assert!(snapshot().events.is_empty());
+
+        // Ring overflow: more events than capacity keeps only the most
+        // recent ones and counts the overwritten rest.
+        let wrap_tid = next_trace_id();
+        let cap = recorder().slots.len() as u64;
+        {
+            let _root = begin(wrap_tid, "wrap.root");
+            for _ in 0..cap + 64 {
+                let _s = span("wrap.child");
+            }
+        }
+        let snap = snapshot();
+        assert!(snap.dropped >= 64, "overflow must be counted, got {}", snap.dropped);
+        assert!(snap.events.len() as u64 <= cap);
+        assert!(snap.events.iter().all(|e| e.trace == wrap_tid));
+
+        clear();
+        set_enabled(false);
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a > 0 && b > a);
+    }
+}

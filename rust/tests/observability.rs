@@ -5,16 +5,30 @@
 //! request's parseable mode, and the `--metrics-snapshot` file written on
 //! an interval and at shutdown.
 //!
-//! The registry is process-global, so only
-//! [`stats_reconcile_exactly_with_traffic`] issues `project` and `delta`
-//! ops — the snapshot-file test sticks to `ping`/`stats`/`shutdown` to
-//! keep the per-family solve counters attributable to one test.
+//! Plus the tracing plane: a trace-enabled session whose `{"op":"trace"}`
+//! drain decomposes every request into a well-formed span tree, and a
+//! disabled recorder that stays empty.
+//!
+//! The registry is process-global, so the tests that issue counted
+//! `project`/`delta` ops ([`stats_reconcile_exactly_with_traffic`],
+//! [`traced_session_drains_well_formed_span_trees`]) serialize on
+//! [`COUNTED_TRAFFIC`] — the snapshot-file test sticks to
+//! `ping`/`stats`/`shutdown` to keep the per-family solve counters
+//! attributable to one test.
 
 use l1inf::config::serve::ServeConfig;
 use l1inf::serve::server::Server;
 use l1inf::util::json::{self, Json};
+use l1inf::util::trace;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+
+/// The solve/op counters (and the trace recorder's enabled flag) are
+/// process-global, so the tests that issue counted `project`/`delta`
+/// traffic serialize on this lock to keep their before/after deltas
+/// attributable. Poisoning is ignored: a failed sibling must not mask
+/// this test's own verdict.
+static COUNTED_TRAFFIC: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 struct Client {
     reader: BufReader<TcpStream>,
@@ -82,6 +96,7 @@ fn cache_field(stats: &Json, family: &str, field: &str) -> f64 {
 
 #[test]
 fn stats_reconcile_exactly_with_traffic() {
+    let _lock = COUNTED_TRAFFIC.lock().unwrap_or_else(|e| e.into_inner());
     let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 2, ..Default::default() };
     let server = Server::bind(&cfg).expect("bind ephemeral port");
     let addr = server.local_addr().unwrap();
@@ -289,6 +304,165 @@ fn stats_reconcile_exactly_with_traffic() {
         assert!(p50 <= p90 && p90 <= p99, "{name}: quantiles must be ordered");
     }
 
+    let bye = client.roundtrip(r#"{"id": 99, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn traced_session_drains_well_formed_span_trees() {
+    let _lock = COUNTED_TRAFFIC.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        trace: true,
+        ..Default::default()
+    };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+
+    // ── mixed traced traffic: every response is stamped with its id ─────
+    // (trace_id, solver-phase prefix the span tree must contain)
+    let mut ids: Vec<(u64, &str)> = Vec::new();
+    let mut traced = |client: &mut Client, line: &str, prefix: &'static str| {
+        let resp = client.roundtrip(line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        let tid = resp
+            .get("trace")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("traced response missing trace id: {resp}"))
+            as u64;
+        ids.push((tid, prefix));
+    };
+    traced(&mut client, &project_line(10, "", None, 1.5), "exact.");
+    traced(&mut client, &project_line(11, r#""mode": "bilevel", "#, None, 1.5), "bilevel.");
+    let weighted = project_line(12, r#""mode": "weighted", "#, None, 1.5)
+        .replace(r#""data""#, r#""weights": [1.0, 2.0, 0.5], "data""#);
+    traced(&mut client, &weighted, "weighted.");
+    let row0 = "1.0,-0.5,0.25,0.0";
+    traced(
+        &mut client,
+        &format!(
+            r#"{{"id": 13, "op": "delta", "key": "tobs", "init": true, "groups": 3, "len": 4, "radius": 1.5, "data": [{DATA}]}}"#
+        ),
+        "serve.", // init is a cold full solve; only the serve spans are guaranteed
+    );
+    traced(
+        &mut client,
+        &format!(
+            r#"{{"id": 14, "op": "delta", "key": "tobs", "groups": 3, "len": 4, "radius": 1.5, "rows": [0], "data": [{row0}]}}"#
+        ),
+        "delta.",
+    );
+    assert_eq!(
+        ids.iter().map(|(t, _)| *t).collect::<std::collections::BTreeSet<_>>().len(),
+        ids.len(),
+        "trace ids must be unique per request"
+    );
+
+    // ── drain the flight recorder through the wire protocol ─────────────
+    let drain = client.roundtrip(r#"{"id": 90, "op": "trace", "clear": true}"#);
+    assert_eq!(drain.get("ok"), Some(&Json::Bool(true)), "{drain}");
+    assert_eq!(drain.get("enabled"), Some(&Json::Bool(true)), "{drain}");
+    let snap = trace::snapshot_from_json(&drain).expect("trace drain parses as a snapshot");
+    assert_eq!(snap.dropped, 0, "this tiny session cannot overflow the ring");
+
+    // Span counts reconcile: one serve.request root per traced request.
+    let my_roots = snap
+        .events
+        .iter()
+        .filter(|e| e.parent == 0 && ids.iter().any(|(t, _)| *t == e.trace))
+        .count();
+    assert_eq!(my_roots, ids.len(), "one root span per request sent");
+
+    for &(tid, prefix) in &ids {
+        let evs: Vec<&trace::Event> =
+            snap.events.iter().filter(|e| e.trace == tid).collect();
+        let names = || evs.iter().map(|e| e.name).collect::<Vec<_>>();
+        let count = |n: &str| evs.iter().filter(|e| e.name == n).count();
+
+        // Exactly one root, and it is the request envelope.
+        let roots: Vec<_> = evs.iter().filter(|e| e.parent == 0).collect();
+        assert_eq!(roots.len(), 1, "trace {tid}: want 1 root, got {:?}", names());
+        let root = roots[0];
+        assert_eq!(root.name, "serve.request", "trace {tid}");
+        assert_eq!(count("serve.parse"), 1, "trace {tid}: {:?}", names());
+        assert_eq!(count("serve.respond"), 1, "trace {tid}: {:?}", names());
+        assert!(
+            evs.iter().any(|e| e.name.starts_with(prefix)),
+            "trace {tid}: no {prefix}* phase span in {:?}",
+            names()
+        );
+
+        // The tree is well-formed: span ids unique, no orphan parents,
+        // every child interval inside the root's (±2µs for the
+        // independent floor-to-µs of start and duration).
+        let spans: std::collections::BTreeSet<u64> = evs.iter().map(|e| e.span).collect();
+        assert_eq!(spans.len(), evs.len(), "trace {tid}: span ids must be unique");
+        let root_end = root.start_us + root.dur_us;
+        for e in &evs {
+            if e.parent == 0 {
+                continue;
+            }
+            assert!(
+                spans.contains(&e.parent),
+                "trace {tid}: span {} ({}) has orphan parent {}",
+                e.span,
+                e.name,
+                e.parent
+            );
+            assert!(
+                e.start_us >= root.start_us && e.start_us + e.dur_us <= root_end + 2,
+                "trace {tid}: {} [{}..{}] escapes root [{}..{}]",
+                e.name,
+                e.start_us,
+                e.start_us + e.dur_us,
+                root.start_us,
+                root_end
+            );
+        }
+
+        // The renderer agrees the tree is connected.
+        let rendered = trace::render_trace_from(&snap, tid).expect("renderable");
+        assert!(rendered.starts_with("serve.request"), "trace {tid}:\n{rendered}");
+    }
+
+    // `clear: true` forgot everything: a second drain holds none of ours.
+    let drain2 = client.roundtrip(r#"{"id": 91, "op": "trace"}"#);
+    let snap2 = trace::snapshot_from_json(&drain2).expect("second drain parses");
+    for &(tid, _) in &ids {
+        assert!(
+            snap2.events.iter().all(|e| e.trace != tid),
+            "clear=true must forget trace {tid}"
+        );
+    }
+
+    let bye = client.roundtrip(r#"{"id": 99, "op": "shutdown"}"#);
+    assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
+    handle.join().expect("server thread").expect("server run");
+
+    // ── disabled mode records zero events ───────────────────────────────
+    trace::set_enabled(false);
+    let probe = trace::next_trace_id();
+    {
+        let _root = trace::begin(probe, "disabled.probe");
+        let _child = l1inf::trace_span!("disabled.child");
+    }
+    assert!(
+        trace::snapshot().events.iter().all(|e| e.trace != probe),
+        "a disabled recorder must stay empty"
+    );
+    // ...and an untraced server stamps no trace ids on its responses.
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), threads: 1, ..Default::default() };
+    let server = Server::bind(&cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr);
+    let resp = client.roundtrip(&project_line(70, "", None, 1.5));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp}");
+    assert!(resp.get("trace").is_none(), "untraced serve must not stamp ids: {resp}");
     let bye = client.roundtrip(r#"{"id": 99, "op": "shutdown"}"#);
     assert_eq!(bye.get("shutting_down"), Some(&Json::Bool(true)));
     handle.join().expect("server thread").expect("server run");
