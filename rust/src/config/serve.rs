@@ -26,6 +26,10 @@ pub struct ServeConfig {
     /// Log a phase breakdown of any request slower than this many
     /// milliseconds (0 = off). Implies tracing.
     pub slow_ms: f64,
+    /// Admission control: maximum requests in flight across all
+    /// connections before the server sheds new lines with the typed
+    /// `"overloaded"` error (0 = unlimited).
+    pub max_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -38,6 +42,7 @@ impl Default for ServeConfig {
             metrics_interval_secs: 30.0,
             trace: false,
             slow_ms: 0.0,
+            max_inflight: 256,
         }
     }
 }
@@ -57,6 +62,7 @@ pub fn serve_config(cfg: &Config) -> Result<ServeConfig> {
         metrics_interval_secs: cfg.f64_or("serve.metrics_interval_secs", default.metrics_interval_secs),
         trace: cfg.bool_or("serve.trace", default.trace),
         slow_ms: cfg.f64_or("serve.slow_ms", default.slow_ms),
+        max_inflight: cfg.usize_or("serve.max_inflight", default.max_inflight),
     })
 }
 
@@ -74,12 +80,13 @@ mod tests {
         assert_eq!(sc.metrics_interval_secs, 30.0);
         assert!(!sc.trace);
         assert_eq!(sc.slow_ms, 0.0);
+        assert_eq!(sc.max_inflight, 256);
     }
 
     #[test]
     fn section_roundtrip() {
         let cfg = Config::parse(
-            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\nmetrics_snapshot = \"/tmp/snap.json\"\nmetrics_interval_secs = 5.0\ntrace = true\nslow_ms = 250.0\n",
+            "[serve]\naddr = \"0.0.0.0:9000\"\nthreads = 8\nalgo = \"newton\"\nmetrics_snapshot = \"/tmp/snap.json\"\nmetrics_interval_secs = 5.0\ntrace = true\nslow_ms = 250.0\nmax_inflight = 64\n",
         )
         .unwrap();
         let sc = serve_config(&cfg).unwrap();
@@ -90,6 +97,7 @@ mod tests {
         assert_eq!(sc.metrics_interval_secs, 5.0);
         assert!(sc.trace);
         assert_eq!(sc.slow_ms, 250.0);
+        assert_eq!(sc.max_inflight, 64);
     }
 
     #[test]

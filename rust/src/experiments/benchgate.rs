@@ -126,6 +126,9 @@ fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
         "serve.trace_overhead_ratio" => {
             get("BENCH_serve.json", &["tracing", "overhead_ratio"])
         }
+        "serve.many_clients_throughput_ratio" => {
+            get("BENCH_serve.json", &["many_clients", "throughput_ratio"])
+        }
         "bilevel.speedup_dense" => get("BENCH_bilevel.json", &["gate", "speedup"]),
         "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
         "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
@@ -359,7 +362,8 @@ mod tests {
             &format!(
                 r#"{{{meta}, "single_matrix": {{"speedup_at_4_threads": 2.2, "max_abs_diff_vs_serial": 0.0}},
                    "warm_start": {{"inv_order": {{"work_reduction": 40.0}}}},
-                   "tracing": {{"overhead_ratio": 1.01, "trace_coverage": 0.97, "chrome_trace": "trace.json"}}}}"#
+                   "tracing": {{"overhead_ratio": 1.01, "trace_coverage": 0.97, "chrome_trace": "trace.json"}},
+                   "many_clients": {{"clients": 64, "requests_per_client": 8, "serial_rps": 900.0, "concurrent_rps": 2700.0, "throughput_ratio": 3.0}}}}"#
             ),
         );
         write(
@@ -403,6 +407,7 @@ mod tests {
             "serve.max_abs_diff": {"kind": "max", "value": 1e-6, "baseline": 0.0},
             "serve.warm_reduction_inv_order": {"kind": "min", "value": 1.0, "baseline": 20.0},
             "serve.trace_overhead_ratio": {"kind": "max", "value": 1.05, "baseline": 1.0},
+            "serve.many_clients_throughput_ratio": {"kind": "min", "value": 1.2, "baseline": 3.0},
             "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
             "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
             "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},

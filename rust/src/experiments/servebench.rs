@@ -1,7 +1,7 @@
 //! `l1inf exp serve_bench` — the load generator + throughput report of the
 //! projection service ([`crate::serve`]).
 //!
-//! Four measurements, written to `<outdir>/BENCH_serve.json` (and printed
+//! The measurements, written to `<outdir>/BENCH_serve.json` (and printed
 //! as tables via [`crate::util::bench`]):
 //!
 //! 1. **Single-matrix sharding speedup** — one 1000×4000 projection,
@@ -18,7 +18,13 @@
 //!    projections, recorder off vs on; the bench gate pins it ≤ 1.05) and
 //!    a traced serve session whose drain is written to `<outdir>/trace.json`
 //!    as Chrome trace-event JSON (the CI artifact), with the root-span
-//!    coverage of the last request reported as `trace_coverage`.
+//!    coverage of the last request reported as `trace_coverage`;
+//! 6. **Many concurrent clients** — the event-loop cell: 64 connections
+//!    (8 in `--quick`) of mixed exact/bilevel/weighted/delta round-trip
+//!    traffic, wall-clocked concurrently vs the same request stream over
+//!    one connection; `many_clients.throughput_ratio` is gated in
+//!    `ci/bench_baselines.json` (the non-blocking server must overlap
+//!    independent clients across its worker pool).
 
 use super::ExpOpts;
 use crate::config::serve::ServeConfig;
@@ -33,6 +39,7 @@ use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Instant;
 
 fn obj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -180,6 +187,134 @@ fn run_traced_session(trace_path: &std::path::Path, algo: Algorithm) -> Result<f
         .context("traced session has no root span for its last request")
 }
 
+/// One round-trip client of the many-clients cell: its own TCP stream,
+/// one request in flight at a time (write line, read response line).
+struct BenchClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl BenchClient {
+    fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting many-clients session")?;
+        Ok(BenchClient { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        ensure!(!resp.is_empty(), "server closed the connection mid-session");
+        crate::util::json::parse(&resp).map_err(anyhow::Error::msg)
+    }
+}
+
+/// One client's slice of the mixed workload: exact, bi-level, weighted
+/// and delta traffic in rotation, every response checked for `ok:true`.
+/// Delta traffic shares 4 keys across all clients (the server's
+/// [`crate::serve::cache::DELTA_MAX_STATES`] LRU cap is 8, so per-client
+/// keys would evict each other mid-sequence); each client inits its
+/// shared key before ever sending it a rows update, and every client uses
+/// the same shape and radius, so a concurrent re-init never invalidates
+/// another client's next update.
+fn drive_mixed_client(c: &mut BenchClient, client_id: usize, reqs: usize) -> Result<()> {
+    let (groups, len) = (32usize, 16usize);
+    let mut rng = Rng::new(0xC11E57 + client_id as u64);
+    let key = format!("mc{client_id}");
+    let delta_key = format!("mcd{}", client_id % 4);
+    let weights =
+        (0..groups).map(|g| format!("{}", 1.0 + 0.5 * (g % 3) as f32)).collect::<Vec<_>>().join(",");
+    let mut delta_inited = false;
+    for j in 0..reqs {
+        let mut y = vec![0.0f32; groups * len];
+        rng.fill_uniform_f32(&mut y);
+        let data = y.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+        let id = client_id * 1000 + j;
+        let line = match (client_id + j) % 4 {
+            0 => format!(
+                r#"{{"id":{id},"op":"project","key":"{key}","groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+            ),
+            1 => format!(
+                r#"{{"id":{id},"op":"project","key":"{key}","mode":"bilevel","groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+            ),
+            2 => format!(
+                r#"{{"id":{id},"op":"project","key":"{key}","mode":"weighted","groups":{groups},"len":{len},"radius":0.5,"weights":[{weights}],"data":[{data}]}}"#
+            ),
+            _ if delta_inited => {
+                let row =
+                    y[..len].iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+                format!(
+                    r#"{{"id":{id},"op":"delta","key":"{delta_key}","groups":{groups},"len":{len},"radius":0.5,"rows":[0],"data":[{row}]}}"#
+                )
+            }
+            _ => {
+                delta_inited = true;
+                format!(
+                    r#"{{"id":{id},"op":"delta","key":"{delta_key}","init":true,"groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+                )
+            }
+        };
+        let resp = c.roundtrip(&line)?;
+        ensure!(
+            resp.get("ok").and_then(Json::as_bool) == Some(true),
+            "many-clients request {id} failed: {resp}"
+        );
+    }
+    Ok(())
+}
+
+/// The many-concurrent-clients cell: the same mixed request stream driven
+/// once over a single connection (serial baseline) and once from
+/// `clients` concurrent connections, against one 4-worker server.
+/// Returns `(serial_rps, concurrent_rps)`; the gated
+/// `many_clients.throughput_ratio` is their quotient.
+fn run_many_clients(clients: usize, reqs_per_client: usize, algo: Algorithm) -> Result<(f64, f64)> {
+    let sc = ServeConfig { addr: "127.0.0.1:0".into(), threads: 4, algo, ..ServeConfig::default() };
+    let server = Server::bind(&sc).context("binding many-clients server")?;
+    let addr = server.local_addr()?;
+    let handle = std::thread::spawn(move || server.run());
+    let total = (clients * reqs_per_client) as f64;
+
+    // Serial baseline: every client's sequence, one connection, in order.
+    let start = Instant::now();
+    {
+        let mut c = BenchClient::connect(addr)?;
+        for i in 0..clients {
+            drive_mixed_client(&mut c, i, reqs_per_client)?;
+        }
+    }
+    let serial_rps = total / start.elapsed().as_secs_f64().max(1e-9);
+
+    // Concurrent: one connection per client, all in flight at once.
+    // Client ids continue past the serial block so warm-start keys stay
+    // per-client while the 4 shared delta keys are reused.
+    let start = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::with_capacity(clients);
+        for i in 0..clients {
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut c = BenchClient::connect(addr)?;
+                drive_mixed_client(&mut c, clients + i, reqs_per_client)
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("many-clients client thread panicked"))??;
+        }
+        Ok(())
+    })?;
+    let concurrent_rps = total / start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut c = BenchClient::connect(addr)?;
+    c.roundtrip(r#"{"id":999999,"op":"shutdown"}"#)?;
+    handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("many-clients server thread panicked"))?
+        .context("many-clients server")?;
+    Ok((serial_rps, concurrent_rps))
+}
+
 pub fn run(opts: &ExpOpts) -> Result<()> {
     // Paper-orientation matrix: n rows × m columns, groups = the m columns.
     let (n, m) = if opts.quick { (200, 800) } else { (1000, 4000) };
@@ -269,7 +404,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             let hint = cache.hint_for(&ck, m, n);
             let mut warm_copy = w.clone();
             let warm = project_l1inf_with_hint(&mut warm_copy, m, n, radius, wa, hint);
-            cache.update(&ck, m, n, radius, warm.theta);
+            cache.update(&ck, m, n, warm.theta);
             if step > 0 {
                 // Step 0 has an empty cache — both sides are cold.
                 cold_work += cold.stats.work;
@@ -400,6 +535,15 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         trace_path.display()
     );
 
+    // ── 7. many concurrent clients through the event loop ────────────────
+    let (clients, reqs_per_client) = if opts.quick { (8, 4) } else { (64, 8) };
+    let (serial_rps, concurrent_rps) = run_many_clients(clients, reqs_per_client, algo)?;
+    let many_clients_ratio = concurrent_rps / serial_rps.max(1e-9);
+    println!(
+        "many clients: {clients} conns x {reqs_per_client} reqs — serial {serial_rps:.0} req/s, \
+         concurrent {concurrent_rps:.0} req/s, ratio {many_clients_ratio:.2}x"
+    );
+
     // ── report ───────────────────────────────────────────────────────────
     let report = obj(vec![
         ("meta", bench::bench_meta(&[(n, m)])),
@@ -462,6 +606,16 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
                 ("chrome_trace", Json::Str(trace_path.to_string_lossy().into_owned())),
             ]),
         ),
+        (
+            "many_clients",
+            obj(vec![
+                ("clients", Json::Num(clients as f64)),
+                ("requests_per_client", Json::Num(reqs_per_client as f64)),
+                ("serial_rps", Json::Num(serial_rps)),
+                ("concurrent_rps", Json::Num(concurrent_rps)),
+                ("throughput_ratio", Json::Num(many_clients_ratio)),
+            ]),
+        ),
         ("quick", Json::Bool(opts.quick)),
     ]);
     let path = opts.outdir.join("BENCH_serve.json");
@@ -514,6 +668,13 @@ mod tests {
             }),
             "trace.json must carry complete serve.request spans"
         );
+        // The many-clients cell is present and carries a positive ratio
+        // (no absolute floor here — CI machines vary; the absolute gate
+        // lives in ci/bench_baselines.json against the full-size run).
+        let mc = v.get("many_clients").expect("report carries the many-clients cell");
+        assert!(mc.get("serial_rps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(mc.get("concurrent_rps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(mc.get("throughput_ratio").and_then(Json::as_f64).unwrap() > 0.0);
         std::fs::remove_dir_all(&outdir).ok();
     }
 }

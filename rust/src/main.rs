@@ -7,7 +7,7 @@
 //! l1inf train     [--config configs/synth.toml] [--set train.key=value;...]
 //! l1inf serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config F]
 //!                 [--metrics-snapshot FILE] [--metrics-interval SECS]
-//!                 [--trace] [--slow-ms MS]
+//!                 [--trace] [--slow-ms MS] [--max-inflight N]
 //! l1inf stats     --metrics-snapshot FILE [--format prom|json]
 //! l1inf trace     (--addr HOST:PORT | --in FILE) [--out trace.json]
 //! l1inf exp NAME  [--quick] [--out results] [--config F] [--set ...]
@@ -44,7 +44,7 @@ const USAGE: &str = "usage: l1inf <project|train|serve|stats|trace|exp|artifacts
   train     [--config FILE] [--set section.key=value;...]
   serve     [--addr HOST:PORT] [--threads T] [--algo A] [--config FILE]
             [--metrics-snapshot FILE] [--metrics-interval SECS]
-            [--trace] [--slow-ms MS]
+            [--trace] [--slow-ms MS] [--max-inflight N]
   stats     --metrics-snapshot FILE [--format prom|json]
   trace     (--addr HOST:PORT | --in FILE) [--out trace.json]
   exp NAME  [--quick] [--out DIR] [--config FILE] [--set ...]
@@ -183,6 +183,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("slow-ms") {
         sc.slow_ms = s.parse().map_err(|_| anyhow::anyhow!("--slow-ms: bad number '{s}'"))?;
+    }
+    if let Some(m) = args.get("max-inflight") {
+        sc.max_inflight =
+            m.parse().map_err(|_| anyhow::anyhow!("--max-inflight: bad integer '{m}'"))?;
     }
     let server = Server::bind(&sc).context("binding projection service")?;
     println!(

@@ -483,7 +483,7 @@ impl<'e> Trainer<'e> {
                 let info =
                     project_with(&mut *self.solver, &mut GroupedViewMut::new(w1, d, h), c, hint);
                 if !info.feasible && info.theta > 0.0 {
-                    self.theta_cache.update(&key, d, h, c, info.theta);
+                    self.theta_cache.update(&key, d, h, info.theta);
                 }
                 info.theta
             }
@@ -517,7 +517,7 @@ impl<'e> Trainer<'e> {
                     hint,
                 );
                 if !info.feasible && info.theta > 0.0 {
-                    self.theta_cache.update(&key, h, d, c, info.theta);
+                    self.theta_cache.update(&key, h, d, info.theta);
                 }
                 info.theta
             }

@@ -625,7 +625,7 @@ fn run_request(
             solvers.release(solver);
             if let (Some(key), Some(cache)) = (&ns_key, cache) {
                 if !info.feasible {
-                    cache.update(key, n_groups, group_len, radius, info.theta);
+                    cache.update(key, n_groups, group_len, info.theta);
                 }
             }
             ProjResponse { data, info, warm: hint.is_some() }
@@ -640,7 +640,7 @@ fn run_request(
             bilevels.release(solver);
             if let (Some(key), Some(cache)) = (&ns_key, cache) {
                 if !info.feasible {
-                    cache.update(key, n_groups, group_len, radius, info.tau);
+                    cache.update(key, n_groups, group_len, info.tau);
                 }
             }
             ProjResponse { data, info: info.to_proj_info(), warm: info.warm }
@@ -656,7 +656,7 @@ fn run_request(
             weighteds.release(solver);
             if let (Some(key), Some(cache)) = (&ns_key, cache) {
                 if !info.feasible {
-                    cache.update(key, n_groups, group_len, radius, info.theta);
+                    cache.update(key, n_groups, group_len, info.theta);
                 }
             }
             ProjResponse { data, info, warm: hint.is_some() }
@@ -797,9 +797,9 @@ mod tests {
         assert_eq!(resp.info.theta.to_bits(), bi.tau.to_bits());
         // The τ went into the bi-level family's typed slot; no other
         // family's namespace saw it.
-        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w")).is_some());
-        assert!(cache.entry(&cache_key(ProjKind::Exact, "w")).is_none());
-        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w")).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w"), g, l).is_some());
+        assert!(cache.entry(&cache_key(ProjKind::Exact, "w"), g, l).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w"), g, l).is_none());
         // Workspace recycled; a second request warm-starts through the
         // cache (τ may differ from the cold solve only in FP round-off).
         assert!(pool.bilevel_pool().idle() >= 1);
@@ -834,9 +834,9 @@ mod tests {
         assert_eq!(resp.data, reference, "batch weighted == serial weighted");
         assert_eq!(resp.info.theta.to_bits(), ri.theta.to_bits());
         // λ landed in the weighted family's typed namespace only.
-        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w")).is_some());
-        assert!(cache.entry(&cache_key(ProjKind::Exact, "w")).is_none());
-        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w")).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w"), g, l).is_some());
+        assert!(cache.entry(&cache_key(ProjKind::Exact, "w"), g, l).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w"), g, l).is_none());
         // Workspace recycled; second request warm-starts and agrees.
         assert!(pool.weighted_pool().idle() >= 1);
         let resp2 = &pool.project_batch(Some(&cache), vec![req])[0];

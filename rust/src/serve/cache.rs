@@ -1,4 +1,4 @@
-//! Warm-start θ cache.
+//! Warm-start θ cache: a fixed-size, lock-free table of packed atomic words.
 //!
 //! The bi-level view of projected SGD (arXiv:2407.16293) observes that the
 //! dual variable θ* of the ℓ₁,∞ projection moves slowly between consecutive
@@ -14,6 +14,37 @@
 //! full cold solve — so the margin buys hit rate cheaply. Bisection and
 //! Newton accept hints on either side.
 //!
+//! # Lock-free table
+//!
+//! At serving scale the paper's near-linear solver stops being the
+//! bottleneck and the plane around it takes over — a `Mutex`-guarded map
+//! would serialize every warm-start lookup across every connection. The
+//! cache is therefore a fixed-size, power-of-two table of
+//! [`TABLE_SLOTS`] packed `AtomicU64` words, one entry per word:
+//!
+//! ```text
+//! bits 63..32   θ* as f32 bits (nonzero for any valid θ > 0)
+//! bits 31..30   operator family index (Family::index)
+//! bits 29..8    22-bit fingerprint of (family, client_key, shape)
+//! bits  7..0    generation (global epoch; stale generations read as misses)
+//! ```
+//!
+//! The slot is a Fibonacci multiply-shift of an FNV-1a hash of
+//! `(family, client_key)` — shape is deliberately *not* part of the slot,
+//! so re-recording a key after a reshape overwrites its old word instead
+//! of leaking a sibling. Shape *is* part of the fingerprint, so a lookup
+//! with a different shape misses. Lookups are one relaxed load plus two
+//! relaxed counter increments; updates are one relaxed store. Collisions
+//! are resolved by **benign lossy eviction**: the later writer wins the
+//! word, the loser's next lookup is a clean miss (its fingerprint no
+//! longer matches) and falls back to a cold solve. A word is read and
+//! written whole, so a fingerprint match guarantees the θ payload came
+//! from the same `update` call — torn reads are impossible by
+//! construction. See `docs/CONCURRENCY.md` for the full memory-ordering
+//! argument (why `Relaxed` suffices, and why a 22-bit fingerprint or
+//! 8-bit generation collision can only ever cost a wasted hint, never a
+//! wrong projection: solvers validate every hint and fall back cold).
+//!
 //! # Typed keys
 //!
 //! The exact θ*, the bi-level τ and the weighted λ are *different dual
@@ -21,10 +52,10 @@
 //! another as a hint. Entries are therefore addressed by a typed
 //! [`CacheKey`] — an operator [`Family`] plus the client-chosen string —
 //! instead of the old string-prefix scheme (`"exact:" + key`), which a
-//! client key containing `:` could spoof across namespaces (a client key
-//! `"bilevel:w1"` under the exact family used to concatenate to the same
-//! string as client key `"w1"` under the bi-level family; as distinct
-//! `CacheKey` values they can never collide).
+//! client key containing `:` could spoof across namespaces. The family
+//! participates in the slot hash, the fingerprint *and* the stored family
+//! bits, so even two keys that collide into the same slot can never
+//! cross-feed a hint across families.
 //!
 //! Hints flow into the [`Solver`](crate::projection::l1inf::Solver)
 //! structs through the `hint` argument of `solve`/`project_with`; the full
@@ -34,6 +65,25 @@
 //! cross-workspace, cross-connection variant keyed by matrix identity.
 //!
 //! Thread-safe: one instance is shared by every server connection.
+//!
+//! # Examples
+//!
+//! Fingerprinting ties a cached θ to both the key and the matrix shape —
+//! a reshaped matrix is a different projection problem and must miss:
+//!
+//! ```
+//! use l1inf::serve::cache::{CacheKey, Family, ThetaCache, HINT_MARGIN};
+//!
+//! let cache = ThetaCache::new();
+//! let key = CacheKey::new(Family::Exact, "w1");
+//! assert_eq!(cache.hint_for(&key, 10, 4), None); // cold
+//! cache.update(&key, 10, 4, 2.0);                // record θ* = 2.0
+//! let hint = cache.hint_for(&key, 10, 4).unwrap(); // warm — no lock taken
+//! assert!((hint - 2.0 * HINT_MARGIN).abs() < 1e-9);
+//! assert_eq!(cache.hint_for(&key, 10, 5), None); // reshaped ⇒ fingerprint miss
+//! // The bi-level namespace never sees the exact family's θ.
+//! assert_eq!(cache.hint_for(&CacheKey::new(Family::Bilevel, "w1"), 10, 4), None);
+//! ```
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,11 +92,28 @@ use std::sync::Mutex;
 /// Multiplicative safety margin applied to returned hints (see module docs).
 pub const HINT_MARGIN: f64 = 1.05;
 
-/// Hard cap on cached keys. Keys are client-chosen strings on a
-/// long-running server, so the map must not grow without bound; past the
-/// cap the least-recently-updated entry is evicted (a stale θ is worth
-/// nothing anyway — the matrix it described has long since drifted).
-pub const MAX_ENTRIES: usize = 4096;
+/// log₂ of the table size. 2¹³ = 8192 words = 64 KiB — far above the
+/// handful of live matrices any one server projects, small enough that
+/// the cold-path occupancy scan in [`ThetaCache::stats`] stays trivial.
+pub const TABLE_BITS: usize = 13;
+
+/// Number of packed entry words in the table (power of two, so the slot
+/// index is a multiply-shift — no division on the hot path).
+pub const TABLE_SLOTS: usize = 1 << TABLE_BITS;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0100_0000_01b3;
+/// 2⁶⁴/φ, the Fibonacci-hashing multiplier: spreads consecutive hash
+/// values across the high bits, which the shift then selects.
+const FIB_MULT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+const THETA_SHIFT: u64 = 32;
+const FAM_SHIFT: u64 = 30;
+const FAM_MASK: u64 = 0b11;
+const FP_SHIFT: u64 = 8;
+const FP_BITS: u64 = 22;
+const FP_MASK: u64 = (1 << FP_BITS) - 1;
+const GEN_MASK: u64 = 0xFF;
 
 /// Which operator family a cached dual variable belongs to. Every family
 /// has its own namespace: the exact θ*, the bi-level τ and the weighted λ
@@ -74,7 +141,8 @@ impl Family {
         }
     }
 
-    /// Dense index into per-family counter arrays (matches [`Family::ALL`]).
+    /// Dense index into per-family counter arrays (matches [`Family::ALL`];
+    /// also the 2-bit family tag stored in each packed cache word).
     pub fn index(&self) -> usize {
         match self {
             Family::Exact => 0,
@@ -105,19 +173,51 @@ impl std::fmt::Display for CacheKey {
     }
 }
 
-#[derive(Debug, Clone, Copy)]
-struct Entry {
-    theta: f64,
-    n_groups: usize,
-    group_len: usize,
-    radius: f64,
-    updates: u64,
-    /// Monotonic update stamp; the smallest stamp is evicted at capacity.
-    stamp: u64,
+/// FNV-1a over `bytes`, continuing from `h`.
+fn fnv_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 64-bit hash of the *key identity* (family byte + client key). Shape is
+/// deliberately excluded: the slot must be stable across reshapes so a
+/// re-recorded key overwrites its old word (see module docs).
+fn key_hash(key: &CacheKey) -> u64 {
+    let h = fnv_extend(FNV_OFFSET, &[key.family.index() as u8]);
+    fnv_extend(h, key.client_key.as_bytes())
+}
+
+/// Table slot of a key hash: Fibonacci multiply-shift onto `TABLE_BITS`.
+fn slot_index(kh: u64) -> usize {
+    (kh.wrapping_mul(FIB_MULT) >> (64 - TABLE_BITS)) as usize
+}
+
+/// 22-bit fingerprint of (key identity, shape): the key hash extended by
+/// the shape. Taken from a different bit range than the slot uses, so two
+/// keys sharing a slot almost never share a fingerprint too.
+fn fingerprint(kh: u64, n_groups: usize, group_len: usize) -> u64 {
+    let h = fnv_extend(kh, &(n_groups as u64).to_le_bytes());
+    let h = fnv_extend(h, &(group_len as u64).to_le_bytes());
+    (h >> 40) & FP_MASK
+}
+
+/// Pack one cache entry into a single word (layout in the module docs).
+/// `theta > 0.0` is a caller invariant — it makes the word nonzero, which
+/// is what distinguishes an occupied slot from an empty one.
+fn pack(theta: f32, family: Family, fp: u64, gen: u8) -> u64 {
+    ((theta.to_bits() as u64) << THETA_SHIFT)
+        | ((family.index() as u64) << FAM_SHIFT)
+        | (fp << FP_SHIFT)
+        | gen as u64
 }
 
 /// Cache statistics — aggregate or per-family, depending on which
 /// accessor produced them (exposed over the serve protocol's `stats` op).
+/// `hits` and `misses` always come from a **single atomic snapshot** per
+/// family (both halves of one packed counter word), so `hit_rate` cannot
+/// drift between two separately-loaded counters mid-read.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
     pub entries: usize,
@@ -138,24 +238,47 @@ impl CacheStats {
     }
 }
 
-/// Per-[`Family`] hit/miss/update counters (indexed by [`Family::index`]).
-/// The registry mirrors them (`cache.<family>.hits` …) so the global
-/// metrics plane sees cache behavior without holding a cache reference.
+/// Per-[`Family`] counters (indexed by [`Family::index`]). Hits and misses
+/// for one family share a single word — hits in the high 32 bits, misses
+/// in the low 32 — so one relaxed load yields a consistent (hits, misses)
+/// pair and [`CacheStats::hit_rate`] can never observe a hit without its
+/// matching lookup. The registry mirrors them (`cache.<family>.hits` …)
+/// so the global metrics plane sees cache behavior without holding a
+/// cache reference.
 #[derive(Debug, Default)]
 struct FamilyCounters {
-    hits: [AtomicU64; 3],
-    misses: [AtomicU64; 3],
+    /// `hits << 32 | misses` per family (32 bits ≈ 4·10⁹ lookups each —
+    /// plenty for a server lifetime).
+    hit_miss: [AtomicU64; 3],
     updates: [AtomicU64; 3],
 }
 
+const HIT_ONE: u64 = 1 << 32;
+const MISS_ONE: u64 = 1;
+
 /// θ* memo keyed by [`CacheKey`] (operator family × caller-chosen matrix
-/// identity, e.g. `Exact`/`"w1:synth"`).
-#[derive(Debug, Default)]
+/// identity, e.g. `Exact`/`"w1:synth"`), stored as a fixed-size table of
+/// packed atomic words — see the module docs for the layout and the
+/// lossy-eviction / generation-invalidation semantics.
+#[derive(Debug)]
 pub struct ThetaCache {
-    inner: Mutex<HashMap<CacheKey, Entry>>,
+    /// `TABLE_SLOTS` packed entry words; 0 = empty.
+    slots: Box<[AtomicU64]>,
+    /// Global epoch; only the low 8 bits are stored per word. Bumping it
+    /// ([`ThetaCache::invalidate_all`]) makes every live word stale in
+    /// O(1) without touching the table.
+    generation: AtomicU64,
     by_family: FamilyCounters,
-    /// Global update stamp source (also the aggregate `updates` count).
-    updates: AtomicU64,
+}
+
+impl Default for ThetaCache {
+    fn default() -> ThetaCache {
+        ThetaCache {
+            slots: (0..TABLE_SLOTS).map(|_| AtomicU64::new(0)).collect(),
+            generation: AtomicU64::new(0),
+            by_family: FamilyCounters::default(),
+        }
+    }
 }
 
 /// Registry mirror of one family's cache counters (static names so the
@@ -190,97 +313,152 @@ impl ThetaCache {
         ThetaCache::default()
     }
 
+    /// Table slot a key hashes to. Exposed so tests can *construct*
+    /// colliding keys deterministically instead of hoping for collisions;
+    /// not useful to production callers.
+    pub fn slot_of(key: &CacheKey) -> usize {
+        slot_index(key_hash(key))
+    }
+
+    /// The θ recorded under (`key`, shape) in the current generation, or
+    /// `None`. One relaxed load; no counters move (introspection only —
+    /// [`ThetaCache::hint_for`] is the counted lookup).
+    fn load(&self, key: &CacheKey, n_groups: usize, group_len: usize) -> Option<f64> {
+        let kh = key_hash(key);
+        let word = self.slots[slot_index(kh)].load(Ordering::Relaxed);
+        if word == 0 {
+            return None; // empty slot
+        }
+        if word & GEN_MASK != self.generation.load(Ordering::Relaxed) & GEN_MASK {
+            return None; // invalidated epoch
+        }
+        if (word >> FAM_SHIFT) & FAM_MASK != key.family.index() as u64 {
+            return None; // slot collision across families
+        }
+        if (word >> FP_SHIFT) & FP_MASK != fingerprint(kh, n_groups, group_len) {
+            return None; // different key or shape won the slot
+        }
+        let theta = f32::from_bits((word >> THETA_SHIFT) as u32);
+        (theta.is_finite() && theta > 0.0).then_some(f64::from(theta))
+    }
+
     /// Warm-start hint for the next projection of the matrix behind `key`.
     ///
-    /// Returns `None` (a cold solve) when the key is unknown or the cached
-    /// entry was recorded for a different shape — a reshaped matrix is a
-    /// different projection problem and its θ is meaningless here. A radius
-    /// change keeps the hint: the solvers validate hints anyway, and θ
-    /// moves continuously with C.
+    /// Returns `None` (a cold solve) when the key is unknown, its slot was
+    /// lost to a colliding writer, or the cached entry was recorded for a
+    /// different shape — a reshaped matrix is a different projection
+    /// problem and its θ is meaningless here. A radius change keeps the
+    /// hint: the solvers validate hints anyway, and θ moves continuously
+    /// with C.
+    ///
+    /// **Lock-free**: the hot path is one relaxed load of the packed entry
+    /// word plus one relaxed increment of the packed hit/miss counter.
     pub fn hint_for(&self, key: &CacheKey, n_groups: usize, group_len: usize) -> Option<f64> {
         let fi = key.family.index();
-        let guard = self.inner.lock().expect("theta cache poisoned");
-        match guard.get(key) {
-            Some(e) if e.n_groups == n_groups && e.group_len == group_len && e.theta > 0.0 => {
-                self.by_family.hits[fi].fetch_add(1, Ordering::Relaxed);
+        match self.load(key, n_groups, group_len) {
+            Some(theta) => {
+                self.by_family.hit_miss[fi].fetch_add(HIT_ONE, Ordering::Relaxed);
                 mirror(key.family).hits.inc();
-                Some(e.theta * HINT_MARGIN)
+                Some(theta * HINT_MARGIN)
             }
-            _ => {
-                self.by_family.misses[fi].fetch_add(1, Ordering::Relaxed);
+            None => {
+                self.by_family.hit_miss[fi].fetch_add(MISS_ONE, Ordering::Relaxed);
                 mirror(key.family).misses.inc();
                 None
             }
         }
     }
 
-    /// Record the θ* a projection just solved for.
-    pub fn update(
-        &self,
-        key: &CacheKey,
-        n_groups: usize,
-        group_len: usize,
-        radius: f64,
-        theta: f64,
-    ) {
+    /// Record the θ* a projection just solved for (one relaxed store).
+    ///
+    /// Degenerate values — non-finite, ≤ 0, or outside f32 range (the
+    /// word stores θ as f32; an out-of-range f64 would round to `inf` or
+    /// `0`) — are dropped without counting: a feasible projection carries
+    /// no information. A slot collision silently overwrites the previous
+    /// occupant (lossy eviction; the loser re-learns on its next solve).
+    pub fn update(&self, key: &CacheKey, n_groups: usize, group_len: usize, theta: f64) {
         if !theta.is_finite() || theta <= 0.0 {
-            return; // feasible / degenerate projections carry no information
+            return;
+        }
+        let t32 = theta as f32;
+        if !t32.is_finite() || t32 <= 0.0 {
+            return; // f64→f32 overflow / underflow
         }
         self.by_family.updates[key.family.index()].fetch_add(1, Ordering::Relaxed);
         mirror(key.family).updates.inc();
-        let stamp = self.updates.fetch_add(1, Ordering::Relaxed);
-        let mut guard = self.inner.lock().expect("theta cache poisoned");
-        if guard.len() >= MAX_ENTRIES && !guard.contains_key(key) {
-            // Evict the least-recently-updated key (O(n), but only at cap).
-            if let Some(victim) =
-                guard.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
-            {
-                guard.remove(&victim);
-            }
-        }
-        let updates = guard.get(key).map(|e| e.updates + 1).unwrap_or(1);
-        guard.insert(
-            key.clone(),
-            Entry { theta, n_groups, group_len, radius, updates, stamp },
-        );
+        let kh = key_hash(key);
+        let fp = fingerprint(kh, n_groups, group_len);
+        let gen = (self.generation.load(Ordering::Relaxed) & GEN_MASK) as u8;
+        self.slots[slot_index(kh)].store(pack(t32, key.family, fp, gen), Ordering::Relaxed);
     }
 
-    /// Drop one key (e.g. when a served model is unloaded).
+    /// Drop one key (e.g. when a served model is unloaded). Clears the
+    /// key's slot outright; if a colliding key currently owns the slot it
+    /// is dropped too — benign, it re-learns on its next solve.
     pub fn invalidate(&self, key: &CacheKey) {
-        self.inner.lock().expect("theta cache poisoned").remove(key);
+        self.slots[Self::slot_of(key)].store(0, Ordering::Relaxed);
     }
 
-    /// Introspection: `(θ*, radius, updates)` recorded under `key`.
-    pub fn entry(&self, key: &CacheKey) -> Option<(f64, f64, u64)> {
-        let guard = self.inner.lock().expect("theta cache poisoned");
-        guard.get(key).map(|e| (e.theta, e.radius, e.updates))
+    /// Invalidate every entry in O(1) by bumping the global generation:
+    /// words stamped with an older epoch read as misses. After 256 bumps
+    /// the 8 stored bits wrap and an untouched stale word could read as
+    /// live again — benign (solvers validate hints; worst case one wasted
+    /// warm attempt), and any slot rewritten meanwhile carries the new
+    /// epoch anyway.
+    pub fn invalidate_all(&self) {
+        self.generation.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Aggregate statistics across every family.
+    /// Introspection: the θ* recorded under (`key`, shape), without the
+    /// hint margin and without touching the hit/miss counters.
+    pub fn entry(&self, key: &CacheKey, n_groups: usize, group_len: usize) -> Option<f64> {
+        self.load(key, n_groups, group_len)
+    }
+
+    /// Occupied slots in the current generation (cold path: a scan over
+    /// the fixed table — reporting only, never a solve).
+    fn count_entries(&self, family: Option<Family>) -> usize {
+        let gen = self.generation.load(Ordering::Relaxed) & GEN_MASK;
+        self.slots
+            .iter()
+            .filter(|slot| {
+                let w = slot.load(Ordering::Relaxed);
+                w != 0
+                    && w & GEN_MASK == gen
+                    && match family {
+                        Some(f) => (w >> FAM_SHIFT) & FAM_MASK == f.index() as u64,
+                        None => true,
+                    }
+            })
+            .count()
+    }
+
+    /// Aggregate statistics across every family. Each family's hit/miss
+    /// pair comes from one atomic snapshot (see [`FamilyCounters`]).
     pub fn stats(&self) -> CacheStats {
-        let sum = |xs: &[AtomicU64; 3]| xs.iter().map(|x| x.load(Ordering::Relaxed)).sum();
+        let (mut hits, mut misses) = (0, 0);
+        for hm in &self.by_family.hit_miss {
+            let v = hm.load(Ordering::Relaxed);
+            hits += v >> 32;
+            misses += v & 0xFFFF_FFFF;
+        }
         CacheStats {
-            entries: self.inner.lock().expect("theta cache poisoned").len(),
-            hits: sum(&self.by_family.hits),
-            misses: sum(&self.by_family.misses),
-            updates: self.updates.load(Ordering::Relaxed),
+            entries: self.count_entries(None),
+            hits,
+            misses,
+            updates: self.by_family.updates.iter().map(|u| u.load(Ordering::Relaxed)).sum(),
         }
     }
 
-    /// Statistics of one family's namespace. Entries are counted under the
-    /// map lock (cold path — reporting only, never a solve).
+    /// Statistics of one family's namespace. The hit/miss pair is one
+    /// atomic load, so `hit_rate` is exact even under concurrent traffic.
     pub fn family_stats(&self, family: Family) -> CacheStats {
         let fi = family.index();
+        let hm = self.by_family.hit_miss[fi].load(Ordering::Relaxed);
         CacheStats {
-            entries: self
-                .inner
-                .lock()
-                .expect("theta cache poisoned")
-                .keys()
-                .filter(|k| k.family == family)
-                .count(),
-            hits: self.by_family.hits[fi].load(Ordering::Relaxed),
-            misses: self.by_family.misses[fi].load(Ordering::Relaxed),
+            entries: self.count_entries(Some(family)),
+            hits: hm >> 32,
+            misses: hm & 0xFFFF_FFFF,
             updates: self.by_family.updates[fi].load(Ordering::Relaxed),
         }
     }
@@ -293,7 +471,7 @@ impl ThetaCache {
 }
 
 /// Hard cap on persisted incremental-projection states. Unlike a θ entry
-/// (a few scalars), one [`DeltaEntry`] holds the matrix copy plus the
+/// (one packed word), one [`DeltaEntry`] holds the matrix copy plus the
 /// solver's sorted structures — ~20 bytes per element, ≈80 MB at
 /// 1000×4000 — so the store keeps only a small LRU set.
 pub const DELTA_MAX_STATES: usize = 8;
@@ -320,7 +498,8 @@ use crate::projection::l1inf::DeltaSolver;
 /// delta traffic for one key is inherently stateful (the solve mutates
 /// the persisted structures), so per-key serialization is required
 /// anyway, and with at most [`DELTA_MAX_STATES`] cheap incremental
-/// solves in flight a single mutex is the simplest correct design.
+/// solves in flight a single mutex is the simplest correct design. This
+/// is *not* the θ hot path — see [`ThetaCache`] for that.
 #[derive(Default)]
 pub struct DeltaStore {
     inner: Mutex<HashMap<CacheKey, DeltaEntry>>,
@@ -400,11 +579,27 @@ mod tests {
         CacheKey::new(Family::Exact, s)
     }
 
+    /// First two distinct client keys of `family` whose slots collide.
+    /// Deterministic: the hash has no per-process seed. With 8192 slots a
+    /// birthday collision lands within ~a few hundred candidates.
+    fn colliding_pair(family: Family) -> (CacheKey, CacheKey) {
+        let mut seen: HashMap<usize, CacheKey> = HashMap::new();
+        for i in 0..200_000 {
+            let key = CacheKey::new(family, format!("c{i}"));
+            let slot = ThetaCache::slot_of(&key);
+            if let Some(first) = seen.get(&slot) {
+                return (first.clone(), key);
+            }
+            seen.insert(slot, key);
+        }
+        panic!("no slot collision within 200k keys — hash or table size changed?");
+    }
+
     #[test]
     fn miss_then_hit_with_margin() {
         let cache = ThetaCache::new();
         assert_eq!(cache.hint_for(&k("w1"), 10, 4), None);
-        cache.update(&k("w1"), 10, 4, 1.0, 2.0);
+        cache.update(&k("w1"), 10, 4, 2.0);
         let h = cache.hint_for(&k("w1"), 10, 4).unwrap();
         assert!((h - 2.0 * HINT_MARGIN).abs() < 1e-12);
         let st = cache.stats();
@@ -414,22 +609,37 @@ mod tests {
     #[test]
     fn shape_mismatch_is_a_miss() {
         let cache = ThetaCache::new();
-        cache.update(&k("w1"), 10, 4, 1.0, 2.0);
+        cache.update(&k("w1"), 10, 4, 2.0);
         assert_eq!(cache.hint_for(&k("w1"), 10, 5), None);
         assert_eq!(cache.hint_for(&k("w1"), 11, 4), None);
         assert!(cache.hint_for(&k("w1"), 10, 4).is_some());
     }
 
     #[test]
+    fn reshape_overwrites_instead_of_leaking_a_sibling() {
+        // Shape is part of the fingerprint but *not* the slot: re-recording
+        // a key after a reshape must replace its word, not occupy a second.
+        let cache = ThetaCache::new();
+        cache.update(&k("w1"), 10, 4, 2.0);
+        cache.update(&k("w1"), 20, 4, 3.0);
+        assert_eq!(cache.stats().entries, 1, "one key = one word across reshapes");
+        assert_eq!(cache.entry(&k("w1"), 20, 4), Some(3.0));
+        assert_eq!(cache.entry(&k("w1"), 10, 4), None, "old shape is gone");
+    }
+
+    #[test]
     fn families_are_disjoint_namespaces() {
         let cache = ThetaCache::new();
-        cache.update(&CacheKey::new(Family::Exact, "w1"), 4, 4, 1.0, 1.0);
-        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 1.0, 2.0);
-        cache.update(&CacheKey::new(Family::Weighted, "w1"), 4, 4, 1.0, 3.0);
-        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "w1")).unwrap().0, 1.0);
-        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")).unwrap().0, 2.0);
-        assert_eq!(cache.entry(&CacheKey::new(Family::Weighted, "w1")).unwrap().0, 3.0);
+        cache.update(&CacheKey::new(Family::Exact, "w1"), 4, 4, 1.0);
+        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 2.0);
+        cache.update(&CacheKey::new(Family::Weighted, "w1"), 4, 4, 3.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "w1"), 4, 4), Some(1.0));
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1"), 4, 4), Some(2.0));
+        assert_eq!(cache.entry(&CacheKey::new(Family::Weighted, "w1"), 4, 4), Some(3.0));
         assert_eq!(cache.stats().entries, 3);
+        assert_eq!(cache.family_stats(Family::Exact).entries, 1);
+        assert_eq!(cache.family_stats(Family::Bilevel).entries, 1);
+        assert_eq!(cache.family_stats(Family::Weighted).entries, 1);
     }
 
     #[test]
@@ -441,15 +651,15 @@ mod tests {
         // flat addressing could spoof either. Typed keys make every
         // (family, client_key) pair its own address.
         let cache = ThetaCache::new();
-        cache.update(&CacheKey::new(Family::Exact, "bilevel:w1"), 4, 4, 1.0, 10.0);
+        cache.update(&CacheKey::new(Family::Exact, "bilevel:w1"), 4, 4, 10.0);
         // The bi-level family never sees the exact family's entry…
-        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")), None);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1"), 4, 4), None);
         assert_eq!(cache.hint_for(&CacheKey::new(Family::Bilevel, "w1"), 4, 4), None);
         // …and vice versa: a bi-level entry under "w1" stays invisible to
         // an exact client key spelled "bilevel:w1".
-        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 1.0, 20.0);
-        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "bilevel:w1")).unwrap().0, 10.0);
-        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1")).unwrap().0, 20.0);
+        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 4, 4, 20.0);
+        assert_eq!(cache.entry(&CacheKey::new(Family::Exact, "bilevel:w1"), 4, 4), Some(10.0));
+        assert_eq!(cache.entry(&CacheKey::new(Family::Bilevel, "w1"), 4, 4), Some(20.0));
     }
 
     #[test]
@@ -459,7 +669,7 @@ mod tests {
         let bk = CacheKey::new(Family::Bilevel, "w1");
         // Exact: one miss, one update, one hit. Bilevel: two misses.
         assert_eq!(cache.hint_for(&ek, 4, 4), None);
-        cache.update(&ek, 4, 4, 1.0, 2.0);
+        cache.update(&ek, 4, 4, 2.0);
         assert!(cache.hint_for(&ek, 4, 4).is_some());
         assert_eq!(cache.hint_for(&bk, 4, 4), None);
         assert_eq!(cache.hint_for(&bk, 4, 4), None);
@@ -491,39 +701,60 @@ mod tests {
     #[test]
     fn degenerate_thetas_not_recorded() {
         let cache = ThetaCache::new();
-        cache.update(&k("w1"), 10, 4, 1.0, 0.0);
-        cache.update(&k("w1"), 10, 4, 1.0, -1.0);
-        cache.update(&k("w1"), 10, 4, 1.0, f64::NAN);
+        cache.update(&k("w1"), 10, 4, 0.0);
+        cache.update(&k("w1"), 10, 4, -1.0);
+        cache.update(&k("w1"), 10, 4, f64::NAN);
+        // Outside f32 range: would round to inf / 0 in the packed word.
+        cache.update(&k("w1"), 10, 4, 1e300);
+        cache.update(&k("w1"), 10, 4, 1e-300);
         assert_eq!(cache.hint_for(&k("w1"), 10, 4), None);
-        assert_eq!(cache.stats().entries, 0);
+        let st = cache.stats();
+        assert_eq!((st.entries, st.updates), (0, 0));
     }
 
     #[test]
     fn invalidate_removes() {
         let cache = ThetaCache::new();
-        cache.update(&k("k"), 2, 2, 1.0, 1.0);
-        cache.update(&k("k"), 2, 2, 1.5, 1.2);
-        assert_eq!(cache.entry(&k("k")), Some((1.2, 1.5, 2)));
+        cache.update(&k("k"), 2, 2, 1.0);
+        cache.update(&k("k"), 2, 2, 1.25);
+        assert_eq!(cache.entry(&k("k"), 2, 2), Some(1.25));
         cache.invalidate(&k("k"));
         assert_eq!(cache.hint_for(&k("k"), 2, 2), None);
-        assert_eq!(cache.entry(&k("k")), None);
+        assert_eq!(cache.entry(&k("k"), 2, 2), None);
+        assert_eq!(cache.stats().entries, 0);
     }
 
     #[test]
-    fn capacity_evicts_least_recently_updated() {
+    fn invalidate_all_bumps_generation() {
         let cache = ThetaCache::new();
-        for i in 0..MAX_ENTRIES {
-            cache.update(&k(&format!("k{i}")), 2, 2, 1.0, 1.0);
-        }
-        assert_eq!(cache.stats().entries, MAX_ENTRIES);
-        // Refresh k0 so it is no longer the eviction victim, then overflow.
-        cache.update(&k("k0"), 2, 2, 1.0, 2.0);
-        cache.update(&k("fresh"), 2, 2, 1.0, 3.0);
-        let st = cache.stats();
-        assert_eq!(st.entries, MAX_ENTRIES, "cap holds");
-        assert!(cache.entry(&k("fresh")).is_some());
-        assert!(cache.entry(&k("k0")).is_some(), "refreshed key survives");
-        assert!(cache.entry(&k("k1")).is_none(), "oldest key evicted");
+        cache.update(&k("w1"), 2, 2, 1.5);
+        cache.update(&CacheKey::new(Family::Bilevel, "w1"), 2, 2, 2.5);
+        assert_eq!(cache.stats().entries, 2);
+        cache.invalidate_all();
+        assert_eq!(cache.entry(&k("w1"), 2, 2), None);
+        assert_eq!(cache.hint_for(&k("w1"), 2, 2), None);
+        assert_eq!(cache.stats().entries, 0, "stale-generation words are not entries");
+        // Re-recording under the new generation works as usual.
+        cache.update(&k("w1"), 2, 2, 3.0);
+        assert_eq!(cache.entry(&k("w1"), 2, 2), Some(3.0));
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn colliding_keys_evict_lossily() {
+        let (ka, kb) = colliding_pair(Family::Exact);
+        assert_eq!(ThetaCache::slot_of(&ka), ThetaCache::slot_of(&kb));
+        assert_ne!(ka, kb);
+        let cache = ThetaCache::new();
+        cache.update(&ka, 2, 2, 1.0);
+        assert_eq!(cache.entry(&ka, 2, 2), Some(1.0));
+        // The later writer wins the word; the loser reads as a clean miss
+        // (its fingerprint no longer matches the stored word) — never as
+        // the winner's θ.
+        cache.update(&kb, 2, 2, 2.0);
+        assert_eq!(cache.entry(&kb, 2, 2), Some(2.0));
+        assert_eq!(cache.entry(&ka, 2, 2), None, "evicted key is a miss, not a wrong hint");
+        assert_eq!(cache.stats().entries, 1, "one word regardless of how many keys map to it");
     }
 
     #[test]
@@ -565,12 +796,14 @@ mod tests {
                 s.spawn(move || {
                     for i in 0..100 {
                         let key = k(&format!("k{}", (t + i) % 3));
-                        cache.update(&key, 8, 8, 1.0, 1.0 + i as f64);
+                        cache.update(&key, 8, 8, 1.0 + i as f64);
                         let _ = cache.hint_for(&key, 8, 8);
                     }
                 });
             }
         });
+        // k0/k1/k2 occupy three distinct slots (no collision among them),
+        // so exactly three words are live when the threads quiesce.
         assert_eq!(cache.stats().entries, 3);
     }
 }

@@ -19,15 +19,23 @@
 //!   bit-compatibly with the serial bi-level operator, or the **weighted**
 //!   ℓ₁,∞ projection ([`crate::projection::weighted`]) with per-group
 //!   prices from the request's `"weights"` field;
-//! - [`cache`] — a [`cache::ThetaCache`] that remembers θ* per
-//!   weight-matrix key — addressed by typed [`cache::CacheKey`]s (operator
-//!   [`cache::Family`] × client key, collision-proof by construction) —
-//!   and feeds the next projection of the same matrix a warm start through
-//!   the solvers' `theta_hint` plumbing;
+//! - [`cache`] — a lock-free [`cache::ThetaCache`] (a fixed table of
+//!   packed `AtomicU64` words; warm-hit lookups are a single relaxed
+//!   load, never a lock) that remembers θ* per weight-matrix key —
+//!   addressed by typed [`cache::CacheKey`]s (operator [`cache::Family`]
+//!   × client key, namespaced by construction) — and feeds the next
+//!   projection of the same matrix a warm start through the solvers'
+//!   `theta_hint` plumbing;
 //! - [`protocol`] + [`server`] — a line-delimited-JSON request/response
-//!   protocol over TCP (`l1inf serve --addr --threads`), one decoding
-//!   thread per connection, all connections sharing the projector pool and
-//!   the θ cache.
+//!   protocol over TCP (`l1inf serve --addr --threads`): one non-blocking
+//!   event-loop thread owns every socket and a bounded worker pool drains
+//!   the run queue, so idle connections cost no threads. Admission
+//!   control (`--max-inflight`) sheds excess load with the typed
+//!   `"overloaded"` error instead of queueing without bound. All workers
+//!   share the projector pool and the θ cache.
+//!
+//! The full wire reference is `docs/PROTOCOL.md`; the threading and
+//! memory-ordering story is `docs/CONCURRENCY.md`.
 //!
 //! The throughput experiment behind the `BENCH_serve.json` report lives in
 //! [`crate::experiments::servebench`] (`l1inf exp serve_bench`).

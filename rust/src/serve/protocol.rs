@@ -4,6 +4,11 @@
 //! Numbers ride the crate's own minimal JSON ([`crate::util::json`]) — the
 //! vendored crate set has no serde.
 //!
+//! The complete field-by-field wire reference (every op, every request
+//! and response field, every error shape, copy-pasteable examples) lives
+//! in `docs/PROTOCOL.md` at the repository root; this module documents
+//! the same surface from the implementation side.
+//!
 //! ```text
 //! → {"id":1,"op":"project","key":"w1","groups":3,"len":4,"radius":1.5,
 //!    "algo":"inv_order","return_data":true,"data":[...12 numbers...]}
@@ -91,10 +96,31 @@
 //! [`crate::projection::l1inf::delta`] docs) surface as
 //! `"fallback":true` in the response.
 //!
+//! # Errors and backpressure
+//!
 //! Malformed lines produce `{"id":…,"ok":false,"error":"…"}` and keep the
 //! connection open; when the bad request's `"mode"` field was parseable
 //! the error echoes it (`"mode":"bilevel"`), so clients can attribute
 //! failures per operator family.
+//!
+//! When the server is at its configured in-flight request cap
+//! (`serve.max_inflight`, `--max-inflight`), it **sheds** the request
+//! instead of queueing it. The rejection is typed so clients can tell
+//! backpressure (retry later) apart from request errors (fix the line):
+//!
+//! ```text
+//! ← {"id":12,"ok":false,"error":"overloaded: ...","overloaded":true}
+//! ```
+//!
+//! Shed lines are never parsed as JSON; the `"id"` is recovered
+//! best-effort by [`probe_id`] (0 when unrecoverable, matching how the
+//! parser addresses unidentifiable lines).
+//!
+//! # Reserved fields
+//!
+//! The request field `"precision"` is **reserved** for a future
+//! reduced-precision (f32 wire data) mode. Servers at this version ignore
+//! it; clients must not rely on any behavior when sending it.
 //!
 //! # The `stats` op
 //!
@@ -105,6 +131,21 @@
 //! process-global registry snapshot ([`crate::util::metrics`]) with every
 //! counter, gauge and histogram (count/sum/max/mean/p50/p90/p99 +
 //! cumulative log₂ buckets).
+//!
+//! # Examples
+//!
+//! The round-trip every server worker performs — parse one request line,
+//! render its response line:
+//!
+//! ```
+//! use l1inf::projection::l1inf::Algorithm;
+//! use l1inf::serve::protocol::{self, Request};
+//!
+//! let env = protocol::parse_request(r#"{"id":7,"op":"ping"}"#, Algorithm::InverseOrder).unwrap();
+//! assert_eq!(env.id, 7);
+//! assert!(matches!(env.req, Request::Ping));
+//! assert_eq!(protocol::pong_response(env.id), r#"{"id":7,"ok":true,"pong":true}"#);
+//! ```
 
 use crate::projection::l1inf::{Algorithm, ProjInfo};
 use crate::serve::batch::ProjKind;
@@ -611,12 +652,94 @@ pub fn shutdown_response(id: i64) -> String {
     Json::Obj(m).to_string()
 }
 
+/// Admission-control rejection (see `docs/PROTOCOL.md`): the server hit
+/// its in-flight request cap and refused to queue this line. Typed via
+/// `"overloaded":true` so clients can distinguish backpressure (back off
+/// and retry) from request errors (fix the line and resend).
+pub fn overloaded_response(id: i64) -> String {
+    let mut m = base(id, false);
+    m.insert(
+        "error".to_string(),
+        Json::Str("overloaded: server is at its in-flight request cap; retry later".to_string()),
+    );
+    m.insert("overloaded".to_string(), Json::Bool(true));
+    Json::Obj(m).to_string()
+}
+
+/// Best-effort `"id"` recovery from a raw request line the server sheds
+/// without parsing. Shed lines can be arbitrarily large (a multi-MB
+/// `project` body is exactly when the server is busiest), so this scans
+/// for the first `"id"` key followed by `:` and an integer instead of
+/// running the full JSON parser. Unrecoverable ids — absent, non-numeric,
+/// or not even JSON — yield 0, matching how [`parse_request`] addresses
+/// unidentifiable lines.
+pub fn probe_id(line: &str) -> i64 {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find("\"id\"") {
+        let mut j = from + pos + 4;
+        from = j;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= bytes.len() || bytes[j] != b':' {
+            continue; // `"id"` inside a string value, not a key.
+        }
+        j += 1;
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let start = j;
+        if j < bytes.len() && bytes[j] == b'-' {
+            j += 1;
+        }
+        let digits = j;
+        while j < bytes.len() && bytes[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j > digits {
+            if let Ok(v) = line[start..j].parse::<i64>() {
+                return v;
+            }
+        }
+        // Non-numeric value after the colon: keep scanning for a later
+        // genuine `"id"` key.
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse_request_d(line: &str) -> Result<Envelope, ParseError> {
         parse_request(line, Algorithm::InverseOrder)
+    }
+
+    #[test]
+    fn overloaded_response_is_typed() {
+        let resp = overloaded_response(9);
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("overloaded"), Some(&Json::Bool(true)));
+        assert!(v.get("error").and_then(Json::as_str).unwrap().contains("overloaded"));
+    }
+
+    #[test]
+    fn probe_id_recovers_ids_best_effort() {
+        assert_eq!(probe_id(r#"{"id":42,"op":"ping"}"#), 42);
+        assert_eq!(probe_id(r#"{"op":"ping","id": -7}"#), -7);
+        assert_eq!(probe_id(r#"{ "id" : 3 , "op":"ping"}"#), 3);
+        // `"id"` as a *string value* is skipped; the real key later wins.
+        assert_eq!(probe_id(r#"{"note":"id","id":5}"#), 5);
+        // Float ids truncate like the full parser's `as i64`.
+        assert_eq!(probe_id(r#"{"id":7.9,"op":"ping"}"#), 7);
+        // Unrecoverable: absent, non-numeric, or not JSON at all.
+        assert_eq!(probe_id(r#"{"op":"ping"}"#), 0);
+        assert_eq!(probe_id("not json at all"), 0);
+        assert_eq!(probe_id(r#"{"id":"nope"}"#), 0);
+        assert_eq!(probe_id(""), 0);
     }
 
     #[test]

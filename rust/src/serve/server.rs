@@ -1,49 +1,78 @@
 //! The TCP front of the projection service (`l1inf serve`).
 //!
-//! One OS thread per connection decodes line-delimited JSON requests
-//! ([`super::protocol`]); every connection shares one
+//! A single **event-loop thread** owns every socket: it accepts
+//! non-blocking connections, reads line-delimited JSON requests
+//! ([`super::protocol`]) into per-connection buffers, and hands complete
+//! lines to a **bounded worker pool** (`serve-worker-N`, one per
+//! projection thread) draining a shared run queue. Workers parse, solve
+//! and serialize; the event loop writes the rendered responses back.
+//! No thread is ever spawned per connection, so overload cannot spawn
+//! unbounded threads — and every connection shares one
 //! [`BatchProjector`] pool (matrix-sharded projections) and one
-//! [`ThetaCache`] (cross-request warm starts keyed by the client-supplied
-//! matrix key). A `shutdown` op from any client stops the accept loop —
-//! that is also how the integration tests tear the server down.
+//! [`ThetaCache`] (cross-request, lock-free warm starts keyed by the
+//! client-supplied matrix key). A `shutdown` op from any client drains
+//! the in-flight requests and stops the loop — that is also how the
+//! integration tests tear the server down. The full thread inventory and
+//! ownership map lives in `docs/CONCURRENCY.md`.
+//!
+//! # Admission control
+//!
+//! At most `max_inflight` requests (config `serve.max_inflight` /
+//! `--max-inflight`; 0 = unlimited) may be queued-or-running at once.
+//! Past the cap the event loop **sheds**: it answers the line directly
+//! with the typed `"overloaded"` error (see `docs/PROTOCOL.md`) without
+//! ever touching the run queue, so overload degrades into fast typed
+//! rejections instead of unbounded queueing. Every non-empty request
+//! line increments exactly one of `serve.admission.accepted` or
+//! `serve.admission.shed`. One request per connection is in flight at a
+//! time; while it runs, the connection's socket is not read, so TCP
+//! backpressure throttles pipelining clients for free.
 //!
 //! # Observability
 //!
 //! Every request records into the global metrics plane
-//! ([`crate::util::metrics`]): per-op counters (`serve.op.*`), an
-//! in-flight gauge, and the end-to-end `serve.request.latency_us`
-//! histogram. `{"op":"stats"}` returns the full snapshot; with
-//! `metrics_snapshot` configured the server also rewrites a snapshot file
-//! on an interval and at shutdown (the vendored crate set has no `libc`,
-//! so there is no SIGTERM hook — the interval + shutdown writes cover
-//! orderly teardown, and `l1inf stats` reads the file back offline).
+//! ([`crate::util::metrics`]): per-op counters (`serve.op.*`), the
+//! admission counters, a `serve.inflight` gauge, and the end-to-end
+//! `serve.request.latency_us` histogram. `{"op":"stats"}` returns the
+//! full snapshot; with `metrics_snapshot` configured the server also
+//! rewrites a snapshot file on an interval and at shutdown (the vendored
+//! crate set has no `libc`, so there is no SIGTERM hook — the interval +
+//! shutdown writes cover orderly teardown, and `l1inf stats` reads the
+//! file back offline).
 //!
 //! With tracing on (`[serve] trace = true` / `--trace`, or implied by a
 //! `slow_ms` budget) every request line gets a trace id (echoed as
 //! `"trace"` in its response) and records a span tree into the
 //! [`crate::util::trace`] flight recorder: `serve.request` →
-//! `serve.parse` / solver phases / `serve.respond`. `{"op":"trace"}`
-//! drains the recorder as JSON (`"clear":true` also resets it) and
-//! `l1inf trace` renders the drain as Chrome trace-event JSON; requests
-//! over the `slow_ms` budget log their phase breakdown at `warn` level.
+//! `serve.parse` / solver phases / `serve.respond` (all recorded on the
+//! worker that runs the request). `{"op":"trace"}` drains the recorder
+//! as JSON (`"clear":true` also resets it) and `l1inf trace` renders the
+//! drain as Chrome trace-event JSON; requests over the `slow_ms` budget
+//! log their phase breakdown at `warn` level.
 
 use super::batch::{self, BatchProjector, ProjKind};
 use super::cache::{CacheKey, DeltaStore, Family, ThetaCache};
 use super::protocol::{self, DeltaRequest, ProjectRequest, Request};
-use crate::projection::l1inf::Delta;
 use crate::config::serve::ServeConfig;
 use crate::metric_counter;
-use crate::projection::l1inf::Algorithm;
+use crate::projection::l1inf::{Algorithm, Delta};
 use crate::util::json::Json;
 use crate::util::Timer;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-/// Shared per-connection context.
+/// Idle tick of the event loop when no socket or worker made progress.
+/// Short enough that request latency stays sub-millisecond, long enough
+/// that an idle server burns no measurable CPU.
+const IDLE_TICK: Duration = Duration::from_micros(300);
+
+/// Shared context: the event loop, every worker and the snapshot writer
+/// hold a clone.
 #[derive(Clone)]
 struct Shared {
     pool: Arc<BatchProjector>,
@@ -54,7 +83,6 @@ struct Shared {
     served: Arc<AtomicU64>,
     shutdown: Arc<AtomicBool>,
     default_algo: Algorithm,
-    addr: SocketAddr,
     /// Server start (the `uptime_secs` origin of stats responses).
     start: Instant,
     /// Snapshot file rewritten on an interval and at shutdown.
@@ -62,6 +90,8 @@ struct Shared {
     metrics_interval_secs: f64,
     /// Log a phase breakdown of requests slower than this (ms; 0 = off).
     slow_ms: f64,
+    /// Admission cap: queued-or-running requests; 0 = unlimited.
+    max_inflight: usize,
 }
 
 impl Shared {
@@ -88,6 +118,156 @@ impl Shared {
     }
 }
 
+/// One unit of work for the pool: a complete request line from one
+/// connection, or the teardown sentinel.
+enum WorkItem {
+    Line { conn_id: u64, line: String },
+    Exit,
+}
+
+/// The bounded run queue workers drain. Plain mutex + condvar: pushes
+/// happen once per request on the event loop (not the θ hot path), and
+/// workers block here between requests.
+#[derive(Default)]
+struct RunQueue {
+    items: Mutex<VecDeque<WorkItem>>,
+    ready: Condvar,
+}
+
+impl RunQueue {
+    fn push(&self, item: WorkItem) {
+        self.items.lock().expect("run queue poisoned").push_back(item);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self) -> WorkItem {
+        let mut items = self.items.lock().expect("run queue poisoned");
+        loop {
+            if let Some(item) = items.pop_front() {
+                return item;
+            }
+            items = self.ready.wait(items).expect("run queue poisoned");
+        }
+    }
+}
+
+/// A finished request: the rendered response line for `conn_id`.
+struct Done {
+    conn_id: u64,
+    line: String,
+    is_shutdown: bool,
+}
+
+/// Per-connection state owned by the event loop. All socket I/O is
+/// non-blocking; partial reads/writes park in `rbuf`/`wbuf` until the
+/// next readiness poll.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet consumed as complete lines.
+    rbuf: Vec<u8>,
+    /// Rendered response bytes not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// A request from this connection is queued or running. While true
+    /// the socket is not read (TCP backpressure) and no further line is
+    /// dispatched, so responses keep request order.
+    in_flight: bool,
+    /// Read side saw EOF or an error; the connection is dropped once the
+    /// write buffer drains and nothing is in flight.
+    closed: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn { stream, rbuf: Vec::new(), wbuf: Vec::new(), in_flight: false, closed: false }
+    }
+
+    /// Drain the socket into `rbuf` until it would block. Returns true if
+    /// any bytes arrived.
+    fn fill(&mut self) -> bool {
+        let mut progressed = false;
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Next complete line from `rbuf` (newline stripped), or — once the
+    /// read side closed — the unterminated tail, matching the old
+    /// `BufRead::lines` behavior for clients that shut down their write
+    /// half after a final newline-less request.
+    fn next_line(&mut self) -> Option<String> {
+        if let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(&self.rbuf[..pos]).into_owned();
+            self.rbuf.drain(..=pos);
+            return Some(line);
+        }
+        if self.closed && !self.rbuf.is_empty() {
+            let line = String::from_utf8_lossy(&self.rbuf).into_owned();
+            self.rbuf.clear();
+            return Some(line);
+        }
+        None
+    }
+
+    /// Queue a response line for writing.
+    fn push_response(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Write as much of `wbuf` as the socket accepts without blocking.
+    fn flush(&mut self) {
+        while !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => {
+                    self.closed = true;
+                    self.wbuf.clear();
+                    break;
+                }
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closed = true;
+                    self.wbuf.clear();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Teardown flush: switch back to blocking and push out whatever is
+    /// left (e.g. the `shutdown` response), ignoring failures — the peer
+    /// may already be gone.
+    fn final_flush(&mut self) {
+        if self.wbuf.is_empty() || self.closed {
+            return;
+        }
+        let _ = self.stream.set_nonblocking(false);
+        let _ = self.stream.write_all(&self.wbuf);
+        let _ = self.stream.flush();
+        self.wbuf.clear();
+    }
+}
+
 /// A bound (but not yet running) projection service.
 pub struct Server {
     listener: TcpListener,
@@ -99,7 +279,6 @@ impl Server {
     pub fn bind(cfg: &ServeConfig) -> Result<Server> {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
-        let addr = listener.local_addr().context("reading bound address")?;
         // A slow-request budget needs the span trees to print, so it
         // implies recording.
         if cfg.trace || cfg.slow_ms > 0.0 {
@@ -112,11 +291,11 @@ impl Server {
             served: Arc::new(AtomicU64::new(0)),
             shutdown: Arc::new(AtomicBool::new(false)),
             default_algo: cfg.algo,
-            addr,
             start: Instant::now(),
             metrics_snapshot: cfg.metrics_snapshot.as_deref().map(Arc::from),
             metrics_interval_secs: cfg.metrics_interval_secs,
             slow_ms: cfg.slow_ms,
+            max_inflight: cfg.max_inflight,
         };
         Ok(Server { listener, shared })
     }
@@ -126,16 +305,20 @@ impl Server {
         self.listener.local_addr().context("reading bound address")
     }
 
-    /// Worker threads in the projection pool.
+    /// Worker threads in the projection pool (also the number of
+    /// request-serving workers).
     pub fn threads(&self) -> usize {
         self.shared.pool.threads()
     }
 
-    /// Accept-and-serve until a client sends `shutdown`. Each connection
-    /// gets its own decoding thread; projections run on the shared pool.
+    /// Run the readiness-polled event loop until a client sends
+    /// `shutdown`; in-flight requests drain before it returns. The
+    /// calling thread becomes the event loop; requests execute on the
+    /// `serve-worker-N` pool.
     pub fn run(self) -> Result<()> {
-        let snapshot_writer = self.shared.metrics_snapshot.is_some().then(|| {
-            let shared = self.shared.clone();
+        let Server { listener, shared } = self;
+        let snapshot_writer = shared.metrics_snapshot.is_some().then(|| {
+            let shared = shared.clone();
             std::thread::Builder::new()
                 .name("serve-snapshot".to_string())
                 .spawn(move || {
@@ -155,83 +338,174 @@ impl Server {
                 })
                 .expect("spawn snapshot writer")
         });
+
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let queue = Arc::new(RunQueue::default());
+        let (tx, rx) = mpsc::channel::<Done>();
+        let workers: Vec<_> = (0..shared.pool.threads().max(1))
+            .map(|w| {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(&queue, &tx, &shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        drop(tx);
+
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
         let mut conn_seq = 0u64;
-        for stream in self.listener.incoming() {
-            if self.shared.shutdown.load(Ordering::SeqCst) {
+        let mut inflight = 0usize;
+        let mut stopping = false;
+        loop {
+            let mut progress = false;
+
+            // ── accept ──────────────────────────────────────────────────
+            if !stopping {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => match stream.set_nonblocking(true) {
+                            Ok(()) => {
+                                conn_seq += 1;
+                                conns.insert(conn_seq, Conn::new(stream));
+                                progress = true;
+                            }
+                            Err(e) => crate::warn!("serve: non-blocking {peer}: {e}"),
+                        },
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) => {
+                            crate::warn!("serve: accept failed: {e}");
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // ── read ready sockets, dispatch complete lines ─────────────
+            if !stopping {
+                for (&id, conn) in conns.iter_mut() {
+                    if conn.in_flight || conn.closed {
+                        continue;
+                    }
+                    progress |= conn.fill();
+                    progress |= dispatch_ready(id, conn, &mut inflight, &shared, &queue);
+                }
+            }
+
+            // ── collect finished requests ───────────────────────────────
+            while let Ok(done) = rx.try_recv() {
+                progress = true;
+                inflight -= 1;
+                crate::metric_gauge!("serve.inflight").set(inflight as f64);
+                if done.is_shutdown {
+                    stopping = true;
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                }
+                if let Some(conn) = conns.get_mut(&done.conn_id) {
+                    conn.push_response(&done.line);
+                    conn.in_flight = false;
+                    if !stopping {
+                        // Pipelined lines already buffered dispatch now —
+                        // the socket itself is only read again next tick.
+                        dispatch_ready(done.conn_id, conn, &mut inflight, &shared, &queue);
+                    }
+                }
+            }
+
+            // ── write, then reap dead connections ───────────────────────
+            conns.retain(|_, conn| {
+                conn.flush();
+                conn.in_flight || !conn.wbuf.is_empty() || !conn.closed
+            });
+
+            if stopping && inflight == 0 {
                 break;
             }
-            match stream {
-                Ok(stream) => {
-                    let shared = self.shared.clone();
-                    conn_seq += 1;
-                    std::thread::Builder::new()
-                        .name(format!("serve-conn-{conn_seq}"))
-                        .spawn(move || {
-                            let peer = stream
-                                .peer_addr()
-                                .map(|a| a.to_string())
-                                .unwrap_or_else(|_| "?".into());
-                            if let Err(e) = handle_connection(stream, &shared) {
-                                crate::debug!("serve: connection {peer} closed: {e}");
-                            }
-                        })
-                        .expect("spawn connection handler");
-                }
-                Err(e) => crate::warn!("serve: accept failed: {e}"),
+            if !progress {
+                std::thread::sleep(IDLE_TICK);
             }
+        }
+
+        // ── teardown: stop workers, push out buffered responses ─────────
+        for _ in &workers {
+            queue.push(WorkItem::Exit);
+        }
+        for handle in workers {
+            let _ = handle.join();
+        }
+        for conn in conns.values_mut() {
+            conn.final_flush();
         }
         if let Some(handle) = snapshot_writer {
             let _ = handle.join();
         }
         // Final write so post-mortem `l1inf stats` sees the full session.
-        self.shared.write_snapshot();
-        crate::info!("serve: shutdown requested, accept loop stopped");
+        shared.write_snapshot();
+        crate::info!("serve: shutdown requested, event loop stopped");
         Ok(())
     }
 }
 
-/// Address the shutdown handler connects to in order to wake the accept
-/// loop. A wildcard bind (0.0.0.0 / ::) is not connectable on every
-/// platform — substitute the matching loopback.
-fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
-    if addr.ip().is_unspecified() {
-        match addr {
-            SocketAddr::V4(_) => addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)),
-            SocketAddr::V6(_) => addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)),
-        }
-    }
-    addr
-}
-
-fn write_line(writer: &mut BufWriter<TcpStream>, line: &str) -> std::io::Result<()> {
-    writer.write_all(line.as_bytes())?;
-    writer.write_all(b"\n")?;
-    writer.flush()
-}
-
-fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+/// Pull complete lines out of `conn` and either enqueue them (admission
+/// permitting) or shed them with the typed `"overloaded"` response. Stops
+/// once a line is in flight — one request per connection at a time keeps
+/// response order. Returns true if any line was consumed.
+fn dispatch_ready(
+    conn_id: u64,
+    conn: &mut Conn,
+    inflight: &mut usize,
+    shared: &Shared,
+    queue: &RunQueue,
+) -> bool {
+    let mut progressed = false;
+    while !conn.in_flight {
+        let Some(line) = conn.next_line() else { break };
+        progressed = true;
         if line.trim().is_empty() {
             continue;
         }
+        if shared.max_inflight > 0 && *inflight >= shared.max_inflight {
+            // Shed on the event loop: never touches the run queue. The id
+            // is recovered best-effort from the raw line so the client can
+            // correlate the rejection.
+            metric_counter!("serve.admission.shed").inc();
+            conn.push_response(&protocol::overloaded_response(protocol::probe_id(&line)));
+            continue;
+        }
+        metric_counter!("serve.admission.accepted").inc();
+        *inflight += 1;
+        crate::metric_gauge!("serve.inflight").set(*inflight as f64);
+        conn.in_flight = true;
+        queue.push(WorkItem::Line { conn_id, line });
+    }
+    progressed
+}
+
+/// One pool worker: block on the run queue, execute requests end to end
+/// (parse → dispatch → serialize, all under the request's trace spans),
+/// hand the rendered line back to the event loop.
+fn worker_loop(queue: &RunQueue, results: &mpsc::Sender<Done>, shared: &Shared) {
+    loop {
+        let (conn_id, line) = match queue.pop() {
+            WorkItem::Exit => return,
+            WorkItem::Line { conn_id, line } => (conn_id, line),
+        };
         // One trace id per request line; the root span scopes the whole
         // decode → solve → respond path so every solver phase lands as a
         // descendant in the span tree. Events publish when spans drop, so
         // the root closes (and the trace id is fully drainable) right
         // before the slow-budget check below.
         let t = Timer::start();
-        let trace_id =
-            crate::util::trace::enabled().then(crate::util::trace::next_trace_id);
-        let mut is_shutdown = false;
+        let trace_id = crate::util::trace::enabled().then(crate::util::trace::next_trace_id);
         {
             let _root = trace_id.map(|tid| crate::util::trace::begin(tid, "serve.request"));
             let parsed = {
                 let _p = crate::trace_span!("serve.parse");
                 protocol::parse_request(&line, shared.default_algo)
             };
+            let mut is_shutdown = false;
             let resp = match parsed {
                 Err(e) => {
                     metric_counter!("serve.op.error").inc();
@@ -276,7 +550,9 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
                 None => resp,
             };
             let _w = crate::trace_span!("serve.respond");
-            write_line(&mut writer, &resp)?;
+            if results.send(Done { conn_id, line: resp, is_shutdown }).is_err() {
+                return; // event loop gone — teardown already past us
+            }
         }
         if shared.slow_ms > 0.0 && t.millis() > shared.slow_ms {
             if let Some(tree) = trace_id.and_then(crate::util::trace::render_trace) {
@@ -287,15 +563,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> std::io::Result<()> 
                 );
             }
         }
-        if is_shutdown {
-            shared.shutdown.store(true, Ordering::SeqCst);
-            // Unblock the (blocking) accept loop with a no-op connection
-            // so it observes the flag and exits.
-            let _ = TcpStream::connect(wake_addr(shared.addr));
-            return Ok(());
-        }
     }
-    Ok(())
 }
 
 fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
@@ -329,7 +597,7 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
             let ms = t.millis();
             if let Some(k) = ns_key.as_ref() {
                 if !info.feasible {
-                    shared.cache.update(k, n_groups, group_len, radius, info.theta);
+                    shared.cache.update(k, n_groups, group_len, info.theta);
                 }
             }
             let payload = if return_data { Some(&data[..]) } else { None };
@@ -343,7 +611,7 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
             let ms = t.millis();
             if let Some(k) = ns_key.as_ref() {
                 if !info.feasible {
-                    shared.cache.update(k, n_groups, group_len, radius, info.tau);
+                    shared.cache.update(k, n_groups, group_len, info.tau);
                 }
             }
             let payload = if return_data { Some(&data[..]) } else { None };
@@ -362,7 +630,7 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
             let ms = t.millis();
             if let Some(k) = ns_key.as_ref() {
                 if !info.feasible {
-                    shared.cache.update(k, n_groups, group_len, radius, info.theta);
+                    shared.cache.update(k, n_groups, group_len, info.theta);
                 }
             }
             let payload = if return_data { Some(&data[..]) } else { None };
@@ -398,7 +666,7 @@ fn run_delta(id: i64, req: DeltaRequest, shared: &Shared) -> String {
                 }
                 Ok(out) => {
                     if !out.info.feasible && out.info.theta > 0.0 {
-                        shared.cache.update(&ck, n_groups, group_len, radius, out.info.theta);
+                        shared.cache.update(&ck, n_groups, group_len, out.info.theta);
                     }
                     let payload = return_data.then(|| e.solver.x());
                     protocol::delta_response(
@@ -453,7 +721,7 @@ fn run_delta(id: i64, req: DeltaRequest, shared: &Shared) -> String {
                 }
                 Ok(out) => {
                     if !out.info.feasible && out.info.theta > 0.0 {
-                        shared.cache.update(&ck, n_groups, group_len, radius, out.info.theta);
+                        shared.cache.update(&ck, n_groups, group_len, out.info.theta);
                     }
                     let payload = return_data.then(|| e.solver.x());
                     protocol::delta_response(

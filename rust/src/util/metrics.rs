@@ -32,6 +32,24 @@
 //! [`prometheus_text`] converts a snapshot (or a full stats response
 //! embedding one under `"metrics"`) into Prometheus text exposition for
 //! `l1inf stats --format prom`.
+//!
+//! # Examples
+//!
+//! Record through the per-call-site macros, read back through the global
+//! registry (the registry is process-global, so counts only ever grow):
+//!
+//! ```
+//! use l1inf::metric_counter;
+//! use l1inf::util::metrics::global;
+//!
+//! metric_counter!("docs.example.requests").inc();
+//! metric_counter!("docs.example.requests").add(2);
+//! assert!(global().counter("docs.example.requests").get() >= 3);
+//!
+//! let hist = global().histogram("docs.example.latency_us");
+//! hist.record(120);
+//! assert!(hist.snapshot().count >= 1);
+//! ```
 
 use crate::serve::cache::Family;
 use crate::util::json::Json;

@@ -1,0 +1,244 @@
+//! Contention tests of the lock-free serve plane: colliding-slot traffic
+//! against the packed-word [`ThetaCache`] (no torn θ reads, no
+//! cross-family feeding, lossy-but-never-blended eviction — the
+//! invariants documented in `docs/CONCURRENCY.md`) and admission-control
+//! shedding over the real TCP surface (the typed `"overloaded"` error of
+//! `docs/PROTOCOL.md`).
+
+use l1inf::config::serve::ServeConfig;
+use l1inf::serve::cache::{CacheKey, Family, ThetaCache};
+use l1inf::serve::server::Server;
+use l1inf::util::json::{self, Json};
+use l1inf::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// First pair of `k{i}` keys in one family whose hashes land on the same
+/// table slot. [`ThetaCache::slot_of`] is deterministic, so this search
+/// always finds the same pair (their 22-bit fingerprints differ — the
+/// fingerprint is drawn from different hash bits than the slot).
+fn colliding_pair(family: Family) -> (CacheKey, CacheKey) {
+    let mut seen: HashMap<usize, usize> = HashMap::new();
+    for i in 0..200_000usize {
+        let key = CacheKey::new(family, format!("k{i}"));
+        let slot = ThetaCache::slot_of(&key);
+        if let Some(&j) = seen.get(&slot) {
+            return (CacheKey::new(family, format!("k{j}")), key);
+        }
+        seen.insert(slot, i);
+    }
+    panic!("no colliding pair within 200k keys");
+}
+
+/// N threads hammer two keys that share one table slot. Every observed θ
+/// must be (a) untorn — θ and its fingerprint travel in one atomic word,
+/// so a read can never blend two writers — and (b) attributed to the key
+/// it was recorded under: the keys' fingerprints differ, so the loser of
+/// the slot reads as a miss, never as the winner's value.
+#[test]
+fn colliding_slots_never_tear_or_cross_feed() {
+    let (ka, kb) = colliding_pair(Family::Exact);
+    assert_eq!(ThetaCache::slot_of(&ka), ThetaCache::slot_of(&kb));
+    let cache = ThetaCache::new();
+    const G: usize = 12;
+    const L: usize = 6;
+    // Disjoint integer θ ranges per key (integers are f32-exact, so a
+    // round-tripped θ compares with ==).
+    const A_BASE: u32 = 1000;
+    const B_BASE: u32 = 5000;
+    const ITERS: usize = 20_000;
+
+    std::thread::scope(|s| {
+        let cache = &cache;
+        for (key, base) in [(&ka, A_BASE), (&kb, B_BASE), (&ka, A_BASE), (&kb, B_BASE)] {
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    cache.update(key, G, L, f64::from(base + (i as u32 % 100)));
+                }
+            });
+        }
+        for (key, base) in [(&ka, A_BASE), (&kb, B_BASE)] {
+            s.spawn(move || {
+                for _ in 0..ITERS {
+                    if let Some(theta) = cache.entry(key, G, L) {
+                        assert_eq!(theta.fract(), 0.0, "torn θ read for {key}: {theta}");
+                        let t = theta as u32;
+                        assert!(
+                            (base..base + 100).contains(&t),
+                            "θ {t} under {key} came from the other writer's range"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // Lossy eviction, not corruption: exactly one collider owns the slot.
+    let a_alive = cache.entry(&ka, G, L);
+    let b_alive = cache.entry(&kb, G, L);
+    assert!(
+        a_alive.is_some() ^ b_alive.is_some(),
+        "one last writer must own the slot: {a_alive:?} vs {b_alive:?}"
+    );
+    // Every valid update counted, overwritten or not.
+    assert_eq!(cache.family_stats(Family::Exact).updates, (4 * ITERS) as u64);
+}
+
+/// Two *families* hammering one shared slot: the packed word carries a
+/// 2-bit family tag, so a bilevel τ can never surface as an exact θ (or
+/// vice versa) no matter how the writes interleave.
+#[test]
+fn families_never_cross_feed_even_on_a_shared_slot() {
+    let ka = CacheKey::new(Family::Exact, "alpha");
+    let kb = (0..200_000usize)
+        .map(|i| CacheKey::new(Family::Bilevel, format!("b{i}")))
+        .find(|k| ThetaCache::slot_of(k) == ThetaCache::slot_of(&ka))
+        .expect("no cross-family slot collision within 200k keys");
+    let cache = ThetaCache::new();
+    const G: usize = 10;
+    const L: usize = 4;
+    const A_BASE: u32 = 100;
+    const B_BASE: u32 = 900;
+    const ITERS: usize = 20_000;
+
+    std::thread::scope(|s| {
+        let cache = &cache;
+        for (key, base) in [(&ka, A_BASE), (&kb, B_BASE)] {
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    cache.update(key, G, L, f64::from(base + (i as u32 % 100)));
+                }
+            });
+        }
+        for (key, base) in [(&ka, A_BASE), (&kb, B_BASE)] {
+            s.spawn(move || {
+                for _ in 0..ITERS {
+                    if let Some(theta) = cache.entry(key, G, L) {
+                        let t = theta as u32;
+                        assert!(
+                            theta.fract() == 0.0 && (base..base + 100).contains(&t),
+                            "family {} read θ {theta} from the other family",
+                            key.family.name()
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    // The slot belongs to whichever family wrote last — never both.
+    let a_alive = cache.entry(&ka, G, L);
+    let b_alive = cache.entry(&kb, G, L);
+    assert!(
+        a_alive.is_some() ^ b_alive.is_some(),
+        "families may evict each other but never co-own a slot: {a_alive:?} vs {b_alive:?}"
+    );
+}
+
+/// Admission control over the real TCP surface: with a single worker and
+/// `max_inflight = 1`, a huge in-flight request forces every concurrent
+/// line into the typed `"overloaded"` rejection (served straight from the
+/// event loop), the shed/accepted counters surface over `stats`, and the
+/// pinned request itself still completes.
+#[test]
+fn overload_sheds_with_typed_error_and_counters() {
+    let sc = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        threads: 1,
+        max_inflight: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&sc).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+
+    // Connection A: one very large projection (a ~13 MB request line) that
+    // pins the single worker in parse → solve → render for a long window.
+    let (groups, len) = (200_000usize, 8usize);
+    let mut rng = Rng::new(0x0BE5E);
+    let mut y = vec![0.0f32; groups * len];
+    rng.fill_uniform_f32(&mut y);
+    let data = y.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+    let big = format!(
+        r#"{{"id":1,"op":"project","groups":{groups},"len":{len},"radius":0.5,"data":[{data}]}}"#
+    );
+    let mut a = TcpStream::connect(addr).unwrap();
+    a.write_all(big.as_bytes()).unwrap();
+    a.write_all(b"\n").unwrap();
+    a.flush().unwrap();
+    // `write_all` returning means the server ingested all but at most the
+    // socket buffers; the pause lets the event loop read the tail and
+    // dispatch the line, so the worker is provably busy before the probes.
+    std::thread::sleep(Duration::from_millis(100));
+
+    // Connection B: pings while the worker is pinned. The in-flight cap is
+    // taken, so the event loop sheds them without touching the run queue.
+    let b = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(b.try_clone().unwrap());
+    let mut writer = b;
+    let mut roundtrip = |line: String| -> Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        json::parse(&resp).unwrap()
+    };
+    let mut sheds = 0u64;
+    let mut pongs = 0u64;
+    for i in 0..200_000u64 {
+        let id = 100 + i;
+        let v = roundtrip(format!(r#"{{"id":{id},"op":"ping"}}"#));
+        if v.get("overloaded") == Some(&Json::Bool(true)) {
+            assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "shed must be ok:false: {v}");
+            assert_eq!(
+                v.get("id").and_then(Json::as_f64),
+                Some(id as f64),
+                "shed response must echo the probed id"
+            );
+            assert!(
+                v.get("error").and_then(Json::as_str).unwrap().contains("overloaded"),
+                "shed error text: {v}"
+            );
+            sheds += 1;
+        } else if v.get("pong") == Some(&Json::Bool(true)) {
+            pongs += 1;
+            if sheds > 0 {
+                break; // saw backpressure, then recovery — done probing
+            }
+        } else {
+            panic!("unexpected response under overload: {v}");
+        }
+    }
+    assert!(sheds >= 1, "no request was shed while the worker was pinned");
+    assert!(pongs >= 1, "server never recovered to serve a ping");
+
+    // The pinned request was accepted before the cap contended; its
+    // response still arrives intact.
+    let mut a_reader = BufReader::new(a);
+    let mut resp = String::new();
+    a_reader.read_line(&mut resp).unwrap();
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "pinned request must still succeed");
+
+    // Both admission counters surface over the stats op.
+    let v = roundtrip(r#"{"id":900,"op":"stats"}"#.to_string());
+    let counters = v
+        .get("metrics")
+        .and_then(|m| m.get("counters"))
+        .expect("stats carries the metrics counters");
+    assert!(
+        counters.get("serve.admission.shed").and_then(Json::as_f64).unwrap() >= sheds as f64,
+        "shed counter must cover every typed rejection: {counters}"
+    );
+    assert!(
+        counters.get("serve.admission.accepted").and_then(Json::as_f64).unwrap() >= 2.0,
+        "accepted counter must cover the pinned request and the pong"
+    );
+
+    let v = roundtrip(r#"{"id":901,"op":"shutdown"}"#.to_string());
+    assert_eq!(v.get("shutting_down"), Some(&Json::Bool(true)));
+    handle.join().unwrap().unwrap();
+}

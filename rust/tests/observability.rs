@@ -230,6 +230,13 @@ fn stats_reconcile_exactly_with_traffic() {
     assert_eq!(d("serve.op.project"), 9.0);
     assert_eq!(d("serve.op.delta"), 6.0, "3 served + 3 typed-error delta requests");
     assert_eq!(d("serve.op.error"), 6.0, "2 project parse + 3 typed delta + 1 delta parse");
+    // Admission control: an uncontended session (default in-flight cap)
+    // accepts every line and sheds none.
+    assert_eq!(d("serve.admission.shed"), 0.0, "nothing sheds below the in-flight cap");
+    assert!(
+        d("serve.admission.accepted") >= d("serve.op.project") + d("serve.op.delta"),
+        "every dispatched line was admitted first"
+    );
     // Delta counters reconcile against the responses above: the identical
     // re-send repaired 1 group, the oversized fallback repaired all 3 (and
     // is the only fallback); init records nothing.
