@@ -68,6 +68,7 @@ pub const PROJECTION_MODE_NAMES: &[&str] = &[
     "delta",
     "bilevel",
     "bilevel_cols",
+    "multilevel",
     "l1inf_masked",
     "masked",
     "weighted_l1inf",
@@ -87,6 +88,10 @@ pub fn projection_mode(name: &str, radius: f64) -> Result<ProjectionMode> {
         "l1inf_delta" | "delta" => ProjectionMode::L1InfDelta { c: radius },
         "bilevel" => ProjectionMode::Bilevel { c: radius },
         "bilevel_cols" => ProjectionMode::BilevelCols { c: radius },
+        "multilevel" => ProjectionMode::Multilevel {
+            c: radius,
+            depth: crate::projection::multilevel::DEFAULT_DEPTH,
+        },
         "l1inf_masked" | "masked" => ProjectionMode::L1InfMasked { c: radius },
         "weighted_l1inf" | "weighted" => ProjectionMode::WeightedL1Inf { c: radius },
         "weighted_l1inf_cols" | "weighted_cols" => {
@@ -168,6 +173,18 @@ mod tests {
     }
 
     #[test]
+    fn parses_multilevel_mode_with_default_depth() {
+        assert!(matches!(
+            projection_mode("multilevel", 0.7).unwrap(),
+            ProjectionMode::Multilevel { c, depth }
+                if c == 0.7 && depth == crate::projection::multilevel::DEFAULT_DEPTH
+        ));
+        let cfg = Config::parse("[train]\nprojection = \"multilevel\"\nradius = 3\n").unwrap();
+        let tc = train_config(&cfg).unwrap();
+        assert!(matches!(tc.projection, ProjectionMode::Multilevel { c, .. } if c == 3.0));
+    }
+
+    #[test]
     fn rejects_unknown_projection() {
         assert!(projection_mode("l3", 1.0).is_err());
         let cfg = Config::parse("[train]\nexec = \"sideways\"\n").unwrap();
@@ -200,6 +217,7 @@ mod tests {
             ProjectionMode::L1InfDelta { c: 1.0 },
             ProjectionMode::Bilevel { c: 1.0 },
             ProjectionMode::BilevelCols { c: 1.0 },
+            ProjectionMode::Multilevel { c: 1.0, depth: 3 },
             ProjectionMode::L1InfMasked { c: 1.0 },
             ProjectionMode::WeightedL1Inf { c: 1.0 },
             ProjectionMode::WeightedL1InfCols { c: 1.0 },

@@ -130,6 +130,10 @@ fn extract(reports: &BTreeMap<&'static str, Json>, name: &str) -> Result<f64> {
             get("BENCH_serve.json", &["many_clients", "throughput_ratio"])
         }
         "bilevel.speedup_dense" => get("BENCH_bilevel.json", &["gate", "speedup"]),
+        "bilevel.multilevel_speedup" => get("BENCH_bilevel.json", &["multilevel", "speedup"]),
+        "bilevel.multilevel_agreement_max" => {
+            get("BENCH_bilevel.json", &["multilevel", "agreement_max"])
+        }
         "kernels.speedup_pre_pass_dense_contig" => get("BENCH_kernels.json", &["gate", "speedup"]),
         "kernels.agreement_max" => get("BENCH_kernels.json", &["agreement", "max"]),
         "weighted.uniform_agreement_max" => get("BENCH_weighted.json", &["agreement", "max"]),
@@ -368,7 +372,10 @@ mod tests {
         );
         write(
             &dir.join("BENCH_bilevel.json"),
-            &format!(r#"{{{meta}, "gate": {{"speedup": 3.5, "enforced": true}}}}"#),
+            &format!(
+                r#"{{{meta}, "gate": {{"speedup": 3.5, "enforced": true}},
+                   "multilevel": {{"speedup": 2.0, "agreement_max": 0.0}}}}"#
+            ),
         );
         write(
             &dir.join("BENCH_kernels.json"),
@@ -409,6 +416,8 @@ mod tests {
             "serve.trace_overhead_ratio": {"kind": "max", "value": 1.05, "baseline": 1.0},
             "serve.many_clients_throughput_ratio": {"kind": "min", "value": 1.2, "baseline": 3.0},
             "bilevel.speedup_dense": {"kind": "min", "value": 1.5, "baseline": 3.0},
+            "bilevel.multilevel_speedup": {"kind": "min", "value": 0.8, "baseline": 2.0},
+            "bilevel.multilevel_agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},
             "kernels.speedup_pre_pass_dense_contig": {"kind": "min", "value": 1.5, "baseline": 2.5},
             "kernels.agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},
             "weighted.uniform_agreement_max": {"kind": "max", "value": 1e-6, "baseline": 0.0},

@@ -13,9 +13,17 @@
 //! (`‖X‖₁,∞ ≤ C·(1 + 1e-6)`) before any timing is trusted, and the tree
 //! cells double as a parallel-speedup demo (2 and 4 shards vs the serial
 //! bi-level operator).
+//!
+//! The dense radius additionally times the **k-level multilevel**
+//! operator over a depth × threads grid (`"multilevel"` in the report).
+//! Each cell is checked bit-identical to the serial bi-level result
+//! before its timing is trusted; the report carries the gated
+//! `speedup` (serial bi-level over the best parallel multilevel cell)
+//! and `agreement_max` (worst |Δ| across the grid — 0 by construction).
 
 use super::{projbench, ExpOpts};
 use crate::projection::bilevel::{project_bilevel, project_bilevel_tree};
+use crate::projection::multilevel::project_multilevel;
 use crate::projection::l1inf::{project_l1inf, Algorithm};
 use crate::projection::{norm_l1inf, GroupedView};
 use crate::util::bench::{self, BenchOpts};
@@ -27,6 +35,13 @@ pub const BILEVEL_SPEEDUP_GATE: f64 = 2.0;
 
 /// Tree shard counts timed against the serial bi-level operator.
 const TREE_SHARDS: [usize; 2] = [2, 4];
+
+/// Multilevel recursion depths timed on the dense radius.
+const MULTILEVEL_DEPTHS: [usize; 3] = [2, 3, 4];
+
+/// Thread counts per multilevel depth (serial reference + one sharded
+/// schedule).
+const MULTILEVEL_THREADS: [usize; 2] = [1, 4];
 
 fn jobj(entries: Vec<(&str, Json)>) -> Json {
     Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -126,6 +141,71 @@ fn measure_cell(
     })
 }
 
+/// Time the k-level operator over the depth × threads grid on one
+/// radius. Every cell must reproduce the serial bi-level projection
+/// bit-for-bit before its timing is trusted (the recursion only
+/// re-partitions group ranges, so any divergence is a defect, not
+/// noise). Returns the report object and the gated speedup: serial
+/// bi-level `min_ms` over the best parallel multilevel cell.
+fn measure_multilevel(
+    data: &[f32],
+    n: usize,
+    m: usize,
+    radius: f64,
+    bilevel_min_ms: f64,
+    bopts: &BenchOpts,
+) -> Result<(Json, f64)> {
+    let mut reference = data.to_vec();
+    project_bilevel(&mut reference, m, n, radius);
+    let mut agreement_max = 0.0f64;
+    let mut cells = Vec::new();
+    let mut samples = Vec::new();
+    let mut best_parallel_ms = f64::INFINITY;
+    for depth in MULTILEVEL_DEPTHS {
+        for threads in MULTILEVEL_THREADS {
+            let mut x = data.to_vec();
+            project_multilevel(&mut x, m, n, radius, depth, threads);
+            let diff = x
+                .iter()
+                .zip(&reference)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .fold(0.0, f64::max);
+            ensure!(
+                x == reference,
+                "multilevel k={depth} x{threads} diverged from serial bi-level (max |Δ| {diff:e})"
+            );
+            agreement_max = agreement_max.max(diff);
+            let s = bench::run_case(
+                &format!("multilevel k={depth} x{threads} C={radius:.3}"),
+                bopts,
+                || data.to_vec(),
+                |mut y| {
+                    project_multilevel(&mut y, m, n, radius, depth, threads);
+                },
+            );
+            if threads > 1 {
+                best_parallel_ms = best_parallel_ms.min(s.min_ms());
+            }
+            cells.push(jobj(vec![
+                ("depth", Json::Num(depth as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("min_ms", Json::Num(s.min_ms())),
+            ]));
+            samples.push(s);
+        }
+    }
+    bench::print_table(&format!("bilevel_bench: multilevel dense (C={radius:.3})"), &samples);
+    let speedup = bilevel_min_ms / best_parallel_ms;
+    let report = jobj(vec![
+        ("radius", Json::Num(radius)),
+        ("bilevel_min_ms", Json::Num(bilevel_min_ms)),
+        ("cells", Json::Arr(cells)),
+        ("speedup", Json::Num(speedup)),
+        ("agreement_max", Json::Num(agreement_max)),
+    ]);
+    Ok((report, speedup))
+}
+
 fn cell_json(c: &Cell) -> Json {
     jobj(vec![
         ("label", Json::Str(c.label.into())),
@@ -170,6 +250,8 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
 
     let sparse = measure_cell(&data, n, m, radius_sparse, "sparse", &bopts)?;
     let dense = measure_cell(&data, n, m, radius_dense, "dense", &bopts)?;
+    let (multilevel, ml_speedup) =
+        measure_multilevel(&data, n, m, radius_dense, dense.bilevel_min_ms, &bopts)?;
     let gate_pass = dense.speedup >= BILEVEL_SPEEDUP_GATE;
     // The ISSUE gates the full 1000×4000 dense cell; a --quick run times a
     // shrunken matrix with few iterations on whatever (possibly loaded)
@@ -181,6 +263,10 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         dense.speedup,
         if gate_pass { "PASS" } else { "FAIL" },
         if enforce { "" } else { ", advisory under --quick" }
+    );
+    println!(
+        "multilevel (dense): best parallel cell {ml_speedup:.2}x vs serial bi-level \
+         (bit-identical across the grid)"
     );
 
     let report = jobj(vec![
@@ -195,6 +281,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         ),
         ("exact_algo", Json::Str(Algorithm::InverseOrder.name().into())),
         ("cases", Json::Arr(vec![cell_json(&sparse), cell_json(&dense)])),
+        ("multilevel", multilevel),
         (
             "gate",
             jobj(vec![
@@ -241,6 +328,15 @@ mod tests {
         assert!(v.get("meta").unwrap().get("git_rev").is_some());
         crate::util::bench::assert_kernel_stamp(v.get("meta").unwrap());
         assert!(v.get("gate").unwrap().get("speedup").unwrap().as_f64().is_some());
+        // The multilevel grid reports its gated ratio plus the (zero by
+        // construction) worst disagreement with the serial bi-level op.
+        let ml = v.get("multilevel").unwrap();
+        assert!(ml.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(ml.get("agreement_max").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            ml.get("cells").unwrap().as_arr().unwrap().len(),
+            MULTILEVEL_DEPTHS.len() * MULTILEVEL_THREADS.len()
+        );
         let cases = v.get("cases").unwrap().as_arr().unwrap();
         assert_eq!(cases.len(), 2);
         for c in cases {

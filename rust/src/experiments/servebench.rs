@@ -459,6 +459,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             algo: [Algorithm::InverseOrder, Algorithm::Newton, Algorithm::Bejar][i % 3],
             mode: ProjKind::Exact,
             weights: None,
+            depth: crate::projection::multilevel::DEFAULT_DEPTH,
         });
     }
     let pool_full = BatchProjector::new(0);

@@ -25,10 +25,15 @@
 //!   six implementations — gold bisection, Quattoni (total order), naive
 //!   active-set (Alg. 1), Bejar elimination, Chu semismooth Newton, and
 //!   the paper's **inverse total order** (Alg. 2).
-//! - [`bilevel`]  — the **bi-level / multi-level** operator family
-//!   (arXiv:2407.16293, arXiv:2405.02086): strictly linear-time,
-//!   embarrassingly parallel ℓ₁,∞-feasible projection — maxima extraction →
-//!   ℓ₁-simplex projection → per-group clamp — with a 2-level sharded tree.
+//! - [`bilevel`]  — the **bi-level** operator family (arXiv:2407.16293):
+//!   strictly linear-time, embarrassingly parallel ℓ₁,∞-feasible
+//!   projection — maxima extraction → ℓ₁-simplex projection → per-group
+//!   clamp — with a 2-level sharded tree.
+//! - [`multilevel`] — the **k-level multilevel** generalization
+//!   (arXiv:2405.02086): the same operator under a recursive shards →
+//!   subshards → groups → elements schedule with scoped threads per level,
+//!   bit-identical to the serial operator at every depth (k = 2 reduces
+//!   bit-exactly to the 2-level tree).
 //! - [`weighted`] — the **weighted** ℓ₁,∞ family (arXiv:2009.02980
 //!   lineage): per-group prices `w_g` scale each group's budget share —
 //!   weighted simplex kernel, weighted ℓ₁,∞ projection (bit-identical to
@@ -51,6 +56,7 @@ pub mod l12;
 pub mod l1inf;
 pub mod linf1;
 pub mod masked;
+pub mod multilevel;
 pub mod simplex;
 pub mod weighted;
 

@@ -22,6 +22,8 @@ use crate::projection::l1inf::{new_solver, project_with, DeltaSolver, Solver};
 #[cfg(feature = "pjrt")]
 use crate::projection::masked::project_masked;
 #[cfg(feature = "pjrt")]
+use crate::projection::multilevel::Multilevel;
+#[cfg(feature = "pjrt")]
 use crate::projection::weighted::WeightedSolver;
 #[cfg(feature = "pjrt")]
 use crate::projection::{l1, l12};
@@ -71,6 +73,12 @@ pub enum ProjectionMode {
     /// strided view (the bi-level analog of
     /// [`ProjectionMode::L1InfCols`]).
     BilevelCols { c: f64 },
+    /// k-level multilevel operator of radius `c` over feature rows
+    /// (arXiv:2405.02086, [`crate::projection::multilevel`]): the bi-level
+    /// operator under a recursive `depth`-level shard schedule —
+    /// bit-identical output at every depth, exponentially more parallel
+    /// slack in `depth`. The logged θ is the root simplex threshold τ.
+    Multilevel { c: f64, depth: usize },
     /// Masked ℓ₁,∞ (Eq. 20): keep the support, don't bound values.
     L1InfMasked { c: f64 },
     /// **Weighted** ℓ₁,∞ ball of radius `c` over feature rows
@@ -96,6 +104,7 @@ impl ProjectionMode {
             ProjectionMode::L1InfCols { .. } => "l1inf_cols",
             ProjectionMode::Bilevel { .. } => "bilevel",
             ProjectionMode::BilevelCols { .. } => "bilevel_cols",
+            ProjectionMode::Multilevel { .. } => "multilevel",
             ProjectionMode::L1InfMasked { .. } => "l1inf_masked",
             ProjectionMode::WeightedL1Inf { .. } => "weighted_l1inf",
             ProjectionMode::WeightedL1InfCols { .. } => "weighted_l1inf_cols",
@@ -269,6 +278,9 @@ pub struct Trainer<'e> {
     /// modes; its `last_radii` self-warm-start makes every epoch after the
     /// first skip the cold level-1 solve.
     bilevel: BilevelSolver,
+    /// Persistent k-level workspace for the `multilevel` mode; like the
+    /// bi-level one it self-warm-starts from its own last radii.
+    multilevel: Multilevel,
     /// Persistent weighted-projection workspace for the
     /// `weighted_l1inf[_cols]` modes (self-warm λ across epochs).
     weighted: WeightedSolver,
@@ -299,6 +311,7 @@ impl<'e> Trainer<'e> {
             theta_cache: ThetaCache::new(),
             solver,
             bilevel,
+            multilevel: Multilevel::new(crate::projection::multilevel::DEFAULT_DEPTH, 0),
             weighted: WeightedSolver::new(),
             resolved_weights: None,
             delta_solver: None,
@@ -560,6 +573,12 @@ impl<'e> Trainer<'e> {
             }
             ProjectionMode::BilevelCols { c } => {
                 self.bilevel.project(&mut GroupedViewMut::columns(w1, d, h), c, None).tau
+            }
+            ProjectionMode::Multilevel { c, depth } => {
+                // Same τ as the bi-level arm at any depth (bit-identical
+                // operator); the workspace self-warm-starts like bilevel.
+                self.multilevel.reconfigure(depth, 0);
+                self.multilevel.project(w1, d, h, c, None).tau
             }
             ProjectionMode::L1InfMasked { c } => project_masked(w1, d, h, c, algo).projection.theta,
         })

@@ -34,10 +34,11 @@
 //! fixed-point cost — and the default serving algorithm (inverse order)
 //! never materializes `|Y|` at all.
 
-use super::cache::{CacheKey, Family, ThetaCache};
+use super::cache::{CacheKey, Family, ThetaCache, REGISTRY};
 use crate::projection::bilevel::{shard_ranges, BilevelInfo, BilevelPool, TreeBilevel};
 use crate::projection::grouped::{GroupedView, GroupedViewMut};
 use crate::projection::l1inf::solver::{POOL_BUDGET_ELEMS, POOL_CAP};
+use crate::projection::multilevel::{MultilevelPool, DEFAULT_DEPTH};
 use crate::projection::l1inf::{
     apply_water_levels, project_with, water_levels, Algorithm, ProjInfo, SolveStats, Solver,
     SolverPool,
@@ -63,16 +64,18 @@ pub enum ProjKind {
     /// weights the result is bit-identical to `Exact` under the bisection
     /// solver.
     Weighted,
+    /// The k-level multilevel operator
+    /// ([`crate::projection::multilevel`]): the bi-level operator under a
+    /// recursive `depth`-level shard schedule, bit-identical output at
+    /// every depth. `"algo"` is ignored.
+    Multilevel,
 }
 
 impl ProjKind {
-    /// Canonical protocol string (`"mode"` field values).
+    /// Canonical protocol string (`"mode"` field values) — the
+    /// [registry](REGISTRY) row's mode string.
     pub fn name(&self) -> &'static str {
-        match self {
-            ProjKind::Exact => "exact",
-            ProjKind::Bilevel => "bilevel",
-            ProjKind::Weighted => "weighted",
-        }
+        self.family().spec().mode
     }
 
     /// The warm-start cache namespace this family's dual variable lives in.
@@ -81,6 +84,18 @@ impl ProjKind {
             ProjKind::Exact => Family::Exact,
             ProjKind::Bilevel => Family::Bilevel,
             ProjKind::Weighted => Family::Weighted,
+            ProjKind::Multilevel => Family::Multilevel,
+        }
+    }
+
+    /// The request kind serving a registry family (inverse of
+    /// [`ProjKind::family`]).
+    pub fn from_family(family: Family) -> ProjKind {
+        match family {
+            Family::Exact => ProjKind::Exact,
+            Family::Bilevel => ProjKind::Bilevel,
+            Family::Weighted => ProjKind::Weighted,
+            Family::Multilevel => ProjKind::Multilevel,
         }
     }
 }
@@ -88,13 +103,16 @@ impl ProjKind {
 impl std::str::FromStr for ProjKind {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
-            "exact" | "l1inf" => Ok(ProjKind::Exact),
-            "bilevel" | "bi-level" => Ok(ProjKind::Bilevel),
-            "weighted" | "weighted_l1inf" | "l1inf_weighted" => Ok(ProjKind::Weighted),
-            other => Err(format!(
-                "unknown projection mode '{other}' (valid: exact, bilevel, weighted)"
-            )),
+        let lower = s.to_ascii_lowercase();
+        match Family::from_mode(&lower) {
+            Some(family) => Ok(ProjKind::from_family(family)),
+            None => {
+                let valid: Vec<&str> = REGISTRY.iter().map(|row| row.mode).collect();
+                Err(format!(
+                    "unknown projection mode '{lower}' (valid: {})",
+                    valid.join(", ")
+                ))
+            }
         }
     }
 }
@@ -154,13 +172,19 @@ pub struct ProjRequest {
     pub radius: f64,
     pub algo: Algorithm,
     /// Operator family: exact ℓ₁,∞ (via `algo`), the bi-level operator,
-    /// or the weighted ℓ₁,∞ projection (both ignore `algo`).
+    /// the weighted ℓ₁,∞ projection, or the k-level multilevel operator
+    /// (all but `Exact` ignore `algo`).
     pub mode: ProjKind,
     /// Per-group prices for `mode = Weighted` (`None` = uniform weights);
     /// ignored by the other families. Must hold `n_groups` strictly
     /// positive finite values — the protocol layer validates this before a
     /// request is built.
     pub weights: Option<Vec<f32>>,
+    /// Schedule depth for `mode = Multilevel` (ignored by the other
+    /// families; output is depth-invariant, only the parallel schedule
+    /// changes). The protocol layer validates the range and defaults to
+    /// [`DEFAULT_DEPTH`].
+    pub depth: usize,
 }
 
 /// Outcome of one [`ProjRequest`].
@@ -190,6 +214,8 @@ pub struct BatchProjector {
     bilevels: Arc<BilevelPool>,
     /// Recycled weighted-projection workspaces for `mode = weighted`.
     weighteds: Arc<WeightedPool>,
+    /// Recycled k-level workspaces for `mode = multilevel` requests.
+    multilevels: Arc<MultilevelPool>,
 }
 
 impl BatchProjector {
@@ -213,6 +239,7 @@ impl BatchProjector {
             solvers: Arc::new(SolverPool::new()),
             bilevels: Arc::new(BilevelPool::new()),
             weighteds: Arc::new(WeightedPool::new()),
+            multilevels: Arc::new(MultilevelPool::new()),
         }
     }
 
@@ -499,6 +526,40 @@ impl BatchProjector {
         &self.weighteds
     }
 
+    /// Project one matrix with the **k-level multilevel** operator
+    /// ([`crate::projection::multilevel`]) on a pooled workspace. Output is
+    /// bit-identical to the serial bi-level operator at every `depth` and
+    /// thread count; only the parallel schedule changes. Small matrices run
+    /// the serial schedule on the same workspace (spawn/join costs dominate
+    /// below [`MIN_PARALLEL_ELEMS`], exactly like the other sharded paths).
+    pub fn project_multilevel_parallel(
+        &self,
+        data: &mut [f32],
+        n_groups: usize,
+        group_len: usize,
+        c: f64,
+        depth: usize,
+        tau_hint: Option<f64>,
+    ) -> BilevelInfo {
+        assert_eq!(data.len(), n_groups * group_len, "grouped matrix shape mismatch");
+        assert!(c >= 0.0, "radius must be nonnegative");
+        let threads = if self.threads <= 1 || n_groups < 2 || data.len() < self.min_parallel_elems
+        {
+            1
+        } else {
+            self.threads
+        };
+        let mut solver = self.multilevels.acquire(depth, threads);
+        let info = solver.project(data, n_groups, group_len, c, tau_hint);
+        self.multilevels.release(solver);
+        info
+    }
+
+    /// The shared multilevel workspace pool (exposed for introspection/tests).
+    pub fn multilevel_pool(&self) -> &MultilevelPool {
+        &self.multilevels
+    }
+
     /// Drain a heterogeneous request queue across the pool. Requests are
     /// consumed (each response owns the projected matrix — no copies);
     /// responses come back in request order. `cache` (if any) supplies
@@ -516,7 +577,11 @@ impl BatchProjector {
             return requests
                 .into_iter()
                 .map(|r| {
-                    run_request(r, cache, (&*self.solvers, &*self.bilevels, &*self.weighteds))
+                    run_request(
+                        r,
+                        cache,
+                        (&*self.solvers, &*self.bilevels, &*self.weighteds, &*self.multilevels),
+                    )
                 })
                 .collect();
         }
@@ -527,8 +592,8 @@ impl BatchProjector {
         let cursor = AtomicUsize::new(0);
         // Explicit derefs: &Arc<T> only coerces to &T at a coercion site,
         // and an un-annotated tuple binding is not one.
-        let pools: (&SolverPool, &BilevelPool, &WeightedPool) =
-            (&*self.solvers, &*self.bilevels, &*self.weighteds);
+        let pools: (&SolverPool, &BilevelPool, &WeightedPool, &MultilevelPool) =
+            (&*self.solvers, &*self.bilevels, &*self.weighteds, &*self.multilevels);
         let ctx = crate::util::trace::current();
         let mut indexed: Vec<(usize, ProjResponse)> = std::thread::scope(|s| {
             let slots = &slots;
@@ -601,13 +666,19 @@ fn record_sharded_exact(info: &ProjInfo, start: std::time::Instant, hint: Option
 fn run_request(
     req: ProjRequest,
     cache: Option<&ThetaCache>,
-    (solvers, bilevels, weighteds): (&SolverPool, &BilevelPool, &WeightedPool),
+    (solvers, bilevels, weighteds, multilevels): (
+        &SolverPool,
+        &BilevelPool,
+        &WeightedPool,
+        &MultilevelPool,
+    ),
 ) -> ProjResponse {
     let _span = crate::util::metrics::span(
         "serve.batch.request_latency_us",
         crate::metric_histogram!("serve.batch.request_latency_us"),
     );
-    let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode, weights } = req;
+    let ProjRequest { key, mut data, n_groups, group_len, radius, algo, mode, weights, depth } =
+        req;
     let ns_key = key.as_deref().map(|k| cache_key(mode, k));
     let hint = match (&ns_key, cache) {
         (Some(key), Some(cache)) => cache.hint_for(key, n_groups, group_len),
@@ -660,6 +731,20 @@ fn run_request(
                 }
             }
             ProjResponse { data, info, warm: hint.is_some() }
+        }
+        ProjKind::Multilevel => {
+            // Batch workers are the parallelism axis here, so the k-level
+            // schedule runs serially per request (output is bit-identical
+            // to any parallel schedule of the same depth).
+            let mut solver = multilevels.acquire(depth, 1);
+            let info = solver.project(&mut data, n_groups, group_len, radius, hint);
+            multilevels.release(solver);
+            if let (Some(key), Some(cache)) = (&ns_key, cache) {
+                if !info.feasible {
+                    cache.update(key, n_groups, group_len, info.tau);
+                }
+            }
+            ProjResponse { data, info: info.to_proj_info(), warm: info.warm }
         }
     }
 }
@@ -721,6 +806,7 @@ mod tests {
                 algo,
                 mode: ProjKind::Exact,
                 weights: None,
+                depth: DEFAULT_DEPTH,
             });
         }
         let n_requests = requests.len();
@@ -750,6 +836,7 @@ mod tests {
             algo: Algorithm::InverseOrder,
             mode: ProjKind::Exact,
             weights: None,
+            depth: DEFAULT_DEPTH,
         };
         let first = &pool.project_batch(Some(&cache), vec![req(base.clone())])[0];
         assert!(!first.warm, "nothing cached yet");
@@ -789,6 +876,7 @@ mod tests {
             algo: Algorithm::InverseOrder,
             mode: ProjKind::Bilevel,
             weights: None,
+            depth: DEFAULT_DEPTH,
         };
         let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
         let mut reference = data.clone();
@@ -827,6 +915,7 @@ mod tests {
             algo: Algorithm::InverseOrder, // ignored by the weighted family
             mode: ProjKind::Weighted,
             weights: Some(w.clone()),
+            depth: DEFAULT_DEPTH,
         };
         let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
         let mut reference = data.clone();
@@ -855,12 +944,91 @@ mod tests {
             algo: Algorithm::Bisection,
             mode: ProjKind::Weighted,
             weights: None,
+            depth: DEFAULT_DEPTH,
         };
         let resp3 = &pool.project_batch(None, vec![req_uniform])[0];
         let mut exact = data.clone();
         let ei = project_l1inf(&mut exact, g, l, 0.9, Algorithm::Bisection);
         assert_eq!(resp3.data, exact, "uniform weighted == exact bisection");
         assert_eq!(resp3.info.theta.to_bits(), ei.theta.to_bits());
+    }
+
+    #[test]
+    fn multilevel_requests_route_through_the_multilevel_operator() {
+        use crate::projection::bilevel::project_bilevel;
+        let mut rng = Rng::new(29);
+        let (g, l) = (40, 9);
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let pool = BatchProjector::new(2);
+        let cache = ThetaCache::new();
+        let req = ProjRequest {
+            key: Some("w".into()),
+            data: data.clone(),
+            n_groups: g,
+            group_len: l,
+            radius: 0.8,
+            algo: Algorithm::InverseOrder, // ignored by the multilevel family
+            mode: ProjKind::Multilevel,
+            weights: None,
+            depth: 3,
+        };
+        let resp = &pool.project_batch(Some(&cache), vec![req.clone()])[0];
+        // The k-level operator is the bi-level operator under a different
+        // schedule — the serial bi-level output is the bit-exact reference.
+        let mut reference = data.clone();
+        let bi = project_bilevel(&mut reference, g, l, 0.8);
+        assert_eq!(resp.data, reference, "batch multilevel == serial bilevel");
+        assert_eq!(resp.info.theta.to_bits(), bi.tau.to_bits());
+        // τ went into the multilevel namespace only.
+        assert!(cache.entry(&cache_key(ProjKind::Multilevel, "w"), g, l).is_some());
+        assert!(cache.entry(&cache_key(ProjKind::Exact, "w"), g, l).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Bilevel, "w"), g, l).is_none());
+        assert!(cache.entry(&cache_key(ProjKind::Weighted, "w"), g, l).is_none());
+        // Workspace recycled; a second request warm-starts through the
+        // cache (τ may differ from the cold solve only in FP round-off).
+        assert!(pool.multilevel_pool().idle() >= 1);
+        let resp2 = &pool.project_batch(Some(&cache), vec![req])[0];
+        assert!(resp2.warm, "second multilevel request must warm-start");
+        for (a, b) in resp2.data.iter().zip(&reference) {
+            assert!((a - b).abs() <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn multilevel_parallel_matches_serial_bilevel() {
+        use crate::projection::bilevel::project_bilevel;
+        let mut rng = Rng::new(31);
+        let (g, l) = (123, 17);
+        let data = random_signed(&mut rng, g * l, 3.0);
+        let pool = BatchProjector::with_min_parallel(4, 0); // force sharding
+        for c in [0.5, 5.0, 50.0] {
+            for depth in [1usize, 2, 3, 4] {
+                let mut serial = data.clone();
+                let si = project_bilevel(&mut serial, g, l, c);
+                let mut par = data.clone();
+                let pi = pool.project_multilevel_parallel(&mut par, g, l, c, depth, None);
+                assert_eq!(serial, par, "c={c} depth={depth}");
+                assert_eq!(si.tau.to_bits(), pi.tau.to_bits(), "c={c} depth={depth}");
+                assert_eq!(si.zero_groups, pi.zero_groups);
+            }
+        }
+    }
+
+    #[test]
+    fn projkind_round_trips_through_the_registry() {
+        for family in Family::ALL {
+            let kind = ProjKind::from_family(family);
+            assert_eq!(kind.family(), family);
+            assert_eq!(kind.name(), family.spec().mode);
+            assert_eq!(kind.name().parse::<ProjKind>().unwrap(), kind);
+            for alias in family.spec().aliases {
+                assert_eq!(alias.parse::<ProjKind>().unwrap(), kind, "alias '{alias}'");
+            }
+        }
+        let err = "warp".parse::<ProjKind>().unwrap_err();
+        for row in &REGISTRY {
+            assert!(err.contains(row.mode), "error must list '{}': {err}", row.mode);
+        }
     }
 
     #[test]

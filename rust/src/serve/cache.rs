@@ -116,8 +116,9 @@ const FP_MASK: u64 = (1 << FP_BITS) - 1;
 const GEN_MASK: u64 = 0xFF;
 
 /// Which operator family a cached dual variable belongs to. Every family
-/// has its own namespace: the exact θ*, the bi-level τ and the weighted λ
-/// are different duals and must never cross-feed.
+/// has its own namespace: the exact θ*, the bi-level τ (also the dual of
+/// the k-level multilevel schedule) and the weighted λ are different duals
+/// and must never cross-feed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Family {
     /// Exact ℓ₁,∞ projection (θ* of Lemma 1).
@@ -126,29 +127,154 @@ pub enum Family {
     Bilevel,
     /// Weighted ℓ₁,∞ projection (price λ).
     Weighted,
+    /// k-level multilevel operator (same τ semantics as bi-level, own
+    /// namespace: a τ learned under one schedule family never seeds the
+    /// other's lookups, so per-family hit rates stay attributable).
+    Multilevel,
 }
+
+/// Everything the planes around a solver family need to agree on, in one
+/// row: the serve `"mode"` string and its aliases, the trainer config
+/// name, the dual-variable label, and the static metric names the cache
+/// mirror and the solve recorder register. The trainer, serve router,
+/// θ-cache and bench harness all read [`REGISTRY`] instead of keeping
+/// four hand-maintained match arms in sync — adding a family is one row
+/// here plus its solver dispatch arm.
+#[derive(Debug)]
+pub struct FamilySpec {
+    pub family: Family,
+    /// Canonical serve `"mode"` string (also the metrics name component
+    /// and the per-family key in the `stats` op).
+    pub mode: &'static str,
+    /// Accepted `"mode"` aliases (serve protocol only).
+    pub aliases: &'static [&'static str],
+    /// `train.projection` config value routing to this family.
+    pub config_name: &'static str,
+    /// Name of the cached dual variable (docs/diagnostics).
+    pub dual: &'static str,
+    /// Registry mirror names: `cache.<mode>.{hits,misses,updates}`.
+    pub cache_metrics: [&'static str; 3],
+    /// Solve-plane names (see `util::metrics::SolveMetrics::register`).
+    pub solve_metrics: [&'static str; 8],
+}
+
+/// The operator-family registry, in [`Family::index`] order.
+pub const REGISTRY: [FamilySpec; 4] = [
+    FamilySpec {
+        family: Family::Exact,
+        mode: "exact",
+        aliases: &["l1inf"],
+        config_name: "l1inf",
+        dual: "theta",
+        cache_metrics: ["cache.exact.hits", "cache.exact.misses", "cache.exact.updates"],
+        solve_metrics: [
+            "solve.exact.count",
+            "solve.exact.latency_us",
+            "solve.exact.work",
+            "solve.exact.touched_groups",
+            "solve.exact.hint_accept",
+            "solve.exact.hint_reject",
+            "solve.exact.delta_repaired_groups",
+            "solve.exact.delta_fallback",
+        ],
+    },
+    FamilySpec {
+        family: Family::Bilevel,
+        mode: "bilevel",
+        aliases: &["bi-level"],
+        config_name: "bilevel",
+        dual: "tau",
+        cache_metrics: ["cache.bilevel.hits", "cache.bilevel.misses", "cache.bilevel.updates"],
+        solve_metrics: [
+            "solve.bilevel.count",
+            "solve.bilevel.latency_us",
+            "solve.bilevel.work",
+            "solve.bilevel.touched_groups",
+            "solve.bilevel.hint_accept",
+            "solve.bilevel.hint_reject",
+            "solve.bilevel.delta_repaired_groups",
+            "solve.bilevel.delta_fallback",
+        ],
+    },
+    FamilySpec {
+        family: Family::Weighted,
+        mode: "weighted",
+        aliases: &["weighted_l1inf", "l1inf_weighted"],
+        config_name: "weighted_l1inf",
+        dual: "lambda",
+        cache_metrics: [
+            "cache.weighted.hits",
+            "cache.weighted.misses",
+            "cache.weighted.updates",
+        ],
+        solve_metrics: [
+            "solve.weighted.count",
+            "solve.weighted.latency_us",
+            "solve.weighted.work",
+            "solve.weighted.touched_groups",
+            "solve.weighted.hint_accept",
+            "solve.weighted.hint_reject",
+            "solve.weighted.delta_repaired_groups",
+            "solve.weighted.delta_fallback",
+        ],
+    },
+    FamilySpec {
+        family: Family::Multilevel,
+        mode: "multilevel",
+        aliases: &["multi-level", "klevel"],
+        config_name: "multilevel",
+        dual: "tau",
+        cache_metrics: [
+            "cache.multilevel.hits",
+            "cache.multilevel.misses",
+            "cache.multilevel.updates",
+        ],
+        solve_metrics: [
+            "solve.multilevel.count",
+            "solve.multilevel.latency_us",
+            "solve.multilevel.work",
+            "solve.multilevel.touched_groups",
+            "solve.multilevel.hint_accept",
+            "solve.multilevel.hint_reject",
+            "solve.multilevel.delta_repaired_groups",
+            "solve.multilevel.delta_fallback",
+        ],
+    },
+];
 
 impl Family {
     /// Every family, in [`Family::index`] order.
-    pub const ALL: [Family; 3] = [Family::Exact, Family::Bilevel, Family::Weighted];
+    pub const ALL: [Family; 4] =
+        [Family::Exact, Family::Bilevel, Family::Weighted, Family::Multilevel];
 
     /// Display name (diagnostics only — never used as a key prefix).
     pub fn name(&self) -> &'static str {
-        match self {
-            Family::Exact => "exact",
-            Family::Bilevel => "bilevel",
-            Family::Weighted => "weighted",
-        }
+        self.spec().mode
     }
 
     /// Dense index into per-family counter arrays (matches [`Family::ALL`];
-    /// also the 2-bit family tag stored in each packed cache word).
+    /// also the 2-bit family tag stored in each packed cache word — the
+    /// packed layout caps the registry at 4 families).
     pub fn index(&self) -> usize {
         match self {
             Family::Exact => 0,
             Family::Bilevel => 1,
             Family::Weighted => 2,
+            Family::Multilevel => 3,
         }
+    }
+
+    /// This family's registry row.
+    pub fn spec(&self) -> &'static FamilySpec {
+        &REGISTRY[self.index()]
+    }
+
+    /// Resolve a serve `"mode"` string (canonical name or alias).
+    pub fn from_mode(s: &str) -> Option<Family> {
+        REGISTRY
+            .iter()
+            .find(|spec| spec.mode == s || spec.aliases.contains(&s))
+            .map(|spec| spec.family)
     }
 }
 
@@ -249,8 +375,8 @@ impl CacheStats {
 struct FamilyCounters {
     /// `hits << 32 | misses` per family (32 bits ≈ 4·10⁹ lookups each —
     /// plenty for a server lifetime).
-    hit_miss: [AtomicU64; 3],
-    updates: [AtomicU64; 3],
+    hit_miss: [AtomicU64; 4],
+    updates: [AtomicU64; 4],
 }
 
 const HIT_ONE: u64 = 1 << 32;
@@ -292,18 +418,18 @@ struct Mirror {
 fn mirror(family: Family) -> &'static Mirror {
     use crate::util::metrics::global;
     use std::sync::OnceLock;
-    static MIRRORS: OnceLock<[Mirror; 3]> = OnceLock::new();
+    static MIRRORS: OnceLock<[Mirror; 4]> = OnceLock::new();
     let all = MIRRORS.get_or_init(|| {
-        let make = |names: [&'static str; 3]| Mirror {
-            hits: global().counter(names[0]),
-            misses: global().counter(names[1]),
-            updates: global().counter(names[2]),
-        };
-        [
-            make(["cache.exact.hits", "cache.exact.misses", "cache.exact.updates"]),
-            make(["cache.bilevel.hits", "cache.bilevel.misses", "cache.bilevel.updates"]),
-            make(["cache.weighted.hits", "cache.weighted.misses", "cache.weighted.updates"]),
-        ]
+        // Counter names come from the registry row, so a new family's
+        // mirror exists the moment its REGISTRY entry does.
+        Family::ALL.map(|f| {
+            let names = f.spec().cache_metrics;
+            Mirror {
+                hits: global().counter(names[0]),
+                misses: global().counter(names[1]),
+                updates: global().counter(names[2]),
+            }
+        })
     });
     &all[family.index()]
 }
@@ -371,18 +497,27 @@ impl ThetaCache {
 
     /// Record the θ* a projection just solved for (one relaxed store).
     ///
-    /// Degenerate values — non-finite, ≤ 0, or outside f32 range (the
-    /// word stores θ as f32; an out-of-range f64 would round to `inf` or
-    /// `0`) — are dropped without counting: a feasible projection carries
-    /// no information. A slot collision silently overwrites the previous
-    /// occupant (lossy eviction; the loser re-learns on its next solve).
+    /// Degenerate values — non-finite, ≤ 0, or above f32 range (the word
+    /// stores θ as f32; an oversized f64 would round to `inf`) — are
+    /// dropped without counting: a feasible projection carries no
+    /// information. A positive θ so small the f64→f32 narrowing rounds it
+    /// to `0.0` is **clamped to [`f32::MIN_POSITIVE`]** instead of
+    /// dropped: a zero θ field is the vacant-slot sentinel, so storing it
+    /// would silently corrupt the entry, while dropping it would lose a
+    /// legitimately tiny dual (hints are advisory, so the clamp can only
+    /// cost a wasted warm attempt). A slot collision silently overwrites
+    /// the previous occupant (lossy eviction; the loser re-learns on its
+    /// next solve).
     pub fn update(&self, key: &CacheKey, n_groups: usize, group_len: usize, theta: f64) {
         if !theta.is_finite() || theta <= 0.0 {
             return;
         }
-        let t32 = theta as f32;
-        if !t32.is_finite() || t32 <= 0.0 {
-            return; // f64→f32 overflow / underflow
+        // Narrowing a huge θ would round to `inf`; reject. Narrowing a
+        // tiny positive θ rounds to 0f32 (or a subnormal): clamp so the
+        // packed word stays distinguishable from an empty slot.
+        let t32 = (theta as f32).max(f32::MIN_POSITIVE);
+        if !t32.is_finite() {
+            return; // f64→f32 overflow
         }
         self.by_family.updates[key.family.index()].fetch_add(1, Ordering::Relaxed);
         mirror(key.family).updates.inc();
@@ -465,7 +600,7 @@ impl ThetaCache {
 
     /// Per-family statistics in [`Family::ALL`] order (the shape the serve
     /// `stats` op serializes).
-    pub fn stats_by_family(&self) -> [(Family, CacheStats); 3] {
+    pub fn stats_by_family(&self) -> [(Family, CacheStats); 4] {
         Family::ALL.map(|f| (f, self.family_stats(f)))
     }
 }
@@ -690,7 +825,9 @@ mod tests {
         assert_eq!(by[0].0, Family::Exact);
         assert_eq!(by[1].0, Family::Bilevel);
         assert_eq!(by[2].0, Family::Weighted);
+        assert_eq!(by[3].0, Family::Multilevel);
         assert_eq!(by[0].1, ex);
+        assert_eq!(by[3].1, CacheStats::default(), "untouched multilevel namespace is empty");
     }
 
     #[test]
@@ -704,12 +841,56 @@ mod tests {
         cache.update(&k("w1"), 10, 4, 0.0);
         cache.update(&k("w1"), 10, 4, -1.0);
         cache.update(&k("w1"), 10, 4, f64::NAN);
-        // Outside f32 range: would round to inf / 0 in the packed word.
+        // Above f32 range: would round to inf in the packed word.
         cache.update(&k("w1"), 10, 4, 1e300);
-        cache.update(&k("w1"), 10, 4, 1e-300);
         assert_eq!(cache.hint_for(&k("w1"), 10, 4), None);
         let st = cache.stats();
         assert_eq!((st.entries, st.updates), (0, 0));
+    }
+
+    #[test]
+    fn subnormal_theta_round_trips_clamped() {
+        // Regression: a positive θ that narrows to 0f32 used to be the
+        // vacant-slot sentinel — either corrupting the word (pre-PR-9) or
+        // silently dropping the entry. It must round-trip as the smallest
+        // normal f32 instead: still a valid (advisory) hint, still an
+        // occupied slot, still counted as an update.
+        let cache = ThetaCache::new();
+        for theta in [1e-300, 1e-46, f64::MIN_POSITIVE, f64::from(f32::MIN_POSITIVE) / 4.0] {
+            cache.update(&k("sub"), 10, 4, theta);
+            assert_eq!(
+                cache.entry(&k("sub"), 10, 4),
+                Some(f64::from(f32::MIN_POSITIVE)),
+                "θ = {theta:e} must clamp to the smallest normal f32"
+            );
+            let hint = cache.hint_for(&k("sub"), 10, 4).expect("clamped entry is live");
+            assert!(hint > 0.0 && hint.is_finite());
+        }
+        let st = cache.stats();
+        assert_eq!((st.entries, st.updates), (1, 4));
+        // A θ already representable is stored exactly, not clamped.
+        cache.update(&k("sub"), 10, 4, 0.5);
+        assert_eq!(cache.entry(&k("sub"), 10, 4), Some(0.5));
+    }
+
+    #[test]
+    fn registry_rows_are_in_index_order() {
+        // `Family::spec` indexes REGISTRY by `Family::index`; a misordered
+        // row would silently cross-wire every name lookup.
+        for (i, spec) in REGISTRY.iter().enumerate() {
+            assert_eq!(spec.family.index(), i, "registry row {i} out of order");
+            assert_eq!(spec.family, Family::ALL[i]);
+            assert_eq!(Family::from_mode(spec.mode), Some(spec.family));
+            for alias in spec.aliases {
+                assert_eq!(Family::from_mode(alias), Some(spec.family), "alias {alias}");
+            }
+            assert!(spec.cache_metrics.iter().all(|n| n.contains(spec.mode)));
+            assert!(spec.solve_metrics.iter().all(|n| n.contains(spec.mode)));
+        }
+        assert_eq!(Family::from_mode("warp"), None);
+        // The packed cache word has 2 family bits — the registry cannot
+        // outgrow it without a layout change.
+        assert!(REGISTRY.len() as u64 <= FAM_MASK + 1);
     }
 
     #[test]

@@ -16,9 +16,13 @@
 //!   Requests pick their operator family via [`batch::ProjKind`]: the
 //!   exact ℓ₁,∞ projection, the linear-time **bi-level** operator
 //!   ([`crate::projection::bilevel`]), whose two O(nm) passes shard
-//!   bit-compatibly with the serial bi-level operator, or the **weighted**
-//!   ℓ₁,∞ projection ([`crate::projection::weighted`]) with per-group
-//!   prices from the request's `"weights"` field;
+//!   bit-compatibly with the serial bi-level operator, its k-level
+//!   **multilevel** generalization ([`crate::projection::multilevel`],
+//!   request field `"depth"`, bit-identical at every depth), or the
+//!   **weighted** ℓ₁,∞ projection ([`crate::projection::weighted`]) with
+//!   per-group prices from the request's `"weights"` field. The family ↔
+//!   mode ↔ cache-namespace mapping is one table:
+//!   [`cache::REGISTRY`];
 //! - [`cache`] — a lock-free [`cache::ThetaCache`] (a fixed table of
 //!   packed `AtomicU64` words; warm-hit lookups are a single relaxed
 //!   load, never a lock) that remembers θ* per weight-matrix key —

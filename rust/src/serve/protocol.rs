@@ -41,6 +41,13 @@
 //!   `"weights"` field. `"algo"` is ignored; the response's `"theta"`
 //!   carries the price λ (each surviving group loses ℓ₁ mass `λ·w_g`),
 //!   and warm starts cache λ under the weighted family's namespace.
+//! - `"mode":"multilevel"` — the k-level multilevel operator
+//!   ([`crate::projection::multilevel`]): the bi-level operator evaluated
+//!   under a recursive `"depth"`-level shard schedule. Output is
+//!   **bit-identical** to `"mode":"bilevel"` at every depth — only the
+//!   parallel schedule changes. `"algo"` is ignored; `"theta"` carries the
+//!   same root simplex threshold τ, cached under the multilevel family's
+//!   own namespace.
 //!
 //! ```text
 //! → {"id":5,"op":"project","key":"w1","mode":"bilevel","groups":3,"len":4,
@@ -64,6 +71,21 @@
 //! ← {"id":6,"ok":true,"mode":"weighted","theta":0.31,"radius_before":3.4,
 //!    "radius_after":1.5,"zero_groups":1,"work":52,"touched":3,"warm":false,
 //!    "ms":0.05,"data":[...]}
+//! ```
+//!
+//! # The `depth` request field
+//!
+//! Only valid with `"mode":"multilevel"`: an integer number of tree
+//! levels in `1..=8` (1 = serial, 2 = the flat 2-level tree). Omitting it
+//! means depth 3. Depth never changes the projected output — it selects
+//! the parallel evaluation schedule.
+//!
+//! ```text
+//! → {"id":7,"op":"project","key":"w1","mode":"multilevel","depth":3,
+//!    "groups":3,"len":4,"radius":1.5,"data":[...12 numbers...]}
+//! ← {"id":7,"ok":true,"mode":"multilevel","theta":0.62,"radius_before":2.9,
+//!    "radius_after":1.5,"zero_groups":1,"work":3,"touched":2,"warm":false,
+//!    "ms":0.03,"data":[...]}
 //! ```
 //!
 //! # The `delta` op (incremental projection)
@@ -127,7 +149,7 @@
 //! `{"op":"stats"}` returns the full observability surface: `threads`,
 //! `served`, `uptime_secs`, flat aggregate `cache_*` fields (legacy),
 //! a per-family `"cache"` object (entries/hits/misses/updates/hit_rate
-//! for `exact`/`bilevel`/`weighted`/`total`), and `"metrics"` — the
+//! for `exact`/`bilevel`/`weighted`/`multilevel`/`total`), and `"metrics"` — the
 //! process-global registry snapshot ([`crate::util::metrics`]) with every
 //! counter, gauge and histogram (count/sum/max/mean/p50/p90/p99 +
 //! cumulative log₂ buckets).
@@ -148,6 +170,7 @@
 //! ```
 
 use crate::projection::l1inf::{Algorithm, ProjInfo};
+use crate::projection::multilevel::{DEFAULT_DEPTH, MAX_DEPTH};
 use crate::serve::batch::ProjKind;
 use crate::serve::cache::{CacheStats, Family};
 use crate::util::json::{self, Json};
@@ -162,13 +185,17 @@ pub struct ProjectRequest {
     pub group_len: usize,
     pub radius: f64,
     pub algo: Algorithm,
-    /// Operator family (`"mode"` field): exact ℓ₁,∞, bi-level, or
-    /// weighted ℓ₁,∞.
+    /// Operator family (`"mode"` field): exact ℓ₁,∞, bi-level, weighted
+    /// ℓ₁,∞, or k-level multilevel.
     pub mode: ProjKind,
     /// Per-group prices (`"weights"` field; weighted mode only; `None` =
     /// uniform). Validated at parse time: exactly `n_groups` strictly
     /// positive finite f32s.
     pub weights: Option<Vec<f32>>,
+    /// Schedule depth (`"depth"` field; multilevel mode only, defaulting
+    /// to [`DEFAULT_DEPTH`]). Validated at parse time: an integer in
+    /// `1..=`[`MAX_DEPTH`].
+    pub depth: usize,
     /// `false` suppresses the projected matrix in the response (clients
     /// that only need θ/sparsity telemetry save the echo bandwidth).
     pub return_data: bool,
@@ -310,6 +337,24 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, Pa
                     Some(ws)
                 }
             };
+            let depth = match v.get("depth") {
+                None => DEFAULT_DEPTH,
+                Some(_) if mode != ProjKind::Multilevel => {
+                    return Err(err(
+                        "project: 'depth' requires \"mode\":\"multilevel\"".to_string(),
+                    ));
+                }
+                // as_f64 + fract, not as_usize: the latter truncates, and
+                // a silently rounded 2.5 would pick a schedule the client
+                // never asked for.
+                Some(dv) => dv
+                    .as_f64()
+                    .filter(|d| d.fract() == 0.0 && (1.0..=MAX_DEPTH as f64).contains(d))
+                    .map(|d| d as usize)
+                    .ok_or_else(|| {
+                        err(format!("project: 'depth' must be an integer in 1..={MAX_DEPTH}"))
+                    })?,
+            };
             let return_data = match v.get("return_data") {
                 Some(Json::Bool(b)) => *b,
                 _ => true,
@@ -351,6 +396,7 @@ pub fn parse_request(line: &str, default_algo: Algorithm) -> Result<Envelope, Pa
                 algo,
                 mode,
                 weights,
+                depth,
                 return_data,
                 data,
             }))
@@ -823,6 +869,43 @@ mod tests {
     }
 
     #[test]
+    fn parses_multilevel_mode_and_validates_depth() {
+        let line = r#"{"id":15,"op":"project","mode":"multilevel","depth":4,"groups":1,"len":2,"radius":1,"data":[1.0,2.0]}"#;
+        let env = parse_request_d(line).unwrap();
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.mode, ProjKind::Multilevel);
+        assert_eq!(p.depth, 4);
+        // Depth-less multilevel requests get the default schedule.
+        let env = parse_request_d(
+            r#"{"id":16,"op":"project","mode":"multilevel","groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+        )
+        .unwrap();
+        let Request::Project(p) = env.req else { panic!("not a project request") };
+        assert_eq!(p.depth, DEFAULT_DEPTH);
+        // Depth on a non-multilevel mode is rejected (default mode echoes
+        // as exact) — same discipline as 'weights'.
+        let e = parse_request_d(
+            r#"{"id":17,"op":"project","depth":3,"groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.id, 17);
+        assert_eq!(e.mode, Some(ProjKind::Exact));
+        assert!(e.msg.contains("multilevel"), "{}", e.msg);
+        // Out-of-range and non-integer depths are rejected.
+        for bad in [
+            r#"{"id":18,"op":"project","mode":"multilevel","depth":0,"groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+            r#"{"id":18,"op":"project","mode":"multilevel","depth":9,"groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+            r#"{"id":18,"op":"project","mode":"multilevel","depth":2.5,"groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+            r#"{"id":18,"op":"project","mode":"multilevel","depth":"deep","groups":1,"len":1,"radius":1,"data":[1.0]}"#,
+        ] {
+            let e = parse_request_d(bad).unwrap_err();
+            assert_eq!(e.id, 18, "{bad}");
+            assert_eq!(e.mode, Some(ProjKind::Multilevel), "{bad}");
+            assert!(e.msg.contains("depth"), "{}", e.msg);
+        }
+    }
+
+    #[test]
     fn parses_delta_init_and_rows() {
         // init: full matrix, no rows.
         let env = parse_request_d(
@@ -851,7 +934,7 @@ mod tests {
     fn delta_rejects_bad_shapes_and_namespaces() {
         // Non-exact family namespaces are rejected at parse, echoing the
         // family — incremental state only exists for the exact family.
-        for mode in ["bilevel", "weighted"] {
+        for mode in ["bilevel", "weighted", "multilevel"] {
             let e = parse_request_d(&format!(
                 r#"{{"id":40,"op":"delta","key":"w1","mode":"{mode}","init":true,"groups":1,"len":1,"radius":1,"data":[1.0]}}"#
             ))
@@ -1048,6 +1131,7 @@ mod tests {
             (Family::Exact, CacheStats { entries: 1, hits: 3, misses: 1, updates: 2 }),
             (Family::Bilevel, CacheStats::default()),
             (Family::Weighted, CacheStats::default()),
+            (Family::Multilevel, CacheStats::default()),
         ];
         let body = stats_body(
             8,
@@ -1061,6 +1145,7 @@ mod tests {
         for line in [
             project_response(1, &info, ProjKind::Exact, true, 0.5, Some(&[0.5, -0.5])),
             project_response(2, &info, ProjKind::Bilevel, false, 0.5, None),
+            project_response(9, &info, ProjKind::Multilevel, false, 0.5, None),
             error_response(3, None, "nope"),
             error_response(7, Some(ProjKind::Weighted), "bad weights"),
             stats_line.clone(),

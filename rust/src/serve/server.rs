@@ -6,6 +6,11 @@
 //! lines to a **bounded worker pool** (`serve-worker-N`, one per
 //! projection thread) draining a shared run queue. Workers parse, solve
 //! and serialize; the event loop writes the rendered responses back.
+//! Between bursts the loop parks in `poll(2)` over the listener, every
+//! connection socket and a worker wake pipe, so an idle server consumes
+//! no CPU — workers nudge the pipe (a classic self-pipe) after posting
+//! each result, since an in-process channel send alone cannot make an
+//! fd readable.
 //! No thread is ever spawned per connection, so overload cannot spawn
 //! unbounded threads — and every connection shares one
 //! [`BatchProjector`] pool (matrix-sharded projections) and one
@@ -64,12 +69,121 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-/// Idle tick of the event loop when no socket or worker made progress.
-/// Short enough that request latency stays sub-millisecond, long enough
-/// that an idle server burns no measurable CPU.
-const IDLE_TICK: Duration = Duration::from_micros(300);
+/// Idle tick of the event loop on non-Unix targets, where the loop falls
+/// back to a polled sleep when no socket or worker made progress. Short
+/// enough that request latency stays sub-millisecond. On Unix the loop
+/// parks in `poll(2)` instead (see `Waker`) and never spins.
+#[cfg(not(unix))]
+const IDLE_TICK: std::time::Duration = std::time::Duration::from_micros(300);
+
+/// Heartbeat cap (ms) on one idle `poll(2)` wait. Readiness on any fd
+/// ends the wait immediately; the cap only bounds how long a hypothetical
+/// missed wakeup could be deferred (the wake pipe is level-triggered, so
+/// no known path actually loses one).
+#[cfg(unix)]
+const IDLE_POLL_MS: i32 = 500;
+
+/// `struct pollfd` from `poll(2)`. Declared locally: the vendored crate
+/// set has no `libc`, but std always links the platform C library, so
+/// the symbol is reachable through a plain `extern "C"` block.
+#[cfg(unix)]
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(unix)]
+const POLLIN: i16 = 0x001;
+#[cfg(unix)]
+const POLLOUT: i16 = 0x004;
+
+#[cfg(unix)]
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout_ms: i32) -> i32;
+}
+
+/// Worker → event-loop wakeup. On Unix this is the write half of a
+/// non-blocking socketpair: workers write one byte after posting a
+/// `Done`, which makes the event loop's `poll(2)` set readable even
+/// when every TCP socket is quiet. On other targets the loop sleeps
+/// `IDLE_TICK` between checks and waking is a no-op.
+#[derive(Clone)]
+struct Waker {
+    #[cfg(unix)]
+    tx: Arc<std::os::unix::net::UnixStream>,
+}
+
+impl Waker {
+    fn wake(&self) {
+        #[cfg(unix)]
+        {
+            // WouldBlock means the pipe already holds unread wakeups, so
+            // the event loop is guaranteed to wake and dropping this byte
+            // is safe. Any other error only costs heartbeat latency.
+            let _ = (&*self.tx).write(&[1u8]);
+        }
+    }
+}
+
+/// Drain every pending wakeup byte. Runs once per loop iteration *before*
+/// the `Done` channel drain: a byte written after this drain belongs to a
+/// `Done` that either lands in this iteration's `try_recv` or keeps the
+/// pipe readable for the next `poll`, so a wakeup is never lost.
+#[cfg(unix)]
+fn drain_wakeups(mut wake_rx: &std::os::unix::net::UnixStream) {
+    let mut buf = [0u8; 64];
+    loop {
+        match wake_rx.read(&mut buf) {
+            Ok(0) => break, // every write half dropped (teardown)
+            Ok(_) => continue,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break, // WouldBlock: pipe is empty
+        }
+    }
+}
+
+/// Park until a socket is ready, a worker posts a wakeup, or the
+/// heartbeat expires. Level-triggered: anything that arrived before this
+/// call keeps its fd readable, so `poll` returns immediately and the
+/// loop re-derives readiness from scratch. `active` is false once a
+/// shutdown is draining, when the loop no longer accepts or reads — only
+/// worker completions and pending writes can then make progress.
+#[cfg(unix)]
+fn poll_wait(
+    listener: &TcpListener,
+    conns: &HashMap<u64, Conn>,
+    wake_rx: &std::os::unix::net::UnixStream,
+    active: bool,
+) {
+    use std::os::fd::AsRawFd;
+    let mut fds = Vec::with_capacity(conns.len() + 2);
+    fds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+    if active {
+        fds.push(PollFd { fd: listener.as_raw_fd(), events: POLLIN, revents: 0 });
+    }
+    for conn in conns.values() {
+        let mut events = 0i16;
+        if active && !conn.in_flight && !conn.closed {
+            events |= POLLIN;
+        }
+        if !conn.wbuf.is_empty() {
+            events |= POLLOUT;
+        }
+        if events != 0 {
+            fds.push(PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+        }
+    }
+    // SAFETY: `fds` is a live, exclusively borrowed `repr(C)` pollfd
+    // array for the whole call, and `nfds` is its exact length.
+    let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, IDLE_POLL_MS) };
+    // 0 is the heartbeat, -1 is EINTR-class noise: both simply re-enter
+    // the event loop, which rechecks every source anyway.
+    let _ = rc;
+}
 
 /// Shared context: the event loop, every worker and the snapshot writer
 /// hold a clone.
@@ -340,6 +454,18 @@ impl Server {
         });
 
         listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        // Worker → event-loop wake pipe. Both halves non-blocking: a
+        // worker never stalls on a full pipe and the drain never blocks.
+        #[cfg(unix)]
+        let (waker, wake_rx) = {
+            let (wtx, wrx) =
+                std::os::unix::net::UnixStream::pair().context("creating worker wake pipe")?;
+            wtx.set_nonblocking(true).context("setting wake pipe non-blocking")?;
+            wrx.set_nonblocking(true).context("setting wake pipe non-blocking")?;
+            (Waker { tx: Arc::new(wtx) }, wrx)
+        };
+        #[cfg(not(unix))]
+        let waker = Waker {};
         let queue = Arc::new(RunQueue::default());
         let (tx, rx) = mpsc::channel::<Done>();
         let workers: Vec<_> = (0..shared.pool.threads().max(1))
@@ -347,9 +473,10 @@ impl Server {
                 let queue = Arc::clone(&queue);
                 let tx = tx.clone();
                 let shared = shared.clone();
+                let waker = waker.clone();
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{w}"))
-                    .spawn(move || worker_loop(&queue, &tx, &shared))
+                    .spawn(move || worker_loop(&queue, &tx, &shared, &waker))
                     .expect("spawn serve worker")
             })
             .collect();
@@ -395,6 +522,8 @@ impl Server {
             }
 
             // ── collect finished requests ───────────────────────────────
+            #[cfg(unix)]
+            drain_wakeups(&wake_rx);
             while let Ok(done) = rx.try_recv() {
                 progress = true;
                 inflight -= 1;
@@ -424,6 +553,11 @@ impl Server {
                 break;
             }
             if !progress {
+                // Nothing moved: park until a socket or worker is ready
+                // instead of spinning on a sleep tick.
+                #[cfg(unix)]
+                poll_wait(&listener, &conns, &wake_rx, !stopping);
+                #[cfg(not(unix))]
                 std::thread::sleep(IDLE_TICK);
             }
         }
@@ -486,7 +620,7 @@ fn dispatch_ready(
 /// One pool worker: block on the run queue, execute requests end to end
 /// (parse → dispatch → serialize, all under the request's trace spans),
 /// hand the rendered line back to the event loop.
-fn worker_loop(queue: &RunQueue, results: &mpsc::Sender<Done>, shared: &Shared) {
+fn worker_loop(queue: &RunQueue, results: &mpsc::Sender<Done>, shared: &Shared, waker: &Waker) {
     loop {
         let (conn_id, line) = match queue.pop() {
             WorkItem::Exit => return,
@@ -553,6 +687,9 @@ fn worker_loop(queue: &RunQueue, results: &mpsc::Sender<Done>, shared: &Shared) 
             if results.send(Done { conn_id, line: resp, is_shutdown }).is_err() {
                 return; // event loop gone — teardown already past us
             }
+            // The channel send alone cannot make an fd readable; the
+            // pipe byte is what ends the event loop's idle poll.
+            waker.wake();
         }
         if shared.slow_ms > 0.0 && t.millis() > shared.slow_ms {
             if let Some(tree) = trace_id.and_then(crate::util::trace::render_trace) {
@@ -579,6 +716,7 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
         algo,
         mode,
         weights,
+        depth,
         return_data,
         mut data,
     } = req;
@@ -635,6 +773,25 @@ fn run_project(id: i64, req: ProjectRequest, shared: &Shared) -> String {
             }
             let payload = if return_data { Some(&data[..]) } else { None };
             protocol::project_response(id, &info, mode, hint.is_some(), ms, payload)
+        }
+        ProjKind::Multilevel => {
+            let t = Timer::start();
+            let info = shared.pool.project_multilevel_parallel(
+                &mut data,
+                n_groups,
+                group_len,
+                radius,
+                depth,
+                hint,
+            );
+            let ms = t.millis();
+            if let Some(k) = ns_key.as_ref() {
+                if !info.feasible {
+                    shared.cache.update(k, n_groups, group_len, info.tau);
+                }
+            }
+            let payload = if return_data { Some(&data[..]) } else { None };
+            protocol::project_response(id, &info.to_proj_info(), mode, info.warm, ms, payload)
         }
     };
     shared.served.fetch_add(1, Ordering::Relaxed);

@@ -352,40 +352,11 @@ pub struct SolveMetrics {
 impl SolveMetrics {
     fn register(family: Family) -> SolveMetrics {
         let r = global();
-        // Names must be 'static: one match arm per family instead of a
-        // leaked format!() so repeated registration can't leak new strings.
-        let names: [&'static str; 8] = match family {
-            Family::Exact => [
-                "solve.exact.count",
-                "solve.exact.latency_us",
-                "solve.exact.work",
-                "solve.exact.touched_groups",
-                "solve.exact.hint_accept",
-                "solve.exact.hint_reject",
-                "solve.exact.delta_repaired_groups",
-                "solve.exact.delta_fallback",
-            ],
-            Family::Bilevel => [
-                "solve.bilevel.count",
-                "solve.bilevel.latency_us",
-                "solve.bilevel.work",
-                "solve.bilevel.touched_groups",
-                "solve.bilevel.hint_accept",
-                "solve.bilevel.hint_reject",
-                "solve.bilevel.delta_repaired_groups",
-                "solve.bilevel.delta_fallback",
-            ],
-            Family::Weighted => [
-                "solve.weighted.count",
-                "solve.weighted.latency_us",
-                "solve.weighted.work",
-                "solve.weighted.touched_groups",
-                "solve.weighted.hint_accept",
-                "solve.weighted.hint_reject",
-                "solve.weighted.delta_repaired_groups",
-                "solve.weighted.delta_fallback",
-            ],
-        };
+        // Names must be 'static: they come from the family's registry row
+        // (`FamilySpec::solve_metrics`) instead of a leaked format!() so
+        // repeated registration can't leak new strings — and adding a
+        // family to the registry wires its solve plane automatically.
+        let names: [&'static str; 8] = family.spec().solve_metrics;
         SolveMetrics {
             count: r.counter(names[0]),
             latency_us: r.histogram(names[1]),
@@ -399,18 +370,12 @@ impl SolveMetrics {
     }
 }
 
-static SOLVE_METRICS: OnceLock<[SolveMetrics; 3]> = OnceLock::new();
+static SOLVE_METRICS: OnceLock<[SolveMetrics; 4]> = OnceLock::new();
 
 /// The solve-metric bundle of one operator family (one atomic load on the
 /// steady path).
 pub fn solve_metrics(family: Family) -> &'static SolveMetrics {
-    let all = SOLVE_METRICS.get_or_init(|| {
-        [
-            SolveMetrics::register(Family::Exact),
-            SolveMetrics::register(Family::Bilevel),
-            SolveMetrics::register(Family::Weighted),
-        ]
-    });
+    let all = SOLVE_METRICS.get_or_init(|| Family::ALL.map(SolveMetrics::register));
     &all[family.index()]
 }
 
@@ -706,6 +671,25 @@ mod tests {
         assert!(m.work.sum() >= 34);
         // Families have distinct handles.
         assert!(!std::ptr::eq(m, solve_metrics(Family::Exact)));
+    }
+
+    #[test]
+    fn every_registry_family_has_a_solve_plane() {
+        // The registry drives registration: every family — multilevel
+        // included — must resolve to its own named handles in the global
+        // registry.
+        for f in Family::ALL {
+            record_solve(f, 1, 1, 1, false, false);
+            let m = solve_metrics(f);
+            let names = f.spec().solve_metrics;
+            assert!(std::ptr::eq(m.count, global().counter(names[0])), "{}", f.name());
+            assert!(std::ptr::eq(m.latency_us, global().histogram(names[1])), "{}", f.name());
+            assert!(m.count.get() >= 1);
+        }
+        assert!(!std::ptr::eq(
+            solve_metrics(Family::Multilevel),
+            solve_metrics(Family::Bilevel)
+        ));
     }
 
     #[test]

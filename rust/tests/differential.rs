@@ -1,9 +1,10 @@
 //! Property-based **differential** suite: every production operator —
 //! the six exact ℓ₁,∞ solvers, the bi-level operator and its sharded
-//! tree (2/4 shards), and the weighted family — is checked against the
-//! naive, self-contained oracle in `common::` across ≥200 seeded random
-//! shapes per family, plus the structural invariants every projection
-//! must satisfy:
+//! tree (2/4 shards), the k-level multilevel generalization (k = 1..4,
+//! serial and sharded), and the weighted family — is checked against
+//! the naive, self-contained oracle in `common::` across ≥200 seeded
+//! random shapes per family, plus the structural invariants every
+//! projection must satisfy:
 //!
 //! - **oracle agreement**: θ/τ/λ within 1e-6·scale, entries within 1e-6;
 //! - **feasibility**: the result lies in the (weighted) ball;
@@ -21,7 +22,10 @@ mod common;
 use l1inf::projection::bilevel::{project_bilevel, project_bilevel_tree};
 use l1inf::projection::kkt::{self, Tolerance};
 use l1inf::projection::l1inf::{project_l1inf, Algorithm, Delta, DeltaSolver};
+use l1inf::projection::multilevel::{project_multilevel, MAX_DEPTH};
 use l1inf::projection::weighted::{project_bilevel_weighted, project_l1inf_weighted};
+use l1inf::serve::batch::ProjKind;
+use l1inf::serve::cache::{CacheKey, Family, ThetaCache, REGISTRY};
 use l1inf::util::prop;
 use l1inf::util::rng::Rng;
 
@@ -311,6 +315,137 @@ fn bilevel_and_tree_match_the_oracle() {
             Ok(())
         },
     );
+}
+
+/// The k-level multilevel operator against the same naive oracle as the
+/// bi-level family, at every depth k = 1..4 (plus `MAX_DEPTH`), serial
+/// and sharded. The recursion only re-partitions group index ranges —
+/// the per-group |max| fold, the root simplex solve and the clamp are
+/// the shared bi-level kernels — so beyond oracle agreement every
+/// (depth, threads) cell must be **bit-identical** to the serial
+/// bi-level operator, and depth 2 with a matching shard count must be
+/// bit-identical to the flat sharded tree.
+#[test]
+fn multilevel_matches_the_oracle_at_every_depth() {
+    prop::check(
+        "k-level multilevel (k=1..4 + max, serial/sharded) vs oracle + bit-identity to bi-level",
+        CASES,
+        0xD1FF07,
+        gen_case,
+        |(data, g, l, c)| {
+            let (g, l, c) = (*g, *l, *c);
+            let (oracle_x, oracle_tau) = common::oracle_bilevel(data, g, l, c);
+            let scale = oracle_tau.abs().max(1.0);
+            let mut reference = data.clone();
+            let ri = project_bilevel(&mut reference, g, l, c);
+            for depth in [1usize, 2, 3, 4, MAX_DEPTH] {
+                for threads in [1usize, 3] {
+                    let mut x = data.clone();
+                    let info = project_multilevel(&mut x, g, l, c, depth, threads);
+                    if (info.tau - oracle_tau).abs() > 1e-6 * scale {
+                        return Err(format!(
+                            "k={depth} x{threads}: τ {} vs oracle {}",
+                            info.tau, oracle_tau
+                        ));
+                    }
+                    let diff = max_abs_diff(&x, &oracle_x);
+                    if diff > 1e-6 {
+                        return Err(format!(
+                            "k={depth} x{threads}: max |Δ| vs oracle = {diff:e}"
+                        ));
+                    }
+                    if info.tau.to_bits() != ri.tau.to_bits() {
+                        return Err(format!(
+                            "k={depth} x{threads}: τ {} not bit-identical to bi-level {}",
+                            info.tau, ri.tau
+                        ));
+                    }
+                    for (i, (a, b)) in x.iter().zip(&reference).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "k={depth} x{threads}: entry {i}: {a} vs bi-level {b} (bits)"
+                            ));
+                        }
+                    }
+                }
+            }
+            // Depth 2 with a matching shard count reduces to the flat
+            // sharded tree, bitwise — the ISSUE acceptance criterion.
+            for shards in [2usize, 4] {
+                let mut t = data.clone();
+                let ti = project_bilevel_tree(&mut t, g, l, c, shards);
+                let mut m = data.clone();
+                let mi = project_multilevel(&mut m, g, l, c, 2, shards);
+                if mi.tau.to_bits() != ti.tau.to_bits() {
+                    return Err(format!(
+                        "k=2 x{shards}: τ {} != tree τ {} (bits)",
+                        mi.tau, ti.tau
+                    ));
+                }
+                for (i, (a, b)) in m.iter().zip(&t).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("k=2 x{shards}: entry {i}: {a} vs tree {b} (bits)"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The operator-family registry is the one table the config parser, the
+/// serve router and the θ-cache namespaces hang off: every family must
+/// round-trip through its config string, its serve mode (and every
+/// alias), and own a cache namespace that never feeds a neighbor.
+#[test]
+fn registry_round_trips_every_family() {
+    assert_eq!(Family::ALL.len(), REGISTRY.len());
+    for spec in &REGISTRY {
+        let kind: ProjKind = spec.mode.parse().unwrap();
+        assert_eq!(kind.family(), spec.family, "mode '{}' routes to its family", spec.mode);
+        assert_eq!(kind.name(), spec.mode, "serve mode name round-trips");
+        for alias in spec.aliases {
+            let kind: ProjKind = alias.parse().unwrap();
+            assert_eq!(
+                kind.family(),
+                spec.family,
+                "alias '{alias}' routes to family '{}'",
+                spec.family.name()
+            );
+        }
+        // The trainer-side config string names a real projection mode.
+        assert!(
+            l1inf::config::train::projection_mode(spec.config_name, 1.0).is_ok(),
+            "config name '{}' must parse as a projection mode",
+            spec.config_name
+        );
+    }
+
+    // Namespace isolation: one client key, four families, one shared
+    // cache. Pick a key whose four typed slots don't collide so lossy
+    // eviction (a separate, tested property) can't mask cross-feeding.
+    let client = (0..10_000)
+        .map(|i| format!("ns{i}"))
+        .find(|k| {
+            let slots: std::collections::HashSet<usize> = Family::ALL
+                .iter()
+                .map(|f| ThetaCache::slot_of(&CacheKey::new(*f, k.clone())))
+                .collect();
+            slots.len() == Family::ALL.len()
+        })
+        .expect("some key maps the four families to distinct slots");
+    let cache = ThetaCache::new();
+    for (i, family) in Family::ALL.iter().enumerate() {
+        cache.update(&CacheKey::new(*family, client.clone()), 4, 3, 10.0 + i as f64);
+    }
+    for (i, family) in Family::ALL.iter().enumerate() {
+        assert_eq!(
+            cache.entry(&CacheKey::new(*family, client.clone()), 4, 3),
+            Some(10.0 + i as f64),
+            "family '{}' must read back its own θ, never a neighbor's",
+            family.name()
+        );
+    }
 }
 
 #[test]

@@ -155,6 +155,7 @@ fn theta_cache_feeds_batch_queue() {
         algo: Algorithm::InverseOrder,
         mode: ProjKind::Exact,
         weights: None,
+        depth: l1inf::projection::multilevel::DEFAULT_DEPTH,
     };
     // A queue re-projecting near-identical matrices: first cold, rest warm.
     let queue: Vec<ProjRequest> = (0..6)
